@@ -1,0 +1,60 @@
+//! The paper's §4.2 concurrent-execution study (Fig. 5): Chatbot, ImageGen,
+//! and LiveCaptions run simultaneously on one consumer GPU under greedy
+//! allocation vs. static MPS-style partitioning, demonstrating the
+//! starvation / under-utilization trade-off.
+//!
+//! ```sh
+//! cargo run --release --example concurrent_contention
+//! ```
+
+use consumerbench::coordinator::{run_config_text, NodeResult};
+
+fn config(strategy: &str) -> String {
+    format!(
+        "\
+Chat (chatbot):
+  num_requests: 8
+  device: gpu
+  slo: [1s, 0.25s]
+Image (imagegen):
+  num_requests: 6
+  device: gpu
+  slo: 1s
+Captions (livecaptions):
+  num_requests: 40
+  device: gpu
+  slo: 2s
+strategy: {strategy}
+seed: 42
+"
+    )
+}
+
+fn describe(node: &NodeResult) {
+    println!(
+        "  {:<24} mean-norm {:>6.2}  SLO attainment {:>5.1}%",
+        node.id,
+        node.mean_normalized(),
+        node.attainment() * 100.0
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    for strategy in ["greedy", "partition"] {
+        println!("=== {strategy} ===");
+        let result = run_config_text(&config(strategy), Some("artifacts"))?;
+        for node in &result.nodes {
+            describe(node);
+        }
+        // The Fig. 5b decode-stall analysis: time LiveCaptions spent queued
+        // behind other applications' kernels.
+        let lc = result.node("Captions (livecaptions)").unwrap();
+        let mean_lat: f64 = lc.metrics.iter().map(|m| m.latency).sum::<f64>()
+            / lc.metrics.len().max(1) as f64;
+        println!("  LiveCaptions mean segment latency: {mean_lat:.2} s\n");
+    }
+    println!("paper shape: greedy starves LiveCaptions (~12x e2e, misses nearly");
+    println!("all SLOs) while ImageGen is unaffected; partitioning protects");
+    println!("LiveCaptions but pushes ImageGen past its step SLO.");
+    Ok(())
+}

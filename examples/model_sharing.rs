@@ -1,0 +1,74 @@
+//! The paper's §4.2.1 static model sharing study (Fig. 6): Chatbot and
+//! DeepResearch share one Llama-3.2-3B through a llama.cpp-style inference
+//! server. Comparing the default GPU KV cache against the `--no-kv-offload`
+//! CPU placement shows why static server configuration cannot serve both
+//! applications' needs.
+//!
+//! ```sh
+//! cargo run --release --example model_sharing
+//! ```
+
+use consumerbench::coordinator::run_config_text;
+
+fn config(kv: &str, ctx: usize) -> String {
+    format!(
+        "\
+Chat (chatbot):
+  num_requests: 10
+  device: gpu
+  server: llama
+  slo: [1s, 0.25s]
+Research (deepresearch):
+  num_requests: 1
+  device: gpu
+  server: llama
+servers:
+  llama:
+    model: Llama-3.2-3B
+    context_window: {ctx}
+    kv_placement: {kv}
+strategy: greedy
+seed: 42
+"
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    // Config A: KV on GPU. The 128K window would not fit (14 GiB KV), so
+    // DeepResearch is limited to a 16K context (quality loss, per paper).
+    // Config B: KV in CPU DRAM (--no-kv-offload), full 128K window.
+    let scenarios = [("Chatbot (KV on GPU, 4K ctx)", "gpu", 4096usize),
+                     ("Chatbot-KVCache-CPU (128K ctx)", "cpu", 131_072)];
+    for (label, kv, ctx) in scenarios {
+        let result = run_config_text(&config(kv, ctx), Some("artifacts"))?;
+        let chat = result.node("Chat (chatbot)").unwrap();
+        let ttfts: Vec<f64> = chat
+            .metrics
+            .iter()
+            .filter_map(|m| m.components.iter().find(|(n, _)| *n == "ttft").map(|(_, v)| *v))
+            .collect();
+        let tpots: Vec<f64> = chat
+            .metrics
+            .iter()
+            .filter_map(|m| m.components.iter().find(|(n, _)| *n == "tpot").map(|(_, v)| *v))
+            .collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        println!("=== {label} ===");
+        println!(
+            "  chat SLO attainment: {:>5.1}%   mean TTFT {:.2}s   mean TPOT {:.3}s",
+            chat.attainment() * 100.0,
+            mean(&ttfts),
+            mean(&tpots),
+        );
+        let dr = result.node("Research (deepresearch)").unwrap();
+        println!(
+            "  research task time:  {:.1}s   workflow makespan {:.1}s\n",
+            dr.metrics.first().map(|m| m.latency).unwrap_or(0.0),
+            result.makespan
+        );
+    }
+    println!("paper shape: the CPU-KV configuration misses the chat SLO for");
+    println!("~40% of requests with high variance — attention runs on the CPU");
+    println!("and DeepResearch's long-context prefills stall chat iterations.");
+    Ok(())
+}

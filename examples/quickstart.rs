@@ -1,0 +1,46 @@
+//! Quickstart: define a two-application workload in YAML, run it on the
+//! simulated RTX 6000 testbed, and print the benchmark report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use consumerbench::coordinator::{generate, run_config_text};
+
+const CONFIG: &str = "\
+# A latency-sensitive chatbot and an image generator sharing the GPU.
+Chat (chatbot):
+  model: Llama-3.2-3B
+  num_requests: 5
+  device: gpu
+  slo: [1s, 0.25s]
+
+Cover Art (imagegen):
+  model: SD-3.5-Medium-Turbo
+  num_requests: 3
+  device: gpu
+  slo: 1s
+
+strategy: greedy
+seed: 42
+";
+
+fn main() -> anyhow::Result<()> {
+    // Use the AOT artifacts when they exist (`make artifacts`); otherwise
+    // run simulation-only.
+    let result = run_config_text(CONFIG, Some("artifacts"))?;
+    let report = generate(&result);
+    println!("{}", report.text);
+
+    for node in &result.nodes {
+        println!(
+            "{}: {} requests, SLO attainment {:.0}%, mean normalized latency {:.2}",
+            node.id,
+            node.metrics.len(),
+            node.attainment() * 100.0,
+            node.mean_normalized()
+        );
+    }
+    println!("\nPJRT real-compute validations: {}", result.pjrt_calls);
+    Ok(())
+}

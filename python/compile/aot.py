@@ -1,0 +1,74 @@
+"""AOT compile path: lower every L2 entry point to HLO text + manifest.
+
+Run once by ``make artifacts``; Python never executes on the request path.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md
+and DESIGN.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.models import tiny_diffusion, tiny_llama, tiny_whisper
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for the loader)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def all_entry_points():
+    eps = []
+    eps.extend(tiny_llama.entry_points())
+    eps.extend(tiny_diffusion.entry_points())
+    eps.extend(tiny_whisper.entry_points())
+    return eps
+
+
+def render_manifest_line(name, filename, shapes, n_outputs):
+    specs = ";".join("f32:" + "x".join(str(d) for d in shape) for shape in shapes)
+    return f"{name}|{filename}|{specs}|{n_outputs}"
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = ["# built by python/compile/aot.py — do not edit"]
+    for name, fn, shapes in all_entry_points():
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        # Count outputs by evaluating the abstract signature.
+        out = jax.eval_shape(fn, *specs)
+        n_outputs = len(out) if isinstance(out, (tuple, list)) else 1
+        filename = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, filename)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(render_manifest_line(name, filename, shapes, n_outputs))
+        print(f"  {name}: {len(text)} chars, {n_outputs} outputs -> {filename}")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest_path} ({len(manifest_lines) - 1} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: tiled flash attention.
+
+The paper's §4.1/§5.1 finding is that ImageGen's *generic* attention kernel
+needs >150 registers/thread (all the logits and softmax intermediates live
+in registers), capping SM occupancy at 1 block/SM. The TPU re-expression of
+that insight (DESIGN.md §3) is this kernel: Q is tiled into VMEM blocks via
+``BlockSpec`` (VMEM plays the scratchpad role of CUDA shared memory), K/V
+tiles are streamed through an **online-softmax accumulator**, so the working
+set is O(block) regardless of sequence length and the contractions hit the
+MXU with lane-aligned shapes.
+
+Runs with ``interpret=True`` — the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is estimated from the block shapes in
+DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. On a real TPU these would be (128, 128) to match the
+# MXU systolic array; the tiny models use 16 to exercise multi-tile grids
+# at small sequence lengths.
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+
+def _flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, scale):
+    """One grid step: one Q tile against all K/V tiles (online softmax)."""
+    q = q_ref[...]  # [block_q, d] — staged into VMEM by BlockSpec
+    seq_k, d = k_ref.shape
+    num_k_blocks = seq_k // block_k
+
+    def body(i, carry):
+        acc, row_max, row_sum = carry
+        k_tile = k_ref[pl.dslice(i * block_k, block_k), :]  # stream K tile
+        v_tile = v_ref[pl.dslice(i * block_k, block_k), :]  # stream V tile
+        logits = (q @ k_tile.T) * scale  # [block_q, block_k] on the MXU
+        tile_max = jnp.max(logits, axis=-1)
+        new_max = jnp.maximum(row_max, tile_max)
+        # Rescale the running accumulator to the new max (online softmax).
+        correction = jnp.exp(row_max - new_max)
+        p = jnp.exp(logits - new_max[:, None])
+        new_sum = row_sum * correction + p.sum(axis=-1)
+        new_acc = acc * correction[:, None] + p @ v_tile
+        return new_acc, new_max, new_sum
+
+    block_q = q.shape[0]
+    init = (
+        jnp.zeros((block_q, d), dtype=q.dtype),
+        jnp.full((block_q,), -jnp.inf, dtype=q.dtype),
+        jnp.zeros((block_q,), dtype=q.dtype),
+    )
+    acc, _, row_sum = jax.lax.fori_loop(0, num_k_blocks, body, init)
+    o_ref[...] = acc / row_sum[:, None]
+
+
+def flash_attention(q, k, v, *, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Single-head attention: q [Sq, d], k/v [Sk, d] -> [Sq, d].
+
+    Sq must be a multiple of block_q and Sk of block_k (the tiny models are
+    sized accordingly; the test suite sweeps the valid lattice).
+    """
+    seq_q, d = q.shape
+    seq_k = k.shape[0]
+    # Shrink tiles for short sequences (decode steps have seq_q == 1).
+    block_q = min(block_q, seq_q)
+    block_k = min(block_k, seq_k)
+    assert seq_q % block_q == 0, f"seq_q={seq_q} not a multiple of {block_q}"
+    assert seq_k % block_k == 0, f"seq_k={seq_k} not a multiple of {block_k}"
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_flash_attention_kernel, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(seq_q // block_q,),
+        in_specs=[
+            # Q: one tile per grid step, staged into VMEM.
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            # K/V: full arrays visible; the kernel streams tiles itself.
+            pl.BlockSpec((seq_k, d), lambda i: (0, 0)),
+            pl.BlockSpec((seq_k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq_q, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)
+
+
+def mha(q, k, v, **kw):
+    """Multi-head wrapper: [H, S, d] tensors, vmapped over heads."""
+    return jax.vmap(lambda qh, kh, vh: flash_attention(qh, kh, vh, **kw))(q, k, v)
+
+
+def vmem_bytes(block_q, block_k, d, dtype_bytes=4):
+    """Estimated VMEM working set of one grid step (perf model, DESIGN §8):
+    Q tile + K tile + V tile + accumulator + softmax state."""
+    q_tile = block_q * d
+    kv_tiles = 2 * block_k * d
+    acc = block_q * d
+    softmax_state = 2 * block_q
+    logits = block_q * block_k
+    return (q_tile + kv_tiles + acc + softmax_state + logits) * dtype_bytes

@@ -1,0 +1,33 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are pinned against in
+``python/tests/test_kernels.py`` (hypothesis sweeps + assert_allclose).
+Kept deliberately boring: direct textbook implementations, no tiling.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None):
+    """Single-head scaled dot-product attention.
+
+    q: [Sq, d], k: [Sk, d], v: [Sk, d] -> [Sq, d]
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    logits = (q @ k.T) * scale
+    weights = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return weights @ v
+
+
+def mha_ref(q, k, v):
+    """Multi-head attention over [H, S, d] tensors."""
+    return jnp.stack([attention_ref(q[h], k[h], v[h]) for h in range(q.shape[0])])
+
+
+def rmsnorm_ref(x, weight, eps=1e-6):
+    """Root-mean-square layer norm. x: [S, D], weight: [D]."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * weight

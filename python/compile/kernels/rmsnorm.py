@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: fused RMSNorm.
+
+§5.1's "bounded intermediate results" advice applied to normalization: one
+VMEM-resident pass fuses the mean-square reduction, rsqrt, and scale so no
+intermediate ever round-trips to HBM (contrast with the unfused jnp version,
+which materializes ``x*x`` and the broadcasted rsqrt).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 16
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...]  # [block_rows, D] in VMEM
+    w = w_ref[...]  # [D]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rmsnorm(x, weight, *, eps=1e-6, block_rows=DEFAULT_BLOCK_ROWS):
+    """Fused RMSNorm: x [S, D], weight [D] -> [S, D].
+
+    S must be a multiple of block_rows.
+    """
+    seq, d = x.shape
+    block_rows = min(block_rows, seq)
+    assert seq % block_rows == 0, f"seq={seq} not a multiple of {block_rows}"
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(seq // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq, d), x.dtype),
+        interpret=True,
+    )(x, weight)

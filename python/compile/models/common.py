@@ -1,0 +1,62 @@
+"""Shared pieces for the tiny L2 models.
+
+Weights are deterministic numpy constants (seeded per model) baked into the
+jitted functions — there is no training here; the models exist so every
+simulated request exercises a *real* lowered computation through PJRT, with
+the L1 Pallas kernels inlined into the same HLO.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels.flash_attention import mha
+from compile.kernels.rmsnorm import rmsnorm
+
+
+def dense_params(rng, d_in, d_out):
+    """Xavier-ish initialization as an f32 constant."""
+    scale = np.sqrt(2.0 / (d_in + d_out))
+    return jnp.asarray(rng.randn(d_in, d_out) * scale, jnp.float32)
+
+
+class TransformerBlock:
+    """Pre-norm transformer block over [S, D] using the Pallas kernels."""
+
+    def __init__(self, rng, d_model, n_heads, d_ff):
+        assert d_model % n_heads == 0
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.d_head = d_model // n_heads
+        self.wq = dense_params(rng, d_model, d_model)
+        self.wk = dense_params(rng, d_model, d_model)
+        self.wv = dense_params(rng, d_model, d_model)
+        self.wo = dense_params(rng, d_model, d_model)
+        self.w1 = dense_params(rng, d_model, d_ff)
+        self.w2 = dense_params(rng, d_ff, d_model)
+        self.norm1 = jnp.ones((d_model,), jnp.float32)
+        self.norm2 = jnp.ones((d_model,), jnp.float32)
+
+    def _split(self, x):
+        s = x.shape[0]
+        return x.reshape(s, self.n_heads, self.d_head).transpose(1, 0, 2)
+
+    def _merge(self, x):
+        h, s, d = x.shape
+        return x.transpose(1, 0, 2).reshape(s, h * d)
+
+    def __call__(self, x, kv=None):
+        """x: [S, D]; kv: optional ([Sk, D], [Sk, D]) for cross/cached attn."""
+        h = rmsnorm(x, self.norm1)
+        q = self._split(h @ self.wq)
+        if kv is None:
+            k = self._split(h @ self.wk)
+            v = self._split(h @ self.wv)
+        else:
+            k_src, v_src = kv
+            k = self._split(k_src @ self.wk)
+            v = self._split(v_src @ self.wv)
+        attn = self._merge(mha(q, k, v))
+        x = x + attn @ self.wo
+        h2 = rmsnorm(x, self.norm2)
+        x = x + jnp.tanh(h2 @ self.w1) @ self.w2
+        return x

@@ -1,0 +1,51 @@
+"""L2 model: tiny-diffusion — the ImageGen denoise-step analogue.
+
+One denoising step of an attention-based latent diffusion transformer
+(SD-3-style MMDiT, simplified): latent patch tokens pass through transformer
+blocks with a timestep conditioning signal; the output is the predicted
+noise for that step. The L3 ImageGen app invokes this once per simulated
+denoise step when artifacts are loaded.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.models.common import TransformerBlock, dense_params
+
+D_MODEL = 64
+N_HEADS = 4
+D_FF = 128
+N_BLOCKS = 2
+LATENT_TOKENS = 64  # 8x8 patch grid
+
+
+class TinyDiffusion:
+    def __init__(self, seed=1):
+        rng = np.random.RandomState(seed)
+        self.blocks = [TransformerBlock(rng, D_MODEL, N_HEADS, D_FF) for _ in range(N_BLOCKS)]
+        self.t_proj = dense_params(rng, 1, D_MODEL)
+        self.out_proj = dense_params(rng, D_MODEL, D_MODEL)
+
+    def step(self, latents, t):
+        """latents: [LATENT_TOKENS, D_MODEL]; t: [1, 1] timestep in [0, 1].
+
+        Returns (eps_prediction [LATENT_TOKENS, D_MODEL],).
+        """
+        # AdaLN-style conditioning, radically simplified: add the projected
+        # timestep embedding to every token.
+        cond = jnp.tanh(t @ self.t_proj)  # [1, D]
+        x = latents + cond
+        for b in self.blocks:
+            x = b(x)
+        return (x @ self.out_proj,)
+
+
+def entry_points():
+    model = TinyDiffusion(seed=1)
+    return [
+        (
+            "tiny_diffusion_step",
+            model.step,
+            [(LATENT_TOKENS, D_MODEL), (1, 1)],
+        ),
+    ]

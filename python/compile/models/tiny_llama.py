@@ -1,0 +1,78 @@
+"""L2 model: tiny-llama — the Chatbot/DeepResearch backbone analogue.
+
+A small decoder-only transformer with two entry points:
+
+* ``prefill(x)``  — embed a [S] prompt (already embedded as [S, D] f32) and
+  produce logits for every position.
+* ``decode(x, ctx)`` — one decode step: the current token embedding [1, D]
+  attends over the cached context [T, D].
+
+Sizes are deliberately tiny (D=64, 2 blocks) so AOT compilation and the
+per-request PJRT executions stay cheap; the *footprint* of the production
+model lives in the L3 kernel-trace profiles, not here.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.models.common import TransformerBlock, dense_params
+
+D_MODEL = 64
+N_HEADS = 4
+D_FF = 128
+N_BLOCKS = 2
+VOCAB = 256
+PREFILL_SEQ = 32
+CONTEXT = 32
+
+
+class TinyLlama:
+    def __init__(self, seed=0):
+        rng = np.random.RandomState(seed)
+        self.blocks = [TransformerBlock(rng, D_MODEL, N_HEADS, D_FF) for _ in range(N_BLOCKS)]
+        self.unembed = dense_params(rng, D_MODEL, VOCAB)
+        self.final_norm = jnp.ones((D_MODEL,), jnp.float32)
+
+    def prefill(self, x):
+        """x: [PREFILL_SEQ, D_MODEL] -> logits [PREFILL_SEQ, VOCAB]."""
+        for b in self.blocks:
+            x = b(x)
+        from compile.kernels.rmsnorm import rmsnorm
+
+        x = rmsnorm(x, self.final_norm)
+        return (x @ self.unembed,)
+
+    def decode(self, x, ctx):
+        """One decode step.
+
+        x: [1, D_MODEL] current-token embedding; ctx: [CONTEXT, D_MODEL]
+        cached context. Returns (logits [1, VOCAB], updated ctx).
+        """
+        h = x
+        for b in self.blocks:
+            h = b(h, kv=(ctx, ctx))
+        from compile.kernels.rmsnorm import rmsnorm
+
+        h = rmsnorm(h, self.final_norm)
+        logits = h @ self.unembed
+        # Roll the context window and append the new hidden state —
+        # the KV-cache update the Rust side sees as an output buffer.
+        new_ctx = jnp.concatenate([ctx[1:], h], axis=0)
+        return (logits, new_ctx)
+
+
+def entry_points():
+    """(name, fn, input_shapes) triples for aot.py."""
+    model = TinyLlama(seed=0)
+    return [
+        (
+            "tiny_llama_prefill",
+            model.prefill,
+            [(PREFILL_SEQ, D_MODEL)],
+        ),
+        (
+            "tiny_llama_decode",
+            model.decode,
+            [(1, D_MODEL), (CONTEXT, D_MODEL)],
+        ),
+    ]

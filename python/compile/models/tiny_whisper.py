@@ -1,0 +1,57 @@
+"""L2 model: tiny-whisper — the LiveCaptions encoder-decoder analogue.
+
+* ``encode(mel)`` — the parallel audio encoder: mel features are projected
+  and passed through transformer blocks (the paper's high-SMOCC phase).
+* ``decode_step(y, enc)`` — one autoregressive decoder step with cross-
+  attention to the encoder output (the low-SMOCC tiny-kernel phase).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.models.common import TransformerBlock, dense_params
+
+D_MODEL = 64
+N_HEADS = 4
+D_FF = 128
+MEL_BINS = 80
+AUDIO_FRAMES = 96   # ~2 s segment after feature extraction
+ENC_TOKENS = 48     # 2x temporal downsampling
+VOCAB = 256
+
+
+class TinyWhisper:
+    def __init__(self, seed=2):
+        rng = np.random.RandomState(seed)
+        self.in_proj = dense_params(rng, MEL_BINS, D_MODEL)
+        self.enc_blocks = [TransformerBlock(rng, D_MODEL, N_HEADS, D_FF) for _ in range(2)]
+        self.dec_self = TransformerBlock(rng, D_MODEL, N_HEADS, D_FF)
+        self.dec_cross = TransformerBlock(rng, D_MODEL, N_HEADS, D_FF)
+        self.unembed = dense_params(rng, D_MODEL, VOCAB)
+
+    def encode(self, mel):
+        """mel: [AUDIO_FRAMES, MEL_BINS] -> (enc [ENC_TOKENS, D_MODEL],)."""
+        x = mel @ self.in_proj  # [AUDIO_FRAMES, D]
+        # 2x temporal downsample (strided conv stand-in).
+        x = x.reshape(ENC_TOKENS, 2, D_MODEL).mean(axis=1)
+        for b in self.enc_blocks:
+            x = b(x)
+        return (x,)
+
+    def decode_step(self, y, enc):
+        """One decoder token step.
+
+        y: [1, D_MODEL] current token embedding; enc: [ENC_TOKENS, D_MODEL].
+        Returns (logits [1, VOCAB],).
+        """
+        h = self.dec_self(y, kv=(y, y))
+        h = self.dec_cross(h, kv=(enc, enc))
+        return (h @ self.unembed,)
+
+
+def entry_points():
+    model = TinyWhisper(seed=2)
+    return [
+        ("tiny_whisper_encode", model.encode, [(AUDIO_FRAMES, MEL_BINS)]),
+        ("tiny_whisper_decode", model.decode_step, [(1, D_MODEL), (ENC_TOKENS, D_MODEL)]),
+    ]

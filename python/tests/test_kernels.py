@@ -1,0 +1,118 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the core
+correctness signal for the compile path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels.flash_attention import flash_attention, mha, vmem_bytes
+from compile.kernels.ref import attention_ref, mha_ref, rmsnorm_ref
+from compile.kernels.rmsnorm import rmsnorm
+
+# Valid lattice: multiples of the tile sizes plus the degenerate seq_q=1
+# decode shape.
+SEQ_Q = st.sampled_from([1, 16, 32, 48, 64])
+SEQ_K = st.sampled_from([16, 32, 48, 64, 96])
+HEAD_DIM = st.sampled_from([8, 16, 32, 64])
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seq_q=SEQ_Q, seq_k=SEQ_K, d=HEAD_DIM, seed=st.integers(0, 2**16))
+def test_flash_attention_matches_ref(seq_q, seq_k, d, seed):
+    rng = np.random.RandomState(seed)
+    q, k, v = rand(rng, seq_q, d), rand(rng, seq_k, d), rand(rng, seq_k, d)
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    assert out.shape == (seq_q, d)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([16, 32]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_mha_matches_ref(heads, seq, d, seed):
+    rng = np.random.RandomState(seed)
+    q, k, v = (rand(rng, heads, seq, d) for _ in range(3))
+    assert_allclose(np.asarray(mha(q, k, v)), np.asarray(mha_ref(q, k, v)), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seq=st.sampled_from([1, 8, 16, 32, 64]),
+    d=st.sampled_from([8, 32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsnorm_matches_ref(seq, d, seed):
+    rng = np.random.RandomState(seed)
+    x = rand(rng, seq, d)
+    w = rand(rng, d)
+    assert_allclose(
+        np.asarray(rmsnorm(x, w)), np.asarray(rmsnorm_ref(x, w)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_attention_rows_are_convex_combinations():
+    # Softmax weights sum to 1: with constant V the output is that constant.
+    rng = np.random.RandomState(0)
+    q, k = rand(rng, 32, 16), rand(rng, 48, 16)
+    v = jnp.ones((48, 16), jnp.float32) * 3.5
+    out = flash_attention(q, k, v)
+    assert_allclose(np.asarray(out), np.full((32, 16), 3.5, np.float32), rtol=1e-5)
+
+
+def test_attention_is_permutation_invariant_in_kv():
+    # Attention is a set operation over K/V rows.
+    rng = np.random.RandomState(1)
+    q, k, v = rand(rng, 16, 16), rand(rng, 32, 16), rand(rng, 32, 16)
+    perm = rng.permutation(32)
+    out1 = flash_attention(q, k, v)
+    out2 = flash_attention(q, k[perm], v[perm])
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_scale_invariance():
+    # rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps).
+    rng = np.random.RandomState(2)
+    x = rand(rng, 16, 64)
+    w = jnp.ones((64,), jnp.float32)
+    assert_allclose(
+        np.asarray(rmsnorm(7.0 * x, w)), np.asarray(rmsnorm(x, w)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_rmsnorm_unit_rms():
+    rng = np.random.RandomState(3)
+    x = rand(rng, 32, 128)
+    w = jnp.ones((128,), jnp.float32)
+    out = np.asarray(rmsnorm(x, w))
+    rms = np.sqrt((out**2).mean(axis=-1))
+    assert_allclose(rms, np.ones(32), rtol=1e-3)
+
+
+def test_invalid_shape_rejected():
+    rng = np.random.RandomState(4)
+    q = rand(rng, 24, 16)  # 24 not a multiple of block_q=16
+    k = rand(rng, 32, 16)
+    with pytest.raises(AssertionError):
+        flash_attention(q, k, k)
+
+
+def test_vmem_footprint_fits_tpu_budget():
+    # DESIGN.md §8: production tiles (128, 128, d=128) must fit VMEM (16 MB)
+    # with generous headroom for double-buffering.
+    bytes_needed = vmem_bytes(128, 128, 128)
+    assert bytes_needed < 2 * 1024 * 1024, bytes_needed

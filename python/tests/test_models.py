@@ -1,0 +1,106 @@
+"""L2 model sanity: shapes, determinism, finiteness, and the causal wiring
+each app's executor relies on."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile.models import tiny_diffusion, tiny_llama, tiny_whisper
+
+
+def rand(seed, *shape):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+class TestTinyLlama:
+    def test_prefill_shapes(self):
+        m = tiny_llama.TinyLlama(seed=0)
+        x = rand(0, tiny_llama.PREFILL_SEQ, tiny_llama.D_MODEL)
+        (logits,) = m.prefill(x)
+        assert logits.shape == (tiny_llama.PREFILL_SEQ, tiny_llama.VOCAB)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_decode_shapes_and_ctx_roll(self):
+        m = tiny_llama.TinyLlama(seed=0)
+        x = rand(1, 1, tiny_llama.D_MODEL)
+        ctx = rand(2, tiny_llama.CONTEXT, tiny_llama.D_MODEL)
+        logits, new_ctx = m.decode(x, ctx)
+        assert logits.shape == (1, tiny_llama.VOCAB)
+        assert new_ctx.shape == ctx.shape
+        # The rolled context keeps rows 1..T-1.
+        assert_allclose(np.asarray(new_ctx[:-1]), np.asarray(ctx[1:]), rtol=1e-6)
+
+    def test_deterministic_weights(self):
+        a = tiny_llama.TinyLlama(seed=0)
+        b = tiny_llama.TinyLlama(seed=0)
+        x = rand(3, tiny_llama.PREFILL_SEQ, tiny_llama.D_MODEL)
+        assert_allclose(np.asarray(a.prefill(x)[0]), np.asarray(b.prefill(x)[0]))
+
+    def test_context_affects_decode(self):
+        m = tiny_llama.TinyLlama(seed=0)
+        x = rand(4, 1, tiny_llama.D_MODEL)
+        ctx1 = rand(5, tiny_llama.CONTEXT, tiny_llama.D_MODEL)
+        ctx2 = rand(6, tiny_llama.CONTEXT, tiny_llama.D_MODEL)
+        l1, _ = m.decode(x, ctx1)
+        l2, _ = m.decode(x, ctx2)
+        assert float(jnp.abs(l1 - l2).max()) > 1e-4
+
+
+class TestTinyDiffusion:
+    def test_step_shapes(self):
+        m = tiny_diffusion.TinyDiffusion(seed=1)
+        lat = rand(0, tiny_diffusion.LATENT_TOKENS, tiny_diffusion.D_MODEL)
+        t = jnp.asarray([[0.5]], jnp.float32)
+        (eps,) = m.step(lat, t)
+        assert eps.shape == lat.shape
+        assert bool(jnp.isfinite(eps).all())
+
+    def test_timestep_conditions_output(self):
+        m = tiny_diffusion.TinyDiffusion(seed=1)
+        lat = rand(1, tiny_diffusion.LATENT_TOKENS, tiny_diffusion.D_MODEL)
+        e0 = m.step(lat, jnp.asarray([[0.0]], jnp.float32))[0]
+        e1 = m.step(lat, jnp.asarray([[1.0]], jnp.float32))[0]
+        assert float(jnp.abs(e0 - e1).max()) > 1e-4
+
+    def test_jit_compiles(self):
+        m = tiny_diffusion.TinyDiffusion(seed=1)
+        f = jax.jit(m.step)
+        lat = rand(2, tiny_diffusion.LATENT_TOKENS, tiny_diffusion.D_MODEL)
+        out = f(lat, jnp.asarray([[0.3]], jnp.float32))[0]
+        assert bool(jnp.isfinite(out).all())
+
+
+class TestTinyWhisper:
+    def test_encode_shapes(self):
+        m = tiny_whisper.TinyWhisper(seed=2)
+        mel = rand(0, tiny_whisper.AUDIO_FRAMES, tiny_whisper.MEL_BINS)
+        (enc,) = m.encode(mel)
+        assert enc.shape == (tiny_whisper.ENC_TOKENS, tiny_whisper.D_MODEL)
+
+    def test_decode_step_shapes(self):
+        m = tiny_whisper.TinyWhisper(seed=2)
+        mel = rand(1, tiny_whisper.AUDIO_FRAMES, tiny_whisper.MEL_BINS)
+        (enc,) = m.encode(mel)
+        y = rand(2, 1, tiny_whisper.D_MODEL)
+        (logits,) = m.decode_step(y, enc)
+        assert logits.shape == (1, tiny_whisper.VOCAB)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_audio_affects_transcript(self):
+        m = tiny_whisper.TinyWhisper(seed=2)
+        y = rand(3, 1, tiny_whisper.D_MODEL)
+        enc1 = m.encode(rand(4, tiny_whisper.AUDIO_FRAMES, tiny_whisper.MEL_BINS))[0]
+        enc2 = m.encode(rand(5, tiny_whisper.AUDIO_FRAMES, tiny_whisper.MEL_BINS))[0]
+        l1 = m.decode_step(y, enc1)[0]
+        l2 = m.decode_step(y, enc2)[0]
+        assert float(jnp.abs(l1 - l2).max()) > 1e-4
+
+
+def test_all_entry_points_declare_valid_shapes():
+    for mod in (tiny_llama, tiny_diffusion, tiny_whisper):
+        for name, fn, shapes in mod.entry_points():
+            specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+            out = jax.eval_shape(fn, *specs)
+            assert isinstance(out, tuple) and len(out) >= 1, name

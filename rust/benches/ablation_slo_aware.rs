@@ -1,0 +1,58 @@
+//! Ablation: the paper's §5.2 "SLO-Aware Scheduling" insight, implemented
+//! and measured against the three evaluated strategies on the Fig. 5
+//! workload.
+//!
+//! Hypothesis (paper §5.2): prioritizing latency-sensitive clients with a
+//! small SM reservation should protect LiveCaptions like partitioning does
+//! — **without** partitioning's throughput collapse for ImageGen or the
+//! Fig. 7 workflow-makespan penalty.
+
+#[path = "common.rs"]
+mod common;
+use common::{header, print_app_row, run};
+
+fn config(strategy: &str) -> String {
+    format!(
+        "\
+Chat (chatbot):
+  num_requests: 10
+  device: gpu
+  slo: [1s, 0.25s]
+Image (imagegen):
+  num_requests: 25
+  device: gpu
+  slo: 1s
+Captions (livecaptions):
+  num_requests: 75
+  device: gpu
+  slo: 2s
+strategy: {strategy}
+seed: 42
+"
+    )
+}
+
+fn main() {
+    println!("Ablation: resource-orchestration strategies on the Fig. 5 workload");
+    let mut rows = Vec::new();
+    for strategy in ["greedy", "partition", "fair_share", "slo_aware"] {
+        header(strategy);
+        let result = run(&config(strategy));
+        for node in &result.nodes {
+            print_app_row(&node.id, node);
+        }
+        println!("  makespan: {:.1} s", result.makespan);
+        let lc = result.node("Captions (livecaptions)").unwrap().attainment();
+        let ig = result.node("Image (imagegen)").unwrap();
+        rows.push((strategy, lc, ig.mean_normalized(), result.makespan));
+    }
+    println!("\n--- summary (LiveCaptions attainment / ImageGen step x / makespan) ---");
+    for (s, lc, ig, mk) in rows {
+        println!("  {s:<11} {:>5.1}% {:>8.2}x {:>8.1}s", lc * 100.0, ig, mk);
+    }
+    println!(
+        "\nexpected: slo_aware matches partition's LiveCaptions protection\n\
+         while keeping ImageGen near its greedy/exclusive step time — the\n\
+         dynamic, SLO-aware middle ground the paper calls for."
+    );
+}

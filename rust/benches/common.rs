@@ -1,0 +1,55 @@
+//! Shared helpers for the figure-regeneration benches.
+//!
+//! Every bench is a `harness = false` binary that runs a scenario on the
+//! simulated testbed and prints the same rows/series the paper's figure
+//! plots. Absolute numbers come from the simulator calibration; the claims
+//! under test are the *shapes*: who wins, by roughly what factor, where the
+//! crossovers fall (DESIGN.md §6).
+
+use consumerbench::coordinator::{run_config_text, NodeResult, ScenarioResult};
+use consumerbench::monitor::MonitorReport;
+
+/// Run a config without PJRT (virtual-time measurement only — artifacts are
+/// exercised by `make test` and the examples).
+pub fn run(cfg: &str) -> ScenarioResult {
+    run_config_text(cfg, None).unwrap_or_else(|e| panic!("scenario failed: {e}"))
+}
+
+/// Monitor view of a result.
+pub fn monitor(result: &ScenarioResult) -> MonitorReport {
+    MonitorReport::from_trace(&result.trace, &result.client_names, 0.1)
+}
+
+/// Print the standard per-application row (Fig. 3/5-style).
+pub fn print_app_row(label: &str, node: &NodeResult) {
+    println!(
+        "  {:<26} norm-latency {:>7.2}x   SLO attainment {:>5.1}%   ({} reqs)",
+        label,
+        node.mean_normalized(),
+        node.attainment() * 100.0,
+        node.metrics.len()
+    );
+}
+
+/// Mean of a named metric component across a node's requests.
+pub fn mean_component(node: &NodeResult, name: &str) -> f64 {
+    let vals: Vec<f64> = node
+        .metrics
+        .iter()
+        .filter_map(|m| m.components.iter().find(|(n, _)| *n == name).map(|(_, v)| *v))
+        .collect();
+    if vals.is_empty() {
+        0.0
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Render a utilization sparkline row.
+pub fn util_row(name: &str, series: &consumerbench::util::TimeSeries) {
+    println!("  {:<10} {}  (mean {:.0}%)", name, series.sparkline(48, 1.0), series.mean() * 100.0);
+}

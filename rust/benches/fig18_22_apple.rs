@@ -1,0 +1,118 @@
+//! Figs. 18-22 (appendix C): the Apple Silicon (MacBook M1 Pro) testbed —
+//! exclusive vs concurrent execution, model sharing, and the content-
+//! creation workflow under the unified-memory fair-share scheduler.
+//!
+//! Paper shape: exclusive runs meet their (relaxed, 4 s LiveCaptions) SLOs;
+//! concurrent execution degrades ImageGen slightly and LiveCaptions
+//! substantially (~8x vs 9.5x on the Intel server — fairer but still
+//! suboptimal); Chatbot-KVCache-CPU behaves like on the Intel box; power
+//! is an order of magnitude below the discrete-GPU server.
+
+#[path = "common.rs"]
+mod common;
+use common::{header, monitor, print_app_row, run};
+
+fn exclusive(app: &str, n: usize) -> String {
+    format!(
+        "App ({app}):\n  num_requests: {n}\n  device: gpu\ntestbed: macbook_m1_pro\nstrategy: fair_share\nseed: 42\n"
+    )
+}
+
+fn concurrent() -> String {
+    "\
+Chat (chatbot):
+  num_requests: 8
+  device: gpu
+Image (imagegen):
+  num_requests: 15
+  device: gpu
+Captions (livecaptions):
+  num_requests: 40
+  device: gpu
+testbed: macbook_m1_pro
+strategy: fair_share
+seed: 42
+"
+    .to_string()
+}
+
+fn main() {
+    header("Fig. 18/19: exclusive on Apple Silicon (fair-share scheduler)");
+    let mut lc_excl = 0.0;
+    for (label, app, n) in [
+        ("Chatbot", "chatbot", 8usize),
+        ("ImageGen", "imagegen", 6),
+        ("LiveCaptions", "livecaptions", 30),
+    ] {
+        let result = run(&exclusive(app, n));
+        let node = &result.nodes[0];
+        print_app_row(label, node);
+        if label == "LiveCaptions" {
+            lc_excl = node.metrics.iter().map(|m| m.latency).sum::<f64>()
+                / node.metrics.len() as f64;
+        }
+        let mon = monitor(&result);
+        println!(
+            "    GPU power: mean-busy {:.1} W, peak {:.1} W (laptop-class)",
+            mon.gpu_power
+                .values()
+                .iter()
+                .copied()
+                .filter(|&v| v > 5.0)
+                .sum::<f64>()
+                / mon.gpu_power.values().iter().filter(|&&v| v > 5.0).count().max(1) as f64,
+            mon.gpu_power.max()
+        );
+    }
+
+    header("Fig. 18 (right): concurrent on Apple Silicon");
+    let result = run(&concurrent());
+    for node in &result.nodes {
+        print_app_row(&node.id, node);
+    }
+    let lc = result.node("Captions (livecaptions)").unwrap();
+    let lc_conc =
+        lc.metrics.iter().map(|m| m.latency).sum::<f64>() / lc.metrics.len() as f64;
+    println!(
+        "  LiveCaptions degradation: {:.1}x exclusive (paper: ~8x vs 9.5x on Intel)",
+        lc_conc / lc_excl
+    );
+
+    header("Fig. 20/21: model sharing on Apple Silicon");
+    for (label, kv) in [("KV on GPU (unified)", "gpu"), ("Chatbot-KVCache-CPU", "cpu")] {
+        let cfg = format!(
+            "\
+Chat (chatbot):
+  num_requests: 8
+  device: gpu
+  server: llama
+  slo: [1s, 0.25s]
+Research (deepresearch):
+  num_requests: 1
+  device: gpu
+  server: llama
+servers:
+  llama:
+    model: Llama-3.2-3B
+    context_window: {}
+    kv_placement: {kv}
+testbed: macbook_m1_pro
+strategy: fair_share
+seed: 42
+",
+            if kv == "gpu" { 16_384 } else { 131_072 }
+        );
+        let result = run(&cfg);
+        let chat = result.node("Chat (chatbot)").unwrap();
+        println!(
+            "  {:<24} chat SLO attainment {:>5.1}%",
+            label,
+            chat.attainment() * 100.0
+        );
+    }
+    println!(
+        "\npaper shape: fair-share improves the balance vs greedy-Intel but\n\
+         LiveCaptions still degrades; KV-on-CPU hurts chat the same way;\n\
+         all at laptop-class power."
+    );
+}

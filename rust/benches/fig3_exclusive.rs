@@ -1,0 +1,46 @@
+//! Fig. 3: latencies normalized to SLO (a) and SLO attainment (b) for
+//! Chatbot, ImageGen, and LiveCaptions running exclusively on the GPU
+//! (upper bound) or the CPU (lower bound).
+//!
+//! Paper shape: on the GPU everything meets its SLO (LiveCaptions loses
+//! 3/150 segments to language-ID re-encodes); on the CPU Chatbot narrowly
+//! misses while ImageGen and LiveCaptions blow far past their budgets.
+
+#[path = "common.rs"]
+mod common;
+use common::{header, print_app_row, run};
+
+fn scenario(app: &str, device: &str, n: usize) -> String {
+    let slo = match app {
+        "chatbot" => "  slo: [1s, 0.25s]\n",
+        "imagegen" => "  slo: 1s\n",
+        _ => "  slo: 2s\n",
+    };
+    format!(
+        "App ({app}):\n  num_requests: {n}\n  device: {device}\n{slo}strategy: greedy\nseed: 42\n"
+    )
+}
+
+fn main() {
+    // Request counts follow the paper: 150 audio segments; CPU runs use
+    // fewer requests for the slow apps (the paper's CPU numbers are also
+    // from shorter runs — latencies per request are what is plotted).
+    let cases = [
+        ("Chatbot", "chatbot", 10usize, 6usize),
+        ("ImageGen", "imagegen", 10, 3),
+        ("LiveCaptions", "livecaptions", 150, 10),
+    ];
+    header("Fig. 3(a,b): exclusive GPU (upper bound) vs CPU (lower bound)");
+    for (label, app, n_gpu, n_cpu) in cases {
+        for (device, n) in [("gpu", n_gpu), ("cpu", n_cpu)] {
+            let result = run(&scenario(app, device, n));
+            let node = &result.nodes[0];
+            print_app_row(&format!("{label} [{device}]"), node);
+        }
+    }
+    println!(
+        "\npaper shape: GPU rows ~100% attainment (LiveCaptions ≈ 98% from\n\
+         re-encoded segments); CPU rows: Chatbot ≈ 1-2x (narrow miss),\n\
+         ImageGen and LiveCaptions one-to-two orders over budget."
+    );
+}

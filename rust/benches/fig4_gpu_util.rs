@@ -1,0 +1,72 @@
+//! Fig. 4: GPU utilization (SMACT vs SMOCC) of each application running
+//! exclusively on the GPU, with the per-kernel occupancy analysis of §4.1.
+//!
+//! Paper shape: all three applications reserve nearly all SMs (SMACT ≈
+//! 100% while active), but occupancy differs sharply — Chatbot's tuned
+//! llama.cpp kernels run high SMOCC; ImageGen's 168-register attention
+//! kernels cap at 1 block/SM; Whisper's decoder is worst (tiny kernels,
+//! ~200 regs + heavy smem).
+
+#[path = "common.rs"]
+mod common;
+use common::{header, monitor, run, util_row};
+
+use consumerbench::apps::models::{llama_3_2_3b, sd35_medium_turbo, whisper_large_v3_turbo};
+use consumerbench::gpusim::kernel::occupancy;
+use consumerbench::gpusim::profiles::rtx6000;
+
+fn main() {
+    header("Fig. 4: GPU utilization, exclusive execution");
+    for (label, app, n) in [
+        ("Chatbot", "chatbot", 8usize),
+        ("ImageGen", "imagegen", 6),
+        ("LiveCaptions", "livecaptions", 30),
+    ] {
+        let cfg = format!("App ({app}):\n  num_requests: {n}\n  device: gpu\nseed: 42\n");
+        let result = run(&cfg);
+        let mon = monitor(&result);
+        println!("\n  {label}:");
+        util_row("SMACT", &mon.gpu_smact);
+        util_row("SMOCC", &mon.gpu_smocc);
+        println!(
+            "  busy means: SMACT {:>5.1}%  SMOCC {:>5.1}%",
+            mon.mean_busy_smact() * 100.0,
+            mon.mean_busy_smocc() * 100.0
+        );
+    }
+
+    header("§4.1 zoomed-in kernel analysis (registers → occupancy)");
+    let gpu = rtx6000();
+    let rows: Vec<(&str, consumerbench::gpusim::KernelDesc)> = vec![
+        ("Chatbot decode (llama.cpp)", llama_3_2_3b().decode_kernels(512).remove(0)),
+        ("ImageGen attention (PyTorch)", {
+            let m = sd35_medium_turbo();
+            m.denoise_step_kernels()
+                .into_iter()
+                .find(|k| k.tag == "denoise.attn")
+                .unwrap()
+        }),
+        ("Whisper encoder matmul", whisper_large_v3_turbo().encode_kernels().remove(0)),
+        ("Whisper decoder small", whisper_large_v3_turbo().decode_token_kernels().remove(0)),
+    ];
+    println!(
+        "  {:<30} {:>6} {:>9} {:>10} {:>10} {:>14}",
+        "kernel", "regs", "smem(KB)", "blocks/SM", "SMOCC", "limited by"
+    );
+    for (name, k) in rows {
+        let occ = occupancy(&k, &gpu).unwrap();
+        println!(
+            "  {:<30} {:>6} {:>9.0} {:>10} {:>9.0}% {:>14}",
+            name,
+            k.regs_per_thread,
+            k.smem_per_block as f64 / 1024.0,
+            occ.blocks_per_sm,
+            occ.occupancy * 100.0,
+            format!("{}", occ.limiter),
+        );
+    }
+    println!(
+        "\npaper shape: SMACT ≈ 100% for all; SMOCC high for Chatbot, ~25-35%\n\
+         for ImageGen (register pressure), <10% for Whisper's decoder."
+    );
+}

@@ -1,0 +1,72 @@
+//! §Perf: L3 hot-path throughput — simulated kernel-events per second on the
+//! discrete-event engine, and end-to-end scenario wallclock.
+//!
+//! Target (DESIGN.md §8): ≥1M kernel-events/sec so no figure bench takes
+//! more than ~10 s of wallclock.
+
+use std::time::Instant;
+
+use consumerbench::coordinator::run_config_text;
+use consumerbench::gpusim::engine::{Engine, JobSpec, Phase};
+use consumerbench::gpusim::kernel::KernelDesc;
+use consumerbench::gpusim::policy::Policy;
+use consumerbench::gpusim::profiles::Testbed;
+
+/// Raw engine throughput: N jobs × K kernels with interleaved arrivals.
+fn engine_events_per_sec(trace: bool) -> f64 {
+    let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+    e.set_trace_enabled(trace);
+    let clients: Vec<_> = (0..4).map(|i| e.register_client(format!("c{i}"))).collect();
+    let kernel = KernelDesc::new("k", 288, 256, 80, 8 * 1024, 1e8, 5e6);
+    let jobs = 2_000;
+    let kernels_per_job = 50;
+    for j in 0..jobs {
+        e.submit(
+            JobSpec {
+                client: clients[j % clients.len()],
+                label: format!("j{j}"),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel.clone(); kernels_per_job])],
+            },
+            j as f64 * 1e-4,
+        );
+    }
+    let events = (jobs * kernels_per_job * 2) as f64; // launch + completion
+    let t0 = Instant::now();
+    e.run_all();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(e.take_completed().len(), jobs);
+    events / dt
+}
+
+/// End-to-end scenario wallclock (the Fig. 5 workload).
+fn fig5_wallclock() -> f64 {
+    let cfg = "\
+Chat (chatbot):
+  num_requests: 10
+  device: gpu
+Image (imagegen):
+  num_requests: 20
+  device: gpu
+Captions (livecaptions):
+  num_requests: 75
+  device: gpu
+strategy: greedy
+seed: 42
+";
+    let t0 = Instant::now();
+    let r = run_config_text(cfg, None).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(r.makespan > 0.0);
+    dt
+}
+
+fn main() {
+    let eps_traced = engine_events_per_sec(true);
+    let eps_untraced = engine_events_per_sec(false);
+    let wall = fig5_wallclock();
+    println!("=== §Perf: L3 engine hot path ===");
+    println!("engine throughput (trace on):  {:>10.0} kernel-events/s", eps_traced);
+    println!("engine throughput (trace off): {:>10.0} kernel-events/s", eps_untraced);
+    println!("fig5 scenario wallclock:       {:>10.2} s", wall);
+    println!("target: >= 1,000,000 events/s traced; fig5 <= 10 s");
+}

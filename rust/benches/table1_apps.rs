@@ -1,0 +1,26 @@
+//! Table 1: dataset, model, and SLO per application.
+
+use consumerbench::apps::{Application, Chatbot, DeepResearch, ImageGen, LiveCaptions};
+
+fn main() {
+    println!("Table 1: Summary of dataset, model, and SLO used in each application");
+    println!(
+        "{:<14} {:<20} {:<28} {}",
+        "Application", "Dataset", "Model", "SLO"
+    );
+    let apps: Vec<Box<dyn Application>> = vec![
+        Box::new(Chatbot::new(0, 1)),
+        Box::new(DeepResearch::new(0, 1)),
+        Box::new(ImageGen::new(0, 1)),
+        Box::new(LiveCaptions::new(0, 1)),
+    ];
+    for app in &apps {
+        println!(
+            "{:<14} {:<20} {:<28} {}",
+            app.name(),
+            app.dataset_name(),
+            app.model_name(),
+            app.slo().describe()
+        );
+    }
+}

@@ -1,0 +1,254 @@
+//! Chatbot: text-to-text chat/Q&A over a llama.cpp backend (§3.3).
+//!
+//! SLOs follow human reading speed: TTFT 1 s, TPOT 0.25 s. Requests are
+//! LMSYS-shaped; execution is one prefill phase followed by one decode
+//! phase per output token (llama.cpp samples on the host between tokens,
+//! so each token is a separate stream enqueue — unlike ImageGen's bulk
+//! launch-ahead, which is exactly why Chatbot interacts differently with
+//! the greedy scheduler in §4.2).
+
+use crate::apps::models::{llama_3_2_3b, LlamaProfile};
+use crate::apps::{AppContext, Application, Arrival, RequestMetrics, Slo};
+use crate::datasets::lmsys::{ChatRequest, LmsysChat};
+use crate::gpusim::engine::{JobResult, JobSpec, MemOp, Phase};
+use crate::gpusim::kernel::Device;
+
+/// Host-side sampling time between decoded tokens.
+const SAMPLE_OVERHEAD: f64 = 0.0005;
+
+/// The Chatbot application.
+pub struct Chatbot {
+    model: LlamaProfile,
+    requests: Vec<ChatRequest>,
+    slo_ttft: f64,
+    slo_tpot: f64,
+    think: f64,
+}
+
+impl Chatbot {
+    /// Default configuration: Llama-3.2-3B, TTFT 1 s / TPOT 0.25 s.
+    pub fn new(seed: u64, num_requests: usize) -> Self {
+        Chatbot::with_model(seed, num_requests, llama_3_2_3b())
+    }
+
+    /// Variant with a different backbone (Appendix B.4 uses Llama-3.1-8B).
+    pub fn with_model(seed: u64, num_requests: usize, model: LlamaProfile) -> Self {
+        let mut gen = LmsysChat::new(seed, 4096);
+        Chatbot {
+            requests: gen.batch(num_requests),
+            model,
+            slo_ttft: 1.0,
+            slo_tpot: 0.25,
+            // Closed-loop user: reads the answer, types the next prompt.
+            think: 5.0,
+        }
+    }
+
+    pub fn model(&self) -> &LlamaProfile {
+        &self.model
+    }
+
+    pub fn requests(&self) -> &[ChatRequest] {
+        &self.requests
+    }
+
+    fn gpu_request_job(&self, ctx: &AppContext, r: &ChatRequest) -> JobSpec {
+        let mut phases = Vec::with_capacity(1 + r.output_tokens);
+        phases.push(Phase::gpu("prefill", 0.002, self.model.prefill_kernels(r.prompt_tokens)));
+        for t in 0..r.output_tokens {
+            let context = r.prompt_tokens + t;
+            phases.push(Phase::gpu("decode", SAMPLE_OVERHEAD, self.model.decode_kernels(context)));
+        }
+        JobSpec {
+            client: ctx.client,
+            label: format!("chatbot.req{}", r.id),
+            phases,
+        }
+    }
+
+    fn cpu_request_job(&self, ctx: &AppContext, r: &ChatRequest) -> JobSpec {
+        let mut phases = Vec::with_capacity(1 + r.output_tokens);
+        phases.push(Phase::cpu("prefill", 0.002, self.model.prefill_cpu(r.prompt_tokens)));
+        for t in 0..r.output_tokens {
+            let context = r.prompt_tokens + t;
+            phases.push(Phase::cpu("decode", SAMPLE_OVERHEAD, self.model.decode_cpu(context)));
+        }
+        JobSpec {
+            client: ctx.client,
+            label: format!("chatbot.req{}", r.id),
+            phases,
+        }
+    }
+}
+
+impl Application for Chatbot {
+    fn name(&self) -> &'static str {
+        "Chatbot"
+    }
+
+    fn model_name(&self) -> &'static str {
+        self.model.name
+    }
+
+    fn dataset_name(&self) -> &'static str {
+        "LMSYS-Chat-1M"
+    }
+
+    fn slo(&self) -> Slo {
+        Slo::Chat {
+            ttft: self.slo_ttft,
+            tpot: self.slo_tpot,
+        }
+    }
+
+    fn arrival(&self) -> Arrival {
+        Arrival::ClosedLoop { think: self.think }
+    }
+
+    fn num_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    fn setup_job(&self, ctx: &AppContext) -> JobSpec {
+        let mut phase = Phase::host("setup.load", self.model.load_seconds());
+        if ctx.device == Device::Gpu {
+            // Weights + a working KV cache for the 4K serving context.
+            phase = phase.with_mem_ops(vec![
+                MemOp::Alloc {
+                    label: "weights".into(),
+                    bytes: self.model.weights_bytes,
+                },
+                MemOp::Alloc {
+                    label: "kv-cache".into(),
+                    bytes: self.model.kv_cache_bytes(4096),
+                },
+            ]);
+        }
+        JobSpec {
+            client: ctx.client,
+            label: "chatbot.setup".into(),
+            phases: vec![phase],
+        }
+    }
+
+    fn request_job(&self, ctx: &AppContext, idx: usize) -> JobSpec {
+        let r = &self.requests[idx];
+        match ctx.device {
+            Device::Gpu => self.gpu_request_job(ctx, r),
+            Device::Cpu => self.cpu_request_job(ctx, r),
+        }
+    }
+
+    fn cleanup_job(&self, ctx: &AppContext) -> JobSpec {
+        JobSpec {
+            client: ctx.client,
+            label: "chatbot.cleanup".into(),
+            phases: vec![Phase::host("cleanup", 0.05).with_mem_ops(vec![MemOp::FreeAll])],
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn evaluate(&self, result: &JobResult) -> RequestMetrics {
+        let ttft = result
+            .phases
+            .iter()
+            .find(|p| p.tag == "prefill")
+            .map(|p| p.end - result.submit)
+            .unwrap_or(f64::INFINITY);
+        let decode: Vec<f64> = result
+            .phases
+            .iter()
+            .filter(|p| p.tag == "decode")
+            .map(|p| p.end - p.start)
+            .collect();
+        let tpot = if decode.is_empty() {
+            0.0
+        } else {
+            decode.iter().sum::<f64>() / decode.len() as f64
+        };
+        let normalized = (ttft / self.slo_ttft).max(tpot / self.slo_tpot);
+        RequestMetrics {
+            label: result.label.clone(),
+            latency: result.latency(),
+            normalized,
+            slo_met: normalized <= 1.0,
+            components: vec![("ttft", ttft), ("tpot", tpot)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::engine::Engine;
+    use crate::gpusim::policy::Policy;
+    use crate::gpusim::profiles::Testbed;
+
+    fn run_exclusive(device: Device) -> Vec<RequestMetrics> {
+        let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let client = e.register_client("chatbot");
+        let ctx = AppContext { client, device };
+        let app = Chatbot::new(1, 4);
+        e.submit(app.setup_job(&ctx), 0.0);
+        e.run_all();
+        let mut t = e.now();
+        for i in 0..app.num_requests() {
+            e.submit(app.request_job(&ctx, i), t);
+            e.run_all();
+            t = e.now() + 0.1;
+        }
+        e.take_completed()
+            .iter()
+            .filter(|r| r.label.starts_with("chatbot.req"))
+            .map(|r| app.evaluate(r))
+            .collect()
+    }
+
+    #[test]
+    fn gpu_exclusive_meets_slo() {
+        let metrics = run_exclusive(Device::Gpu);
+        assert_eq!(metrics.len(), 4);
+        for m in &metrics {
+            assert!(m.slo_met, "{} normalized {}", m.label, m.normalized);
+            assert!(m.normalized < 0.5, "should be comfortably within SLO");
+        }
+    }
+
+    #[test]
+    fn cpu_exclusive_narrowly_misses() {
+        // Fig. 3: on the CPU, Chatbot's normalized latency hovers around the
+        // SLO boundary (TTFT-bound).
+        let metrics = run_exclusive(Device::Cpu);
+        let mean = crate::apps::mean_normalized(&metrics);
+        assert!(mean > 0.5 && mean < 6.0, "mean normalized {mean}");
+        // At least one request should be near/over the boundary.
+        assert!(metrics.iter().any(|m| m.normalized > 0.8), "none near the SLO");
+    }
+
+    #[test]
+    fn setup_allocates_weights_and_kv() {
+        let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let client = e.register_client("chatbot");
+        let ctx = AppContext { client, device: Device::Gpu };
+        let app = Chatbot::new(1, 1);
+        e.submit(app.setup_job(&ctx), 0.0);
+        e.run_all();
+        assert!(e.vram().used() >= app.model().weights_bytes);
+        e.submit(app.cleanup_job(&ctx), e.now());
+        e.run_all();
+        assert_eq!(e.vram().used(), 0);
+    }
+
+    #[test]
+    fn evaluate_reports_components() {
+        let metrics = run_exclusive(Device::Gpu);
+        let m = &metrics[0];
+        let names: Vec<&str> = m.components.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["ttft", "tpot"]);
+        let ttft = m.components[0].1;
+        assert!(ttft > 0.0 && ttft < 1.0);
+    }
+}

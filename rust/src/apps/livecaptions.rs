@@ -1,0 +1,248 @@
+//! LiveCaptions: real-time audio transcription (whisper-online, §3.3).
+//!
+//! The frontend sends a 2-second audio segment every 2 seconds (open-loop);
+//! the SLO is that each segment transcribes within 2 s. Execution is one
+//! encoder pass (healthy occupancy) followed by autoregressive decoding of
+//! a handful of tokens, each a burst of tiny, register/smem-hungry kernels —
+//! the profile that makes LiveCaptions the starvation victim of §4.2.
+//!
+//! A seeded ~2% of segments fail language identification and re-encode
+//! (paper footnote 2 — the 3-in-150 SLO violations of Fig. 3).
+
+use crate::apps::models::{whisper_large_v3_turbo, WhisperProfile};
+use crate::apps::{AppContext, Application, Arrival, RequestMetrics, Slo};
+use crate::datasets::earnings21::{AudioSegment, Earnings21};
+use crate::gpusim::engine::{JobResult, JobSpec, MemOp, Phase};
+use crate::gpusim::kernel::Device;
+
+/// Host-side audio chunking/feature-extraction per segment.
+const CHUNK_OVERHEAD: f64 = 0.02;
+
+/// The LiveCaptions application.
+pub struct LiveCaptions {
+    model: WhisperProfile,
+    segments: Vec<AudioSegment>,
+    slo_segment: f64,
+}
+
+impl LiveCaptions {
+    /// Latency-sensitive configuration: 2 s segments, 2 s SLO.
+    pub fn new(seed: u64, num_segments: usize) -> Self {
+        let mut gen = Earnings21::new(seed);
+        LiveCaptions {
+            segments: gen.stream(num_segments),
+            model: whisper_large_v3_turbo(),
+            slo_segment: 2.0,
+        }
+    }
+
+    /// Apple Silicon configuration (Appendix C): 4 s SLO, longer chunks.
+    pub fn apple_config(seed: u64, num_segments: usize) -> Self {
+        let mut gen = Earnings21::new(seed).with_segment_seconds(4.0);
+        LiveCaptions {
+            segments: gen.stream(num_segments),
+            model: whisper_large_v3_turbo(),
+            slo_segment: 4.0,
+        }
+    }
+
+    pub fn model(&self) -> &WhisperProfile {
+        &self.model
+    }
+
+    pub fn segments(&self) -> &[AudioSegment] {
+        &self.segments
+    }
+
+    pub fn segment_period(&self) -> f64 {
+        self.segments.first().map(|s| s.duration).unwrap_or(2.0)
+    }
+}
+
+impl Application for LiveCaptions {
+    fn name(&self) -> &'static str {
+        "LiveCaptions"
+    }
+
+    fn model_name(&self) -> &'static str {
+        self.model.name
+    }
+
+    fn dataset_name(&self) -> &'static str {
+        "Earnings-21"
+    }
+
+    fn slo(&self) -> Slo {
+        Slo::SegmentTime(self.slo_segment)
+    }
+
+    fn arrival(&self) -> Arrival {
+        Arrival::OpenLoop {
+            period: self.segment_period(),
+        }
+    }
+
+    fn num_requests(&self) -> usize {
+        self.segments.len()
+    }
+
+    fn setup_job(&self, ctx: &AppContext) -> JobSpec {
+        let mut phase = Phase::host("setup.load", self.model.load_seconds());
+        if ctx.device == Device::Gpu {
+            phase = phase.with_mem_ops(vec![MemOp::Alloc {
+                label: "weights".into(),
+                bytes: self.model.weights_bytes,
+            }]);
+        }
+        JobSpec {
+            client: ctx.client,
+            label: "livecaptions.setup".into(),
+            phases: vec![phase],
+        }
+    }
+
+    fn request_job(&self, ctx: &AppContext, idx: usize) -> JobSpec {
+        let seg = &self.segments[idx];
+        // Language-ID failure → the segment is encoded again (footnote 2).
+        let encode_passes = if seg.reencode { 2 } else { 1 };
+        let mut phases = Vec::new();
+        // A failed language ID stalls the pipeline until the segment is
+        // re-submitted with the next audio chunk (paper footnote 2) — this
+        // is what breaks the 2 s budget even on an exclusive GPU.
+        let reencode_delay = if seg.reencode { self.segment_period() } else { 0.0 };
+        match ctx.device {
+            Device::Gpu => {
+                for (i, _) in (0..encode_passes).enumerate() {
+                    let host = CHUNK_OVERHEAD + if i > 0 { reencode_delay } else { 0.0 };
+                    phases.push(Phase::gpu("encode", host, self.model.encode_kernels()));
+                }
+                for t in 0..seg.transcript_tokens {
+                    let host = if t == 0 { 0.005 } else { 0.001 };
+                    phases.push(Phase::gpu("decode", host, self.model.decode_token_kernels()));
+                }
+            }
+            Device::Cpu => {
+                for (i, _) in (0..encode_passes).enumerate() {
+                    let host = CHUNK_OVERHEAD + if i > 0 { reencode_delay } else { 0.0 };
+                    phases.push(Phase::cpu("encode", host, self.model.encode_cpu()));
+                }
+                for _ in 0..seg.transcript_tokens {
+                    phases.push(Phase::cpu("decode", 0.001, self.model.decode_token_cpu()));
+                }
+            }
+        }
+        JobSpec {
+            client: ctx.client,
+            label: format!("livecaptions.seg{}", seg.id),
+            phases,
+        }
+    }
+
+    fn cleanup_job(&self, ctx: &AppContext) -> JobSpec {
+        JobSpec {
+            client: ctx.client,
+            label: "livecaptions.cleanup".into(),
+            phases: vec![Phase::host("cleanup", 0.05).with_mem_ops(vec![MemOp::FreeAll])],
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn evaluate(&self, result: &JobResult) -> RequestMetrics {
+        let latency = result.latency();
+        let normalized = latency / self.slo_segment;
+        // Decode-phase time, for the Fig. 5b stall analysis.
+        let decode_time: f64 = result
+            .phases
+            .iter()
+            .filter(|p| p.tag == "decode")
+            .map(|p| p.end - p.start)
+            .sum();
+        RequestMetrics {
+            label: result.label.clone(),
+            latency,
+            normalized,
+            slo_met: normalized <= 1.0,
+            components: vec![("segment_time", latency), ("decode_time", decode_time)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::engine::Engine;
+    use crate::gpusim::policy::Policy;
+    use crate::gpusim::profiles::Testbed;
+
+    fn run_segments(device: Device, n: usize, seed: u64) -> Vec<RequestMetrics> {
+        let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let client = e.register_client("livecaptions");
+        let ctx = AppContext { client, device };
+        let app = LiveCaptions::new(seed, n);
+        e.submit(app.setup_job(&ctx), 0.0);
+        e.run_all();
+        let base = e.now();
+        for i in 0..n {
+            // Open-loop: segment i arrives at base + 2i.
+            e.submit(app.request_job(&ctx, i), base + i as f64 * 2.0);
+        }
+        e.run_all();
+        e.take_completed()
+            .iter()
+            .filter(|r| r.label.starts_with("livecaptions.seg"))
+            .map(|r| app.evaluate(r))
+            .collect()
+    }
+
+    #[test]
+    fn gpu_exclusive_nearly_all_meet_slo() {
+        // Fig. 3: on the GPU, ~147/150 segments meet the 2 s SLO (the
+        // misses are the re-encoded segments — and even those usually fit
+        // within 2 s when exclusive).
+        let metrics = run_segments(Device::Gpu, 50, 42);
+        let attainment = crate::apps::slo_attainment(&metrics);
+        assert!(attainment > 0.9, "attainment {attainment}");
+        // Latencies far below SLO when exclusive.
+        let mean = crate::apps::mean_normalized(&metrics);
+        assert!(mean < 0.3, "mean normalized {mean}");
+    }
+
+    #[test]
+    fn cpu_exclusive_misses_slo() {
+        let metrics = run_segments(Device::Cpu, 5, 42);
+        let mean = crate::apps::mean_normalized(&metrics);
+        assert!(mean > 1.0, "CPU should blow the 2 s budget: {mean}");
+    }
+
+    #[test]
+    fn reencoded_segments_are_slower() {
+        let app = LiveCaptions::new(42, 500);
+        let has_reencode = app.segments().iter().any(|s| s.reencode);
+        assert!(has_reencode, "seed should produce re-encode events");
+        let ctx = AppContext {
+            client: crate::gpusim::engine::ClientId(0),
+            device: Device::Gpu,
+        };
+        let normal_idx = app.segments().iter().position(|s| !s.reencode).unwrap();
+        let re_idx = app.segments().iter().position(|s| s.reencode).unwrap();
+        let n_enc = |idx: usize| {
+            app.request_job(&ctx, idx)
+                .phases
+                .iter()
+                .filter(|p| p.tag == "encode")
+                .count()
+        };
+        assert_eq!(n_enc(normal_idx), 1);
+        assert_eq!(n_enc(re_idx), 2);
+    }
+
+    #[test]
+    fn apple_config_relaxes_slo() {
+        let app = LiveCaptions::apple_config(1, 10);
+        assert_eq!(app.slo(), Slo::SegmentTime(4.0));
+        assert_eq!(app.segment_period(), 4.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! The GenAI applications of Table 1.
+//!
+//! Each application implements the paper's three-function integration API
+//! (§3.3): `setup()` loads the model (VRAM allocation + load time),
+//! `execute()` issues one request, `cleanup()` releases resources. Here
+//! those functions produce [`JobSpec`]s for the simulated testbed; the
+//! numerics behind each request run through the real PJRT runtime when
+//! artifacts are available (see `runtime`).
+
+pub mod chatbot;
+pub mod deepresearch;
+pub mod imagegen;
+pub mod livecaptions;
+pub mod models;
+
+pub use chatbot::Chatbot;
+pub use deepresearch::DeepResearch;
+pub use imagegen::ImageGen;
+pub use livecaptions::LiveCaptions;
+
+use crate::gpusim::engine::{ClientId, JobResult, JobSpec};
+use crate::gpusim::kernel::Device;
+
+/// Placement + identity context handed to the app by the orchestrator.
+#[derive(Debug, Clone, Copy)]
+pub struct AppContext {
+    pub client: ClientId,
+    pub device: Device,
+}
+
+/// Service-level objective per application class (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Slo {
+    /// Chatbot: time-to-first-token and time-per-output-token bounds.
+    Chat { ttft: f64, tpot: f64 },
+    /// ImageGen: per-denoising-step bound.
+    StepTime(f64),
+    /// LiveCaptions: per-segment bound.
+    SegmentTime(f64),
+    /// Background applications (DeepResearch).
+    None,
+}
+
+impl Slo {
+    pub fn describe(&self) -> String {
+        match self {
+            Slo::Chat { ttft, tpot } => format!("TTFT:{ttft}s, TPOT: {tpot}s"),
+            Slo::StepTime(s) => format!("Step Time: {s}s"),
+            Slo::SegmentTime(s) => format!("Per-Segment Time: {s}s"),
+            Slo::None => "N/A".to_string(),
+        }
+    }
+}
+
+/// How an application's requests arrive (virtual time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Next request is sent `think` seconds after the previous completes.
+    ClosedLoop { think: f64 },
+    /// Request `i` arrives at `start + i × period` regardless of completion
+    /// (the LiveCaptions 2-second audio cadence).
+    OpenLoop { period: f64 },
+}
+
+/// Per-request evaluation against the SLO.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub label: String,
+    pub latency: f64,
+    /// Latency (or the binding component) normalized to the SLO; the Fig. 3
+    /// y-axis. 0 for SLO-less apps.
+    pub normalized: f64,
+    pub slo_met: bool,
+    /// Named components, e.g. [("ttft", 0.8), ("tpot", 0.01)].
+    pub components: Vec<(&'static str, f64)>,
+}
+
+/// The application integration API (paper §3.3).
+pub trait Application {
+    fn name(&self) -> &'static str;
+    fn model_name(&self) -> &'static str;
+    fn dataset_name(&self) -> &'static str;
+    fn slo(&self) -> Slo;
+    fn arrival(&self) -> Arrival;
+    fn num_requests(&self) -> usize;
+
+    /// Job that loads the model onto the context device.
+    fn setup_job(&self, ctx: &AppContext) -> JobSpec;
+
+    /// Job for request `idx` (0-based, < num_requests).
+    fn request_job(&self, ctx: &AppContext, idx: usize) -> JobSpec;
+
+    /// Job that unloads the model.
+    fn cleanup_job(&self, ctx: &AppContext) -> JobSpec;
+
+    /// Evaluate a finished request against the SLO.
+    fn evaluate(&self, result: &JobResult) -> RequestMetrics;
+
+    /// Downcasting hook (the executor needs concrete request shapes for
+    /// server-backed nodes).
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Aggregate SLO attainment over request metrics — the Fig. 3b/5a metric.
+pub fn slo_attainment(metrics: &[RequestMetrics]) -> f64 {
+    if metrics.is_empty() {
+        return 1.0;
+    }
+    metrics.iter().filter(|m| m.slo_met).count() as f64 / metrics.len() as f64
+}
+
+/// Mean normalized latency — the Fig. 3a/5a metric.
+pub fn mean_normalized(metrics: &[RequestMetrics]) -> f64 {
+    if metrics.is_empty() {
+        return 0.0;
+    }
+    metrics.iter().map(|m| m.normalized).sum::<f64>() / metrics.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_description_matches_table1() {
+        assert_eq!(
+            Slo::Chat { ttft: 1.0, tpot: 0.25 }.describe(),
+            "TTFT:1s, TPOT: 0.25s"
+        );
+        assert_eq!(Slo::StepTime(1.0).describe(), "Step Time: 1s");
+        assert_eq!(Slo::SegmentTime(2.0).describe(), "Per-Segment Time: 2s");
+        assert_eq!(Slo::None.describe(), "N/A");
+    }
+
+    #[test]
+    fn attainment_counts_met() {
+        let m = |ok: bool| RequestMetrics {
+            label: "r".into(),
+            latency: 1.0,
+            normalized: 1.0,
+            slo_met: ok,
+            components: vec![],
+        };
+        let ms = vec![m(true), m(true), m(false), m(true)];
+        assert!((slo_attainment(&ms) - 0.75).abs() < 1e-12);
+        assert_eq!(slo_attainment(&[]), 1.0);
+    }
+
+    #[test]
+    fn mean_normalized_averages() {
+        let m = |n: f64| RequestMetrics {
+            label: "r".into(),
+            latency: n,
+            normalized: n,
+            slo_met: true,
+            components: vec![],
+        };
+        assert!((mean_normalized(&[m(0.5), m(1.5)]) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,230 @@
+//! Command-line interface for the `consumerbench` binary.
+//!
+//! Hand-rolled argument parsing (the offline crate set has no `clap`):
+//!
+//! ```text
+//! consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--no-pjrt]
+//! consumerbench validate <config.yaml>
+//! consumerbench apps
+//! consumerbench help
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::apps::{Application, Chatbot, DeepResearch, ImageGen, LiveCaptions};
+use crate::coordinator::{generate, to_csv, BenchConfig, Dag, ScenarioRunner};
+use crate::runtime::Runtime;
+
+const USAGE: &str = "\
+ConsumerBench — benchmarking generative AI applications on end-user devices
+
+USAGE:
+    consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--no-pjrt]
+    consumerbench validate <config.yaml>
+    consumerbench apps
+    consumerbench help
+
+COMMANDS:
+    run        Execute a workflow configuration and print the benchmark report
+    validate   Parse the configuration and check the workflow DAG
+    apps       List the built-in applications (paper Table 1)
+
+OPTIONS:
+    --artifacts DIR   AOT artifact directory (default: artifacts)
+    --csv FILE        Also write per-request metrics as CSV
+    --no-pjrt         Skip real-numerics PJRT execution even if artifacts exist
+";
+
+/// Entry point used by `main.rs`.
+pub fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    run_cli(&args, &mut std::io::stdout())
+}
+
+/// Testable CLI core.
+pub fn run_cli(args: &[String], out: &mut impl std::io::Write) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        writeln!(out, "{USAGE}")?;
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            writeln!(out, "{USAGE}")?;
+            Ok(())
+        }
+        "apps" => cmd_apps(out),
+        "validate" => {
+            let path = args.get(1).context("validate: missing <config.yaml>")?;
+            cmd_validate(path, out)
+        }
+        "run" => {
+            let path = args.get(1).context("run: missing <config.yaml>")?;
+            let opts = parse_opts(&args[2..])?;
+            cmd_run(path, &opts, out)
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+#[derive(Debug, Default)]
+struct RunOpts {
+    artifacts: Option<String>,
+    csv: Option<String>,
+    no_pjrt: bool,
+}
+
+fn parse_opts(args: &[String]) -> Result<RunOpts> {
+    let mut opts = RunOpts {
+        artifacts: Some("artifacts".to_string()),
+        ..Default::default()
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--artifacts" => {
+                opts.artifacts = Some(
+                    args.get(i + 1)
+                        .context("--artifacts requires a value")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--csv" => {
+                opts.csv = Some(args.get(i + 1).context("--csv requires a value")?.clone());
+                i += 2;
+            }
+            "--no-pjrt" => {
+                opts.no_pjrt = true;
+                i += 1;
+            }
+            other => bail!("unknown option `{other}`"),
+        }
+    }
+    Ok(opts)
+}
+
+fn cmd_apps(out: &mut impl std::io::Write) -> Result<()> {
+    writeln!(
+        out,
+        "{:<14} {:<20} {:<28} {}",
+        "Application", "Dataset", "Model", "SLO"
+    )?;
+    let apps: Vec<Box<dyn Application>> = vec![
+        Box::new(Chatbot::new(0, 1)),
+        Box::new(DeepResearch::new(0, 1)),
+        Box::new(ImageGen::new(0, 1)),
+        Box::new(LiveCaptions::new(0, 1)),
+    ];
+    for app in &apps {
+        writeln!(
+            out,
+            "{:<14} {:<20} {:<28} {}",
+            app.name(),
+            app.dataset_name(),
+            app.model_name(),
+            app.slo().describe()
+        )?;
+    }
+    Ok(())
+}
+
+fn cmd_validate(path: &str, out: &mut impl std::io::Write) -> Result<()> {
+    let cfg = BenchConfig::load(path)?;
+    let dag = Dag::build(&cfg.workflow)?;
+    writeln!(
+        out,
+        "OK: {} tasks, {} workflow nodes (depth {}), {} servers, strategy {:?}",
+        cfg.tasks.len(),
+        dag.len(),
+        dag.depth(),
+        cfg.servers.len(),
+        cfg.strategy
+    )?;
+    Ok(())
+}
+
+fn cmd_run(path: &str, opts: &RunOpts, out: &mut impl std::io::Write) -> Result<()> {
+    let cfg = BenchConfig::load(path)?;
+    let runtime = match (&opts.artifacts, opts.no_pjrt) {
+        (Some(dir), false) if Runtime::available(dir) => {
+            writeln!(out, "loading AOT artifacts from {dir} …")?;
+            Some(Runtime::load_dir(dir)?)
+        }
+        _ => {
+            writeln!(out, "running simulation-only (no artifacts)")?;
+            None
+        }
+    };
+    let result = ScenarioRunner::new(&cfg, runtime)?.run()?;
+    let report = generate(&result);
+    writeln!(out, "{}", report.text)?;
+    if let Some(csv_path) = &opts.csv {
+        std::fs::write(csv_path, to_csv(&result))
+            .with_context(|| format!("writing {csv_path}"))?;
+        writeln!(out, "wrote per-request CSV to {csv_path}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(args: &[&str]) -> (Result<()>, String) {
+        let args: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        let mut buf = Vec::new();
+        let r = run_cli(&args, &mut buf);
+        (r, String::from_utf8(buf).unwrap())
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        let (r, out) = run(&[]);
+        assert!(r.is_ok());
+        assert!(out.contains("USAGE"));
+    }
+
+    #[test]
+    fn apps_lists_table1() {
+        let (r, out) = run(&["apps"]);
+        assert!(r.is_ok());
+        for needle in ["Chatbot", "DeepResearch", "ImageGen", "LiveCaptions", "Earnings-21"] {
+            assert!(out.contains(needle), "missing {needle} in:\n{out}");
+        }
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let (r, _) = run(&["frobnicate"]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validate_and_run_config_file() {
+        let dir = std::env::temp_dir().join("cb_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("cfg.yaml");
+        std::fs::write(&cfg, "Chat (chatbot):\n  num_requests: 1\n").unwrap();
+        let (r, out) = run(&["validate", cfg.to_str().unwrap()]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("OK: 1 tasks"));
+
+        let csv = dir.join("out.csv");
+        let (r, out) = run(&[
+            "run",
+            cfg.to_str().unwrap(),
+            "--no-pjrt",
+            "--csv",
+            csv.to_str().unwrap(),
+        ]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("ConsumerBench report"));
+        assert!(csv.is_file());
+    }
+
+    #[test]
+    fn bad_option_rejected() {
+        let (r, _) = run(&["run", "x.yaml", "--frob"]);
+        assert!(r.is_err());
+    }
+}

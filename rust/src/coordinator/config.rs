@@ -1,0 +1,541 @@
+//! Workflow configuration schema (the paper's YAML input, Fig. 2 / Fig. 23).
+//!
+//! A configuration has:
+//!
+//! * **Task definitions** — top-level mappings naming an application
+//!   instance: `"Creating Cover Art (ImageGen)"` with `model`,
+//!   `num_requests`, `device`, `slo`, `mps`, and optionally `server` (route
+//!   requests through a shared inference server).
+//! * **`workflows:`** — DAG nodes: `uses` references a task, `depend_on`
+//!   lists upstream node ids, `background` marks long-running tasks.
+//! * **Benchmark-level keys** — `strategy` (greedy | partition |
+//!   fair_share), `testbed` (intel_server | macbook_m1_pro), `seed`,
+//!   and a `servers:` section defining shared llama.cpp-style servers.
+//!
+//! Without a `workflows:` section every task becomes an independent root
+//! node (the concurrent-execution scenarios of §4.2).
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gpusim::kernel::Device;
+use crate::server::KvPlacement;
+use crate::util::yaml::{self, Value};
+
+/// Application class of a task (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppType {
+    Chatbot,
+    DeepResearch,
+    ImageGen,
+    LiveCaptions,
+}
+
+impl AppType {
+    pub fn parse(s: &str) -> Option<AppType> {
+        match s.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
+            "chatbot" | "chat" => Some(AppType::Chatbot),
+            "deepresearch" | "research" => Some(AppType::DeepResearch),
+            "imagegen" | "imagegeneration" => Some(AppType::ImageGen),
+            "livecaptions" | "livecaption" | "captions" => Some(AppType::LiveCaptions),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppType::Chatbot => "Chatbot",
+            AppType::DeepResearch => "DeepResearch",
+            AppType::ImageGen => "ImageGen",
+            AppType::LiveCaptions => "LiveCaptions",
+        }
+    }
+}
+
+/// SLO specification, possibly overriding the app default.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SloSpec {
+    /// Single bound (step time / segment time / e2e latency).
+    Single(f64),
+    /// `[ttft, tpot]` for chat.
+    Chat(f64, f64),
+}
+
+/// One task definition.
+#[derive(Debug, Clone)]
+pub struct TaskConfig {
+    pub name: String,
+    pub app_type: AppType,
+    pub model: Option<String>,
+    pub num_requests: usize,
+    pub device: Device,
+    pub slo: Option<SloSpec>,
+    /// MPS active-thread percentage (0–100]; used by the partition strategy.
+    pub mps: f64,
+    /// Shared-server routing (references `servers:`).
+    pub server: Option<String>,
+}
+
+/// One workflow DAG node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowNodeConfig {
+    pub id: String,
+    pub uses: String,
+    pub depend_on: Vec<String>,
+    pub background: bool,
+}
+
+/// Shared inference-server definition.
+#[derive(Debug, Clone)]
+pub struct ServerDef {
+    pub name: String,
+    pub model: Option<String>,
+    pub context_window: usize,
+    pub kv_placement: KvPlacement,
+    pub n_slots: usize,
+}
+
+/// GPU sharing strategy (§3.2 resource orchestrator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Greedy,
+    Partition,
+    FairShare,
+    /// §5.2 extension: latency-sensitive clients get scheduling priority
+    /// plus a small SM reservation (see `gpusim::Policy::SloAware`).
+    SloAware,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().replace(['-', ' '], "_").as_str() {
+            "greedy" => Some(Strategy::Greedy),
+            "partition" | "static_partition" | "mps" => Some(Strategy::Partition),
+            "fair_share" | "fairshare" | "fair" => Some(Strategy::FairShare),
+            "slo_aware" | "sloaware" => Some(Strategy::SloAware),
+            _ => None,
+        }
+    }
+}
+
+/// Which simulated testbed to run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TestbedKind {
+    IntelServer,
+    MacbookM1Pro,
+}
+
+/// The full parsed benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub tasks: Vec<TaskConfig>,
+    pub workflow: Vec<WorkflowNodeConfig>,
+    pub servers: Vec<ServerDef>,
+    pub strategy: Strategy,
+    pub testbed: TestbedKind,
+    pub seed: u64,
+}
+
+impl BenchConfig {
+    /// Parse a YAML document.
+    pub fn parse(text: &str) -> Result<BenchConfig> {
+        let root = yaml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut tasks = Vec::new();
+        let mut workflow = Vec::new();
+        let mut servers = Vec::new();
+        let mut strategy = Strategy::Greedy;
+        let mut testbed = TestbedKind::IntelServer;
+        let mut seed = 42u64;
+
+        for key in root.keys() {
+            let value = root.get(key).unwrap();
+            match key {
+                "workflows" => workflow = parse_workflows(value)?,
+                "servers" => servers = parse_servers(value)?,
+                "strategy" => {
+                    let s = value.as_str().context("strategy must be a string")?;
+                    strategy =
+                        Strategy::parse(s).with_context(|| format!("unknown strategy `{s}`"))?;
+                }
+                "testbed" => {
+                    let s = value.as_str().context("testbed must be a string")?;
+                    testbed = match s {
+                        "intel_server" => TestbedKind::IntelServer,
+                        "macbook_m1_pro" => TestbedKind::MacbookM1Pro,
+                        other => bail!("unknown testbed `{other}`"),
+                    };
+                }
+                "seed" => {
+                    seed = value.as_i64().context("seed must be an integer")? as u64;
+                }
+                _ => tasks.push(parse_task(key, value)?),
+            }
+        }
+
+        if tasks.is_empty() {
+            bail!("configuration defines no tasks");
+        }
+        // Implicit workflow: every task is a root node.
+        if workflow.is_empty() {
+            workflow = tasks
+                .iter()
+                .map(|t| WorkflowNodeConfig {
+                    id: t.name.clone(),
+                    uses: t.name.clone(),
+                    depend_on: Vec::new(),
+                    background: false,
+                })
+                .collect();
+        }
+        let cfg = BenchConfig {
+            tasks,
+            workflow,
+            servers,
+            strategy,
+            testbed,
+            seed,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<BenchConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        BenchConfig::parse(&text)
+    }
+
+    pub fn task(&self, name: &str) -> Option<&TaskConfig> {
+        self.tasks.iter().find(|t| t.name == name)
+    }
+
+    pub fn server(&self, name: &str) -> Option<&ServerDef> {
+        self.servers.iter().find(|s| s.name == name)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut ids = BTreeSet::new();
+        for n in &self.workflow {
+            if !ids.insert(n.id.as_str()) {
+                bail!("duplicate workflow node id `{}`", n.id);
+            }
+            if self.task(&n.uses).is_none() {
+                bail!("workflow node `{}` uses unknown task `{}`", n.id, n.uses);
+            }
+        }
+        for n in &self.workflow {
+            for d in &n.depend_on {
+                if !ids.contains(d.as_str()) {
+                    bail!("workflow node `{}` depends on unknown node `{}`", n.id, d);
+                }
+            }
+        }
+        for t in &self.tasks {
+            if let Some(srv) = &t.server {
+                if self.server(srv).is_none() {
+                    bail!("task `{}` references unknown server `{srv}`", t.name);
+                }
+                if !matches!(t.app_type, AppType::Chatbot | AppType::DeepResearch) {
+                    bail!(
+                        "task `{}`: only text-model tasks can share a server",
+                        t.name
+                    );
+                }
+            }
+            if !(0.0..=100.0).contains(&t.mps) || t.mps == 0.0 {
+                bail!("task `{}`: mps must be in (0, 100]", t.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_task(name: &str, v: &Value) -> Result<TaskConfig> {
+    if v.as_map().is_none() {
+        bail!("task `{name}` must be a mapping");
+    }
+    // App type: explicit `type:` field, else the "(AppType)" suffix of the
+    // task name (the Fig. 2 convention).
+    let app_type = if let Some(t) = v.get("type").and_then(|t| t.as_str()) {
+        AppType::parse(t).with_context(|| format!("task `{name}`: unknown type `{t}`"))?
+    } else if let Some(open) = name.rfind('(') {
+        let inner = name[open + 1..].trim_end_matches(')');
+        AppType::parse(inner)
+            .with_context(|| format!("task `{name}`: cannot infer app type from `{inner}`"))?
+    } else {
+        bail!("task `{name}`: no `type:` field and no `(AppType)` suffix");
+    };
+
+    let device = match v.get("device").and_then(|d| d.as_str()).unwrap_or("gpu") {
+        "gpu" => Device::Gpu,
+        "cpu" => Device::Cpu,
+        other => bail!("task `{name}`: unknown device `{other}`"),
+    };
+
+    let num_requests = v
+        .get("num_requests")
+        .map(|n| n.as_i64().with_context(|| format!("task `{name}`: num_requests must be int")))
+        .transpose()?
+        .unwrap_or(1) as usize;
+
+    let slo = v.get("slo").map(|s| parse_slo(name, s)).transpose()?;
+
+    let mps = v
+        .get("mps")
+        .map(|m| m.as_f64().with_context(|| format!("task `{name}`: mps must be numeric")))
+        .transpose()?
+        .unwrap_or(100.0);
+
+    Ok(TaskConfig {
+        name: name.to_string(),
+        app_type,
+        model: v
+            .get("model")
+            .or_else(|| v.get("server_model"))
+            .and_then(|m| m.as_str())
+            .map(String::from),
+        num_requests,
+        device,
+        slo,
+        mps,
+        server: v.get("server").and_then(|s| s.as_str()).map(String::from),
+    })
+}
+
+fn parse_workflows(v: &Value) -> Result<Vec<WorkflowNodeConfig>> {
+    let map = v.as_map().context("`workflows` must be a mapping")?;
+    let mut nodes = Vec::new();
+    for (id, body) in map {
+        let uses = body
+            .get("uses")
+            .and_then(|u| u.as_str())
+            .with_context(|| format!("workflow node `{id}` missing `uses`"))?
+            .to_string();
+        let depend_on = match body.get("depend_on") {
+            None => Vec::new(),
+            Some(Value::Seq(items)) => items
+                .iter()
+                .map(|i| {
+                    i.as_str()
+                        .map(String::from)
+                        .with_context(|| format!("workflow node `{id}`: deps must be strings"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            Some(Value::Str(s)) => vec![s.clone()],
+            Some(other) => bail!("workflow node `{id}`: bad depend_on `{other}`"),
+        };
+        let background = body.get("background").and_then(|b| b.as_bool()).unwrap_or(false);
+        nodes.push(WorkflowNodeConfig {
+            id: id.clone(),
+            uses,
+            depend_on,
+            background,
+        });
+    }
+    Ok(nodes)
+}
+
+fn parse_servers(v: &Value) -> Result<Vec<ServerDef>> {
+    let map = v.as_map().context("`servers` must be a mapping")?;
+    let mut servers = Vec::new();
+    for (name, body) in map {
+        let context_window = body
+            .get("context_window")
+            .and_then(|c| c.as_i64())
+            .unwrap_or(16_384) as usize;
+        let kv_placement = match body
+            .get("kv_placement")
+            .and_then(|k| k.as_str())
+            .unwrap_or("gpu")
+        {
+            "gpu" => KvPlacement::Gpu,
+            "cpu" => KvPlacement::Cpu,
+            other => bail!("server `{name}`: unknown kv_placement `{other}`"),
+        };
+        let n_slots = body.get("n_slots").and_then(|n| n.as_i64()).unwrap_or(4) as usize;
+        servers.push(ServerDef {
+            name: name.clone(),
+            model: body.get("model").and_then(|m| m.as_str()).map(String::from),
+            context_window,
+            kv_placement,
+            n_slots,
+        });
+    }
+    Ok(servers)
+}
+
+fn parse_slo(task: &str, v: &Value) -> Result<SloSpec> {
+    match v {
+        Value::Seq(items) if items.len() == 2 => {
+            let ttft = parse_duration_value(task, &items[0])?;
+            let tpot = parse_duration_value(task, &items[1])?;
+            Ok(SloSpec::Chat(ttft, tpot))
+        }
+        other => Ok(SloSpec::Single(parse_duration_value(task, other)?)),
+    }
+}
+
+fn parse_duration_value(task: &str, v: &Value) -> Result<f64> {
+    match v {
+        Value::Int(i) => Ok(*i as f64),
+        Value::Float(f) => Ok(*f),
+        Value::Str(s) => parse_duration(s).with_context(|| format!("task `{task}`: bad duration `{s}`")),
+        other => bail!("task `{task}`: bad SLO value `{other}`"),
+    }
+}
+
+/// Parse `"1s"`, `"0.25s"`, `"500ms"` into seconds.
+pub fn parse_duration(s: &str) -> Result<f64> {
+    let s = s.trim();
+    if let Some(ms) = s.strip_suffix("ms") {
+        return Ok(ms.trim().parse::<f64>()? / 1000.0);
+    }
+    if let Some(sec) = s.strip_suffix('s') {
+        return Ok(sec.trim().parse::<f64>()?);
+    }
+    Ok(s.parse::<f64>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIG2_STYLE: &str = "\
+Analysis (DeepResearch):
+  model: Llama-3.2-3B
+  num_requests: 1
+  device: cpu
+Creating Cover Art (ImageGen):
+  model: SD-3.5-Medium-Turbo
+  num_requests: 5
+  device: gpu
+  slo: 1s
+Generating Captions (LiveCaptions):
+  model: Whisper-Large-V3-Turbo
+  num_requests: 1
+  device: gpu
+  slo: 2s
+workflows:
+  analysis_1:
+    uses: Analysis (DeepResearch)
+  cover_art:
+    uses: Creating Cover Art (ImageGen)
+    depend_on: [\"analysis_1\"]
+  generate_captions:
+    uses: Generating Captions (LiveCaptions)
+    depend_on: [\"cover_art\"]
+";
+
+    #[test]
+    fn parses_fig2_config() {
+        let cfg = BenchConfig::parse(FIG2_STYLE).unwrap();
+        assert_eq!(cfg.tasks.len(), 3);
+        assert_eq!(cfg.workflow.len(), 3);
+        let analysis = cfg.task("Analysis (DeepResearch)").unwrap();
+        assert_eq!(analysis.app_type, AppType::DeepResearch);
+        assert_eq!(analysis.device, Device::Cpu);
+        let img = cfg.task("Creating Cover Art (ImageGen)").unwrap();
+        assert_eq!(img.app_type, AppType::ImageGen);
+        assert_eq!(img.slo, Some(SloSpec::Single(1.0)));
+        assert_eq!(img.num_requests, 5);
+        let node = cfg.workflow.iter().find(|n| n.id == "cover_art").unwrap();
+        assert_eq!(node.depend_on, vec!["analysis_1"]);
+    }
+
+    #[test]
+    fn type_field_wins_over_suffix() {
+        let cfg = BenchConfig::parse("Brainstorm (chatbot):\n  type: chatbot\n  num_requests: 2\n").unwrap();
+        assert_eq!(cfg.tasks[0].app_type, AppType::Chatbot);
+    }
+
+    #[test]
+    fn chat_slo_list() {
+        let cfg =
+            BenchConfig::parse("Chat (chatbot):\n  slo: [1s, 0.25s]\n  num_requests: 1\n").unwrap();
+        assert_eq!(cfg.tasks[0].slo, Some(SloSpec::Chat(1.0, 0.25)));
+    }
+
+    #[test]
+    fn implicit_workflow_when_missing() {
+        let cfg = BenchConfig::parse(
+            "A (chatbot):\n  num_requests: 1\nB (imagegen):\n  num_requests: 1\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.workflow.len(), 2);
+        assert!(cfg.workflow.iter().all(|n| n.depend_on.is_empty()));
+    }
+
+    #[test]
+    fn servers_and_routing() {
+        let text = "\
+Brainstorm (chatbot):
+  num_requests: 10
+  server: shared_llama
+servers:
+  shared_llama:
+    model: Llama-3.2-3B
+    context_window: 131072
+    kv_placement: cpu
+strategy: greedy
+seed: 7
+";
+        let cfg = BenchConfig::parse(text).unwrap();
+        assert_eq!(cfg.seed, 7);
+        let srv = cfg.server("shared_llama").unwrap();
+        assert_eq!(srv.context_window, 131_072);
+        assert_eq!(srv.kv_placement, KvPlacement::Cpu);
+        assert_eq!(cfg.tasks[0].server.as_deref(), Some("shared_llama"));
+    }
+
+    #[test]
+    fn unknown_server_rejected() {
+        let err = BenchConfig::parse("A (chatbot):\n  server: nope\n  num_requests: 1\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown server"));
+    }
+
+    #[test]
+    fn unknown_dep_rejected() {
+        let text = "\
+A (chatbot):
+  num_requests: 1
+workflows:
+  a:
+    uses: A (chatbot)
+    depend_on: [\"ghost\"]
+";
+        let err = BenchConfig::parse(text).unwrap_err();
+        assert!(err.to_string().contains("unknown node"));
+    }
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!(Strategy::parse("greedy"), Some(Strategy::Greedy));
+        assert_eq!(Strategy::parse("MPS"), Some(Strategy::Partition));
+        assert_eq!(Strategy::parse("fair-share"), Some(Strategy::FairShare));
+        assert_eq!(Strategy::parse("wat"), None);
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(parse_duration("1s").unwrap(), 1.0);
+        assert_eq!(parse_duration("0.25s").unwrap(), 0.25);
+        assert_eq!(parse_duration("500ms").unwrap(), 0.5);
+        assert_eq!(parse_duration("2").unwrap(), 2.0);
+        assert!(parse_duration("fast").is_err());
+    }
+
+    #[test]
+    fn no_tasks_rejected() {
+        assert!(BenchConfig::parse("strategy: greedy\n").is_err());
+    }
+
+    #[test]
+    fn mps_bounds_checked() {
+        let err =
+            BenchConfig::parse("A (chatbot):\n  num_requests: 1\n  mps: 0\n").unwrap_err();
+        assert!(err.to_string().contains("mps"));
+    }
+}

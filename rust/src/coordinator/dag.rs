@@ -1,0 +1,231 @@
+//! Workflow DAG construction and validation (§3.2, step ②).
+//!
+//! ConsumerBench builds a directed acyclic graph from the YAML
+//! specification: each node is an application instance whose lifecycle is
+//! `setup → exec × num_requests → cleanup`; edges are `depend_on`
+//! relations. Validation rejects cycles and dangling references; scheduling
+//! is ready-set based so independent branches run concurrently.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::config::WorkflowNodeConfig;
+
+/// Index of a node in the DAG.
+pub type NodeId = usize;
+
+/// A validated workflow DAG.
+#[derive(Debug, Clone)]
+pub struct Dag {
+    ids: Vec<String>,
+    uses: Vec<String>,
+    background: Vec<bool>,
+    deps: Vec<Vec<NodeId>>,
+    dependents: Vec<Vec<NodeId>>,
+}
+
+impl Dag {
+    /// Build and validate from config nodes.
+    pub fn build(nodes: &[WorkflowNodeConfig]) -> Result<Dag> {
+        let mut index: BTreeMap<&str, NodeId> = BTreeMap::new();
+        for (i, n) in nodes.iter().enumerate() {
+            if index.insert(n.id.as_str(), i).is_some() {
+                bail!("duplicate node id `{}`", n.id);
+            }
+        }
+        let mut deps = vec![Vec::new(); nodes.len()];
+        let mut dependents = vec![Vec::new(); nodes.len()];
+        for (i, n) in nodes.iter().enumerate() {
+            for d in &n.depend_on {
+                let Some(&j) = index.get(d.as_str()) else {
+                    bail!("node `{}` depends on unknown node `{d}`", n.id);
+                };
+                if j == i {
+                    bail!("node `{}` depends on itself", n.id);
+                }
+                deps[i].push(j);
+                dependents[j].push(i);
+            }
+        }
+        let dag = Dag {
+            ids: nodes.iter().map(|n| n.id.clone()).collect(),
+            uses: nodes.iter().map(|n| n.uses.clone()).collect(),
+            background: nodes.iter().map(|n| n.background).collect(),
+            deps,
+            dependents,
+        };
+        dag.toposort()?; // cycle check
+        Ok(dag)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn id(&self, n: NodeId) -> &str {
+        &self.ids[n]
+    }
+
+    pub fn uses(&self, n: NodeId) -> &str {
+        &self.uses[n]
+    }
+
+    pub fn is_background(&self, n: NodeId) -> bool {
+        self.background[n]
+    }
+
+    pub fn deps(&self, n: NodeId) -> &[NodeId] {
+        &self.deps[n]
+    }
+
+    pub fn dependents(&self, n: NodeId) -> &[NodeId] {
+        &self.dependents[n]
+    }
+
+    pub fn node_by_id(&self, id: &str) -> Option<NodeId> {
+        self.ids.iter().position(|i| i == id)
+    }
+
+    /// Kahn's algorithm; errors on cycles.
+    pub fn toposort(&self) -> Result<Vec<NodeId>> {
+        let n = self.len();
+        let mut in_deg: Vec<usize> = (0..n).map(|i| self.deps[i].len()).collect();
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| in_deg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(node) = queue.pop() {
+            order.push(node);
+            for &dep in &self.dependents[node] {
+                in_deg[dep] -= 1;
+                if in_deg[dep] == 0 {
+                    queue.push(dep);
+                }
+            }
+        }
+        if order.len() != n {
+            let stuck: Vec<&str> = (0..n)
+                .filter(|&i| in_deg[i] > 0)
+                .map(|i| self.ids[i].as_str())
+                .collect();
+            bail!("workflow contains a cycle involving: {}", stuck.join(", "));
+        }
+        Ok(order)
+    }
+
+    /// Roots: nodes with no dependencies (runnable immediately).
+    pub fn roots(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&i| self.deps[i].is_empty()).collect()
+    }
+
+    /// Nodes that become ready once `completed` holds all their deps.
+    pub fn ready_after(&self, completed: &BTreeSet<NodeId>, node: NodeId) -> Vec<NodeId> {
+        self.dependents[node]
+            .iter()
+            .copied()
+            .filter(|&d| self.deps[d].iter().all(|x| completed.contains(x)))
+            .collect()
+    }
+
+    /// Length of the longest dependency chain (diagnostics).
+    pub fn depth(&self) -> usize {
+        let order = self.toposort().expect("validated DAG");
+        let mut depth = vec![1usize; self.len()];
+        for &n in &order {
+            for &d in &self.dependents[n] {
+                depth[d] = depth[d].max(depth[n] + 1);
+            }
+        }
+        depth.into_iter().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(id: &str, uses: &str, deps: &[&str]) -> WorkflowNodeConfig {
+        WorkflowNodeConfig {
+            id: id.into(),
+            uses: uses.into(),
+            depend_on: deps.iter().map(|s| s.to_string()).collect(),
+            background: false,
+        }
+    }
+
+    #[test]
+    fn builds_fig23_shape() {
+        // analysis + brainstorm → outline → {cover_art, captions}
+        let nodes = vec![
+            node("analysis", "Analysis", &[]),
+            node("brainstorm", "Brainstorm", &[]),
+            node("outline", "Outline", &["brainstorm", "analysis"]),
+            node("cover_art", "CoverArt", &["outline"]),
+            node("captions", "Captions", &["outline"]),
+        ];
+        let dag = Dag::build(&nodes).unwrap();
+        assert_eq!(dag.len(), 5);
+        assert_eq!(dag.roots(), vec![0, 1]);
+        assert_eq!(dag.depth(), 3);
+        let outline = dag.node_by_id("outline").unwrap();
+        assert_eq!(dag.deps(outline).len(), 2);
+        assert_eq!(dag.dependents(outline).len(), 2);
+    }
+
+    #[test]
+    fn toposort_respects_deps() {
+        let nodes = vec![
+            node("a", "A", &[]),
+            node("b", "B", &["a"]),
+            node("c", "C", &["b"]),
+        ];
+        let dag = Dag::build(&nodes).unwrap();
+        let order = dag.toposort().unwrap();
+        let pos = |id: &str| order.iter().position(|&n| dag.id(n) == id).unwrap();
+        assert!(pos("a") < pos("b"));
+        assert!(pos("b") < pos("c"));
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let nodes = vec![node("a", "A", &["b"]), node("b", "B", &["a"])];
+        let err = Dag::build(&nodes).unwrap_err();
+        assert!(err.to_string().contains("cycle"));
+    }
+
+    #[test]
+    fn self_dep_rejected() {
+        let err = Dag::build(&[node("a", "A", &["a"])]).unwrap_err();
+        assert!(err.to_string().contains("itself"));
+    }
+
+    #[test]
+    fn unknown_dep_rejected() {
+        let err = Dag::build(&[node("a", "A", &["ghost"])]).unwrap_err();
+        assert!(err.to_string().contains("unknown"));
+    }
+
+    #[test]
+    fn duplicate_id_rejected() {
+        let err = Dag::build(&[node("a", "A", &[]), node("a", "B", &[])]).unwrap_err();
+        assert!(err.to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn ready_after_gates_on_all_deps() {
+        let nodes = vec![
+            node("a", "A", &[]),
+            node("b", "B", &[]),
+            node("c", "C", &["a", "b"]),
+        ];
+        let dag = Dag::build(&nodes).unwrap();
+        let mut completed = BTreeSet::new();
+        completed.insert(0);
+        assert!(dag.ready_after(&completed, 0).is_empty());
+        completed.insert(1);
+        assert_eq!(dag.ready_after(&completed, 1), vec![2]);
+    }
+}

@@ -1,0 +1,18 @@
+//! The ConsumerBench coordinator — the paper's system contribution.
+//!
+//! Pipeline (Fig. 1): ① parse the user's YAML configuration
+//! ([`config::BenchConfig`]) → ② build + validate the workflow DAG
+//! ([`dag::Dag`]) → ③ execute under the configured resource-sharing
+//! strategy ([`executor::ScenarioRunner`]) while the system monitor records
+//! utilization/power → ④ generate the benchmark report
+//! ([`report::generate`]).
+
+pub mod config;
+pub mod dag;
+pub mod executor;
+pub mod report;
+
+pub use config::{AppType, BenchConfig, Strategy, TestbedKind};
+pub use dag::Dag;
+pub use executor::{run_config_text, NodeResult, ScenarioResult, ScenarioRunner};
+pub use report::{generate, to_csv, BenchmarkReport};

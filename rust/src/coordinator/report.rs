@@ -1,0 +1,153 @@
+//! Benchmark report generation (§3.2, step ④).
+//!
+//! After a workflow completes, ConsumerBench evaluates each application
+//! against its SLOs and emits a report covering per-application latency
+//! distributions, SLO attainment, and system-level resource efficiency —
+//! the content of the paper's figures as text tables + CSV.
+
+use crate::apps::Slo;
+use crate::coordinator::executor::ScenarioResult;
+use crate::monitor::MonitorReport;
+use crate::util::stats::Summary;
+
+/// A rendered benchmark report.
+#[derive(Debug)]
+pub struct BenchmarkReport {
+    pub text: String,
+    pub monitor: MonitorReport,
+}
+
+/// Build the report for a scenario result.
+pub fn generate(result: &ScenarioResult) -> BenchmarkReport {
+    let monitor = MonitorReport::from_trace(&result.trace, &result.client_names, 0.1);
+    let mut out = String::new();
+    out.push_str("==============================================================\n");
+    out.push_str(" ConsumerBench report\n");
+    out.push_str("==============================================================\n");
+    out.push_str(&format!("policy:            {}\n", result.policy));
+    out.push_str(&format!("workflow makespan: {:.2} s\n", result.makespan));
+    out.push_str(&format!("PJRT validations:  {}\n", result.pjrt_calls));
+    out.push('\n');
+
+    out.push_str("-- Applications ----------------------------------------------\n");
+    out.push_str(&format!(
+        "{:<28} {:>5} {:>9} {:>9} {:>9} {:>10} {:>8}\n",
+        "node", "reqs", "mean lat", "p99 lat", "norm", "SLO attain", "span"
+    ));
+    for node in &result.nodes {
+        let lats: Vec<f64> = node.metrics.iter().map(|m| m.latency).collect();
+        let s = Summary::of(&lats);
+        let (mean, p99) = s.map(|s| (s.mean, s.p99)).unwrap_or((0.0, 0.0));
+        out.push_str(&format!(
+            "{:<28} {:>5} {:>8.2}s {:>8.2}s {:>9.2} {:>9.0}% {:>7.1}s{}\n",
+            truncate(&node.id, 28),
+            node.metrics.len(),
+            mean,
+            p99,
+            node.mean_normalized(),
+            node.attainment() * 100.0,
+            node.duration(),
+            node.failed
+                .as_ref()
+                .map(|e| format!("  FAILED: {e}"))
+                .unwrap_or_default()
+        ));
+        out.push_str(&format!(
+            "{:<28} slo: {}\n",
+            "",
+            slo_brief(&node.slo)
+        ));
+    }
+    out.push('\n');
+
+    out.push_str("-- System metrics --------------------------------------------\n");
+    out.push_str(&format!(
+        "GPU: SMACT(busy mean) {:>5.1}%  SMOCC(busy mean) {:>5.1}%  peak VRAM {:>5.1} GiB\n",
+        monitor.mean_busy_smact() * 100.0,
+        monitor.mean_busy_smocc() * 100.0,
+        monitor.peak_vram_gib(),
+    ));
+    out.push_str(&format!(
+        "energy: GPU {:>8.0} J   CPU {:>8.0} J\n",
+        monitor.gpu_energy(),
+        monitor.cpu_energy()
+    ));
+    let spark_max = 1.0;
+    out.push_str(&format!(
+        "SMACT  {}\nSMOCC  {}\nCPU    {}\n",
+        monitor.gpu_smact.sparkline(60, spark_max),
+        monitor.gpu_smocc.sparkline(60, spark_max),
+        monitor.cpu_util.sparkline(60, spark_max),
+    ));
+    out.push('\n');
+
+    out.push_str("-- Per-client GPU reservation --------------------------------\n");
+    for (i, name) in result.client_names.iter().enumerate() {
+        let (act, _) = &monitor.per_client[i];
+        if act.values().iter().any(|&v| v > 1e-6) {
+            out.push_str(&format!("{:<28} {}\n", truncate(name, 28), act.sparkline(60, 1.0)));
+        }
+    }
+
+    BenchmarkReport { text: out, monitor }
+}
+
+/// CSV export of the core per-request data (one row per request).
+pub fn to_csv(result: &ScenarioResult) -> String {
+    let mut out = String::from("node,app,request,latency_s,normalized,slo_met\n");
+    for node in &result.nodes {
+        for m in &node.metrics {
+            out.push_str(&format!(
+                "{},{},{},{:.6},{:.4},{}\n",
+                node.id, node.app, m.label, m.latency, m.normalized, m.slo_met
+            ));
+        }
+    }
+    out
+}
+
+fn slo_brief(slo: &Slo) -> String {
+    slo.describe()
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(n - 1).collect();
+        format!("{cut}…")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::run_config_text;
+
+    #[test]
+    fn report_renders_for_simple_scenario() {
+        let result = run_config_text("Chat (chatbot):\n  num_requests: 2\n", None).unwrap();
+        let report = generate(&result);
+        assert!(report.text.contains("ConsumerBench report"));
+        assert!(report.text.contains("Chat (chatbot)"));
+        assert!(report.text.contains("TTFT:1s"));
+        assert!(report.text.contains("SMACT"));
+        // Attainment column shows 100% for exclusive GPU chat.
+        assert!(report.text.contains("100%"), "{}", report.text);
+    }
+
+    #[test]
+    fn csv_has_row_per_request() {
+        let result = run_config_text("Chat (chatbot):\n  num_requests: 3\n", None).unwrap();
+        let csv = to_csv(&result);
+        assert_eq!(csv.lines().count(), 4); // header + 3 requests
+        assert!(csv.starts_with("node,app,request"));
+    }
+
+    #[test]
+    fn truncate_handles_long_names() {
+        assert_eq!(truncate("short", 28), "short");
+        let long = "x".repeat(64);
+        assert_eq!(truncate(&long, 28).chars().count(), 28);
+    }
+}

@@ -1,0 +1,98 @@
+//! COCO-Captions-shaped image-generation workload (ImageGen app).
+//!
+//! COCO captions are short scene descriptions (~10 words / ~12 tokens). The
+//! ImageGen request shape is (prompt tokens, denoise steps, resolution);
+//! SD-3.5-Medium-Turbo runs a small fixed step count, and the SLO is per
+//! denoising step (1 s, §3.3).
+
+use crate::util::Rng;
+
+/// One text-to-image request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImagePrompt {
+    pub id: usize,
+    pub prompt_tokens: usize,
+    /// Denoising steps (turbo models: 4–10).
+    pub steps: usize,
+    /// Square output resolution in pixels.
+    pub resolution: usize,
+}
+
+impl ImagePrompt {
+    /// Latent tokens processed per step at this resolution (VAE factor 8,
+    /// patch size 2 — the SD3 MMDiT token count).
+    pub fn latent_tokens(&self) -> usize {
+        let latent = self.resolution / 8;
+        (latent / 2) * (latent / 2)
+    }
+}
+
+/// Seeded generator of COCO-shaped prompts.
+#[derive(Debug, Clone)]
+pub struct CocoCaptions {
+    rng: Rng,
+    next_id: usize,
+    default_steps: usize,
+}
+
+impl CocoCaptions {
+    const SEED_TAG: u64 = 0x434F_434F_2D43_4150; // "COCO-CAP"
+
+    pub fn new(seed: u64, default_steps: usize) -> Self {
+        assert!(default_steps >= 1);
+        CocoCaptions {
+            rng: Rng::new(seed ^ Self::SEED_TAG),
+            next_id: 0,
+            default_steps,
+        }
+    }
+
+    pub fn sample(&mut self) -> ImagePrompt {
+        // Caption lengths: ~N(12, 3) tokens, clamped.
+        let prompt = self.rng.normal(12.0, 3.0).round().max(4.0) as usize;
+        let id = self.next_id;
+        self.next_id += 1;
+        ImagePrompt {
+            id,
+            prompt_tokens: prompt.min(64),
+            steps: self.default_steps,
+            resolution: 512,
+        }
+    }
+
+    pub fn batch(&mut self, n: usize) -> Vec<ImagePrompt> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(CocoCaptions::new(4, 8).batch(10), CocoCaptions::new(4, 8).batch(10));
+    }
+
+    #[test]
+    fn captions_are_short() {
+        let mut g = CocoCaptions::new(2, 8);
+        for _ in 0..500 {
+            let p = g.sample();
+            assert!((4..=64).contains(&p.prompt_tokens));
+            assert_eq!(p.steps, 8);
+        }
+    }
+
+    #[test]
+    fn latent_tokens_at_512() {
+        let p = ImagePrompt {
+            id: 0,
+            prompt_tokens: 10,
+            steps: 8,
+            resolution: 512,
+        };
+        // 512/8 = 64 latent → 32x32 = 1024 patch tokens.
+        assert_eq!(p.latent_tokens(), 1024);
+    }
+}

@@ -1,0 +1,132 @@
+//! HotpotQA-shaped research workload (DeepResearch app).
+//!
+//! DeepResearch (smolagents' open-deep-research over HotpotQA) is an agentic
+//! loop: each question triggers several tool-use iterations, each of which
+//! prefills a long context (question + retrieved passages + scratchpad) and
+//! decodes a reasoning step. We model a task as a sequence of iterations
+//! with growing context — the property that motivates the 16 GB KV cache in
+//! §4.2.1.
+
+use crate::util::Rng;
+
+/// One agent iteration: context to prefill, tokens to decode, and host-side
+/// tool time (search/browse) before the model call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResearchIteration {
+    pub context_tokens: usize,
+    pub decode_tokens: usize,
+    pub tool_time: f64,
+}
+
+/// A full multi-hop research task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResearchTask {
+    pub id: usize,
+    pub iterations: Vec<ResearchIteration>,
+}
+
+impl ResearchTask {
+    pub fn total_prefill_tokens(&self) -> usize {
+        self.iterations.iter().map(|i| i.context_tokens).sum()
+    }
+
+    pub fn total_decode_tokens(&self) -> usize {
+        self.iterations.iter().map(|i| i.decode_tokens).sum()
+    }
+
+    /// Peak context length — drives KV-cache sizing.
+    pub fn peak_context(&self) -> usize {
+        self.iterations.iter().map(|i| i.context_tokens).max().unwrap_or(0)
+    }
+}
+
+/// Seeded generator of HotpotQA-shaped tasks.
+#[derive(Debug, Clone)]
+pub struct HotpotQa {
+    rng: Rng,
+    next_id: usize,
+    max_context: usize,
+}
+
+impl HotpotQa {
+    const SEED_TAG: u64 = 0x484F_5450_4F54_5141; // "HOTPOTQA"
+
+    pub fn new(seed: u64, max_context: usize) -> Self {
+        assert!(max_context >= 1024);
+        HotpotQa {
+            rng: Rng::new(seed ^ Self::SEED_TAG),
+            next_id: 0,
+            max_context,
+        }
+    }
+
+    pub fn sample(&mut self) -> ResearchTask {
+        // Multi-hop questions need 4–10 agent iterations.
+        let n_iters = self.rng.range_usize(4, 11);
+        let mut context = self.rng.range_usize(512, 1536); // question + system prompt
+        let mut iterations = Vec::with_capacity(n_iters);
+        for _ in 0..n_iters {
+            // Each hop retrieves passages: context grows 1–4k tokens.
+            context = (context + self.rng.range_usize(1024, 4096)).min(self.max_context);
+            iterations.push(ResearchIteration {
+                context_tokens: context,
+                decode_tokens: self.rng.range_usize(128, 768),
+                tool_time: self.rng.range_f64(3.0, 10.0), // web search + page parsing
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        ResearchTask { id, iterations }
+    }
+
+    pub fn batch(&mut self, n: usize) -> Vec<ResearchTask> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(HotpotQa::new(1, 131_072).batch(5), HotpotQa::new(1, 131_072).batch(5));
+    }
+
+    #[test]
+    fn context_grows_monotonically() {
+        let mut g = HotpotQa::new(9, 131_072);
+        for _ in 0..50 {
+            let t = g.sample();
+            for w in t.iterations.windows(2) {
+                assert!(w[1].context_tokens >= w[0].context_tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn context_capped() {
+        let mut g = HotpotQa::new(9, 8192);
+        for _ in 0..100 {
+            assert!(g.sample().peak_context() <= 8192);
+        }
+    }
+
+    #[test]
+    fn tasks_are_long_running() {
+        let mut g = HotpotQa::new(3, 131_072);
+        let t = g.sample();
+        assert!(t.iterations.len() >= 4);
+        assert!(t.total_prefill_tokens() > 4096);
+        assert!(t.total_decode_tokens() > 512);
+    }
+
+    #[test]
+    fn long_context_tasks_motivate_large_kv() {
+        // With the model's 128K window, peak contexts should regularly get
+        // into the tens of thousands of tokens.
+        let mut g = HotpotQa::new(5, 131_072);
+        let peak = g.batch(50).iter().map(|t| t.peak_context()).max().unwrap();
+        assert!(peak > 16_384, "peak context {peak}");
+    }
+}

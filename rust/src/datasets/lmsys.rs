@@ -1,0 +1,110 @@
+//! LMSYS-Chat-1M-shaped chat workload (Chatbot app).
+//!
+//! The published dataset's single-turn statistics are heavy-tailed: median
+//! prompt around 50–60 tokens with a long tail past 1k, median response
+//! around 200 tokens. We model both as log-normal, clamped to the Chatbot's
+//! context budget.
+
+use crate::util::Rng;
+
+/// One chat request: a prompt to prefill and a response length to decode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChatRequest {
+    pub id: usize,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Seeded generator over LMSYS-shaped requests.
+#[derive(Debug, Clone)]
+pub struct LmsysChat {
+    rng: Rng,
+    next_id: usize,
+    max_context: usize,
+}
+
+impl LmsysChat {
+    /// Seed-tag mixed in so each dataset's stream decorrelates from others
+    /// built from the same experiment seed.
+    const SEED_TAG: u64 = 0x4C4D_5359_532D_3143; // "LMSYS-1C"
+
+    pub fn new(seed: u64, max_context: usize) -> Self {
+        assert!(max_context >= 64, "context budget too small");
+        LmsysChat {
+            rng: Rng::new(seed ^ Self::SEED_TAG),
+            next_id: 0,
+            max_context,
+        }
+    }
+
+    /// Sample the next request.
+    pub fn sample(&mut self) -> ChatRequest {
+        // ln-normal: median ~60 prompt tokens, sigma 0.9 → tail to ~1k.
+        let prompt = self.rng.lognormal(60f64.ln(), 0.9).round() as usize;
+        // Median ~180 output tokens, sigma 0.7.
+        let output = self.rng.lognormal(180f64.ln(), 0.7).round() as usize;
+        let prompt = prompt.clamp(8, self.max_context / 2);
+        let output = output.clamp(16, self.max_context - prompt);
+        let id = self.next_id;
+        self.next_id += 1;
+        ChatRequest {
+            id,
+            prompt_tokens: prompt,
+            output_tokens: output,
+        }
+    }
+
+    /// Sample a batch of n requests.
+    pub fn batch(&mut self, n: usize) -> Vec<ChatRequest> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = LmsysChat::new(7, 4096).batch(20);
+        let b = LmsysChat::new(7, 4096).batch(20);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = LmsysChat::new(1, 4096).batch(20);
+        let b = LmsysChat::new(2, 4096).batch(20);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn lengths_within_context() {
+        let mut g = LmsysChat::new(3, 2048);
+        for _ in 0..1000 {
+            let r = g.sample();
+            assert!(r.prompt_tokens + r.output_tokens <= 2048);
+            assert!(r.prompt_tokens >= 8);
+            assert!(r.output_tokens >= 16);
+        }
+    }
+
+    #[test]
+    fn distribution_is_heavy_tailed() {
+        let reqs = LmsysChat::new(11, 8192).batch(5000);
+        let prompts: Vec<f64> = reqs.iter().map(|r| r.prompt_tokens as f64).collect();
+        let s = Summary::of(&prompts).unwrap();
+        // Median near 60, mean pulled up by the tail.
+        assert!(s.p50 > 35.0 && s.p50 < 100.0, "p50 = {}", s.p50);
+        assert!(s.mean > s.p50, "mean {} should exceed median {}", s.mean, s.p50);
+        assert!(s.p99 > 300.0, "p99 = {}", s.p99);
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let reqs = LmsysChat::new(5, 4096).batch(5);
+        let ids: Vec<usize> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+}

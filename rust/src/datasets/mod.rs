@@ -1,0 +1,19 @@
+//! Synthetic workload generators standing in for the paper's datasets.
+//!
+//! The paper samples requests from LMSYS-Chat-1M (Chatbot), HotpotQA
+//! (DeepResearch), COCO Captions (ImageGen), and Earnings-21 (LiveCaptions).
+//! None of those corpora are available here, and the benchmark consumes only
+//! the *request-shape* of each dataset — prompt/output token counts, image
+//! prompt lengths, audio segment structure — not its semantics. Each
+//! generator below reproduces the published length distributions with a
+//! seeded PRNG so every experiment is bit-reproducible.
+
+pub mod coco;
+pub mod earnings21;
+pub mod hotpotqa;
+pub mod lmsys;
+
+pub use coco::{CocoCaptions, ImagePrompt};
+pub use earnings21::{AudioSegment, Earnings21};
+pub use hotpotqa::{HotpotQa, ResearchTask};
+pub use lmsys::{ChatRequest, LmsysChat};

@@ -1,0 +1,1175 @@
+//! Discrete-event execution engine for the simulated testbed.
+//!
+//! All experiment timing in ConsumerBench is *virtual time* produced by this
+//! engine: applications submit **jobs** (requests) consisting of **phases**
+//! (prefill, per-token decode, denoise step, ...); a GPU phase bulk-enqueues
+//! its kernels into the device stream (launch-ahead, the behaviour that
+//! produces the paper's starvation result), a CPU phase occupies cores. The
+//! engine advances a deterministic event heap, applies the configured
+//! [`Policy`] on every state change, and records a piecewise-constant trace
+//! of every counter the paper's system monitor collects (SMACT, SMOCC,
+//! memory bandwidth, VRAM, power, CPU utilization).
+//!
+//! The engine is deliberately *reactive*: the coordinator drives it with
+//! `submit` / `run_until` / `take_completed`, which is how workflow DAG
+//! dependencies and inference-server batching decisions are made at virtual
+//! time without the engine knowing about them.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+
+use crate::gpusim::kernel::{duration, occupancy, sms_wanted, Device, KernelDesc};
+use crate::gpusim::policy::{Policy, ReadyKernel};
+use crate::gpusim::power::{cpu_power, gpu_power};
+use crate::gpusim::profiles::Testbed;
+use crate::gpusim::vram::VramAllocator;
+
+/// Identifies a registered application/client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClientId(pub usize);
+
+/// Identifies a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+/// CPU-side work chunk (threads ≈ desired parallelism).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuWork {
+    pub flops: f64,
+    pub bytes: f64,
+    pub threads: usize,
+}
+
+/// Memory operation applied when a phase begins.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemOp {
+    /// Allocate VRAM for the job's client.
+    Alloc { label: String, bytes: u64 },
+    /// Free all VRAM held by the job's client (cleanup).
+    FreeAll,
+}
+
+/// One phase of a job: optional host-side delay, then either a stream of GPU
+/// kernels (bulk-enqueued) or a CPU work chunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub tag: &'static str,
+    pub device: Device,
+    /// Host think/preprocess time before the phase's work enqueues.
+    pub host_pre: f64,
+    /// GPU kernels, stream-ordered (only for `Device::Gpu`).
+    pub kernels: Vec<KernelDesc>,
+    /// CPU work (only for `Device::Cpu`).
+    pub cpu: Option<CpuWork>,
+    pub mem_ops: Vec<MemOp>,
+}
+
+impl Phase {
+    /// A GPU phase with the given kernels.
+    pub fn gpu(tag: &'static str, host_pre: f64, kernels: Vec<KernelDesc>) -> Phase {
+        Phase {
+            tag,
+            device: Device::Gpu,
+            host_pre,
+            kernels,
+            cpu: None,
+            mem_ops: Vec::new(),
+        }
+    }
+
+    /// A CPU phase with one work chunk.
+    pub fn cpu(tag: &'static str, host_pre: f64, work: CpuWork) -> Phase {
+        Phase {
+            tag,
+            device: Device::Cpu,
+            host_pre,
+            kernels: Vec::new(),
+            cpu: Some(work),
+            mem_ops: Vec::new(),
+        }
+    }
+
+    /// A host-only phase (setup sleeps, I/O waits, memory ops).
+    pub fn host(tag: &'static str, host_pre: f64) -> Phase {
+        Phase {
+            tag,
+            device: Device::Cpu,
+            host_pre,
+            kernels: Vec::new(),
+            cpu: None,
+            mem_ops: Vec::new(),
+        }
+    }
+
+    pub fn with_mem_ops(mut self, ops: Vec<MemOp>) -> Phase {
+        self.mem_ops = ops;
+        self
+    }
+}
+
+/// A job specification: a request (or setup/cleanup action) from a client.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub client: ClientId,
+    pub label: String,
+    pub phases: Vec<Phase>,
+}
+
+/// Statistics for one completed phase.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub tag: &'static str,
+    pub start: f64,
+    pub end: f64,
+    /// Sum of kernel/cpu execution time inside the phase.
+    pub exec_time: f64,
+    /// Sum of time work items spent ready-but-not-launched (contention).
+    pub queue_wait: f64,
+}
+
+/// Result of a finished job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: JobId,
+    pub client: ClientId,
+    pub label: String,
+    pub submit: f64,
+    pub end: f64,
+    pub phases: Vec<PhaseStat>,
+    /// Set if the job failed (e.g. VRAM OOM during a mem op).
+    pub error: Option<String>,
+}
+
+impl JobResult {
+    /// End-to-end virtual latency.
+    pub fn latency(&self) -> f64 {
+        self.end - self.submit
+    }
+
+    /// Sum of exec/wait across phases matching a tag prefix.
+    pub fn phase_time(&self, tag_prefix: &str) -> f64 {
+        self.phases
+            .iter()
+            .filter(|p| p.tag.starts_with(tag_prefix))
+            .map(|p| p.end - p.start)
+            .sum()
+    }
+
+    pub fn queue_wait(&self) -> f64 {
+        self.phases.iter().map(|p| p.queue_wait).sum()
+    }
+}
+
+/// One sampled point of the monitor trace (piecewise-constant until the next).
+#[derive(Debug, Clone)]
+pub struct TraceSample {
+    pub t: f64,
+    pub gpu_smact: f32,
+    pub gpu_smocc: f32,
+    pub gpu_bw_frac: f32,
+    pub gpu_power: f32,
+    pub vram_used: u64,
+    pub cpu_util: f32,
+    pub dram_bw_frac: f32,
+    pub cpu_power: f32,
+    /// Per-client (smact, smocc), indexed by ClientId.
+    pub per_client: Vec<(f32, f32)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    PhaseBegin,
+    KernelDone,
+    CpuDone,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+    job: JobId,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reverse: earlier time first, then insertion order.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Debug)]
+struct JobState {
+    spec: JobSpec,
+    submit: f64,
+    cur_phase: usize,
+    cur_kernel: usize,
+    phase_start: f64,
+    exec_time: f64,
+    queue_wait: f64,
+    stats: Vec<PhaseStat>,
+}
+
+#[derive(Debug, Clone)]
+struct GpuReady {
+    /// Policy view with cached `sms_wanted` (computed once at enqueue).
+    rk: ReadyKernel,
+    job: JobId,
+    ready_since: f64,
+}
+
+#[derive(Debug, Clone)]
+struct GpuResident {
+    #[allow(dead_code)]
+    job: JobId,
+    client: ClientId,
+    sms: usize,
+    occupancy: f64,
+    bw_rate: f64, // bytes/sec while resident
+}
+
+#[derive(Debug, Clone)]
+struct CpuReady {
+    seq: u64,
+    job: JobId,
+    ready_since: f64,
+}
+
+#[derive(Debug, Clone)]
+struct CpuResident {
+    #[allow(dead_code)]
+    job: JobId,
+    cores: usize,
+    bw_rate: f64,
+}
+
+/// The simulated testbed: one GPU + one CPU driven by an event heap.
+pub struct Engine {
+    testbed: Testbed,
+    policy: Policy,
+    now: f64,
+    seq: u64,
+    next_job: u64,
+    events: BinaryHeap<Event>,
+    clients: Vec<String>,
+    jobs: HashMap<JobId, JobState>,
+    // GPU state
+    gpu_free_sms: usize,
+    /// Sorted by (enqueue_time, seq) by construction: event time is
+    /// monotone, so every new entry appends at the tail. Ring buffer: the
+    /// common grant pattern drains a prefix, which is O(grants) here.
+    gpu_ready: VecDeque<GpuReady>,
+    /// Reused policy-view buffer (no allocation on the hot path).
+    gpu_ready_scratch: Vec<ReadyKernel>,
+    gpu_resident: HashMap<JobId, GpuResident>,
+    gpu_held: BTreeMap<ClientId, usize>,
+    vram: VramAllocator,
+    // CPU state
+    cpu_free_cores: usize,
+    cpu_ready: Vec<CpuReady>,
+    cpu_resident: HashMap<JobId, CpuResident>,
+    // Outputs
+    completed: Vec<JobResult>,
+    trace: Vec<TraceSample>,
+    trace_enabled: bool,
+}
+
+impl Engine {
+    pub fn new(testbed: Testbed, policy: Policy) -> Self {
+        let gpu_sms = testbed.gpu.num_sms;
+        let cpu_cores = testbed.cpu.num_cores;
+        let vram = VramAllocator::new(testbed.gpu.vram_bytes);
+        Engine {
+            testbed,
+            policy,
+            now: 0.0,
+            seq: 0,
+            next_job: 0,
+            events: BinaryHeap::new(),
+            clients: Vec::new(),
+            jobs: HashMap::new(),
+            gpu_free_sms: gpu_sms,
+            gpu_ready: VecDeque::new(),
+            gpu_ready_scratch: Vec::new(),
+            gpu_resident: HashMap::new(),
+            gpu_held: BTreeMap::new(),
+            vram,
+            cpu_free_cores: cpu_cores,
+            cpu_ready: Vec::new(),
+            cpu_resident: HashMap::new(),
+            completed: Vec::new(),
+            trace: Vec::new(),
+            trace_enabled: true,
+        }
+    }
+
+    pub fn testbed(&self) -> &Testbed {
+        &self.testbed
+    }
+
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+
+    /// Swap the resource-sharing policy (takes effect on the next
+    /// scheduling pass; resident kernels are never preempted).
+    pub fn set_policy(&mut self, policy: Policy) {
+        self.policy = policy;
+    }
+
+    /// Disable trace recording (benchmarking the engine itself).
+    pub fn set_trace_enabled(&mut self, enabled: bool) {
+        self.trace_enabled = enabled;
+    }
+
+    pub fn register_client(&mut self, name: impl Into<String>) -> ClientId {
+        self.clients.push(name.into());
+        ClientId(self.clients.len() - 1)
+    }
+
+    pub fn client_name(&self, id: ClientId) -> &str {
+        &self.clients[id.0]
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn vram(&self) -> &VramAllocator {
+        &self.vram
+    }
+
+    pub fn trace(&self) -> &[TraceSample] {
+        &self.trace
+    }
+
+    pub fn take_trace(&mut self) -> Vec<TraceSample> {
+        std::mem::take(&mut self.trace)
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Submit a job arriving at virtual time `at` (>= now).
+    pub fn submit(&mut self, spec: JobSpec, at: f64) -> JobId {
+        assert!(
+            at >= self.now - 1e-12,
+            "submit in the past: at={} now={}",
+            at,
+            self.now
+        );
+        assert!(!spec.phases.is_empty(), "job `{}` has no phases", spec.label);
+        assert!(
+            spec.client.0 < self.clients.len(),
+            "unregistered client {:?}",
+            spec.client
+        );
+        let id = JobId(self.next_job);
+        self.next_job += 1;
+        let host_pre = spec.phases[0].host_pre;
+        self.jobs.insert(
+            id,
+            JobState {
+                spec,
+                submit: at,
+                cur_phase: 0,
+                cur_kernel: 0,
+                phase_start: 0.0,
+                exec_time: 0.0,
+                queue_wait: 0.0,
+                stats: Vec::new(),
+            },
+        );
+        let seq = self.next_seq();
+        self.events.push(Event {
+            time: at + host_pre,
+            seq,
+            kind: EventKind::PhaseBegin,
+            job: id,
+        });
+        id
+    }
+
+    /// Time of the next pending event, if any.
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.events.peek().map(|e| e.time)
+    }
+
+    /// Process all events with time <= `t`; afterwards `now == max(now, t)`.
+    pub fn run_until(&mut self, t: f64) {
+        while let Some(ev) = self.events.peek() {
+            if ev.time > t {
+                break;
+            }
+            let ev = self.events.pop().unwrap();
+            debug_assert!(ev.time >= self.now - 1e-9, "event heap went backwards");
+            self.now = ev.time.max(self.now);
+            self.process(ev);
+        }
+        self.now = self.now.max(t);
+    }
+
+    /// Run the heap dry.
+    pub fn run_all(&mut self) {
+        while let Some(ev) = self.events.pop() {
+            self.now = ev.time.max(self.now);
+            self.process(ev);
+        }
+    }
+
+    /// Drain finished jobs since the last call.
+    pub fn take_completed(&mut self) -> Vec<JobResult> {
+        std::mem::take(&mut self.completed)
+    }
+
+    pub fn pending_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Event processing
+    // ------------------------------------------------------------------
+
+    fn process(&mut self, ev: Event) {
+        match ev.kind {
+            EventKind::PhaseBegin => self.on_phase_begin(ev.job),
+            EventKind::KernelDone => self.on_kernel_done(ev.job),
+            EventKind::CpuDone => self.on_cpu_done(ev.job),
+        }
+        self.schedule_gpu();
+        self.schedule_cpu();
+        self.record();
+    }
+
+    fn on_phase_begin(&mut self, job: JobId) {
+        let (mem_ops, device, has_kernels, has_cpu, client, label) = {
+            let js = self.jobs.get_mut(&job).expect("unknown job");
+            js.phase_start = self.now;
+            js.cur_kernel = 0;
+            js.exec_time = 0.0;
+            js.queue_wait = 0.0;
+            let ph = &js.spec.phases[js.cur_phase];
+            (
+                ph.mem_ops.clone(),
+                ph.device,
+                !ph.kernels.is_empty(),
+                ph.cpu.is_some(),
+                js.spec.client,
+                js.spec.label.clone(),
+            )
+        };
+        // Apply memory ops; OOM fails the job.
+        for op in mem_ops {
+            match op {
+                MemOp::Alloc { label: l, bytes } => {
+                    let cname = self.clients[client.0].clone();
+                    if let Err(e) = self.vram.alloc(&cname, &l, bytes) {
+                        self.fail_job(job, format!("{e}"));
+                        return;
+                    }
+                }
+                MemOp::FreeAll => {
+                    let cname = self.clients[client.0].clone();
+                    self.vram.free_client(&cname);
+                }
+            }
+        }
+        let _ = label;
+        match device {
+            Device::Gpu if has_kernels => {
+                self.push_gpu_ready(job);
+            }
+            Device::Cpu if has_cpu => {
+                let seq = self.next_seq();
+                self.cpu_ready.push(CpuReady {
+                    seq,
+                    job,
+                    ready_since: self.now,
+                });
+            }
+            // Host-only phase: completes immediately (host_pre already elapsed).
+            _ => self.finish_phase(job),
+        }
+    }
+
+    fn on_kernel_done(&mut self, job: JobId) {
+        let res = self.gpu_resident.remove(&job).expect("kernel done without residency");
+        self.gpu_free_sms += res.sms;
+        let held = self.gpu_held.get_mut(&res.client).expect("held_by missing");
+        *held -= res.sms;
+        if *held == 0 {
+            self.gpu_held.remove(&res.client);
+        }
+
+        let more_kernels = {
+            let js = self.jobs.get_mut(&job).expect("unknown job");
+            js.cur_kernel += 1;
+            let ph = &js.spec.phases[js.cur_phase];
+            js.cur_kernel < ph.kernels.len()
+        };
+        if more_kernels {
+            // The stream's next kernel becomes visible to the work
+            // distributor *now* (when its predecessor completes). This is
+            // what produces the paper's Fig. 5b stall pattern: a small
+            // kernel that went ready while a device-filling kernel was
+            // resident waits about one large-kernel duration, every time.
+            self.push_gpu_ready(job);
+        } else {
+            self.finish_phase(job);
+        }
+    }
+
+    fn on_cpu_done(&mut self, job: JobId) {
+        let res = self.cpu_resident.remove(&job).expect("cpu done without residency");
+        self.cpu_free_cores += res.cores;
+        self.finish_phase(job);
+    }
+
+    fn finish_phase(&mut self, job: JobId) {
+        let (done, next_host_pre) = {
+            let js = self.jobs.get_mut(&job).expect("unknown job");
+            let ph = &js.spec.phases[js.cur_phase];
+            js.stats.push(PhaseStat {
+                tag: ph.tag,
+                start: js.phase_start - ph.host_pre,
+                end: self.now,
+                exec_time: js.exec_time,
+                queue_wait: js.queue_wait,
+            });
+            js.cur_phase += 1;
+            if js.cur_phase < js.spec.phases.len() {
+                (false, js.spec.phases[js.cur_phase].host_pre)
+            } else {
+                (true, 0.0)
+            }
+        };
+        if done {
+            self.complete_job(job, None);
+        } else {
+            let seq = self.next_seq();
+            self.events.push(Event {
+                time: self.now + next_host_pre,
+                seq,
+                kind: EventKind::PhaseBegin,
+                job,
+            });
+        }
+    }
+
+    fn fail_job(&mut self, job: JobId, error: String) {
+        self.complete_job(job, Some(error));
+    }
+
+    fn complete_job(&mut self, job: JobId, error: Option<String>) {
+        let js = self.jobs.remove(&job).expect("unknown job");
+        self.completed.push(JobResult {
+            id: job,
+            client: js.spec.client,
+            label: js.spec.label,
+            submit: js.submit,
+            end: self.now,
+            phases: js.stats,
+            error,
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduling
+    // ------------------------------------------------------------------
+
+    /// Append the job's current stream-head kernel to the ready set. The
+    /// set stays sorted because `now` (and `seq`) are monotone.
+    fn push_gpu_ready(&mut self, job: JobId) {
+        let seq = self.next_seq();
+        let (client, wanted) = {
+            let js = &self.jobs[&job];
+            let k = &js.spec.phases[js.cur_phase].kernels[js.cur_kernel];
+            (js.spec.client, sms_wanted(k, &self.testbed.gpu).unwrap_or(1))
+        };
+        debug_assert!(self
+            .gpu_ready
+            .back()
+            .map(|r| (r.rk.enqueue_time, r.rk.seq) <= (self.now, seq))
+            .unwrap_or(true));
+        self.gpu_ready.push_back(GpuReady {
+            rk: ReadyKernel {
+                client,
+                enqueue_time: self.now,
+                seq,
+                sms_wanted: wanted,
+            },
+            job,
+            ready_since: self.now,
+        });
+    }
+
+    fn schedule_gpu(&mut self) {
+        if self.gpu_ready.is_empty() || self.gpu_free_sms == 0 {
+            return;
+        }
+        // Greedy fast path: grants are always a prefix of the FIFO ready
+        // list, so skip the policy-view copy entirely (the dominant
+        // configuration in the figure benches).
+        let grants: Vec<crate::gpusim::policy::Grant> = if matches!(self.policy, Policy::Greedy) {
+            let mut free = self.gpu_free_sms;
+            let mut grants = Vec::new();
+            for (i, r) in self.gpu_ready.iter().enumerate() {
+                if free == 0 {
+                    break;
+                }
+                let sms = r.rk.sms_wanted.min(free).max(1);
+                grants.push(crate::gpusim::policy::Grant { ready_index: i, sms });
+                free -= sms;
+            }
+            grants
+        } else {
+            // Reuse the scratch view buffer; entries are pre-sorted and
+            // carry cached `sms_wanted`.
+            self.gpu_ready_scratch.clear();
+            self.gpu_ready_scratch.extend(self.gpu_ready.iter().map(|r| r.rk));
+            self.policy.schedule(
+                &self.gpu_ready_scratch,
+                self.gpu_free_sms,
+                &self.gpu_held,
+                self.testbed.gpu.num_sms,
+            )
+        };
+        if grants.is_empty() {
+            return;
+        }
+        // Collect the granted entries, then remove them from the ready list
+        // — as one `drain` when the grant set is a prefix (the common case),
+        // otherwise by descending index.
+        let is_prefix = grants.iter().enumerate().all(|(i, g)| g.ready_index == i);
+        let mut launches: Vec<(GpuReady, usize)> = grants
+            .iter()
+            .map(|g| (self.gpu_ready[g.ready_index].clone(), g.sms))
+            .collect();
+        if is_prefix {
+            // Ring-buffer head advance: O(grants), not O(queue).
+            for _ in 0..grants.len() {
+                self.gpu_ready.pop_front();
+            }
+        } else {
+            let mut idx: Vec<usize> = grants.iter().map(|g| g.ready_index).collect();
+            idx.sort_unstable_by(|a, b| b.cmp(a));
+            for i in idx {
+                self.gpu_ready.remove(i);
+            }
+        }
+        let gpu = self.testbed.gpu.clone();
+        for (entry, sms) in launches.drain(..) {
+            let (kernel, client) = {
+                let js = &self.jobs[&entry.job];
+                (
+                    js.spec.phases[js.cur_phase].kernels[js.cur_kernel].clone(),
+                    js.spec.client,
+                )
+            };
+            let dur = match duration(&kernel, &gpu, sms) {
+                Ok(d) => d,
+                Err(e) => {
+                    self.fail_job(entry.job, format!("launch failure: {e}"));
+                    continue;
+                }
+            };
+            let occ = occupancy(&kernel, &gpu).expect("occupancy checked in duration");
+            {
+                let js = self.jobs.get_mut(&entry.job).expect("unknown job");
+                js.queue_wait += self.now - entry.ready_since;
+                js.exec_time += dur;
+            }
+            self.gpu_free_sms -= sms;
+            *self.gpu_held.entry(client).or_insert(0) += sms;
+            self.gpu_resident.insert(
+                entry.job,
+                GpuResident {
+                    job: entry.job,
+                    client,
+                    sms,
+                    occupancy: occ.occupancy,
+                    bw_rate: kernel.bytes / dur.max(1e-12),
+                },
+            );
+            let seq = self.next_seq();
+            self.events.push(Event {
+                time: self.now + dur,
+                seq,
+                kind: EventKind::KernelDone,
+                job: entry.job,
+            });
+        }
+    }
+
+    fn schedule_cpu(&mut self) {
+        // FIFO over ready CPU work.
+        self.cpu_ready.sort_by(|a, b| {
+            a.ready_since
+                .partial_cmp(&b.ready_since)
+                .unwrap()
+                .then(a.seq.cmp(&b.seq))
+        });
+        let cpu = self.testbed.cpu.clone();
+        let mut launched = Vec::new();
+        let ready_snapshot = self.cpu_ready.clone();
+        for (i, entry) in ready_snapshot.iter().enumerate() {
+            if self.cpu_free_cores == 0 {
+                break;
+            }
+            let work = {
+                let js = &self.jobs[&entry.job];
+                js.spec.phases[js.cur_phase].cpu.clone().expect("cpu phase without work")
+            };
+            let cores = work.threads.min(self.cpu_free_cores).max(1);
+            // A few cores saturate DRAM bandwidth; beyond that only compute
+            // scales.
+            let bw_factor = (cores as f64 / 4.0).min(1.0);
+            let compute = work.flops / (cpu.peak_flops * cores as f64 / cpu.num_cores as f64);
+            let memory = work.bytes / (cpu.mem_bw * bw_factor);
+            let dur = cpu.dispatch_overhead + compute.max(memory);
+            {
+                let js = self.jobs.get_mut(&entry.job).expect("unknown job");
+                js.queue_wait += self.now - entry.ready_since;
+                js.exec_time += dur;
+            }
+            self.cpu_free_cores -= cores;
+            self.cpu_resident.insert(
+                entry.job,
+                CpuResident {
+                    job: entry.job,
+                    cores,
+                    bw_rate: work.bytes / dur.max(1e-12),
+                },
+            );
+            let seq = self.next_seq();
+            self.events.push(Event {
+                time: self.now + dur,
+                seq,
+                kind: EventKind::CpuDone,
+                job: entry.job,
+            });
+            launched.push(i);
+        }
+        for &i in launched.iter().rev() {
+            self.cpu_ready.remove(i);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Trace recording
+    // ------------------------------------------------------------------
+
+    fn record(&mut self) {
+        if !self.trace_enabled {
+            return;
+        }
+        let gpu = &self.testbed.gpu;
+        let cpu = &self.testbed.cpu;
+        let total_sms = gpu.num_sms as f64;
+        let smact = (gpu.num_sms - self.gpu_free_sms) as f64 / total_sms;
+        let smocc: f64 = self
+            .gpu_resident
+            .values()
+            .map(|r| r.sms as f64 * r.occupancy)
+            .sum::<f64>()
+            / total_sms;
+        let bw_frac = (self
+            .gpu_resident
+            .values()
+            .map(|r| r.bw_rate)
+            .sum::<f64>()
+            / gpu.mem_bw)
+            .min(1.0);
+        let cpu_util = (cpu.num_cores - self.cpu_free_cores) as f64 / cpu.num_cores as f64;
+        let dram_frac = (self
+            .cpu_resident
+            .values()
+            .map(|r| r.bw_rate)
+            .sum::<f64>()
+            / cpu.mem_bw)
+            .min(1.0);
+        let mut per_client = vec![(0.0f32, 0.0f32); self.clients.len()];
+        for r in self.gpu_resident.values() {
+            let e = &mut per_client[r.client.0];
+            e.0 += (r.sms as f64 / total_sms) as f32;
+            e.1 += (r.sms as f64 * r.occupancy / total_sms) as f32;
+        }
+        self.trace.push(TraceSample {
+            t: self.now,
+            gpu_smact: smact as f32,
+            gpu_smocc: smocc as f32,
+            gpu_bw_frac: bw_frac as f32,
+            gpu_power: gpu_power(gpu, smact, smocc, bw_frac) as f32,
+            vram_used: self.vram.used(),
+            cpu_util: cpu_util as f32,
+            dram_bw_frac: dram_frac as f32,
+            cpu_power: cpu_power(cpu, cpu_util, dram_frac) as f32,
+            per_client,
+        });
+    }
+
+    /// Invariant check used by property tests: SM/core accounting balances.
+    pub fn check_invariants(&self) {
+        let gpu_held: usize = self.gpu_held.values().sum();
+        let resident: usize = self.gpu_resident.values().map(|r| r.sms).sum();
+        assert_eq!(gpu_held, resident, "held/resident mismatch");
+        assert_eq!(
+            self.gpu_free_sms + resident,
+            self.testbed.gpu.num_sms,
+            "SM conservation violated"
+        );
+        let cpu_busy: usize = self.cpu_resident.values().map(|r| r.cores).sum();
+        assert_eq!(
+            self.cpu_free_cores + cpu_busy,
+            self.testbed.cpu.num_cores,
+            "core conservation violated"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::profiles::Testbed;
+
+    fn kernel(tag: &'static str, blocks: usize, flops: f64) -> KernelDesc {
+        KernelDesc::new(tag, blocks, 256, 64, 0, flops, flops / 10.0)
+    }
+
+    fn engine() -> Engine {
+        Engine::new(Testbed::intel_server(), Policy::Greedy)
+    }
+
+    #[test]
+    fn single_job_completes() {
+        let mut e = engine();
+        let c = e.register_client("chat");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "req0".into(),
+                phases: vec![Phase::gpu("work", 0.0, vec![kernel("k", 288, 1e9)])],
+            },
+            0.0,
+        );
+        e.run_all();
+        let done = e.take_completed();
+        assert_eq!(done.len(), 1);
+        let r = &done[0];
+        assert!(r.error.is_none());
+        assert!(r.end > 0.0);
+        assert_eq!(r.phases.len(), 1);
+        e.check_invariants();
+    }
+
+    #[test]
+    fn kernels_in_phase_run_sequentially() {
+        let mut e = engine();
+        let c = e.register_client("chat");
+        let k = kernel("k", 288, 1e9);
+        let solo_dur = {
+            let mut e1 = engine();
+            let c1 = e1.register_client("x");
+            e1.submit(
+                JobSpec {
+                    client: c1,
+                    label: "one".into(),
+                    phases: vec![Phase::gpu("p", 0.0, vec![k.clone()])],
+                },
+                0.0,
+            );
+            e1.run_all();
+            e1.take_completed()[0].latency()
+        };
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "three".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![k.clone(), k.clone(), k.clone()])],
+            },
+            0.0,
+        );
+        e.run_all();
+        let lat = e.take_completed()[0].latency();
+        assert!(
+            (lat - 3.0 * solo_dur).abs() < 0.15 * solo_dur,
+            "lat={lat} expected ~{}",
+            3.0 * solo_dur
+        );
+    }
+
+    #[test]
+    fn host_pre_delays_phase() {
+        let mut e = engine();
+        let c = e.register_client("chat");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "delayed".into(),
+                phases: vec![Phase::gpu("p", 0.5, vec![kernel("k", 72, 1e6)])],
+            },
+            1.0,
+        );
+        e.run_all();
+        let r = &e.take_completed()[0];
+        assert!(r.end >= 1.5);
+        assert!((r.latency() - 0.5) < 0.1, "latency {}", r.latency());
+    }
+
+    #[test]
+    fn greedy_small_kernel_stalls_behind_big_kernel() {
+        // ImageGen-style device-filling stream vs a LiveCaptions-style tiny
+        // kernel: under Greedy the tiny kernel waits about one large-kernel
+        // duration (the paper's Fig. 5b stall), instead of its microsecond
+        // exclusive latency.
+        let mut e = engine();
+        let big_client = e.register_client("imagegen");
+        let small_client = e.register_client("livecaptions");
+        let big = kernel("denoise", 10_000, 2e10);
+        let big_dur = crate::gpusim::kernel::duration(&big, &e.testbed().gpu, 72).unwrap();
+        e.submit(
+            JobSpec {
+                client: big_client,
+                label: "step".into(),
+                phases: vec![Phase::gpu("denoise", 0.0, vec![big; 10])],
+            },
+            0.0,
+        );
+        // Tiny kernel arrives while the first big kernel is resident.
+        let tiny = kernel("decode", 2, 1e6);
+        let tiny_solo = crate::gpusim::kernel::duration(&tiny, &e.testbed().gpu, 2).unwrap();
+        e.submit(
+            JobSpec {
+                client: small_client,
+                label: "tok".into(),
+                phases: vec![Phase::gpu("decode", 0.0, vec![tiny])],
+            },
+            0.001,
+        );
+        e.run_all();
+        let done = e.take_completed();
+        let big_end = done.iter().find(|r| r.label == "step").unwrap().end;
+        let tiny_r = done.iter().find(|r| r.label == "tok").unwrap();
+        // Stalled by roughly one big-kernel duration — orders of magnitude
+        // beyond its exclusive latency …
+        assert!(
+            tiny_r.queue_wait() > 0.5 * big_dur,
+            "wait {} vs big kernel {}",
+            tiny_r.queue_wait(),
+            big_dur
+        );
+        assert!(tiny_r.latency() > 100.0 * tiny_solo);
+        // … but not blocked behind the entire 10-kernel stream.
+        assert!(
+            tiny_r.end < big_end * 0.5,
+            "tiny finished at {} but bulk at {}",
+            tiny_r.end,
+            big_end
+        );
+    }
+
+    #[test]
+    fn partition_protects_small_client() {
+        let tb = Testbed::intel_server();
+        let mut e = Engine::new(tb, Policy::Greedy);
+        let big_client = e.register_client("imagegen");
+        let small_client = e.register_client("livecaptions");
+        e.set_policy(Policy::equal_partition(&[big_client, small_client], 72));
+        let big = kernel("denoise", 10_000, 2e10);
+        e.submit(
+            JobSpec {
+                client: big_client,
+                label: "step".into(),
+                phases: vec![Phase::gpu("denoise", 0.0, vec![big; 10])],
+            },
+            0.0,
+        );
+        let tiny = kernel("decode", 2, 1e6);
+        e.submit(
+            JobSpec {
+                client: small_client,
+                label: "tok".into(),
+                phases: vec![Phase::gpu("decode", 0.0, vec![tiny])],
+            },
+            0.001,
+        );
+        e.run_all();
+        let done = e.take_completed();
+        let big_end = done.iter().find(|r| r.label == "step").unwrap().end;
+        let tiny_r = done.iter().find(|r| r.label == "tok").unwrap();
+        assert!(
+            tiny_r.end < big_end * 0.2,
+            "partitioned tiny kernel should not wait for the bulk: {} vs {}",
+            tiny_r.end,
+            big_end
+        );
+    }
+
+    #[test]
+    fn cpu_phase_occupies_cores() {
+        let mut e = engine();
+        let c = e.register_client("chat-cpu");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "cpu-req".into(),
+                phases: vec![Phase::cpu(
+                    "prefill",
+                    0.0,
+                    CpuWork {
+                        flops: 1.6e10, // 10 ms at 100% of the Xeon
+                        bytes: 1e8,
+                        threads: 24,
+                    },
+                )],
+            },
+            0.0,
+        );
+        e.run_all();
+        let r = &e.take_completed()[0];
+        assert!(r.error.is_none());
+        assert!(r.latency() > 5e-3 && r.latency() < 0.1, "lat {}", r.latency());
+        // Trace should have seen full CPU utilization at some point.
+        assert!(e.trace().iter().any(|s| s.cpu_util > 0.99));
+        e.check_invariants();
+    }
+
+    #[test]
+    fn oom_fails_job_with_error() {
+        let mut e = engine();
+        let c = e.register_client("big-model");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "setup".into(),
+                phases: vec![Phase::host("load", 0.1).with_mem_ops(vec![MemOp::Alloc {
+                    label: "weights".into(),
+                    bytes: 30 * (1 << 30), // 30 GB > 24 GB
+                }])],
+            },
+            0.0,
+        );
+        e.run_all();
+        let r = &e.take_completed()[0];
+        assert!(r.error.as_deref().unwrap().contains("OOM"));
+    }
+
+    #[test]
+    fn mem_ops_alloc_and_free() {
+        let mut e = engine();
+        let c = e.register_client("chat");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "setup".into(),
+                phases: vec![Phase::host("load", 0.1).with_mem_ops(vec![MemOp::Alloc {
+                    label: "weights".into(),
+                    bytes: 2 << 30,
+                }])],
+            },
+            0.0,
+        );
+        e.run_all();
+        assert_eq!(e.vram().used(), 2 << 30);
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "cleanup".into(),
+                phases: vec![Phase::host("unload", 0.0).with_mem_ops(vec![MemOp::FreeAll])],
+            },
+            e.now(),
+        );
+        e.run_all();
+        assert_eq!(e.vram().used(), 0);
+    }
+
+    #[test]
+    fn run_until_is_incremental() {
+        let mut e = engine();
+        let c = e.register_client("chat");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "late".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 72, 1e6)])],
+            },
+            5.0,
+        );
+        e.run_until(1.0);
+        assert_eq!(e.take_completed().len(), 0);
+        assert_eq!(e.now(), 1.0);
+        e.run_until(10.0);
+        assert_eq!(e.take_completed().len(), 1);
+    }
+
+    #[test]
+    fn trace_records_utilization() {
+        let mut e = engine();
+        let c = e.register_client("chat");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "r".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 100_000, 1e11)])],
+            },
+            0.0,
+        );
+        e.run_all();
+        // At some point the full GPU was reserved by client 0.
+        assert!(e.trace().iter().any(|s| s.gpu_smact > 0.99));
+        assert!(e
+            .trace()
+            .iter()
+            .any(|s| s.per_client[c.0].0 > 0.99 && s.per_client[c.0].1 > 0.5));
+        // Power rises above idle while running.
+        let idle = e.testbed().gpu.idle_power as f32;
+        assert!(e.trace().iter().any(|s| s.gpu_power > idle * 2.0));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut e = engine();
+            let a = e.register_client("a");
+            let b = e.register_client("b");
+            for i in 0..20 {
+                let cl = if i % 2 == 0 { a } else { b };
+                e.submit(
+                    JobSpec {
+                        client: cl,
+                        label: format!("r{i}"),
+                        phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 500 + i, 1e8)])],
+                    },
+                    i as f64 * 0.001,
+                );
+            }
+            e.run_all();
+            let mut ends: Vec<(String, f64)> =
+                e.take_completed().into_iter().map(|r| (r.label, r.end)).collect();
+            ends.sort_by(|x, y| x.0.cmp(&y.0));
+            ends
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,29 @@
+//! The simulated end-user testbed (substrate).
+//!
+//! The paper runs on physical hardware (RTX 6000 + Xeon server, MacBook M1
+//! Pro). This environment has neither, so — per the substitution rule in
+//! DESIGN.md §2 — the device is rebuilt as a deterministic discrete-event
+//! simulator that models exactly the mechanisms the paper's findings rest
+//! on: SM occupancy limited by per-thread resources, FIFO kernel arbitration
+//! with launch-ahead streams, static MPS-style partitions, VRAM capacity
+//! pressure, and NVML/RAPL-style power.
+//!
+//! Layout:
+//! * [`profiles`] — calibrated architectural constants per device.
+//! * [`kernel`]   — kernel descriptors + CUDA-style occupancy model.
+//! * [`policy`]   — greedy / partition / fair-share SM arbitration.
+//! * [`engine`]   — the event-driven executor and trace recorder.
+//! * [`vram`]     — capacity-enforcing device-memory allocator.
+//! * [`power`]    — board/package power models.
+
+pub mod engine;
+pub mod kernel;
+pub mod policy;
+pub mod power;
+pub mod profiles;
+pub mod vram;
+
+pub use engine::{ClientId, CpuWork, Engine, JobId, JobResult, JobSpec, MemOp, Phase, TraceSample};
+pub use kernel::{Device, KernelDesc};
+pub use policy::Policy;
+pub use profiles::Testbed;

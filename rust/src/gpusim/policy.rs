@@ -1,0 +1,384 @@
+//! GPU resource-sharing policies (§3.2 "resource orchestrator").
+//!
+//! The paper evaluates three regimes:
+//!
+//! * **Greedy** — the CUDA default: kernels occupy SMs first-come-first-serve
+//!   and a launched kernel takes every free SM its grid can use. Reproduces
+//!   the starvation finding (§4.2): bulk-enqueued large kernels monopolize
+//!   the device and small latency-sensitive kernels queue behind them.
+//! * **Partition** — NVIDIA MPS-style static caps: each client may hold at
+//!   most a fixed number of SMs, idle partitions stay idle (the stairstep
+//!   under-utilization of Fig. 5).
+//! * **FairShare** — the Apple-Silicon-like scheduler (§4.4): per-client cap
+//!   is recomputed as `total / active_clients`, with leftover SMs granted to
+//!   whoever is waiting; non-preemptive, so fairness is still imperfect.
+
+use std::collections::BTreeMap;
+
+use crate::gpusim::engine::ClientId;
+
+/// A ready kernel as the policy sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct ReadyKernel {
+    pub client: ClientId,
+    /// FIFO key: time the kernel's phase was enqueued (stream order).
+    pub enqueue_time: f64,
+    /// Tie-break sequence for determinism.
+    pub seq: u64,
+    /// SMs the kernel wants (grid fully spread).
+    pub sms_wanted: usize,
+}
+
+/// A grant decision: which ready kernel launches on how many SMs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grant {
+    /// Index into the ready list passed to `schedule`.
+    pub ready_index: usize,
+    pub sms: usize,
+}
+
+/// Resource-sharing policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    /// First-come-first-serve over all free SMs.
+    Greedy,
+    /// Static per-client SM caps (MPS analogue). Clients absent from the map
+    /// are uncapped.
+    Partition(BTreeMap<ClientId, usize>),
+    /// Dynamic equal share across active clients, leftover redistributed.
+    FairShare,
+    /// The paper's §5.2 proposal, implemented as an extension: clients with
+    /// tight SLOs are *priority* clients whose ready kernels are served
+    /// before best-effort work, and a small SM reservation is withheld from
+    /// best-effort kernels so a latency-sensitive kernel never waits a full
+    /// device-filling kernel to drain. Work-conserving: if no priority
+    /// client is active, best-effort work gets the whole device.
+    SloAware {
+        /// Latency-sensitive clients (tight SLOs).
+        priority: Vec<ClientId>,
+        /// SMs withheld from best-effort kernels while any priority client
+        /// has ready or resident work.
+        reserve_sms: usize,
+    },
+}
+
+impl Policy {
+    /// Static MPS partition giving each of `clients` an equal share of
+    /// `total_sms` (the paper's 33%-each configuration).
+    pub fn equal_partition(clients: &[ClientId], total_sms: usize) -> Policy {
+        assert!(!clients.is_empty());
+        let share = total_sms / clients.len();
+        Policy::Partition(clients.iter().map(|&c| (c, share)).collect())
+    }
+
+    /// Decide launches given the ready set, free SMs, and current per-client
+    /// holdings. Returns grants in launch order. `ready` MUST be sorted by
+    /// (enqueue_time, seq) — the engine guarantees this.
+    ///
+    /// Policies are non-preemptive and work-conserving within their caps: a
+    /// kernel launches with `min(wanted, allowed)` SMs as long as at least
+    /// one SM is allowed, matching how the hardware work distributor drains
+    /// grids onto whatever SMs are available.
+    pub fn schedule(
+        &self,
+        ready: &[ReadyKernel],
+        mut free_sms: usize,
+        held_by: &BTreeMap<ClientId, usize>,
+        total_sms: usize,
+    ) -> Vec<Grant> {
+        debug_assert!(ready.windows(2).all(|w| {
+            (w[0].enqueue_time, w[0].seq) <= (w[1].enqueue_time, w[1].seq)
+        }));
+        let mut grants = Vec::new();
+        let mut held: BTreeMap<ClientId, usize> = held_by.clone();
+
+        match self {
+            Policy::Greedy => {
+                for (i, rk) in ready.iter().enumerate() {
+                    if free_sms == 0 {
+                        break;
+                    }
+                    let sms = rk.sms_wanted.min(free_sms).max(1);
+                    grants.push(Grant { ready_index: i, sms });
+                    free_sms -= sms;
+                }
+            }
+            Policy::Partition(caps) => {
+                for (i, rk) in ready.iter().enumerate() {
+                    if free_sms == 0 {
+                        break;
+                    }
+                    let cap = caps.get(&rk.client).copied().unwrap_or(total_sms);
+                    let used = held.get(&rk.client).copied().unwrap_or(0);
+                    let allowed = cap.saturating_sub(used).min(free_sms);
+                    if allowed == 0 {
+                        continue; // this client's partition is full; others may go
+                    }
+                    let sms = rk.sms_wanted.min(allowed).max(1);
+                    grants.push(Grant { ready_index: i, sms });
+                    *held.entry(rk.client).or_insert(0) += sms;
+                    free_sms -= sms;
+                }
+            }
+            Policy::SloAware { priority, reserve_sms } => {
+                let priority_active = ready.iter().any(|rk| priority.contains(&rk.client))
+                    || held
+                        .iter()
+                        .any(|(c, &n)| n > 0 && priority.contains(c));
+                // Pass 1: priority clients in FIFO order, full device.
+                let mut launched = vec![false; ready.len()];
+                for (i, rk) in ready.iter().enumerate() {
+                    if free_sms == 0 {
+                        break;
+                    }
+                    if !priority.contains(&rk.client) {
+                        continue;
+                    }
+                    let sms = rk.sms_wanted.min(free_sms).max(1);
+                    grants.push(Grant { ready_index: i, sms });
+                    launched[i] = true;
+                    free_sms -= sms;
+                }
+                // Pass 2: best-effort clients, leaving the reservation free
+                // whenever a priority client is active.
+                let floor = if priority_active { *reserve_sms } else { 0 };
+                for (i, rk) in ready.iter().enumerate() {
+                    if free_sms <= floor {
+                        break;
+                    }
+                    if launched[i] || priority.contains(&rk.client) {
+                        continue;
+                    }
+                    let sms = rk.sms_wanted.min(free_sms - floor).max(1);
+                    grants.push(Grant { ready_index: i, sms });
+                    free_sms -= sms;
+                }
+            }
+            Policy::FairShare => {
+                // Active clients: anyone holding SMs or with ready work.
+                let mut active: Vec<ClientId> = held
+                    .iter()
+                    .filter(|(_, &n)| n > 0)
+                    .map(|(&c, _)| c)
+                    .collect();
+                for rk in ready {
+                    if !active.contains(&rk.client) {
+                        active.push(rk.client);
+                    }
+                }
+                let fair_cap = (total_sms / active.len().max(1)).max(1);
+                // Pass 1: grant up to the fair cap, FIFO order.
+                let mut launched = vec![false; ready.len()];
+                for (i, rk) in ready.iter().enumerate() {
+                    if free_sms == 0 {
+                        break;
+                    }
+                    let used = held.get(&rk.client).copied().unwrap_or(0);
+                    let allowed = fair_cap.saturating_sub(used).min(free_sms);
+                    if allowed == 0 {
+                        continue;
+                    }
+                    let sms = rk.sms_wanted.min(allowed).max(1);
+                    grants.push(Grant { ready_index: i, sms });
+                    launched[i] = true;
+                    *held.entry(rk.client).or_insert(0) += sms;
+                    free_sms -= sms;
+                }
+                // Pass 2: leftover SMs go to still-waiting kernels FIFO —
+                // work conservation (unlike static MPS partitions).
+                for (i, rk) in ready.iter().enumerate() {
+                    if free_sms == 0 {
+                        break;
+                    }
+                    if launched[i] {
+                        continue;
+                    }
+                    let sms = rk.sms_wanted.min(free_sms).max(1);
+                    grants.push(Grant { ready_index: i, sms });
+                    *held.entry(rk.client).or_insert(0) += sms;
+                    free_sms -= sms;
+                }
+            }
+        }
+        grants
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Policy::Greedy => write!(f, "greedy"),
+            Policy::Partition(caps) => {
+                write!(f, "partition(")?;
+                for (i, (c, n)) in caps.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "c{}={}", c.0, n)?;
+                }
+                write!(f, ")")
+            }
+            Policy::FairShare => write!(f, "fair-share"),
+            Policy::SloAware { priority, reserve_sms } => {
+                write!(f, "slo-aware(prio={}, reserve={reserve_sms})", priority.len())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rk(client: usize, t: f64, seq: u64, want: usize) -> ReadyKernel {
+        ReadyKernel {
+            client: ClientId(client),
+            enqueue_time: t,
+            seq,
+            sms_wanted: want,
+        }
+    }
+
+    #[test]
+    fn greedy_big_kernel_takes_everything() {
+        let p = Policy::Greedy;
+        let ready = [rk(0, 0.0, 0, 72), rk(1, 1.0, 1, 2)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        assert_eq!(grants, vec![Grant { ready_index: 0, sms: 72 }]);
+    }
+
+    #[test]
+    fn greedy_fifo_order_respected() {
+        let p = Policy::Greedy;
+        // Small kernel enqueued first gets served first.
+        let ready = [rk(1, 0.0, 0, 2), rk(0, 1.0, 1, 72)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        assert_eq!(grants.len(), 2);
+        assert_eq!(grants[0], Grant { ready_index: 0, sms: 2 });
+        assert_eq!(grants[1], Grant { ready_index: 1, sms: 70 });
+    }
+
+    #[test]
+    fn greedy_no_free_no_grant() {
+        let p = Policy::Greedy;
+        let ready = [rk(0, 0.0, 0, 1)];
+        assert!(p.schedule(&ready, 0, &BTreeMap::new(), 72).is_empty());
+    }
+
+    #[test]
+    fn partition_caps_each_client() {
+        let p = Policy::equal_partition(&[ClientId(0), ClientId(1), ClientId(2)], 72);
+        let ready = [rk(0, 0.0, 0, 72)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        assert_eq!(grants, vec![Grant { ready_index: 0, sms: 24 }]);
+    }
+
+    #[test]
+    fn partition_full_client_does_not_block_others() {
+        let p = Policy::equal_partition(&[ClientId(0), ClientId(1), ClientId(2)], 72);
+        let mut held = BTreeMap::new();
+        held.insert(ClientId(0), 24); // client 0 partition full
+        let ready = [rk(0, 0.0, 0, 10), rk(1, 1.0, 1, 10)];
+        let grants = p.schedule(&ready, 48, &held, 72);
+        assert_eq!(grants, vec![Grant { ready_index: 1, sms: 10 }]);
+    }
+
+    #[test]
+    fn partition_idle_share_stays_idle() {
+        // Client 1 and 2 idle; client 0 still capped at 24 — the paper's
+        // under-utilization finding.
+        let p = Policy::equal_partition(&[ClientId(0), ClientId(1), ClientId(2)], 72);
+        let ready = [rk(0, 0.0, 0, 72)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        assert_eq!(grants[0].sms, 24);
+    }
+
+    #[test]
+    fn fair_share_splits_between_active() {
+        let p = Policy::FairShare;
+        let ready = [rk(0, 0.0, 0, 72), rk(1, 0.5, 1, 72)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        // Both get their fair cap of 36.
+        assert_eq!(grants.len(), 2);
+        assert_eq!(grants[0].sms, 36);
+        assert_eq!(grants[1].sms, 36);
+    }
+
+    #[test]
+    fn fair_share_is_work_conserving() {
+        // One active client → it gets everything (unlike static partition).
+        let p = Policy::FairShare;
+        let ready = [rk(0, 0.0, 0, 72)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        assert_eq!(grants[0].sms, 72);
+    }
+
+    #[test]
+    fn fair_share_leftover_redistributed() {
+        let p = Policy::FairShare;
+        // Client 0 wants tiny, client 1 wants everything.
+        let ready = [rk(0, 0.0, 0, 2), rk(1, 0.5, 1, 72)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        // Client 0 takes 2 (under its cap of 36), client 1 takes its cap 36,
+        // then leftover 34 goes back to client 1? No — non-launched kernels
+        // only; both launched, so grants are [2, 36].
+        assert_eq!(grants.len(), 2);
+        assert_eq!(grants[0].sms, 2);
+        assert_eq!(grants[1].sms, 36);
+    }
+
+    #[test]
+    fn slo_aware_serves_priority_first() {
+        let p = Policy::SloAware {
+            priority: vec![ClientId(1)],
+            reserve_sms: 8,
+        };
+        // Best-effort device-filler arrived first; priority tiny kernel second.
+        let ready = [rk(0, 0.0, 0, 72), rk(1, 1.0, 1, 4)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        // Priority kernel launches first with its full want …
+        assert_eq!(grants[0], Grant { ready_index: 1, sms: 4 });
+        // … and the best-effort kernel is capped so the reservation stays free.
+        assert_eq!(grants[1], Grant { ready_index: 0, sms: 60 });
+    }
+
+    #[test]
+    fn slo_aware_work_conserving_when_priority_idle() {
+        let p = Policy::SloAware {
+            priority: vec![ClientId(1)],
+            reserve_sms: 8,
+        };
+        let ready = [rk(0, 0.0, 0, 72)];
+        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        // No priority work anywhere → no reservation withheld.
+        assert_eq!(grants, vec![Grant { ready_index: 0, sms: 72 }]);
+    }
+
+    #[test]
+    fn slo_aware_reserves_while_priority_resident() {
+        let p = Policy::SloAware {
+            priority: vec![ClientId(1)],
+            reserve_sms: 8,
+        };
+        let mut held = BTreeMap::new();
+        held.insert(ClientId(1), 4); // priority kernel resident
+        let ready = [rk(0, 0.0, 0, 72)];
+        let grants = p.schedule(&ready, 68, &held, 72);
+        assert_eq!(grants, vec![Grant { ready_index: 0, sms: 60 }]);
+    }
+
+    #[test]
+    fn grants_never_exceed_free() {
+        for policy in [
+            Policy::Greedy,
+            Policy::equal_partition(&[ClientId(0), ClientId(1)], 72),
+            Policy::FairShare,
+            Policy::SloAware { priority: vec![ClientId(1)], reserve_sms: 8 },
+        ] {
+            let ready = [rk(0, 0.0, 0, 50), rk(1, 0.1, 1, 50), rk(0, 0.2, 2, 50)];
+            let grants = policy.schedule(&ready, 30, &BTreeMap::new(), 72);
+            let total: usize = grants.iter().map(|g| g.sms).sum();
+            assert!(total <= 30, "{policy}: granted {total} > 30 free");
+        }
+    }
+}

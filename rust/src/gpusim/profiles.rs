@@ -1,0 +1,209 @@
+//! Calibrated device profiles.
+//!
+//! The paper's testbeds are an NVIDIA RTX 6000 (Turing) + Intel Xeon Gold
+//! 6126 server and an Apple MacBook M1 Pro. We model each as a set of
+//! published architectural constants; the simulator derives occupancy and
+//! kernel timing from these, so the profiles are the *only* place absolute
+//! hardware numbers live.
+
+/// GPU architectural profile (SM-granularity execution model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    /// Number of streaming multiprocessors (or SM-equivalents for Apple).
+    pub num_sms: usize,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: usize,
+    /// Max resident warps per SM (`max_threads / warp_size`).
+    pub max_warps_per_sm: usize,
+    /// Threads per warp.
+    pub warp_size: usize,
+    /// Register file size per SM (32-bit registers).
+    pub regs_per_sm: usize,
+    /// Shared memory per SM in bytes (VMEM-equivalent scratchpad).
+    pub smem_per_sm: usize,
+    /// Max resident thread blocks per SM.
+    pub max_blocks_per_sm: usize,
+    /// VRAM capacity in bytes.
+    pub vram_bytes: u64,
+    /// Peak memory bandwidth, bytes/second.
+    pub mem_bw: f64,
+    /// Peak fp32 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Fixed kernel-launch overhead in seconds (driver + dispatch).
+    pub launch_overhead: f64,
+    /// Idle board power (W).
+    pub idle_power: f64,
+    /// Board power limit / TDP (W).
+    pub max_power: f64,
+    /// Occupancy at which the SM's ALUs saturate: below this, effective
+    /// throughput degrades proportionally (latency hiding breaks down).
+    pub occ_saturation: f64,
+    /// True for unified-memory devices (Apple Silicon): VRAM == DRAM and
+    /// GPU/CPU share the bandwidth budget.
+    pub unified_memory: bool,
+}
+
+/// CPU profile used for CPU-exclusive execution and hybrid (KV-cache-on-CPU)
+/// scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuProfile {
+    pub name: &'static str,
+    pub num_cores: usize,
+    /// Peak fp32 throughput across all cores, FLOP/s (SIMD included).
+    pub peak_flops: f64,
+    /// DRAM bandwidth, bytes/second.
+    pub mem_bw: f64,
+    /// DRAM capacity in bytes.
+    pub dram_bytes: u64,
+    /// Package idle power (W), RAPL-style.
+    pub idle_power: f64,
+    /// Package TDP (W).
+    pub max_power: f64,
+    /// Per-dispatch overhead on the CPU path (thread-pool wake etc.).
+    pub dispatch_overhead: f64,
+}
+
+/// The paper's primary testbed GPU: NVIDIA Quadro RTX 6000 (Turing TU102),
+/// 72 SMs, 24 GB GDDR6, 672 GB/s, 16.3 TFLOP/s fp32, 260 W.
+pub fn rtx6000() -> GpuProfile {
+    GpuProfile {
+        name: "RTX6000",
+        num_sms: 72,
+        max_threads_per_sm: 1024,
+        max_warps_per_sm: 32,
+        warp_size: 32,
+        regs_per_sm: 65_536,
+        smem_per_sm: 65_536,
+        max_blocks_per_sm: 16,
+        vram_bytes: 24 * (1 << 30),
+        mem_bw: 672e9,
+        peak_flops: 16.3e12,
+        launch_overhead: 5e-6,
+        idle_power: 55.0,
+        max_power: 260.0,
+        occ_saturation: 0.40,
+        unified_memory: false,
+    }
+}
+
+/// Apple M1 Pro 16-core GPU modeled as 16 SM-equivalents. 32 GB unified
+/// memory at 200 GB/s shared with the CPU; ~5.2 TFLOP/s fp32; low power.
+/// Apple's scheduler is modeled as `Policy::FairShare` by the orchestrator.
+pub fn m1_pro_gpu() -> GpuProfile {
+    GpuProfile {
+        name: "M1ProGPU",
+        num_sms: 16,
+        max_threads_per_sm: 1024,
+        max_warps_per_sm: 32,
+        warp_size: 32,
+        regs_per_sm: 65_536,
+        // Apple threadgroup memory: 32 KB per threadgroup; model 64 KB/core.
+        smem_per_sm: 65_536,
+        max_blocks_per_sm: 16,
+        vram_bytes: 32 * (1 << 30), // unified: capacity == DRAM
+        mem_bw: 200e9,
+        peak_flops: 5.2e12,
+        launch_overhead: 8e-6,
+        idle_power: 4.0,
+        max_power: 30.0,
+        occ_saturation: 0.40,
+        unified_memory: true,
+    }
+}
+
+/// Intel Xeon Gold 6126 as configured in the paper's server (24 cores
+/// visible, 2.6 GHz, AVX-512): ~1.6 TFLOP/s fp32 aggregate, 32 GB DRAM,
+/// ~119 GB/s (6-channel DDR4-2666), 125 W TDP.
+pub fn xeon6126() -> CpuProfile {
+    CpuProfile {
+        name: "Xeon6126",
+        num_cores: 24,
+        peak_flops: 1.6e12,
+        mem_bw: 119e9,
+        dram_bytes: 32 * (1 << 30),
+        idle_power: 25.0,
+        max_power: 125.0,
+        dispatch_overhead: 2e-6,
+    }
+}
+
+/// M1 Pro CPU complex (6 performance + 2 efficiency cores, paper's config).
+/// The package advertises 200 GB/s, but a CPU-cluster-only workload reaches
+/// roughly half of it — the GPU shares the same fabric.
+pub fn m1_pro_cpu() -> CpuProfile {
+    CpuProfile {
+        name: "M1ProCPU",
+        num_cores: 8,
+        peak_flops: 0.8e12,
+        mem_bw: 100e9,
+        dram_bytes: 32 * (1 << 30),
+        idle_power: 1.0,
+        max_power: 30.0,
+        dispatch_overhead: 2e-6,
+    }
+}
+
+/// A full testbed: one GPU + one CPU, as the orchestrator sees it.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub gpu: GpuProfile,
+    pub cpu: CpuProfile,
+}
+
+impl Testbed {
+    /// The paper's primary Intel + RTX 6000 server (§4, "Experimental Setup").
+    pub fn intel_server() -> Self {
+        Testbed {
+            gpu: rtx6000(),
+            cpu: xeon6126(),
+        }
+    }
+
+    /// The paper's MacBook M1 Pro laptop (§4.4, Appendix C).
+    pub fn macbook_m1_pro() -> Self {
+        Testbed {
+            gpu: m1_pro_gpu(),
+            cpu: m1_pro_cpu(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtx6000_matches_published_specs() {
+        let g = rtx6000();
+        assert_eq!(g.num_sms, 72);
+        assert_eq!(g.vram_bytes, 24 * (1 << 30));
+        assert_eq!(g.max_warps_per_sm * g.warp_size, g.max_threads_per_sm);
+        assert!(g.peak_flops > 16e12 && g.peak_flops < 17e12);
+    }
+
+    #[test]
+    fn m1_is_unified_and_low_power() {
+        let g = m1_pro_gpu();
+        assert!(g.unified_memory);
+        assert!(g.max_power < rtx6000().max_power / 5.0);
+        assert_eq!(g.vram_bytes, m1_pro_cpu().dram_bytes);
+    }
+
+    #[test]
+    fn cpu_profiles_sane() {
+        let c = xeon6126();
+        assert_eq!(c.num_cores, 24);
+        assert!(c.peak_flops < rtx6000().peak_flops / 5.0);
+        assert!(c.mem_bw < rtx6000().mem_bw);
+    }
+
+    #[test]
+    fn testbeds_compose() {
+        let t = Testbed::intel_server();
+        assert_eq!(t.gpu.name, "RTX6000");
+        assert_eq!(t.cpu.name, "Xeon6126");
+        let m = Testbed::macbook_m1_pro();
+        assert!(m.gpu.unified_memory);
+    }
+}

@@ -1,0 +1,220 @@
+//! VRAM allocator with per-client accounting.
+//!
+//! The paper's scenarios hinge on GPU memory pressure: 24 GB forces the
+//! Llama-8B Chatbot onto the CPU (§B.4) and forces DeepResearch's 16 GB KV
+//! cache into CPU DRAM (§4.2.1). The allocator is a simple bump-accounted
+//! pool — placement *decisions* live in the orchestrator / server; this
+//! module only enforces capacity and tracks per-client usage and peaks.
+
+use std::collections::BTreeMap;
+
+/// Opaque allocation handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AllocId(u64);
+
+/// Out-of-memory error, carrying context for diagnostics.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[error("VRAM OOM: client `{client}` requested {requested} B (`{label}`), {used} of {capacity} B in use")]
+pub struct OomError {
+    pub client: String,
+    pub label: String,
+    pub requested: u64,
+    pub used: u64,
+    pub capacity: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Allocation {
+    client: String,
+    label: String,
+    bytes: u64,
+}
+
+/// A capacity-enforcing allocator over device memory.
+#[derive(Debug, Clone)]
+pub struct VramAllocator {
+    capacity: u64,
+    used: u64,
+    peak: u64,
+    next_id: u64,
+    allocs: BTreeMap<AllocId, Allocation>,
+}
+
+impl VramAllocator {
+    pub fn new(capacity: u64) -> Self {
+        VramAllocator {
+            capacity,
+            used: 0,
+            peak: 0,
+            next_id: 0,
+            allocs: BTreeMap::new(),
+        }
+    }
+
+    /// Allocate `bytes` on behalf of `client`. `label` names the buffer
+    /// ("weights", "kv-cache", "activations") for reports and errors.
+    pub fn alloc(&mut self, client: &str, label: &str, bytes: u64) -> Result<AllocId, OomError> {
+        if self.used + bytes > self.capacity {
+            return Err(OomError {
+                client: client.to_string(),
+                label: label.to_string(),
+                requested: bytes,
+                used: self.used,
+                capacity: self.capacity,
+            });
+        }
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.allocs.insert(
+            id,
+            Allocation {
+                client: client.to_string(),
+                label: label.to_string(),
+                bytes,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Check whether an allocation would fit without performing it.
+    pub fn would_fit(&self, bytes: u64) -> bool {
+        self.used + bytes <= self.capacity
+    }
+
+    /// Free an allocation; panics on double-free (a framework bug).
+    pub fn free(&mut self, id: AllocId) {
+        let a = self.allocs.remove(&id).expect("double free / unknown AllocId");
+        self.used -= a.bytes;
+    }
+
+    /// Free everything owned by a client (cleanup path).
+    pub fn free_client(&mut self, client: &str) -> u64 {
+        let ids: Vec<AllocId> = self
+            .allocs
+            .iter()
+            .filter(|(_, a)| a.client == client)
+            .map(|(id, _)| *id)
+            .collect();
+        let mut freed = 0;
+        for id in ids {
+            freed += self.allocs[&id].bytes;
+            self.free(id);
+        }
+        freed
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// Bytes currently held by a client.
+    pub fn used_by(&self, client: &str) -> u64 {
+        self.allocs
+            .values()
+            .filter(|a| a.client == client)
+            .map(|a| a.bytes)
+            .sum()
+    }
+
+    /// (client, label, bytes) inventory, for the report's memory section.
+    pub fn inventory(&self) -> Vec<(String, String, u64)> {
+        self.allocs
+            .values()
+            .map(|a| (a.client.clone(), a.label.clone(), a.bytes))
+            .collect()
+    }
+}
+
+/// Gibibytes → bytes, used throughout app model sizing.
+pub const fn gib(n: u64) -> u64 {
+    n * (1 << 30)
+}
+
+/// Mebibytes → bytes.
+pub const fn mib(n: u64) -> u64 {
+    n * (1 << 20)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_balances() {
+        let mut v = VramAllocator::new(gib(24));
+        let a = v.alloc("chat", "weights", gib(2)).unwrap();
+        let b = v.alloc("img", "weights", gib(5)).unwrap();
+        assert_eq!(v.used(), gib(7));
+        assert_eq!(v.used_by("chat"), gib(2));
+        v.free(a);
+        assert_eq!(v.used(), gib(5));
+        v.free(b);
+        assert_eq!(v.used(), 0);
+        assert_eq!(v.peak(), gib(7));
+    }
+
+    #[test]
+    fn oom_when_over_capacity() {
+        let mut v = VramAllocator::new(gib(24));
+        v.alloc("research", "kv-cache", gib(16)).unwrap();
+        v.alloc("chat", "weights", gib(2)).unwrap();
+        let err = v.alloc("img", "weights", gib(10)).unwrap_err();
+        assert_eq!(err.requested, gib(10));
+        assert_eq!(err.used, gib(18));
+        assert!(err.to_string().contains("img"));
+    }
+
+    #[test]
+    fn would_fit_is_consistent() {
+        let mut v = VramAllocator::new(gib(8));
+        assert!(v.would_fit(gib(8)));
+        v.alloc("a", "w", gib(5)).unwrap();
+        assert!(v.would_fit(gib(3)));
+        assert!(!v.would_fit(gib(4)));
+    }
+
+    #[test]
+    fn free_client_releases_all() {
+        let mut v = VramAllocator::new(gib(24));
+        v.alloc("chat", "weights", gib(2)).unwrap();
+        v.alloc("chat", "kv-cache", gib(1)).unwrap();
+        v.alloc("img", "weights", gib(5)).unwrap();
+        let freed = v.free_client("chat");
+        assert_eq!(freed, gib(3));
+        assert_eq!(v.used(), gib(5));
+        assert_eq!(v.used_by("chat"), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut v = VramAllocator::new(gib(1));
+        let a = v.alloc("x", "w", 100).unwrap();
+        v.free(a);
+        v.free(a);
+    }
+
+    #[test]
+    fn inventory_lists_buffers() {
+        let mut v = VramAllocator::new(gib(24));
+        v.alloc("chat", "weights", gib(2)).unwrap();
+        v.alloc("chat", "kv-cache", gib(1)).unwrap();
+        let inv = v.inventory();
+        assert_eq!(inv.len(), 2);
+        assert!(inv.iter().any(|(c, l, b)| c == "chat" && l == "kv-cache" && *b == gib(1)));
+    }
+}

@@ -1,0 +1,28 @@
+//! # ConsumerBench
+//!
+//! A ground-up reproduction of *ConsumerBench: Benchmarking Generative AI
+//! Applications on End-User Devices* (Gu et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! * **Layer 3 (this crate)** — the benchmarking framework: YAML-configured
+//!   workflows, a DAG scheduler, a resource orchestrator (greedy / MPS
+//!   partition / fair-share), a system monitor, and the simulated consumer
+//!   testbed it all runs on.
+//! * **Layer 2** — JAX models (`python/compile/models/`) for the four
+//!   applications, AOT-lowered to HLO text loaded by [`runtime`].
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) called by the
+//!   L2 models; correctness is pinned against a pure-jnp oracle at build
+//!   time.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod apps;
+pub mod cli;
+pub mod datasets;
+pub mod coordinator;
+pub mod gpusim;
+pub mod monitor;
+pub mod runtime;
+pub mod server;
+pub mod util;

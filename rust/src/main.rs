@@ -1,0 +1,6 @@
+//! ConsumerBench CLI — run YAML-defined GenAI workflows on the simulated
+//! end-user testbed and report SLO attainment + system metrics.
+
+fn main() -> anyhow::Result<()> {
+    consumerbench::cli::main()
+}

@@ -1,0 +1,156 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! Format (one artifact per line, `#` comments allowed):
+//!
+//! ```text
+//! name|file.hlo.txt|dtype:d0xd1x...;dtype:...|n_outputs
+//! chatbot_decode|chatbot_decode.hlo.txt|f32:1x64;f32:4x2x128x4x16|2
+//! ```
+//!
+//! Kept deliberately line-oriented so both sides can parse it without a
+//! serialization library (the offline crate set has none).
+
+use anyhow::{bail, Context, Result};
+
+/// Shape + dtype of one model input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (dtype, dims_str) = s
+            .split_once(':')
+            .with_context(|| format!("tensor spec `{s}` missing `:`"))?;
+        if dtype.is_empty() {
+            bail!("tensor spec `{s}` has empty dtype");
+        }
+        let dims: Result<Vec<usize>> = if dims_str.is_empty() {
+            Ok(Vec::new()) // scalar
+        } else {
+            dims_str
+                .split('x')
+                .map(|d| d.parse::<usize>().with_context(|| format!("bad dim `{d}` in `{s}`")))
+                .collect()
+        };
+        Ok(TensorSpec {
+            dtype: dtype.to_string(),
+            dims: dims?,
+        })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn render(&self) -> String {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        format!("{}:{}", self.dtype, dims.join("x"))
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 `|`-separated fields, got {}", i + 1, parts.len());
+            }
+            let inputs: Result<Vec<TensorSpec>> = if parts[2].is_empty() {
+                Ok(Vec::new())
+            } else {
+                parts[2].split(';').map(TensorSpec::parse).collect()
+            };
+            let spec = ArtifactSpec {
+                name: parts[0].to_string(),
+                file: parts[1].to_string(),
+                inputs: inputs?,
+                n_outputs: parts[3]
+                    .parse()
+                    .with_context(|| format!("manifest line {}: bad n_outputs", i + 1))?,
+            };
+            if artifacts.iter().any(|a: &ArtifactSpec| a.name == spec.name) {
+                bail!("manifest line {}: duplicate artifact `{}`", i + 1, spec.name);
+            }
+            artifacts.push(spec);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        let text = "\
+# artifacts built by aot.py
+chatbot_decode|chatbot_decode.hlo.txt|f32:1x64;f32:4x2x128x4x16|2
+imagegen_step|imagegen_step.hlo.txt|f32:1x256x128|1
+";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("chatbot_decode").unwrap();
+        assert_eq!(a.file, "chatbot_decode.hlo.txt");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![1, 64]);
+        assert_eq!(a.inputs[1].dims, vec![4, 2, 128, 4, 16]);
+        assert_eq!(a.n_outputs, 2);
+        assert_eq!(a.inputs[0].render(), "f32:1x64");
+    }
+
+    #[test]
+    fn scalar_spec() {
+        let t = TensorSpec::parse("f32:").unwrap();
+        assert!(t.dims.is_empty());
+        assert_eq!(t.num_elements(), 1);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Manifest::parse("too|few|fields\n").is_err());
+        assert!(Manifest::parse("a|f.hlo|f32:2x2|notanum\n").is_err());
+        assert!(Manifest::parse("a|f.hlo|badspec|1\n").is_err());
+        assert!(Manifest::parse("a|f|f32:2|1\na|g|f32:2|1\n").is_err()); // dup
+    }
+
+    #[test]
+    fn empty_inputs_allowed() {
+        let m = Manifest::parse("nullary|f.hlo.txt||1\n").unwrap();
+        assert!(m.get("nullary").unwrap().inputs.is_empty());
+    }
+
+    #[test]
+    fn num_elements() {
+        let t = TensorSpec::parse("f32:4x8x2").unwrap();
+        assert_eq!(t.num_elements(), 64);
+    }
+}

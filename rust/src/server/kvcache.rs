@@ -1,0 +1,198 @@
+//! KV-cache manager for the shared inference server.
+//!
+//! llama.cpp provisions one contiguous KV region at startup, sized by the
+//! configured context window, and carves per-sequence cells out of it. The
+//! paper's §4.2.1 finding is about the *placement* of this region: on the
+//! GPU it competes with model weights for the 24 GB of VRAM; with
+//! `--no-kv-offload` it lives in CPU DRAM and drags every attention op onto
+//! the CPU. This manager implements the cell accounting for both placements.
+
+use std::collections::BTreeMap;
+
+/// Where the KV region lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPlacement {
+    Gpu,
+    Cpu,
+}
+
+impl std::fmt::Display for KvPlacement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvPlacement::Gpu => write!(f, "gpu"),
+            KvPlacement::Cpu => write!(f, "cpu"),
+        }
+    }
+}
+
+/// Error when the KV region cannot host a sequence.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum KvError {
+    #[error("kv cache full: requested {requested} tokens, {free} of {capacity} free")]
+    Full {
+        requested: usize,
+        free: usize,
+        capacity: usize,
+    },
+    #[error("unknown kv sequence {0}")]
+    UnknownSeq(u64),
+}
+
+/// Token-cell accounting over the provisioned KV region.
+#[derive(Debug, Clone)]
+pub struct KvCacheManager {
+    placement: KvPlacement,
+    bytes_per_token: u64,
+    capacity_tokens: usize,
+    used_tokens: usize,
+    seqs: BTreeMap<u64, usize>,
+    peak_tokens: usize,
+}
+
+impl KvCacheManager {
+    pub fn new(placement: KvPlacement, bytes_per_token: u64, capacity_tokens: usize) -> Self {
+        KvCacheManager {
+            placement,
+            bytes_per_token,
+            capacity_tokens,
+            used_tokens: 0,
+            seqs: BTreeMap::new(),
+            peak_tokens: 0,
+        }
+    }
+
+    pub fn placement(&self) -> KvPlacement {
+        self.placement
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.capacity_tokens
+    }
+
+    pub fn used_tokens(&self) -> usize {
+        self.used_tokens
+    }
+
+    pub fn free_tokens(&self) -> usize {
+        self.capacity_tokens - self.used_tokens
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_tokens as u64 * self.bytes_per_token
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_tokens as u64 * self.bytes_per_token
+    }
+
+    pub fn peak_tokens(&self) -> usize {
+        self.peak_tokens
+    }
+
+    /// Register a new sequence with an initial prompt length.
+    pub fn alloc_seq(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
+        if tokens > self.free_tokens() {
+            return Err(KvError::Full {
+                requested: tokens,
+                free: self.free_tokens(),
+                capacity: self.capacity_tokens,
+            });
+        }
+        assert!(!self.seqs.contains_key(&seq), "duplicate kv sequence {seq}");
+        self.seqs.insert(seq, tokens);
+        self.used_tokens += tokens;
+        self.peak_tokens = self.peak_tokens.max(self.used_tokens);
+        Ok(())
+    }
+
+    /// Grow a sequence by `tokens` (decode appends).
+    pub fn extend_seq(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
+        if !self.seqs.contains_key(&seq) {
+            return Err(KvError::UnknownSeq(seq));
+        }
+        if tokens > self.free_tokens() {
+            return Err(KvError::Full {
+                requested: tokens,
+                free: self.free_tokens(),
+                capacity: self.capacity_tokens,
+            });
+        }
+        *self.seqs.get_mut(&seq).unwrap() += tokens;
+        self.used_tokens += tokens;
+        self.peak_tokens = self.peak_tokens.max(self.used_tokens);
+        Ok(())
+    }
+
+    /// Release a finished sequence's cells.
+    pub fn free_seq(&mut self, seq: u64) -> Result<usize, KvError> {
+        let tokens = self.seqs.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        self.used_tokens -= tokens;
+        Ok(tokens)
+    }
+
+    pub fn seq_tokens(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).copied()
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> KvCacheManager {
+        // Llama-3.2-3B-ish: ~112 KiB/token, 16K-token window.
+        KvCacheManager::new(KvPlacement::Gpu, 114_688, 16_384)
+    }
+
+    #[test]
+    fn alloc_extend_free_balances() {
+        let mut m = mgr();
+        m.alloc_seq(1, 100).unwrap();
+        m.alloc_seq(2, 200).unwrap();
+        assert_eq!(m.used_tokens(), 300);
+        m.extend_seq(1, 50).unwrap();
+        assert_eq!(m.seq_tokens(1), Some(150));
+        assert_eq!(m.free_seq(1).unwrap(), 150);
+        assert_eq!(m.free_seq(2).unwrap(), 200);
+        assert_eq!(m.used_tokens(), 0);
+        assert_eq!(m.peak_tokens(), 350);
+    }
+
+    #[test]
+    fn full_cache_rejects() {
+        let mut m = KvCacheManager::new(KvPlacement::Gpu, 100, 1000);
+        m.alloc_seq(1, 900).unwrap();
+        let err = m.alloc_seq(2, 200).unwrap_err();
+        assert!(matches!(err, KvError::Full { requested: 200, free: 100, .. }));
+        m.extend_seq(1, 100).unwrap();
+        assert!(m.extend_seq(1, 1).is_err());
+    }
+
+    #[test]
+    fn unknown_seq_errors() {
+        let mut m = mgr();
+        assert!(matches!(m.extend_seq(9, 1), Err(KvError::UnknownSeq(9))));
+        assert!(matches!(m.free_seq(9), Err(KvError::UnknownSeq(9))));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let m = KvCacheManager::new(KvPlacement::Cpu, 114_688, 131_072);
+        // The paper's 128K-context configuration ≈ 14 GiB.
+        let gib = m.capacity_bytes() as f64 / (1u64 << 30) as f64;
+        assert!(gib > 13.0 && gib < 16.5, "capacity {gib} GiB");
+        assert_eq!(m.placement(), KvPlacement::Cpu);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate kv sequence")]
+    fn duplicate_seq_panics() {
+        let mut m = mgr();
+        m.alloc_seq(1, 10).unwrap();
+        let _ = m.alloc_seq(1, 10);
+    }
+}

@@ -1,0 +1,19 @@
+//! Self-contained utility layer.
+//!
+//! The build environment is fully offline with a small vendored crate set,
+//! so ConsumerBench carries its own minimal implementations of the pieces a
+//! benchmark framework needs: a YAML-subset parser for workflow configs, a
+//! deterministic PRNG for workload synthesis, descriptive statistics for
+//! report generation, time-series storage for the system monitor, and a tiny
+//! property-based testing kit used across the test suite.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timeseries;
+pub mod yaml;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timeseries::TimeSeries;
+pub use yaml::Value;

@@ -1,0 +1,153 @@
+//! Minimal property-based testing kit.
+//!
+//! The vendored crate set has no `proptest`/`quickcheck`, so the test suite
+//! uses this seeded mini-framework: a property is a closure over a `Gen`
+//! (a thin wrapper around [`crate::util::Rng`] with sizing helpers); the
+//! runner executes it for `cases` seeds and reports the failing seed so a
+//! failure is reproducible with `check_seeded`.
+//!
+//! There is no shrinking — cases are kept small by construction instead
+//! (generators take explicit size bounds).
+
+use crate::util::rng::Rng;
+
+/// Generator context handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of this case, for failure reporting.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            seed,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector with length in [0, max_len] of generated elements.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize(0, max_len + 1);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choice(items)
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` for `cases` deterministic seeds derived from `base_seed`;
+/// panics with the failing seed and message on the first failure.
+pub fn check(name: &str, base_seed: u64, cases: usize, mut prop: impl FnMut(&mut Gen) -> CaseResult) {
+    for i in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64 + 1);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property `{name}` failed at case {i}/{cases} (seed {seed:#x}): {msg}\n\
+                 reproduce with util::proptest::check_seeded(\"{name}\", {seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_seeded(name: &str, seed: u64, mut prop: impl FnMut(&mut Gen) -> CaseResult) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property `{name}` failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper that formats a property failure.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", 1, 50, |_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 2, 10, |g| {
+            let x = g.u64(0, 100);
+            if x < 1000 {
+                Err(format!("x = {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Gen::new(99);
+        let mut b = Gen::new(99);
+        for _ in 0..20 {
+            assert_eq!(a.u64(0, 1000), b.u64(0, 1000));
+        }
+    }
+
+    #[test]
+    fn vec_respects_max_len() {
+        let mut g = Gen::new(3);
+        for _ in 0..100 {
+            let v = g.vec(7, |g| g.u64(0, 10));
+            assert!(v.len() <= 7);
+        }
+    }
+
+    #[test]
+    fn prop_assert_macro_returns_err() {
+        fn inner(x: u64) -> CaseResult {
+            prop_assert!(x < 5, "x too big: {x}");
+            Ok(())
+        }
+        assert!(inner(3).is_ok());
+        assert_eq!(inner(9).unwrap_err(), "x too big: 9");
+    }
+}

@@ -1,0 +1,229 @@
+//! Time-series storage for the system monitor.
+//!
+//! The simulator's counters (SMACT, SMOCC, bandwidth, power, ...) are sampled
+//! on a fixed virtual-time grid, mirroring how the paper samples DCGM /
+//! pcm-memory / NVML at a fixed wall-clock interval. A `TimeSeries` is a
+//! named sequence of (t_seconds, value) points plus helpers to aggregate,
+//! window, and render sparkline-style summaries for reports.
+
+use crate::util::stats::Summary;
+
+/// A named series of timestamped samples. Timestamps are virtual seconds and
+/// must be pushed in non-decreasing order.
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    pub name: String,
+    pub unit: String,
+    times: Vec<f64>,
+    values: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new(name: impl Into<String>, unit: impl Into<String>) -> Self {
+        TimeSeries {
+            name: name.into(),
+            unit: unit.into(),
+            times: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Append a sample; panics if time goes backwards (monitor bug).
+    pub fn push(&mut self, t: f64, v: f64) {
+        if let Some(&last) = self.times.last() {
+            assert!(
+                t >= last,
+                "time went backwards in series {}: {} < {}",
+                self.name,
+                t,
+                last
+            );
+        }
+        self.times.push(t);
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    pub fn times(&self) -> &[f64] {
+        &self.times
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        self.times.iter().copied().zip(self.values.iter().copied())
+    }
+
+    /// Samples within the half-open window [t0, t1).
+    pub fn window(&self, t0: f64, t1: f64) -> Vec<f64> {
+        self.iter()
+            .filter(|(t, _)| *t >= t0 && *t < t1)
+            .map(|(_, v)| v)
+            .collect()
+    }
+
+    /// Mean over the whole series (0 for an empty series).
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            0.0
+        } else {
+            self.values.iter().sum::<f64>() / self.values.len() as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Time-weighted integral (e.g. power [W] → energy [J]) by trapezoid rule.
+    pub fn integral(&self) -> f64 {
+        let mut acc = 0.0;
+        for i in 1..self.times.len() {
+            let dt = self.times[i] - self.times[i - 1];
+            acc += 0.5 * (self.values[i] + self.values[i - 1]) * dt;
+        }
+        acc
+    }
+
+    /// Summary statistics of the values.
+    pub fn summary(&self) -> Option<Summary> {
+        Summary::of(&self.values)
+    }
+
+    /// Downsample onto a fixed grid of `buckets` means — used when rendering
+    /// long traces as compact rows in the text report.
+    pub fn rebucket(&self, buckets: usize) -> Vec<f64> {
+        assert!(buckets > 0);
+        if self.is_empty() {
+            return vec![0.0; buckets];
+        }
+        let t0 = self.times[0];
+        let t1 = *self.times.last().unwrap();
+        let span = (t1 - t0).max(1e-9);
+        let mut sums = vec![0.0; buckets];
+        let mut counts = vec![0usize; buckets];
+        for (t, v) in self.iter() {
+            let idx = (((t - t0) / span) * buckets as f64).min(buckets as f64 - 1.0) as usize;
+            sums[idx] += v;
+            counts[idx] += 1;
+        }
+        sums.iter()
+            .zip(&counts)
+            .map(|(s, &c)| if c == 0 { 0.0 } else { s / c as f64 })
+            .collect()
+    }
+
+    /// Unicode sparkline of the series, normalized to [0, scale_max].
+    pub fn sparkline(&self, buckets: usize, scale_max: f64) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let vals = self.rebucket(buckets);
+        vals.iter()
+            .map(|&v| {
+                let frac = (v / scale_max.max(1e-9)).clamp(0.0, 1.0);
+                BARS[((frac * 7.0).round()) as usize]
+            })
+            .collect()
+    }
+
+    /// Render as CSV lines (`t,value`).
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("t_seconds,{} ({})\n", self.name, self.unit);
+        for (t, v) in self.iter() {
+            out.push_str(&format!("{t:.4},{v:.6}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(points: &[(f64, f64)]) -> TimeSeries {
+        let mut s = TimeSeries::new("test", "u");
+        for &(t, v) in points {
+            s.push(t, v);
+        }
+        s
+    }
+
+    #[test]
+    fn push_and_iterate() {
+        let s = series(&[(0.0, 1.0), (1.0, 2.0), (2.0, 3.0)]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.values(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "time went backwards")]
+    fn non_monotone_time_panics() {
+        let mut s = TimeSeries::new("t", "u");
+        s.push(1.0, 0.0);
+        s.push(0.5, 0.0);
+    }
+
+    #[test]
+    fn window_half_open() {
+        let s = series(&[(0.0, 1.0), (1.0, 2.0), (2.0, 3.0)]);
+        assert_eq!(s.window(0.5, 2.0), vec![2.0]);
+        assert_eq!(s.window(0.0, 3.0), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn integral_trapezoid() {
+        // Constant 100 W over 10 s → 1000 J.
+        let s = series(&[(0.0, 100.0), (5.0, 100.0), (10.0, 100.0)]);
+        assert!((s.integral() - 1000.0).abs() < 1e-9);
+        // Ramp 0→10 over 1 s → 5 J.
+        let r = series(&[(0.0, 0.0), (1.0, 10.0)]);
+        assert!((r.integral() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rebucket_means() {
+        let s = series(&[(0.0, 2.0), (0.4, 4.0), (0.6, 6.0), (1.0, 8.0)]);
+        let b = s.rebucket(2);
+        assert_eq!(b.len(), 2);
+        assert!((b[0] - 3.0).abs() < 1e-9); // samples at 0.0, 0.4
+        assert!((b[1] - 7.0).abs() < 1e-9); // samples at 0.6, 1.0
+    }
+
+    #[test]
+    fn rebucket_empty() {
+        let s = TimeSeries::new("e", "u");
+        assert_eq!(s.rebucket(4), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = series(&[(0.0, 0.0), (1.0, 50.0), (2.0, 100.0)]);
+        let spark = s.sparkline(3, 100.0);
+        assert_eq!(spark.chars().count(), 3);
+        let chars: Vec<char> = spark.chars().collect();
+        assert!(chars[0] < chars[2], "sparkline should increase: {spark}");
+    }
+
+    #[test]
+    fn csv_round_numbers() {
+        let s = series(&[(0.0, 1.0)]);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("t_seconds,test (u)\n"));
+        assert!(csv.contains("0.0000,1.000000"));
+    }
+
+    #[test]
+    fn mean_and_max() {
+        let s = series(&[(0.0, 1.0), (1.0, 3.0)]);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.max(), 3.0);
+    }
+}

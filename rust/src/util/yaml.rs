@@ -1,0 +1,597 @@
+//! Minimal YAML-subset parser for ConsumerBench workflow configurations.
+//!
+//! The paper's input format (Fig. 2 / Fig. 23) uses a small, regular subset
+//! of YAML: nested mappings by indentation, block sequences (`- item`),
+//! inline sequences (`["a", "b"]`), scalars (strings, ints, floats, bools),
+//! quoted strings, and `#` comments. This module parses exactly that subset
+//! into a `Value` tree; the config schema layer (`coordinator::config`)
+//! interprets the tree.
+//!
+//! Deliberately unsupported: anchors/aliases, multi-document streams, block
+//! scalars, flow mappings, tabs for indentation (rejected with an error).
+
+
+use std::fmt;
+
+/// A parsed YAML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Value>),
+    /// Insertion order is preserved separately because workflow semantics
+    /// (e.g. display order of tasks) follow the file order.
+    Map(Vec<(String, Value)>),
+}
+
+/// Parse error with 1-based line information.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_seq(&self) -> Option<&[Value]> {
+        match self {
+            Value::Seq(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Look up a key in a mapping.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Map(m) => m.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Mapping keys in file order.
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            Value::Map(m) => m.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "null"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Seq(s) => {
+                write!(f, "[")?;
+                for (i, v) in s.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Map(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k}: {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+struct Line {
+    number: usize,
+    indent: usize,
+    content: String,
+}
+
+/// Parse a YAML document into a `Value`.
+pub fn parse(text: &str) -> Result<Value, ParseError> {
+    let lines = preprocess(text)?;
+    if lines.is_empty() {
+        return Ok(Value::Map(Vec::new()));
+    }
+    let mut pos = 0;
+    let root_indent = lines[0].indent;
+    let value = parse_block(&lines, &mut pos, root_indent)?;
+    if pos < lines.len() {
+        return Err(ParseError {
+            line: lines[pos].number,
+            msg: format!(
+                "unexpected content at indent {} (expected <= {})",
+                lines[pos].indent, root_indent
+            ),
+        });
+    }
+    Ok(value)
+}
+
+/// Strip comments and blank lines; reject tabs in indentation.
+fn preprocess(text: &str) -> Result<Vec<Line>, ParseError> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let number = i + 1;
+        let stripped = strip_comment(raw);
+        if stripped.trim().is_empty() {
+            continue;
+        }
+        let indent_str: String = stripped.chars().take_while(|c| c.is_whitespace()).collect();
+        if indent_str.contains('\t') {
+            return Err(ParseError {
+                line: number,
+                msg: "tabs are not allowed in indentation".into(),
+            });
+        }
+        out.push(Line {
+            number,
+            indent: indent_str.len(),
+            content: stripped.trim().to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Remove a trailing `#` comment that is not inside quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_single = false;
+    let mut in_double = false;
+    for (idx, c) in line.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '#' if !in_single && !in_double => {
+                // YAML requires a preceding space (or line start) for comments.
+                if idx == 0 || line[..idx].ends_with(' ') {
+                    return &line[..idx];
+                }
+            }
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a block (mapping or sequence) whose items sit at `indent`.
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let first = &lines[*pos];
+    if first.content.starts_with("- ") || first.content == "-" {
+        parse_sequence(lines, pos, indent)
+    } else {
+        parse_mapping(lines, pos, indent)
+    }
+}
+
+fn parse_sequence(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if !(line.content.starts_with("- ") || line.content == "-") {
+            break;
+        }
+        let rest = line.content[1..].trim().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            // Nested block under the dash.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Value::Null);
+            }
+        } else if let Some(colon) = find_mapping_colon(&rest) {
+            // `- key: value` starts an inline mapping item; subsequent keys
+            // of the same item are indented deeper than the dash.
+            let mut map = Vec::new();
+            let (k, v) = split_key_value(&rest, colon, lines, pos, indent + 2)?;
+            map.push((k, v));
+            while *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                let Value::Map(more) = parse_mapping(lines, pos, child_indent)? else {
+                    unreachable!("parse_mapping returns Map")
+                };
+                map.extend(more);
+            }
+            items.push(Value::Map(map));
+        } else {
+            items.push(parse_scalar(&rest));
+        }
+    }
+    Ok(Value::Seq(items))
+}
+
+fn parse_mapping(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let mut map: Vec<(String, Value)> = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if line.content.starts_with("- ") || line.content == "-" {
+            break;
+        }
+        let colon = find_mapping_colon(&line.content).ok_or_else(|| ParseError {
+            line: line.number,
+            msg: format!("expected `key: value`, got `{}`", line.content),
+        })?;
+        let line_no = line.number;
+        *pos += 1;
+        let (key, value) = split_key_value(&line.content.clone(), colon, lines, pos, indent)?;
+        if map.iter().any(|(k, _)| *k == key) {
+            return Err(ParseError {
+                line: line_no,
+                msg: format!("duplicate key `{key}`"),
+            });
+        }
+        map.push((key, value));
+    }
+    if map.is_empty() {
+        return Err(ParseError {
+            line: lines.get(*pos).map(|l| l.number).unwrap_or(0),
+            msg: "expected a mapping".into(),
+        });
+    }
+    Ok(Value::Map(map))
+}
+
+/// Split `key: value` at the given colon; if the value part is empty, parse
+/// the following deeper-indented block as the value.
+fn split_key_value(
+    content: &str,
+    colon: usize,
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+) -> Result<(String, Value), ParseError> {
+    let key = unquote(content[..colon].trim());
+    let rest = content[colon + 1..].trim();
+    if rest.is_empty() {
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let child_indent = lines[*pos].indent;
+            let v = parse_block(lines, pos, child_indent)?;
+            Ok((key, v))
+        } else {
+            Ok((key, Value::Null))
+        }
+    } else {
+        Ok((key, parse_scalar(rest)))
+    }
+}
+
+/// Find the colon that separates key from value (not inside quotes or
+/// brackets). Returns byte index.
+fn find_mapping_colon(s: &str) -> Option<usize> {
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut depth = 0usize;
+    for (idx, c) in s.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '[' | '{' if !in_single && !in_double => depth += 1,
+            ']' | '}' if !in_single && !in_double => depth = depth.saturating_sub(1),
+            ':' if !in_single && !in_double && depth == 0 => {
+                // Must be followed by space or end of line to be a mapping colon.
+                let next = s[idx + 1..].chars().next();
+                if next.is_none() || next == Some(' ') {
+                    return Some(idx);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+/// Parse a scalar or inline sequence.
+fn parse_scalar(s: &str) -> Value {
+    let s = s.trim();
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let items = split_inline_items(inner);
+        return Value::Seq(items.iter().map(|i| parse_scalar(i)).collect());
+    }
+    if s.starts_with('"') || s.starts_with('\'') {
+        return Value::Str(unquote(s));
+    }
+    match s {
+        "null" | "~" | "" => return Value::Null,
+        "true" | "True" => return Value::Bool(true),
+        "false" | "False" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Value::Float(f);
+    }
+    Value::Str(s.to_string())
+}
+
+/// Split `a, b, c` at top-level commas (respecting quotes and brackets).
+fn split_inline_items(s: &str) -> Vec<String> {
+    let mut items = Vec::new();
+    let mut current = String::new();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut depth = 0usize;
+    for c in s.chars() {
+        match c {
+            '\'' if !in_double => {
+                in_single = !in_single;
+                current.push(c);
+            }
+            '"' if !in_single => {
+                in_double = !in_double;
+                current.push(c);
+            }
+            '[' | '{' if !in_single && !in_double => {
+                depth += 1;
+                current.push(c);
+            }
+            ']' | '}' if !in_single && !in_double => {
+                depth = depth.saturating_sub(1);
+                current.push(c);
+            }
+            ',' if !in_single && !in_double && depth == 0 => {
+                items.push(current.trim().to_string());
+                current.clear();
+            }
+            _ => current.push(c),
+        }
+    }
+    if !current.trim().is_empty() {
+        items.push(current.trim().to_string());
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_mapping() {
+        let v = parse("model: Llama-3.2-3B\nnum_requests: 5\nslo: 1.5\nbackground: true\n").unwrap();
+        assert_eq!(v.get("model").unwrap().as_str(), Some("Llama-3.2-3B"));
+        assert_eq!(v.get("num_requests").unwrap().as_i64(), Some(5));
+        assert_eq!(v.get("slo").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("background").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn nested_mapping() {
+        let text = "\
+tasks:
+  chat:
+    model: llama
+    device: gpu
+  img:
+    model: sd
+";
+        let v = parse(text).unwrap();
+        let tasks = v.get("tasks").unwrap();
+        assert_eq!(tasks.keys(), vec!["chat", "img"]);
+        assert_eq!(
+            tasks.get("chat").unwrap().get("device").unwrap().as_str(),
+            Some("gpu")
+        );
+    }
+
+    #[test]
+    fn inline_sequence() {
+        let v = parse("depend_on: [\"analysis_1\", brainstorm]\n").unwrap();
+        let deps = v.get("depend_on").unwrap().as_seq().unwrap();
+        assert_eq!(deps.len(), 2);
+        assert_eq!(deps[0].as_str(), Some("analysis_1"));
+        assert_eq!(deps[1].as_str(), Some("brainstorm"));
+    }
+
+    #[test]
+    fn block_sequence() {
+        let text = "\
+items:
+  - alpha
+  - 42
+  - true
+";
+        let v = parse(text).unwrap();
+        let items = v.get("items").unwrap().as_seq().unwrap();
+        assert_eq!(items[0].as_str(), Some("alpha"));
+        assert_eq!(items[1].as_i64(), Some(42));
+        assert_eq!(items[2].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn sequence_of_mappings() {
+        let text = "\
+apps:
+  - name: chat
+    slo: 1
+  - name: img
+    slo: 2
+";
+        let v = parse(text).unwrap();
+        let apps = v.get("apps").unwrap().as_seq().unwrap();
+        assert_eq!(apps.len(), 2);
+        assert_eq!(apps[0].get("name").unwrap().as_str(), Some("chat"));
+        assert_eq!(apps[1].get("slo").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let text = "\
+# header comment
+a: 1
+
+b: 2  # trailing
+";
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let v = parse("name: \"seg #4\"\n").unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("seg #4"));
+    }
+
+    #[test]
+    fn paper_fig2_style_config() {
+        let text = "\
+Analysis (DeepResearch):
+  model: Llama-3.2-3B
+  num_requests: 1
+  device: cpu
+Creating Cover Art (ImageGen):
+  model: SD-3.5-Medium-Turbo
+  num_requests: 5
+  device: gpu
+  slo: 1s
+Generating Captions (LiveCaptions):
+  model: Whisper-Large-V3-Turbo
+  num_requests: 1
+  device: gpu
+workflows:
+  analysis_1:
+    uses: Analysis (DeepResearch)
+  cover_art:
+    uses: Creating Cover Art (ImageGen)
+    depend_on: [\"analysis_1\"]
+";
+        let v = parse(text).unwrap();
+        assert_eq!(v.keys().len(), 4);
+        assert_eq!(
+            v.get("Creating Cover Art (ImageGen)")
+                .unwrap()
+                .get("slo")
+                .unwrap()
+                .as_str(),
+            Some("1s")
+        );
+        let wf = v.get("workflows").unwrap();
+        assert_eq!(
+            wf.get("cover_art").unwrap().get("depend_on").unwrap().as_seq().unwrap()[0].as_str(),
+            Some("analysis_1")
+        );
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let err = parse("a: 1\na: 2\n").unwrap_err();
+        assert!(err.msg.contains("duplicate key"));
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn tabs_rejected() {
+        let err = parse("a:\n\tb: 1\n").unwrap_err();
+        assert!(err.msg.contains("tabs"));
+    }
+
+    #[test]
+    fn missing_colon_rejected() {
+        let err = parse("just a string line\n").unwrap_err();
+        assert!(err.msg.contains("key: value"));
+    }
+
+    #[test]
+    fn empty_document() {
+        assert_eq!(parse("").unwrap(), Value::Map(Vec::new()));
+        assert_eq!(parse("# only comments\n").unwrap(), Value::Map(Vec::new()));
+    }
+
+    #[test]
+    fn null_value_for_empty() {
+        let v = parse("key:\n").unwrap();
+        assert_eq!(v.get("key"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn quoted_keys() {
+        let v = parse("\"weird key: yes\": 1\n").unwrap();
+        // The colon inside quotes must not split the key.
+        assert_eq!(v.get("weird key: yes").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn float_and_negative() {
+        let v = parse("a: -3\nb: 2.5\nc: -0.5\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(-3));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_f64(), Some(-0.5));
+    }
+
+    #[test]
+    fn urls_stay_strings() {
+        // `http://x` has a colon not followed by space → not a mapping colon.
+        let v = parse("url: http://example.com/a\n").unwrap();
+        assert_eq!(v.get("url").unwrap().as_str(), Some("http://example.com/a"));
+    }
+
+    #[test]
+    fn display_round_trip_flavour() {
+        let v = parse("a: 1\nb: [x, y]\n").unwrap();
+        let s = format!("{v}");
+        assert!(s.contains("a: 1"));
+        assert!(s.contains("[x, y]"));
+    }
+}

@@ -1,0 +1,404 @@
+//! Property-based tests over the simulator, scheduler, and coordinator
+//! invariants, using the in-repo mini-framework (`util::proptest`).
+
+use std::collections::BTreeMap;
+
+use consumerbench::coordinator::config::WorkflowNodeConfig;
+use consumerbench::coordinator::Dag;
+use consumerbench::gpusim::engine::{CpuWork, Engine, JobSpec, Phase};
+use consumerbench::gpusim::kernel::{occupancy, KernelDesc};
+use consumerbench::gpusim::policy::{Policy, ReadyKernel};
+use consumerbench::gpusim::profiles::{rtx6000, Testbed};
+use consumerbench::gpusim::vram::VramAllocator;
+use consumerbench::gpusim::ClientId;
+use consumerbench::prop_assert;
+use consumerbench::server::{KvCacheManager, KvPlacement};
+use consumerbench::util::proptest::{check, Gen};
+
+fn random_kernel(g: &mut Gen) -> KernelDesc {
+    KernelDesc::new(
+        "prop",
+        g.usize(1, 5000),
+        *g.pick(&[32, 64, 128, 256, 512]),
+        g.usize(16, 255),
+        g.usize(0, 64 * 1024 + 1).min(64 * 1024) / 16 * 16,
+        g.f64(1e3, 1e12),
+        g.f64(1e3, 1e9),
+    )
+}
+
+#[test]
+fn prop_occupancy_bounds_and_monotonicity() {
+    let gpu = rtx6000();
+    check("occupancy-bounds", 0xA1, 300, |g| {
+        let k = random_kernel(g);
+        let Ok(occ) = occupancy(&k, &gpu) else {
+            return Ok(()); // launch error is a valid outcome for huge blocks
+        };
+        prop_assert!(occ.blocks_per_sm >= 1, "no resident blocks");
+        prop_assert!(
+            (0.0..=1.0).contains(&occ.occupancy),
+            "occupancy {} out of range",
+            occ.occupancy
+        );
+        // More registers can never increase occupancy.
+        if k.regs_per_thread < 250 {
+            let mut k2 = k.clone();
+            k2.regs_per_thread += 5;
+            if let Ok(occ2) = occupancy(&k2, &gpu) {
+                prop_assert!(
+                    occ2.occupancy <= occ.occupancy + 1e-12,
+                    "occupancy rose with registers"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policies_never_overcommit() {
+    check("policy-overcommit", 0xB2, 300, |g| {
+        let total = 72;
+        let n_clients = g.usize(1, 5);
+        let n_ready = g.usize(1, 12);
+        let ready: Vec<ReadyKernel> = (0..n_ready)
+            .map(|i| ReadyKernel {
+                client: ClientId(g.usize(0, n_clients)),
+                enqueue_time: i as f64 * 0.001,
+                seq: i as u64,
+                sms_wanted: g.usize(1, 73),
+            })
+            .collect();
+        // Pre-existing holdings never exceed the per-client cap (the only
+        // states reachable through the policy itself).
+        let cap = total / n_clients;
+        let mut held = BTreeMap::new();
+        let mut held_total = 0;
+        for c in 0..n_clients {
+            let h = g.usize(0, cap.min(20) + 1);
+            if h > 0 && held_total + h <= total {
+                held.insert(ClientId(c), h);
+                held_total += h;
+            }
+        }
+        let free = total - held_total;
+        let policies = [
+            Policy::Greedy,
+            Policy::equal_partition(
+                &(0..n_clients).map(ClientId).collect::<Vec<_>>(),
+                total,
+            ),
+            Policy::FairShare,
+        ];
+        for p in &policies {
+            let grants = p.schedule(&ready, free, &held, total);
+            let granted: usize = grants.iter().map(|x| x.sms).sum();
+            prop_assert!(granted <= free, "{p}: granted {granted} > free {free}");
+            // No ready kernel granted twice.
+            let mut seen = std::collections::BTreeSet::new();
+            for x in &grants {
+                prop_assert!(seen.insert(x.ready_index), "{p}: duplicate grant");
+            }
+            // Partition: per-client holdings never exceed caps.
+            if let Policy::Partition(caps) = p {
+                let mut after = held.clone();
+                for x in &grants {
+                    *after.entry(ready[x.ready_index].client).or_insert(0) += x.sms;
+                }
+                for (c, cap) in caps {
+                    let used = after.get(c).copied().unwrap_or(0);
+                    prop_assert!(used <= *cap, "partition cap violated: {used} > {cap}");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_conserves_resources_and_time() {
+    check("engine-conservation", 0xC3, 60, |g| {
+        let tb = Testbed::intel_server();
+        let policy = match g.usize(0, 3) {
+            0 => Policy::Greedy,
+            1 => Policy::FairShare,
+            _ => Policy::equal_partition(&[ClientId(0), ClientId(1)], 72),
+        };
+        let mut e = Engine::new(tb, policy);
+        let a = e.register_client("a");
+        let b = e.register_client("b");
+        let n_jobs = g.usize(1, 12);
+        for i in 0..n_jobs {
+            let client = if g.bool() { a } else { b };
+            let n_phases = g.usize(1, 4);
+            let phases: Vec<Phase> = (0..n_phases)
+                .map(|_| {
+                    if g.bool() {
+                        let n_kernels = g.usize(1, 6);
+                        Phase::gpu(
+                            "p",
+                            g.f64(0.0, 0.01),
+                            (0..n_kernels).map(|_| random_kernel(g)).collect(),
+                        )
+                    } else {
+                        Phase::cpu(
+                            "c",
+                            g.f64(0.0, 0.01),
+                            CpuWork {
+                                flops: g.f64(1e6, 1e10),
+                                bytes: g.f64(1e3, 1e8),
+                                threads: g.usize(1, 25),
+                            },
+                        )
+                    }
+                })
+                .collect();
+            e.submit(
+                JobSpec {
+                    client,
+                    label: format!("j{i}"),
+                    phases,
+                },
+                g.f64(0.0, 0.5),
+            );
+        }
+        e.run_all();
+        e.check_invariants(); // SM + core conservation
+        let done = e.take_completed();
+        prop_assert!(done.len() == n_jobs, "{} of {n_jobs} jobs completed", done.len());
+        for r in &done {
+            if r.error.is_none() {
+                prop_assert!(r.end >= r.submit, "job ended before submission");
+                for w in r.phases.windows(2) {
+                    prop_assert!(w[1].end >= w[0].end, "phase ends non-monotone");
+                }
+                for p in &r.phases {
+                    prop_assert!(p.queue_wait >= -1e-9, "negative queue wait");
+                    prop_assert!(p.exec_time >= 0.0, "negative exec time");
+                }
+            }
+        }
+        // Trace times are non-decreasing.
+        let trace = e.trace();
+        for w in trace.windows(2) {
+            prop_assert!(w[1].t >= w[0].t, "trace time went backwards");
+        }
+        for s in trace {
+            prop_assert!((0.0..=1.0 + 1e-9).contains(&(s.gpu_smact as f64)), "smact range");
+            prop_assert!(s.gpu_smocc <= s.gpu_smact + 1e-6, "SMOCC exceeded SMACT");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exclusive_is_lower_bound() {
+    // A job's latency alone on the device is a lower bound for its latency
+    // under any contention (non-preemptive work-conserving policies).
+    check("exclusive-lower-bound", 0xD4, 30, |g| {
+        let mk_job = |g: &mut Gen, client: ClientId, label: &str| {
+            let kernels: Vec<KernelDesc> = (0..g.usize(1, 5)).map(|_| random_kernel(g)).collect();
+            JobSpec {
+                client,
+                label: label.to_string(),
+                phases: vec![Phase::gpu("p", 0.0, kernels)],
+            }
+        };
+        // Run job X alone.
+        let mut e1 = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let c1 = e1.register_client("x");
+        let job_seed = g.rng().next_u64();
+        let mut gx = Gen::new(job_seed);
+        e1.submit(mk_job(&mut gx, c1, "x"), 0.0);
+        e1.run_all();
+        let solo = e1.take_completed()[0].latency();
+
+        // Run the identical job with a competitor.
+        let mut e2 = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let cx = e2.register_client("x");
+        let cy = e2.register_client("y");
+        let mut gx = Gen::new(job_seed);
+        e2.submit(mk_job(&mut gx, cx, "x"), 0.0);
+        e2.submit(mk_job(g, cy, "y"), 0.0);
+        e2.run_all();
+        let contended = e2
+            .take_completed()
+            .into_iter()
+            .find(|r| r.label == "x")
+            .unwrap()
+            .latency();
+        prop_assert!(
+            contended >= solo - 1e-9,
+            "contended {contended} < solo {solo}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dag_toposort_respects_edges() {
+    check("dag-topo", 0xE5, 200, |g| {
+        // Random DAG: node i may depend on any subset of nodes < i.
+        let n = g.usize(1, 12);
+        let nodes: Vec<WorkflowNodeConfig> = (0..n)
+            .map(|i| {
+                let deps: Vec<String> = (0..i)
+                    .filter(|_| g.bool() && g.bool()) // sparse
+                    .map(|d| format!("n{d}"))
+                    .collect();
+                WorkflowNodeConfig {
+                    id: format!("n{i}"),
+                    uses: format!("task{i}"),
+                    depend_on: deps,
+                    background: g.bool(),
+                }
+            })
+            .collect();
+        let dag = Dag::build(&nodes).map_err(|e| format!("build failed: {e}"))?;
+        let order = dag.toposort().map_err(|e| format!("{e}"))?;
+        prop_assert!(order.len() == n, "toposort dropped nodes");
+        let pos: Vec<usize> = {
+            let mut p = vec![0; n];
+            for (idx, &node) in order.iter().enumerate() {
+                p[node] = idx;
+            }
+            p
+        };
+        for i in 0..n {
+            for &d in dag.deps(i) {
+                prop_assert!(pos[d] < pos[i], "dep {d} not before {i}");
+            }
+        }
+        // Depth is bounded by node count.
+        prop_assert!(dag.depth() <= n, "depth > n");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vram_allocator_balances() {
+    check("vram-balance", 0xF6, 200, |g| {
+        let cap = 1u64 << 30;
+        let mut v = VramAllocator::new(cap);
+        let mut live: Vec<(consumerbench::gpusim::vram::AllocId, u64)> = Vec::new();
+        let mut expected: u64 = 0;
+        for _ in 0..g.usize(1, 60) {
+            if g.bool() || live.is_empty() {
+                let bytes = g.u64(1, cap / 8);
+                match v.alloc("c", "b", bytes) {
+                    Ok(id) => {
+                        live.push((id, bytes));
+                        expected += bytes;
+                    }
+                    Err(_) => {
+                        prop_assert!(
+                            expected + bytes > cap,
+                            "OOM with only {expected} + {bytes} of {cap} used"
+                        );
+                    }
+                }
+            } else {
+                let i = g.usize(0, live.len());
+                let (id, bytes) = live.remove(i);
+                v.free(id);
+                expected -= bytes;
+            }
+            prop_assert!(v.used() == expected, "used {} != expected {}", v.used(), expected);
+            prop_assert!(v.used() <= cap, "over capacity");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_cache_accounting() {
+    check("kv-accounting", 0x17, 200, |g| {
+        let capacity = g.usize(100, 10_000);
+        let mut m = KvCacheManager::new(KvPlacement::Gpu, 1024, capacity);
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        let mut next = 0u64;
+        let mut expected = 0usize;
+        for _ in 0..g.usize(1, 80) {
+            match g.usize(0, 3) {
+                0 => {
+                    let tokens = g.usize(1, 200);
+                    match m.alloc_seq(next, tokens) {
+                        Ok(()) => {
+                            live.push((next, tokens));
+                            expected += tokens;
+                        }
+                        Err(_) => prop_assert!(
+                            expected + tokens > capacity,
+                            "rejected alloc that fit"
+                        ),
+                    }
+                    next += 1;
+                }
+                1 if !live.is_empty() => {
+                    let i = g.usize(0, live.len());
+                    let tokens = g.usize(1, 50);
+                    let (seq, ref mut held) = live[i];
+                    if m.extend_seq(seq, tokens).is_ok() {
+                        *held += tokens;
+                        expected += tokens;
+                    } else {
+                        prop_assert!(expected + tokens > capacity, "rejected extend that fit");
+                    }
+                }
+                _ if !live.is_empty() => {
+                    let i = g.usize(0, live.len());
+                    let (seq, tokens) = live.remove(i);
+                    let freed = m.free_seq(seq).map_err(|e| format!("{e}"))?;
+                    prop_assert!(freed == tokens, "freed {freed} != {tokens}");
+                    expected -= tokens;
+                }
+                _ => {}
+            }
+            prop_assert!(
+                m.used_tokens() == expected,
+                "used {} != expected {}",
+                m.used_tokens(),
+                expected
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_latency_bounded_by_exclusive_share() {
+    // Under an equal partition, a client's kernel on cap SMs should take no
+    // longer than the same kernel granted exactly cap SMs exclusively.
+    check("partition-share-bound", 0x28, 80, |g| {
+        let gpu = rtx6000();
+        let k = random_kernel(g);
+        if occupancy(&k, &gpu).is_err() {
+            return Ok(());
+        }
+        let cap = 24;
+        // The engine grants min(wanted, cap) SMs — a small grid cannot use
+        // the whole partition, so bound against the grant it will get.
+        let wanted = consumerbench::gpusim::kernel::sms_wanted(&k, &gpu).unwrap();
+        let d_cap =
+            consumerbench::gpusim::kernel::duration(&k, &gpu, wanted.min(cap)).unwrap();
+        let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let a = e.register_client("a");
+        e.set_policy(Policy::Partition([(a, cap)].into_iter().collect()));
+        e.submit(
+            JobSpec {
+                client: a,
+                label: "solo".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![k])],
+            },
+            0.0,
+        );
+        e.run_all();
+        let lat = e.take_completed()[0].latency();
+        prop_assert!(
+            lat <= d_cap * 1.01 + 1e-6,
+            "partitioned latency {lat} > capped-exclusive {d_cap}"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,198 @@
+//! Integration tests: full workflows through config → DAG → executor →
+//! report, exercising every coordinator subsystem together.
+
+use consumerbench::coordinator::{generate, run_config_text, to_csv, BenchConfig, Dag};
+
+#[test]
+fn fig2_style_workflow_end_to_end() {
+    // The paper's Fig. 2 example: DeepResearch on CPU, then ImageGen and a
+    // second analysis in parallel, then captions.
+    let text = "\
+Analysis (DeepResearch):
+  model: Llama-3.2-3B
+  num_requests: 1
+  device: cpu
+Creating Cover Art (ImageGen):
+  model: SD-3.5-Medium-Turbo
+  num_requests: 2
+  device: gpu
+  slo: 1s
+Generating Captions (LiveCaptions):
+  model: Whisper-Large-V3-Turbo
+  num_requests: 5
+  device: gpu
+  slo: 2s
+workflows:
+  analysis_1:
+    uses: Analysis (DeepResearch)
+  cover_art:
+    uses: Creating Cover Art (ImageGen)
+    depend_on: [\"analysis_1\"]
+  analysis_2:
+    uses: Analysis (DeepResearch)
+    depend_on: [\"analysis_1\"]
+  generate_captions:
+    uses: Generating Captions (LiveCaptions)
+    depend_on: [\"cover_art\"]
+seed: 7
+";
+    let result = run_config_text(text, None).unwrap();
+    assert_eq!(result.nodes.len(), 4);
+    // Ordering: analysis_1 before cover_art before captions.
+    let a1 = result.node("analysis_1").unwrap();
+    let art = result.node("cover_art").unwrap();
+    let cc = result.node("generate_captions").unwrap();
+    assert!(art.start >= a1.end - 1e-9);
+    assert!(cc.start >= art.end - 1e-9);
+    // Parallel branch overlaps with cover_art.
+    let a2 = result.node("analysis_2").unwrap();
+    assert!(a2.start >= a1.end - 1e-9);
+    let overlap = art.end.min(a2.end) - art.start.max(a2.start);
+    assert!(overlap > 0.0, "parallel branches should overlap");
+    // All requests completed and evaluated.
+    assert_eq!(art.metrics.len(), 2);
+    assert_eq!(cc.metrics.len(), 5);
+    // Report renders.
+    let report = generate(&result);
+    assert!(report.text.contains("analysis_1"));
+    let csv = to_csv(&result);
+    assert!(csv.lines().count() > 8);
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let text = "\
+Chat (chatbot):
+  num_requests: 4
+Img (imagegen):
+  num_requests: 2
+seed: 99
+";
+    let run = || {
+        let r = run_config_text(text, None).unwrap();
+        (
+            r.makespan,
+            r.nodes
+                .iter()
+                .flat_map(|n| n.metrics.iter().map(|m| m.latency))
+                .collect::<Vec<f64>>(),
+        )
+    };
+    let (m1, l1) = run();
+    let (m2, l2) = run();
+    assert_eq!(m1, m2);
+    assert_eq!(l1, l2);
+}
+
+#[test]
+fn seed_changes_workload() {
+    let cfg = |seed: u64| format!("Chat (chatbot):\n  num_requests: 4\nseed: {seed}\n");
+    let a = run_config_text(&cfg(1), None).unwrap().makespan;
+    let b = run_config_text(&cfg(2), None).unwrap().makespan;
+    assert_ne!(a, b);
+}
+
+#[test]
+fn strategies_produce_different_outcomes() {
+    let cfg = |s: &str| {
+        format!(
+            "Img (imagegen):\n  num_requests: 4\nCc (livecaptions):\n  num_requests: 20\nstrategy: {s}\nseed: 42\n"
+        )
+    };
+    let greedy = run_config_text(&cfg("greedy"), None).unwrap();
+    let part = run_config_text(&cfg("partition"), None).unwrap();
+    let fair = run_config_text(&cfg("fair_share"), None).unwrap();
+    let lc_norm = |r: &consumerbench::coordinator::ScenarioResult| {
+        r.node("Cc (livecaptions)").unwrap().mean_normalized()
+    };
+    // Partitioning must protect LiveCaptions relative to greedy.
+    assert!(
+        lc_norm(&part) < lc_norm(&greedy),
+        "partition {} vs greedy {}",
+        lc_norm(&part),
+        lc_norm(&greedy)
+    );
+    // Fair share sits between (work-conserving but non-preemptive).
+    assert!(lc_norm(&fair) <= lc_norm(&greedy) + 1e-9);
+}
+
+#[test]
+fn apple_testbed_runs_all_apps() {
+    let text = "\
+Chat (chatbot):
+  num_requests: 2
+Img (imagegen):
+  num_requests: 1
+Cc (livecaptions):
+  num_requests: 5
+testbed: macbook_m1_pro
+strategy: fair_share
+seed: 42
+";
+    let result = run_config_text(text, None).unwrap();
+    assert_eq!(result.nodes.len(), 3);
+    for n in &result.nodes {
+        assert!(n.failed.is_none(), "{}: {:?}", n.id, n.failed);
+        assert!(!n.metrics.is_empty());
+    }
+    // The M1 draws laptop-class power.
+    let mon = consumerbench::monitor::MonitorReport::from_trace(
+        &result.trace,
+        &result.client_names,
+        0.1,
+    );
+    assert!(mon.gpu_power.max() <= 31.0, "peak {}", mon.gpu_power.max());
+}
+
+#[test]
+fn server_shared_by_two_apps() {
+    let text = "\
+Chat (chatbot):
+  num_requests: 4
+  server: llama
+  slo: [1s, 0.25s]
+Research (deepresearch):
+  num_requests: 1
+  server: llama
+servers:
+  llama:
+    model: Llama-3.2-3B
+    context_window: 16384
+    kv_placement: gpu
+seed: 42
+";
+    let result = run_config_text(text, None).unwrap();
+    let chat = result.node("Chat (chatbot)").unwrap();
+    let dr = result.node("Research (deepresearch)").unwrap();
+    assert_eq!(chat.metrics.len(), 4);
+    assert_eq!(dr.metrics.len(), 1);
+    // DeepResearch is the long pole.
+    assert!(dr.metrics[0].latency > chat.metrics[0].latency);
+}
+
+#[test]
+fn config_validation_via_dag() {
+    let cfg = BenchConfig::parse(
+        "A (chatbot):\n  num_requests: 1\nworkflows:\n  a:\n    uses: A (chatbot)\n",
+    )
+    .unwrap();
+    let dag = Dag::build(&cfg.workflow).unwrap();
+    assert_eq!(dag.len(), 1);
+    assert_eq!(dag.depth(), 1);
+}
+
+#[test]
+fn pjrt_runtime_composes_with_executor_when_artifacts_exist() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !consumerbench::runtime::Runtime::available(dir) {
+        eprintln!("artifacts absent; skipping PJRT-composition test");
+        return;
+    }
+    let result = run_config_text(
+        "Chat (chatbot):\n  num_requests: 2\nImg (imagegen):\n  num_requests: 1\nseed: 1\n",
+        Some(dir),
+    )
+    .unwrap();
+    // One PJRT execution per completed request.
+    assert_eq!(result.pjrt_calls, 3, "pjrt calls {}", result.pjrt_calls);
+}
