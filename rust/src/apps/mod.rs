@@ -53,13 +53,74 @@ impl Slo {
 }
 
 /// How an application's requests arrive (virtual time).
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// The first two variants are the paper's closed-loop user and the
+/// LiveCaptions audio cadence. `Poisson` and `Trace` are open-loop *client*
+/// models: arrivals are independent of completions, so a slow backend
+/// accumulates a queue — the heavy-traffic regime the scenario matrix
+/// sweeps (see `crate::scenario`).
+#[derive(Debug, Clone, PartialEq)]
 pub enum Arrival {
     /// Next request is sent `think` seconds after the previous completes.
     ClosedLoop { think: f64 },
     /// Request `i` arrives at `start + i × period` regardless of completion
     /// (the LiveCaptions 2-second audio cadence).
     OpenLoop { period: f64 },
+    /// Open-loop Poisson process: exponential inter-arrival gaps with mean
+    /// `1/rate` seconds, drawn deterministically from `seed`.
+    Poisson { rate: f64, seed: u64 },
+    /// Open-loop trace replay: request `i` arrives at `start + offsets[i]`.
+    /// When more requests than offsets are needed, the trace wraps around,
+    /// shifted by its span per lap (the standard replay-client behaviour).
+    Trace { offsets: Vec<f64> },
+}
+
+impl Arrival {
+    /// Materialize the arrival times of `n` requests starting at `start`.
+    ///
+    /// Returns `None` for the closed loop (arrival times depend on
+    /// completions, which only the executor knows). Open-loop schedules are
+    /// pure functions of `(self, n, start)`, which is what makes scenario
+    /// runs replayable byte-for-byte.
+    pub fn schedule(&self, n: usize, start: f64) -> Option<Vec<f64>> {
+        match self {
+            Arrival::ClosedLoop { .. } => None,
+            Arrival::OpenLoop { period } => {
+                Some((0..n).map(|i| start + i as f64 * period).collect())
+            }
+            Arrival::Poisson { rate, seed } => {
+                let mut rng = crate::util::rng::Rng::new(*seed);
+                let mut t = start;
+                Some(
+                    (0..n)
+                        .map(|_| {
+                            t += rng.exponential(*rate);
+                            t
+                        })
+                        .collect(),
+                )
+            }
+            Arrival::Trace { offsets } => {
+                if offsets.is_empty() {
+                    return Some(vec![start; n]);
+                }
+                let span = offsets.last().copied().unwrap_or(0.0).max(0.0);
+                Some(
+                    (0..n)
+                        .map(|i| {
+                            let lap = (i / offsets.len()) as f64;
+                            start + offsets[i % offsets.len()] + lap * span
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    /// Whether arrivals are independent of request completions.
+    pub fn is_open_loop(&self) -> bool {
+        !matches!(self, Arrival::ClosedLoop { .. })
+    }
 }
 
 /// Per-request evaluation against the SLO.
@@ -144,6 +205,42 @@ mod tests {
         let ms = vec![m(true), m(true), m(false), m(true)];
         assert!((slo_attainment(&ms) - 0.75).abs() < 1e-12);
         assert_eq!(slo_attainment(&[]), 1.0);
+    }
+
+    #[test]
+    fn poisson_schedule_is_deterministic_and_increasing() {
+        let a = Arrival::Poisson { rate: 2.0, seed: 7 };
+        let s1 = a.schedule(50, 1.0).unwrap();
+        let s2 = a.schedule(50, 1.0).unwrap();
+        assert_eq!(s1, s2);
+        assert!(s1.windows(2).all(|w| w[1] > w[0]), "arrivals must increase");
+        assert!(s1[0] > 1.0);
+        let other = Arrival::Poisson { rate: 2.0, seed: 8 };
+        assert_ne!(s1, other.schedule(50, 1.0).unwrap());
+        // Mean inter-arrival ≈ 1/rate over many samples.
+        let mean_gap = (s1.last().unwrap() - s1[0]) / (s1.len() - 1) as f64;
+        assert!((mean_gap - 0.5).abs() < 0.2, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn trace_schedule_wraps_with_span() {
+        let a = Arrival::Trace { offsets: vec![0.0, 0.1, 1.0] };
+        let s = a.schedule(5, 10.0).unwrap();
+        assert_eq!(s, vec![10.0, 10.1, 11.0, 11.0, 11.1]);
+        let empty = Arrival::Trace { offsets: vec![] };
+        assert_eq!(empty.schedule(2, 3.0).unwrap(), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn open_loop_classification() {
+        assert!(!Arrival::ClosedLoop { think: 1.0 }.is_open_loop());
+        assert!(Arrival::OpenLoop { period: 2.0 }.is_open_loop());
+        assert!(Arrival::Poisson { rate: 1.0, seed: 0 }.is_open_loop());
+        assert!(Arrival::Trace { offsets: vec![0.0] }.is_open_loop());
+        assert_eq!(
+            Arrival::ClosedLoop { think: 1.0 }.schedule(3, 0.0),
+            None
+        );
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! ```text
 //! consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--no-pjrt]
 //! consumerbench validate <config.yaml>
+//! consumerbench scenario [--seed N] [--out FILE] [--full] [--list] [--dump DIR]
 //! consumerbench apps
 //! consumerbench help
 //! ```
@@ -14,6 +15,7 @@ use anyhow::{bail, Context, Result};
 use crate::apps::{Application, Chatbot, DeepResearch, ImageGen, LiveCaptions};
 use crate::coordinator::{generate, to_csv, BenchConfig, Dag, ScenarioRunner};
 use crate::runtime::Runtime;
+use crate::scenario::{run_matrix, MatrixAxes};
 
 const USAGE: &str = "\
 ConsumerBench — benchmarking generative AI applications on end-user devices
@@ -21,18 +23,29 @@ ConsumerBench — benchmarking generative AI applications on end-user devices
 USAGE:
     consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--no-pjrt]
     consumerbench validate <config.yaml>
+    consumerbench scenario [--seed N] [--out FILE] [--full] [--list] [--dump DIR]
     consumerbench apps
     consumerbench help
 
 COMMANDS:
     run        Execute a workflow configuration and print the benchmark report
     validate   Parse the configuration and check the workflow DAG
+    scenario   Expand and execute the scenario matrix (app mix × policy ×
+               testbed × arrival process), emitting an aggregate JSON report
     apps       List the built-in applications (paper Table 1)
 
-OPTIONS:
+OPTIONS (run):
     --artifacts DIR   AOT artifact directory (default: artifacts)
     --csv FILE        Also write per-request metrics as CSV
     --no-pjrt         Skip real-numerics PJRT execution even if artifacts exist
+
+OPTIONS (scenario):
+    --seed N          Matrix seed (default: 42); same seed => identical report
+    --out FILE        Write the JSON report to FILE (default: print to stdout)
+    --full            Sweep the full axes (periodic + trace arrivals, Apple
+                      Silicon testbed) instead of the default 24 scenarios
+    --list            Print scenario names without running anything
+    --dump DIR        Write each expanded scenario config as YAML into DIR
 ";
 
 /// Entry point used by `main.rs`.
@@ -61,6 +74,10 @@ pub fn run_cli(args: &[String], out: &mut impl std::io::Write) -> Result<()> {
             let path = args.get(1).context("run: missing <config.yaml>")?;
             let opts = parse_opts(&args[2..])?;
             cmd_run(path, &opts, out)
+        }
+        "scenario" => {
+            let opts = parse_scenario_opts(&args[1..])?;
+            cmd_scenario(&opts, out)
         }
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
@@ -101,6 +118,101 @@ fn parse_opts(args: &[String]) -> Result<RunOpts> {
         }
     }
     Ok(opts)
+}
+
+#[derive(Debug, Default)]
+struct ScenarioOpts {
+    seed: u64,
+    out: Option<String>,
+    full: bool,
+    list: bool,
+    dump: Option<String>,
+}
+
+fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
+    let mut opts = ScenarioOpts {
+        seed: 42,
+        ..Default::default()
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--seed" => {
+                opts.seed = args
+                    .get(i + 1)
+                    .context("--seed requires a value")?
+                    .parse()
+                    .context("--seed must be an integer")?;
+                i += 2;
+            }
+            "--out" => {
+                opts.out = Some(args.get(i + 1).context("--out requires a value")?.clone());
+                i += 2;
+            }
+            "--dump" => {
+                opts.dump = Some(args.get(i + 1).context("--dump requires a value")?.clone());
+                i += 2;
+            }
+            "--full" => {
+                opts.full = true;
+                i += 1;
+            }
+            "--list" => {
+                opts.list = true;
+                i += 1;
+            }
+            other => bail!("unknown option `{other}`"),
+        }
+    }
+    Ok(opts)
+}
+
+fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()> {
+    let axes = if opts.full {
+        MatrixAxes::full_matrix(opts.seed)
+    } else {
+        MatrixAxes::default_matrix(opts.seed)
+    };
+    let specs = axes.expand();
+    if opts.list {
+        for spec in &specs {
+            writeln!(out, "{}", spec.name)?;
+        }
+        writeln!(out, "{} scenarios", specs.len())?;
+        return Ok(());
+    }
+    if let Some(dir) = &opts.dump {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir}"))?;
+        for spec in &specs {
+            let path = std::path::Path::new(dir).join(spec.file_name());
+            std::fs::write(&path, spec.to_yaml())
+                .with_context(|| format!("writing {}", path.display()))?;
+        }
+        writeln!(out, "wrote {} scenario configs to {dir}", specs.len())?;
+        return Ok(());
+    }
+    writeln!(
+        out,
+        "running {} scenarios (seed {}) …",
+        specs.len(),
+        opts.seed
+    )?;
+    let report = run_matrix(&axes)?;
+    write!(out, "{}", report.summary_table())?;
+    writeln!(
+        out,
+        "policies covered: {}",
+        report.strategies().join(", ")
+    )?;
+    let json = report.to_json();
+    match &opts.out {
+        Some(path) => {
+            std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
+            writeln!(out, "wrote JSON report to {path}")?;
+        }
+        None => write!(out, "{json}")?,
+    }
+    Ok(())
 }
 
 fn cmd_apps(out: &mut impl std::io::Write) -> Result<()> {
@@ -225,6 +337,57 @@ mod tests {
     #[test]
     fn bad_option_rejected() {
         let (r, _) = run(&["run", "x.yaml", "--frob"]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn scenario_list_names_matrix() {
+        let (r, out) = run(&["scenario", "--list"]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("24 scenarios"), "{out}");
+        assert!(out.contains("mix=chat/policy=greedy/arrival=closed/testbed=intel_server"));
+        assert!(out.contains("policy=fair_share"));
+        assert!(out.contains("arrival=poisson"));
+    }
+
+    #[test]
+    fn scenario_dump_writes_configs() {
+        let dir = std::env::temp_dir().join("cb_scenario_dump");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (r, out) = run(&["scenario", "--dump", dir.to_str().unwrap()]);
+        assert!(r.is_ok(), "{out}");
+        let n = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(n, 24, "expected 24 dumped configs");
+    }
+
+    #[test]
+    fn scenario_runs_default_matrix_to_json() {
+        // The acceptance path: one invocation expands and executes the full
+        // default matrix (>= 20 scenarios, all three policies, open-loop
+        // Poisson included) and emits the aggregate JSON report.
+        let dir = std::env::temp_dir().join("cb_scenario_run");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json_path = dir.join("report.json");
+        let (r, out) = run(&[
+            "scenario",
+            "--seed",
+            "42",
+            "--out",
+            json_path.to_str().unwrap(),
+        ]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("policies covered: greedy, partition, fair_share"), "{out}");
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        assert!(json.contains("\"num_scenarios\": 24"));
+        assert!(json.contains("\"arrival\": \"poisson\""));
+        assert!(json.contains("\"mix\": \"full-stack\""));
+    }
+
+    #[test]
+    fn scenario_bad_option_rejected() {
+        let (r, _) = run(&["scenario", "--warp"]);
+        assert!(r.is_err());
+        let (r, _) = run(&["scenario", "--seed", "notanumber"]);
         assert!(r.is_err());
     }
 }

@@ -62,6 +62,30 @@ pub enum SloSpec {
     Chat(f64, f64),
 }
 
+/// Arrival-process override for a task (`arrival:` key).
+///
+/// Without an override each application uses its built-in client model
+/// (closed loop for Chatbot/ImageGen/DeepResearch, the fixed audio cadence
+/// for LiveCaptions). Overrides let a scenario model open-loop heavy
+/// traffic instead of `num_requests` back-to-back requests:
+///
+/// ```yaml
+/// Chat (chatbot):
+///   num_requests: 20
+///   arrival: poisson      # also: closed | periodic | trace
+///   rate: 2.0             # requests/second (poisson)
+/// ```
+///
+/// `closed` takes `think:`, `periodic` takes `period:`, `trace` takes
+/// `trace: [0, 0.5s, ...]` (non-decreasing offsets from the task start).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    Closed { think: f64 },
+    Periodic { period: f64 },
+    Poisson { rate: f64 },
+    Trace { offsets: Vec<f64> },
+}
+
 /// One task definition.
 #[derive(Debug, Clone)]
 pub struct TaskConfig {
@@ -75,6 +99,8 @@ pub struct TaskConfig {
     pub mps: f64,
     /// Shared-server routing (references `servers:`).
     pub server: Option<String>,
+    /// Arrival-process override (None → the application's built-in model).
+    pub arrival: Option<ArrivalSpec>,
 }
 
 /// One workflow DAG node.
@@ -243,6 +269,19 @@ impl BenchConfig {
                         t.name
                     );
                 }
+                // Server-backed DeepResearch drives its multi-iteration agent
+                // loop through per-node state in the executor, which assumes
+                // one in-flight task at a time (the closed loop guarantees
+                // that). Open-loop arrivals would interleave tasks and
+                // corrupt that state, so reject the combination.
+                if t.app_type == AppType::DeepResearch
+                    && !matches!(t.arrival, None | Some(ArrivalSpec::Closed { .. }))
+                {
+                    bail!(
+                        "task `{}`: server-backed DeepResearch only supports closed-loop arrivals",
+                        t.name
+                    );
+                }
             }
             if !(0.0..=100.0).contains(&t.mps) || t.mps == 0.0 {
                 bail!("task `{}`: mps must be in (0, 100]", t.name);
@@ -301,7 +340,71 @@ fn parse_task(name: &str, v: &Value) -> Result<TaskConfig> {
         slo,
         mps,
         server: v.get("server").and_then(|s| s.as_str()).map(String::from),
+        arrival: parse_arrival(name, v)?,
     })
+}
+
+fn parse_arrival(task: &str, v: &Value) -> Result<Option<ArrivalSpec>> {
+    let Some(kind) = v.get("arrival") else {
+        return Ok(None);
+    };
+    let kind = kind
+        .as_str()
+        .with_context(|| format!("task `{task}`: arrival must be a string"))?;
+    let spec = match kind.to_ascii_lowercase().replace(['-', '_', ' '], "").as_str() {
+        "closed" | "closedloop" => {
+            let think = match v.get("think") {
+                Some(t) => parse_duration_value(task, t)?,
+                None => 1.0,
+            };
+            if think < 0.0 {
+                bail!("task `{task}`: think must be >= 0");
+            }
+            ArrivalSpec::Closed { think }
+        }
+        "periodic" | "openloop" | "open" => {
+            let period = v
+                .get("period")
+                .with_context(|| format!("task `{task}`: periodic arrival needs `period`"))?;
+            let period = parse_duration_value(task, period)?;
+            if period <= 0.0 {
+                bail!("task `{task}`: period must be > 0");
+            }
+            ArrivalSpec::Periodic { period }
+        }
+        "poisson" => {
+            let rate = v
+                .get("rate")
+                .and_then(|r| r.as_f64())
+                .with_context(|| format!("task `{task}`: poisson arrival needs numeric `rate`"))?;
+            if rate <= 0.0 {
+                bail!("task `{task}`: poisson rate must be > 0");
+            }
+            ArrivalSpec::Poisson { rate }
+        }
+        "trace" | "replay" | "tracereplay" => {
+            let items = v
+                .get("trace")
+                .and_then(|t| t.as_seq())
+                .with_context(|| format!("task `{task}`: trace arrival needs `trace: [..]`"))?;
+            if items.is_empty() {
+                bail!("task `{task}`: trace arrival needs at least one offset");
+            }
+            let mut offsets = Vec::with_capacity(items.len());
+            for item in items {
+                offsets.push(parse_duration_value(task, item)?);
+            }
+            if offsets.iter().any(|&o| o < 0.0) {
+                bail!("task `{task}`: trace offsets must be >= 0");
+            }
+            if offsets.windows(2).any(|w| w[1] < w[0]) {
+                bail!("task `{task}`: trace offsets must be non-decreasing");
+            }
+            ArrivalSpec::Trace { offsets }
+        }
+        other => bail!("task `{task}`: unknown arrival kind `{other}`"),
+    };
+    Ok(Some(spec))
 }
 
 fn parse_workflows(v: &Value) -> Result<Vec<WorkflowNodeConfig>> {
@@ -530,6 +633,69 @@ workflows:
     #[test]
     fn no_tasks_rejected() {
         assert!(BenchConfig::parse("strategy: greedy\n").is_err());
+    }
+
+    #[test]
+    fn arrival_overrides_parse() {
+        let cfg = BenchConfig::parse(
+            "A (chatbot):\n  num_requests: 4\n  arrival: poisson\n  rate: 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.tasks[0].arrival, Some(ArrivalSpec::Poisson { rate: 2.5 }));
+
+        let cfg = BenchConfig::parse(
+            "A (chatbot):\n  num_requests: 4\n  arrival: periodic\n  period: 500ms\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.tasks[0].arrival, Some(ArrivalSpec::Periodic { period: 0.5 }));
+
+        let cfg = BenchConfig::parse(
+            "A (chatbot):\n  num_requests: 3\n  arrival: trace\n  trace: [0, 0.5s, 2]\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.tasks[0].arrival,
+            Some(ArrivalSpec::Trace { offsets: vec![0.0, 0.5, 2.0] })
+        );
+
+        let cfg = BenchConfig::parse(
+            "A (chatbot):\n  num_requests: 2\n  arrival: closed\n  think: 2s\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.tasks[0].arrival, Some(ArrivalSpec::Closed { think: 2.0 }));
+
+        let cfg = BenchConfig::parse("A (chatbot):\n  num_requests: 2\n").unwrap();
+        assert_eq!(cfg.tasks[0].arrival, None);
+    }
+
+    #[test]
+    fn arrival_overrides_validated() {
+        for bad in [
+            "A (chatbot):\n  num_requests: 1\n  arrival: poisson\n",
+            "A (chatbot):\n  num_requests: 1\n  arrival: poisson\n  rate: 0\n",
+            "A (chatbot):\n  num_requests: 1\n  arrival: periodic\n",
+            "A (chatbot):\n  num_requests: 1\n  arrival: trace\n  trace: [1, 0.5]\n",
+            "A (chatbot):\n  num_requests: 1\n  arrival: trace\n  trace: []\n",
+            "A (chatbot):\n  num_requests: 1\n  arrival: warp\n",
+        ] {
+            assert!(BenchConfig::parse(bad).is_err(), "should reject:\n{bad}");
+        }
+    }
+
+    #[test]
+    fn server_backed_deepresearch_rejects_open_loop() {
+        let cfg = |arrival: &str| {
+            format!(
+                "R (deepresearch):\n  num_requests: 2\n  server: s\n{arrival}servers:\n  s:\n    model: Llama-3.2-3B\n"
+            )
+        };
+        // Closed loop (default or explicit) is fine …
+        assert!(BenchConfig::parse(&cfg("")).is_ok());
+        assert!(BenchConfig::parse(&cfg("  arrival: closed\n")).is_ok());
+        // … open-loop arrivals would interleave the agent loop: rejected.
+        let err = BenchConfig::parse(&cfg("  arrival: poisson\n  rate: 1\n")).unwrap_err();
+        assert!(err.to_string().contains("closed-loop"), "{err}");
+        assert!(BenchConfig::parse(&cfg("  arrival: periodic\n  period: 5\n")).is_err());
     }
 
     #[test]

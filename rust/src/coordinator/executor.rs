@@ -19,7 +19,7 @@ use crate::apps::{
     ImageGen, LiveCaptions, RequestMetrics, Slo,
 };
 use crate::apps::models::{llama_3_1_8b, llama_3_2_3b};
-use crate::coordinator::config::{AppType, BenchConfig, Strategy, TestbedKind};
+use crate::coordinator::config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
 use crate::coordinator::dag::{Dag, NodeId};
 use crate::gpusim::engine::{Engine, JobId, JobResult, JobSpec, Phase, TraceSample};
 use crate::gpusim::kernel::Device;
@@ -51,6 +51,9 @@ enum NodeState {
 struct NodeRuntime {
     app: Box<dyn Application>,
     ctx: AppContext,
+    /// Arrival process driving this node's requests: the task's `arrival:`
+    /// override when present, otherwise the application's built-in model.
+    arrival: Arrival,
     /// Index into `servers` when requests route through a shared server.
     server: Option<usize>,
     state: NodeState,
@@ -212,12 +215,17 @@ impl ScenarioRunner {
                         .with_context(|| format!("unknown server `{sname}`"))
                 })
                 .transpose()?;
+            let arrival = match &task.arrival {
+                None => app.arrival(),
+                Some(spec) => resolve_arrival(spec, seed),
+            };
             nodes.push(NodeRuntime {
                 app,
                 ctx: AppContext {
                     client,
                     device: task.device,
                 },
+                arrival,
                 server,
                 state: NodeState::Waiting,
                 issued: 0,
@@ -383,14 +391,18 @@ impl ScenarioRunner {
             self.submit_cleanup(n, now);
             return Ok(());
         }
-        match self.nodes[n].app.arrival() {
-            Arrival::OpenLoop { period } => {
-                // Open-loop: all arrivals are scheduled upfront.
-                for i in 0..total {
-                    self.issue_request(n, i, now + i as f64 * period);
+        match self.nodes[n].arrival.schedule(total, now) {
+            // Open-loop: the full arrival schedule is a pure function of the
+            // arrival process, so every request is issued upfront and queues
+            // independently of completions.
+            Some(times) => {
+                for (i, at) in times.into_iter().enumerate() {
+                    self.issue_request(n, i, at);
                 }
             }
-            Arrival::ClosedLoop { .. } => {
+            // Closed loop: issue the first request; the rest follow
+            // completions (see `request_finished`).
+            None => {
                 self.issue_request(n, 0, now);
             }
         }
@@ -568,7 +580,11 @@ impl ScenarioRunner {
             self.submit_cleanup(n, now);
             return;
         }
-        if let Arrival::ClosedLoop { think } = self.nodes[n].app.arrival() {
+        let think = match &self.nodes[n].arrival {
+            Arrival::ClosedLoop { think } => Some(*think),
+            _ => None, // open loop: all arrivals were issued at setup time
+        };
+        if let Some(think) = think {
             if self.nodes[n].issued < total {
                 let next = self.nodes[n].issued;
                 self.issue_request(n, next, now + think);
@@ -622,6 +638,23 @@ impl ScenarioRunner {
                 self.pjrt_calls += 1;
             }
         }
+    }
+}
+
+/// Lower a config-level arrival override to the runtime arrival process.
+/// Poisson draws take the node's derived seed so two nodes with the same
+/// rate still see decorrelated arrival streams.
+fn resolve_arrival(spec: &ArrivalSpec, seed: u64) -> Arrival {
+    match spec {
+        ArrivalSpec::Closed { think } => Arrival::ClosedLoop { think: *think },
+        ArrivalSpec::Periodic { period } => Arrival::OpenLoop { period: *period },
+        ArrivalSpec::Poisson { rate } => Arrival::Poisson {
+            rate: *rate,
+            seed: seed ^ 0xA076_1D64_78BD_642F,
+        },
+        ArrivalSpec::Trace { offsets } => Arrival::Trace {
+            offsets: offsets.clone(),
+        },
     }
 }
 
@@ -791,6 +824,64 @@ strategy: partition
 ";
         let result = run_config_text(text, None).unwrap();
         assert!(result.policy.starts_with("partition"), "{}", result.policy);
+    }
+
+    #[test]
+    fn poisson_arrival_issues_all_requests() {
+        let text = "\
+Chat (chatbot):
+  num_requests: 4
+  device: gpu
+  arrival: poisson
+  rate: 2.0
+seed: 11
+";
+        let result = run_config_text(text, None).unwrap();
+        let node = &result.nodes[0];
+        assert_eq!(node.metrics.len(), 4);
+        assert!(node.failed.is_none());
+        // Deterministic across runs.
+        let again = run_config_text(text, None).unwrap();
+        let lat = |r: &ScenarioResult| -> Vec<f64> {
+            r.nodes[0].metrics.iter().map(|m| m.latency).collect()
+        };
+        assert_eq!(lat(&result), lat(&again));
+    }
+
+    #[test]
+    fn trace_arrival_respects_offsets() {
+        let text = "\
+Img (imagegen):
+  num_requests: 3
+  device: gpu
+  arrival: trace
+  trace: [0, 8, 30]
+seed: 5
+";
+        let result = run_config_text(text, None).unwrap();
+        let node = &result.nodes[0];
+        assert_eq!(node.metrics.len(), 3);
+        // The last request cannot finish before its 30 s arrival offset.
+        assert!(node.end > 30.0, "end {}", node.end);
+    }
+
+    #[test]
+    fn open_loop_overrides_apply_to_server_backed_nodes() {
+        let text = "\
+Chat (chatbot):
+  num_requests: 3
+  server: llama
+  arrival: poisson
+  rate: 1.0
+servers:
+  llama:
+    model: Llama-3.2-3B
+    context_window: 16384
+    kv_placement: gpu
+seed: 3
+";
+        let result = run_config_text(text, None).unwrap();
+        assert_eq!(result.nodes[0].metrics.len(), 3);
     }
 
     #[test]

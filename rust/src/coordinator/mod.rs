@@ -12,7 +12,7 @@ pub mod dag;
 pub mod executor;
 pub mod report;
 
-pub use config::{AppType, BenchConfig, Strategy, TestbedKind};
+pub use config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
 pub use dag::Dag;
 pub use executor::{run_config_text, NodeResult, ScenarioResult, ScenarioRunner};
 pub use report::{generate, to_csv, BenchmarkReport};

@@ -161,7 +161,7 @@ impl JobResult {
 }
 
 /// One sampled point of the monitor trace (piecewise-constant until the next).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TraceSample {
     pub t: f64,
     pub gpu_smact: f32,
@@ -174,6 +174,55 @@ pub struct TraceSample {
     pub cpu_power: f32,
     /// Per-client (smact, smocc), indexed by ClientId.
     pub per_client: Vec<(f32, f32)>,
+}
+
+impl TraceSample {
+    /// Append this sample's canonical byte encoding to `out`.
+    ///
+    /// The encoding is exact-bit-pattern (little-endian `to_bits`), not a
+    /// decimal rendering, so two traces are byte-identical if and only if
+    /// every recorded float is bit-identical — the contract the golden-trace
+    /// determinism tests pin down.
+    pub fn canonical_bytes(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.t.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.gpu_smact.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.gpu_smocc.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.gpu_bw_frac.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.gpu_power.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.vram_used.to_le_bytes());
+        out.extend_from_slice(&self.cpu_util.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.dram_bw_frac.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.cpu_power.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.per_client.len() as u64).to_le_bytes());
+        for (act, occ) in &self.per_client {
+            out.extend_from_slice(&act.to_bits().to_le_bytes());
+            out.extend_from_slice(&occ.to_bits().to_le_bytes());
+        }
+    }
+}
+
+/// Canonical byte encoding of a whole trace (see
+/// [`TraceSample::canonical_bytes`]).
+pub fn trace_canonical_bytes(trace: &[TraceSample]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(trace.len() * 64);
+    out.extend_from_slice(&(trace.len() as u64).to_le_bytes());
+    for s in trace {
+        s.canonical_bytes(&mut out);
+    }
+    out
+}
+
+/// FNV-1a 64-bit digest over the canonical trace encoding — a compact
+/// fingerprint for golden-trace tests and scenario reports.
+pub fn trace_digest(trace: &[TraceSample]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut hash = FNV_OFFSET;
+    for byte in trace_canonical_bytes(trace) {
+        hash ^= byte as u64;
+        hash = hash.wrapping_mul(FNV_PRIME);
+    }
+    hash
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -276,13 +325,17 @@ pub struct Engine {
     gpu_ready: VecDeque<GpuReady>,
     /// Reused policy-view buffer (no allocation on the hot path).
     gpu_ready_scratch: Vec<ReadyKernel>,
-    gpu_resident: HashMap<JobId, GpuResident>,
+    /// BTreeMap (not HashMap): `record()` sums f64 rates over the resident
+    /// sets, and float addition is order-sensitive — iteration order must be
+    /// fixed for traces to be byte-identical across runs (golden-trace
+    /// determinism).
+    gpu_resident: BTreeMap<JobId, GpuResident>,
     gpu_held: BTreeMap<ClientId, usize>,
     vram: VramAllocator,
     // CPU state
     cpu_free_cores: usize,
     cpu_ready: Vec<CpuReady>,
-    cpu_resident: HashMap<JobId, CpuResident>,
+    cpu_resident: BTreeMap<JobId, CpuResident>,
     // Outputs
     completed: Vec<JobResult>,
     trace: Vec<TraceSample>,
@@ -306,12 +359,12 @@ impl Engine {
             gpu_free_sms: gpu_sms,
             gpu_ready: VecDeque::new(),
             gpu_ready_scratch: Vec::new(),
-            gpu_resident: HashMap::new(),
+            gpu_resident: BTreeMap::new(),
             gpu_held: BTreeMap::new(),
             vram,
             cpu_free_cores: cpu_cores,
             cpu_ready: Vec::new(),
-            cpu_resident: HashMap::new(),
+            cpu_resident: BTreeMap::new(),
             completed: Vec::new(),
             trace: Vec::new(),
             trace_enabled: true,
@@ -1145,6 +1198,55 @@ mod tests {
         // Power rises above idle while running.
         let idle = e.testbed().gpu.idle_power as f32;
         assert!(e.trace().iter().any(|s| s.gpu_power > idle * 2.0));
+    }
+
+    #[test]
+    fn trace_canonical_bytes_roundtrip_identity() {
+        let run = || {
+            let mut e = engine();
+            let a = e.register_client("a");
+            let b = e.register_client("b");
+            for i in 0..10 {
+                let cl = if i % 2 == 0 { a } else { b };
+                e.submit(
+                    JobSpec {
+                        client: cl,
+                        label: format!("r{i}"),
+                        phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 300 + i, 1e8)])],
+                    },
+                    i as f64 * 0.002,
+                );
+            }
+            e.run_all();
+            e.take_trace()
+        };
+        let t1 = run();
+        let t2 = run();
+        // Byte-identical traces across two fresh engines in one process —
+        // this is what the BTreeMap resident sets guarantee (HashMap
+        // iteration order would perturb the f64 bandwidth sums).
+        assert_eq!(trace_canonical_bytes(&t1), trace_canonical_bytes(&t2));
+        assert_eq!(trace_digest(&t1), trace_digest(&t2));
+        assert!(!t1.is_empty());
+    }
+
+    #[test]
+    fn trace_digest_distinguishes_workloads() {
+        let run = |blocks: usize| {
+            let mut e = engine();
+            let c = e.register_client("a");
+            e.submit(
+                JobSpec {
+                    client: c,
+                    label: "r".into(),
+                    phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", blocks, 1e8)])],
+                },
+                0.0,
+            );
+            e.run_all();
+            trace_digest(e.trace())
+        };
+        assert_ne!(run(300), run(301));
     }
 
     #[test]

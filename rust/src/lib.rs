@@ -24,5 +24,6 @@ pub mod coordinator;
 pub mod gpusim;
 pub mod monitor;
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod util;

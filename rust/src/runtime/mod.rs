@@ -1,205 +1,31 @@
-//! PJRT runtime: loads AOT-compiled model artifacts and executes them.
+//! Model runtime: the bridge between Layer 3 (this crate) and Layers 1/2
+//! (the JAX models + Pallas kernels in `python/`).
 //!
-//! This is the bridge between Layer 3 (this crate) and Layers 1/2 (the JAX
-//! models + Pallas kernels in `python/`). `python/compile/aot.py` lowers
-//! each model entry point once to **HLO text** (not a serialized proto —
-//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids) and writes a manifest describing input
-//! shapes. At startup the Rust side compiles every artifact on the PJRT CPU
-//! client; the executor then runs real numerics for each simulated request.
+//! Two interchangeable implementations sit behind the same `Runtime` API:
 //!
-//! Python never runs on the request path: once `artifacts/` exists, the
-//! binary is self-contained.
+//! * **`pjrt`** (cargo feature `pjrt`) — compiles the AOT HLO-text
+//!   artifacts on a PJRT CPU client via the `xla` bindings and executes
+//!   real numerics per simulated request. The bindings are not on
+//!   crates.io, so the feature ships without a registered dependency; see
+//!   `Cargo.toml` for how to wire them in.
+//! * **`sim`** (default) — a stub that parses the same manifest and
+//!   produces deterministic per-tensor checksums, keeping the executor's
+//!   real-compute hook (call counts, seeding, error paths) exercised
+//!   without any native dependency.
+//!
+//! All reported latencies come from the virtual-time simulator in both
+//! builds; the PJRT path adds numerics validation only.
 
 pub mod manifest;
 
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{make_literal, LoadedModel, Runtime};
 
-use anyhow::{bail, Context, Result};
-
-use crate::util::Rng;
-
-/// A compiled model entry point.
-pub struct LoadedModel {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The PJRT runtime holding one compiled executable per model entry point.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    models: HashMap<String, LoadedModel>,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    /// Load every artifact listed in `<dir>/manifest.txt`.
-    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
-        let mut models = HashMap::new();
-        for spec in manifest.artifacts {
-            let hlo_path = dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                hlo_path.to_str().context("non-utf8 path")?,
-            )
-            .map_err(anyhow_xla)
-            .with_context(|| format!("parsing {}", hlo_path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(anyhow_xla)?;
-            models.insert(spec.name.clone(), LoadedModel { spec, exe });
-        }
-        Ok(Runtime { client, models, dir })
-    }
-
-    /// Whether an artifact directory looks usable (manifest present).
-    pub fn available(dir: impl AsRef<Path>) -> bool {
-        dir.as_ref().join("manifest.txt").is_file()
-    }
-
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    pub fn model_names(&self) -> Vec<&str> {
-        let mut names: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
-        names.sort_unstable();
-        names
-    }
-
-    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.models.get(name).map(|m| &m.spec)
-    }
-
-    /// Execute a model with explicit input literals. Outputs are the
-    /// elements of the result tuple (aot.py lowers with `return_tuple=True`).
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let model = self
-            .models
-            .get(name)
-            .with_context(|| format!("unknown model `{name}`"))?;
-        if inputs.len() != model.spec.inputs.len() {
-            bail!(
-                "model `{name}` expects {} inputs, got {}",
-                model.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        let result = model.exe.execute::<xla::Literal>(inputs).map_err(anyhow_xla)?;
-        let tuple = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
-        tuple.to_tuple().map_err(anyhow_xla)
-    }
-
-    /// Execute with deterministic pseudo-random inputs of the declared
-    /// shapes — the executor's per-request "real compute" path, where the
-    /// semantic content of the tensors is irrelevant but the computation
-    /// must actually run.
-    pub fn execute_seeded(&self, name: &str, seed: u64) -> Result<Vec<xla::Literal>> {
-        let model = self
-            .models
-            .get(name)
-            .with_context(|| format!("unknown model `{name}`"))?;
-        let mut rng = Rng::new(seed ^ 0x504A_5254); // "PJRT"
-        let inputs: Result<Vec<xla::Literal>> = model
-            .spec
-            .inputs
-            .iter()
-            .map(|t| make_literal(t, &mut rng))
-            .collect();
-        self.execute(name, &inputs?)
-    }
-}
-
-/// Build a literal of the given spec filled with small random values.
-pub fn make_literal(spec: &TensorSpec, rng: &mut Rng) -> Result<xla::Literal> {
-    let n: usize = spec.dims.iter().product::<usize>().max(1);
-    match spec.dtype.as_str() {
-        "f32" => {
-            let data: Vec<f32> = (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 0.2).collect();
-            let lit = xla::Literal::vec1(&data);
-            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
-            lit.reshape(&dims).map_err(anyhow_xla)
-        }
-        other => bail!("unsupported dtype `{other}` (manifest v1 supports f32)"),
-    }
-}
-
-fn anyhow_xla(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// Path used by `make artifacts`.
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    #[test]
-    fn availability_check_without_dir() {
-        assert!(!Runtime::available("/nonexistent/dir"));
-    }
-
-    #[test]
-    fn load_and_execute_artifacts_if_present() {
-        // Full round-trip over the real AOT artifacts. Skipped (not failed)
-        // when artifacts haven't been built; `make test` builds them first.
-        let dir = artifacts_dir();
-        if !Runtime::available(&dir) {
-            eprintln!("artifacts not built; skipping PJRT round-trip test");
-            return;
-        }
-        let rt = Runtime::load_dir(&dir).expect("artifacts must load");
-        assert!(!rt.model_names().is_empty());
-        for name in rt.model_names() {
-            let outs = rt.execute_seeded(name, 42).unwrap_or_else(|e| panic!("{name}: {e}"));
-            assert!(!outs.is_empty(), "{name} returned no outputs");
-            // Outputs must be finite (the L2 models are normalized).
-            let first = outs[0].to_vec::<f32>();
-            if let Ok(v) = first {
-                assert!(
-                    v.iter().all(|x| x.is_finite()),
-                    "{name} produced non-finite outputs"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn execute_seeded_is_deterministic() {
-        let dir = artifacts_dir();
-        if !Runtime::available(&dir) {
-            eprintln!("artifacts not built; skipping determinism test");
-            return;
-        }
-        let rt = Runtime::load_dir(&dir).unwrap();
-        let name = rt.model_names()[0].to_string();
-        let a = rt.execute_seeded(&name, 7).unwrap();
-        let b = rt.execute_seeded(&name, 7).unwrap();
-        assert_eq!(a[0].to_vec::<f32>().unwrap(), b[0].to_vec::<f32>().unwrap());
-    }
-
-    #[test]
-    fn wrong_input_count_rejected() {
-        let dir = artifacts_dir();
-        if !Runtime::available(&dir) {
-            return;
-        }
-        let rt = Runtime::load_dir(&dir).unwrap();
-        let name = rt.model_names()[0].to_string();
-        match rt.execute(&name, &[]) {
-            Ok(_) => panic!("expected input-count error"),
-            Err(err) => assert!(err.to_string().contains("inputs")),
-        }
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod sim;
+#[cfg(not(feature = "pjrt"))]
+pub use sim::Runtime;

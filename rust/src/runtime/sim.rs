@@ -1,0 +1,132 @@
+//! Stub runtime used when the `pjrt` feature is off (the default).
+//!
+//! The offline toolchain has no `xla` bindings, so the default build gates
+//! the real-numerics path out entirely and substitutes a deterministic
+//! stand-in: the manifest still parses, the same artifacts are addressable,
+//! and `execute_seeded` produces a seed-stable checksum per declared input
+//! tensor (drawn through the same RNG discipline as the PJRT path), so the
+//! executor's per-request "real compute" hook keeps its call counts and
+//! determinism properties without the native dependency.
+//!
+//! All experiment timing is virtual and comes from the simulator either
+//! way — the PJRT path only validates numerics, so simulation results are
+//! identical across the two builds.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest, TensorSpec};
+use crate::util::Rng;
+
+/// Manifest-backed runtime without compiled executables.
+pub struct Runtime {
+    specs: HashMap<String, ArtifactSpec>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load (parse) every artifact listed in `<dir>/manifest.txt`.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let mut specs = HashMap::new();
+        for spec in manifest.artifacts {
+            specs.insert(spec.name.clone(), spec);
+        }
+        Ok(Runtime { specs, dir })
+    }
+
+    /// Whether an artifact directory looks usable (manifest present).
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.txt").is_file()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Stand-in for PJRT execution: deterministically synthesize the
+    /// declared input tensors and reduce each to a checksum. One f32 per
+    /// input, mirroring "some computation ran over tensors of the declared
+    /// shapes".
+    pub fn execute_seeded(&self, name: &str, seed: u64) -> Result<Vec<f32>> {
+        let spec = self
+            .specs
+            .get(name)
+            .with_context(|| format!("unknown model `{name}`"))?;
+        let mut rng = Rng::new(seed ^ 0x504A_5254); // same discipline as PJRT
+        spec.inputs.iter().map(|t| checksum(t, &mut rng)).collect()
+    }
+}
+
+fn checksum(spec: &TensorSpec, rng: &mut Rng) -> Result<f32> {
+    match spec.dtype.as_str() {
+        "f32" => {
+            let mut acc = 0.0f32;
+            for _ in 0..spec.num_elements() {
+                acc += (rng.next_f64() as f32 - 0.5) * 0.2;
+            }
+            Ok(acc)
+        }
+        other => bail!("unsupported dtype `{other}` (manifest v1 supports f32)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "tiny_llama_decode|tiny_llama_decode.hlo.txt|f32:1x64;f32:8x16|2\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn availability_check_without_dir() {
+        assert!(!Runtime::available("/nonexistent/dir"));
+    }
+
+    #[test]
+    fn loads_manifest_and_lists_models() {
+        let dir = std::env::temp_dir().join("cb_sim_runtime");
+        write_manifest(&dir);
+        let rt = Runtime::load_dir(&dir).unwrap();
+        assert_eq!(rt.model_names(), vec!["tiny_llama_decode"]);
+        assert_eq!(rt.spec("tiny_llama_decode").unwrap().inputs.len(), 2);
+        assert!(rt.spec("missing").is_none());
+        assert_eq!(rt.dir(), dir.as_path());
+    }
+
+    #[test]
+    fn execute_seeded_is_deterministic_and_seed_sensitive() {
+        let dir = std::env::temp_dir().join("cb_sim_runtime_det");
+        write_manifest(&dir);
+        let rt = Runtime::load_dir(&dir).unwrap();
+        let a = rt.execute_seeded("tiny_llama_decode", 7).unwrap();
+        let b = rt.execute_seeded("tiny_llama_decode", 7).unwrap();
+        let c = rt.execute_seeded("tiny_llama_decode", 8).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 2);
+        assert!(rt.execute_seeded("missing", 1).is_err());
+    }
+}

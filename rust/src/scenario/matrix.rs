@@ -1,0 +1,405 @@
+//! Scenario-matrix generation: axes → cross-product → runnable configs.
+//!
+//! An axis point is one of:
+//!
+//! * **App mix** — which applications run concurrently and with how many
+//!   requests each (Table 1 apps in realistic combinations, §4.2/§4.3).
+//! * **Scheduling policy** — greedy / equal-partition / fair-share (§3.2).
+//! * **Device profile** — which simulated testbed (Intel server RTX 6000,
+//!   MacBook M1 Pro).
+//! * **Arrival process** — the client model: the apps' built-in closed
+//!   loop, a fixed-period open loop, an open-loop Poisson stream (heavy
+//!   traffic), or a bursty trace replay.
+//!
+//! [`MatrixAxes::expand`] enumerates the cross-product in a fixed order and
+//! renders each point as a YAML workflow configuration understood by
+//! [`crate::coordinator::config::BenchConfig`], so every generated scenario
+//! is also a valid hand-runnable config (`consumerbench scenario --dump`
+//! writes them out).
+
+use crate::coordinator::config::{AppType, Strategy, TestbedKind};
+use crate::gpusim::kernel::Device;
+use crate::util::rng::Rng;
+
+/// One application instance inside a mix.
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    pub app: AppType,
+    pub num_requests: usize,
+    pub device: Device,
+}
+
+/// A named set of concurrently running applications.
+#[derive(Debug, Clone)]
+pub struct AppMix {
+    pub name: &'static str,
+    pub entries: Vec<MixEntry>,
+}
+
+impl AppMix {
+    fn entry(app: AppType, num_requests: usize, device: Device) -> MixEntry {
+        MixEntry {
+            app,
+            num_requests,
+            device,
+        }
+    }
+
+    /// Single latency-sensitive chat client (the exclusive baseline).
+    pub fn chat() -> AppMix {
+        AppMix {
+            name: "chat",
+            entries: vec![Self::entry(AppType::Chatbot, 3, Device::Gpu)],
+        }
+    }
+
+    /// Chat sharing the GPU with a bulk image generator (§4.2 contention).
+    pub fn chat_imagegen() -> AppMix {
+        AppMix {
+            name: "chat+imagegen",
+            entries: vec![
+                Self::entry(AppType::Chatbot, 3, Device::Gpu),
+                Self::entry(AppType::ImageGen, 2, Device::Gpu),
+            ],
+        }
+    }
+
+    /// The paper's starvation pair: tiny-kernel captions vs. device-filling
+    /// diffusion steps (Fig. 5).
+    pub fn captions_imagegen() -> AppMix {
+        AppMix {
+            name: "captions+imagegen",
+            entries: vec![
+                Self::entry(AppType::LiveCaptions, 6, Device::Gpu),
+                Self::entry(AppType::ImageGen, 2, Device::Gpu),
+            ],
+        }
+    }
+
+    /// All four Table 1 applications at once; DeepResearch runs on the CPU
+    /// (the Fig. 2 placement) so the three GPU apps fit in VRAM together.
+    pub fn full_stack() -> AppMix {
+        AppMix {
+            name: "full-stack",
+            entries: vec![
+                Self::entry(AppType::Chatbot, 2, Device::Gpu),
+                Self::entry(AppType::ImageGen, 2, Device::Gpu),
+                Self::entry(AppType::LiveCaptions, 4, Device::Gpu),
+                Self::entry(AppType::DeepResearch, 1, Device::Cpu),
+            ],
+        }
+    }
+}
+
+/// Arrival-process axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Application built-in client models (closed loop / audio cadence).
+    Closed,
+    /// Fixed-period open loop per app.
+    Periodic,
+    /// Open-loop Poisson stream per app — the heavy-traffic regime.
+    Poisson,
+    /// Bursty recorded-trace replay per app.
+    TraceReplay,
+}
+
+impl ArrivalKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Closed => "closed",
+            ArrivalKind::Periodic => "periodic",
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::TraceReplay => "trace",
+        }
+    }
+}
+
+/// Stable key for a strategy in scenario names and YAML.
+pub fn strategy_key(s: Strategy) -> &'static str {
+    match s {
+        Strategy::Greedy => "greedy",
+        Strategy::Partition => "partition",
+        Strategy::FairShare => "fair_share",
+        Strategy::SloAware => "slo_aware",
+    }
+}
+
+/// Stable key for a testbed in scenario names and YAML.
+pub fn testbed_key(t: TestbedKind) -> &'static str {
+    match t {
+        TestbedKind::IntelServer => "intel_server",
+        TestbedKind::MacbookM1Pro => "macbook_m1_pro",
+    }
+}
+
+/// The axes of a scenario matrix.
+#[derive(Debug, Clone)]
+pub struct MatrixAxes {
+    pub mixes: Vec<AppMix>,
+    pub strategies: Vec<Strategy>,
+    pub testbeds: Vec<TestbedKind>,
+    pub arrivals: Vec<ArrivalKind>,
+    pub seed: u64,
+}
+
+impl MatrixAxes {
+    /// The default matrix: 4 mixes × 3 policies × {closed, poisson} on the
+    /// Intel testbed — 24 scenarios covering every policy, every Table 1
+    /// application, and open-loop heavy traffic.
+    pub fn default_matrix(seed: u64) -> MatrixAxes {
+        MatrixAxes {
+            mixes: vec![
+                AppMix::chat(),
+                AppMix::chat_imagegen(),
+                AppMix::captions_imagegen(),
+                AppMix::full_stack(),
+            ],
+            strategies: vec![Strategy::Greedy, Strategy::Partition, Strategy::FairShare],
+            testbeds: vec![TestbedKind::IntelServer],
+            arrivals: vec![ArrivalKind::Closed, ArrivalKind::Poisson],
+            seed,
+        }
+    }
+
+    /// The full sweep: adds periodic + trace-replay arrivals and the Apple
+    /// Silicon testbed (4 × 3 × 4 × 2 = 96 scenarios).
+    pub fn full_matrix(seed: u64) -> MatrixAxes {
+        MatrixAxes {
+            testbeds: vec![TestbedKind::IntelServer, TestbedKind::MacbookM1Pro],
+            arrivals: vec![
+                ArrivalKind::Closed,
+                ArrivalKind::Periodic,
+                ArrivalKind::Poisson,
+                ArrivalKind::TraceReplay,
+            ],
+            ..Self::default_matrix(seed)
+        }
+    }
+
+    /// Enumerate the cross-product in a fixed (mix, strategy, arrival,
+    /// testbed) order. The order is part of the report format: re-running
+    /// with the same seed must reproduce the report byte-for-byte.
+    pub fn expand(&self) -> Vec<ScenarioSpec> {
+        let mut specs = Vec::new();
+        for mix in &self.mixes {
+            for &strategy in &self.strategies {
+                for &arrival in &self.arrivals {
+                    for &testbed in &self.testbeds {
+                        specs.push(ScenarioSpec {
+                            name: format!(
+                                "mix={}/policy={}/arrival={}/testbed={}",
+                                mix.name,
+                                strategy_key(strategy),
+                                arrival.name(),
+                                testbed_key(testbed)
+                            ),
+                            mix: mix.clone(),
+                            strategy,
+                            testbed,
+                            arrival,
+                            seed: self.seed,
+                        });
+                    }
+                }
+            }
+        }
+        specs
+    }
+}
+
+/// One fully specified scenario — an axis-point of the matrix.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub mix: AppMix,
+    pub strategy: Strategy,
+    pub testbed: TestbedKind,
+    pub arrival: ArrivalKind,
+    pub seed: u64,
+}
+
+/// Task display label per application class.
+fn app_label(app: AppType) -> &'static str {
+    match app {
+        AppType::Chatbot => "Chat",
+        AppType::DeepResearch => "Research",
+        AppType::ImageGen => "Image",
+        AppType::LiveCaptions => "Captions",
+    }
+}
+
+/// Open-loop period per application (seconds) for the periodic axis.
+fn app_period(app: AppType) -> f64 {
+    match app {
+        AppType::Chatbot => 4.0,
+        AppType::DeepResearch => 20.0,
+        AppType::ImageGen => 6.0,
+        AppType::LiveCaptions => 2.0,
+    }
+}
+
+/// Poisson arrival rate per application (requests/second) for the
+/// heavy-traffic axis.
+fn app_rate(app: AppType) -> f64 {
+    match app {
+        AppType::Chatbot => 0.5,
+        AppType::DeepResearch => 0.1,
+        AppType::ImageGen => 0.25,
+        AppType::LiveCaptions => 0.75,
+    }
+}
+
+impl ScenarioSpec {
+    /// Render the scenario as a YAML workflow configuration.
+    pub fn to_yaml(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# scenario: {}\n", self.name));
+        for (i, e) in self.mix.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "{} ({}):\n  num_requests: {}\n  device: {}\n",
+                app_label(e.app),
+                e.app.name().to_ascii_lowercase(),
+                e.num_requests,
+                match e.device {
+                    Device::Gpu => "gpu",
+                    Device::Cpu => "cpu",
+                }
+            ));
+            // DeepResearch is the background agent; its closed loop is part
+            // of the workload semantics, so arrival overrides only apply to
+            // the interactive apps.
+            if e.app != AppType::DeepResearch {
+                match self.arrival {
+                    ArrivalKind::Closed => {}
+                    ArrivalKind::Periodic => {
+                        out.push_str(&format!(
+                            "  arrival: periodic\n  period: {}\n",
+                            app_period(e.app)
+                        ));
+                    }
+                    ArrivalKind::Poisson => {
+                        out.push_str(&format!(
+                            "  arrival: poisson\n  rate: {}\n",
+                            app_rate(e.app)
+                        ));
+                    }
+                    ArrivalKind::TraceReplay => {
+                        let offsets =
+                            burst_trace(e.num_requests, self.seed ^ ((i as u64 + 1) << 8));
+                        let rendered: Vec<String> =
+                            offsets.iter().map(|o| format!("{o:.3}")).collect();
+                        out.push_str(&format!(
+                            "  arrival: trace\n  trace: [{}]\n",
+                            rendered.join(", ")
+                        ));
+                    }
+                }
+            }
+        }
+        out.push_str(&format!("strategy: {}\n", strategy_key(self.strategy)));
+        out.push_str(&format!("testbed: {}\n", testbed_key(self.testbed)));
+        out.push_str(&format!("seed: {}\n", self.seed));
+        out
+    }
+
+    /// Filesystem-safe name for `--dump`.
+    pub fn file_name(&self) -> String {
+        let mut s: String = self
+            .name
+            .chars()
+            .map(|c| match c {
+                '/' | '=' | '+' | ' ' => '_',
+                c => c,
+            })
+            .collect();
+        s.push_str(".yaml");
+        s
+    }
+}
+
+/// Deterministic bursty offsets for the trace-replay axis: requests arrive
+/// in bursts of up to 3, 50 ms apart inside a burst, exponential gaps
+/// between bursts (mean 4 s).
+fn burst_trace(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut offsets = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    while offsets.len() < n {
+        let burst = rng.range_usize(1, 4).min(n - offsets.len());
+        for b in 0..burst {
+            offsets.push(t + b as f64 * 0.05);
+        }
+        // Next burst starts strictly after this one ends, so the offsets
+        // stay non-decreasing (the config layer rejects unsorted traces).
+        t += (burst - 1) as f64 * 0.05 + rng.exponential(0.25);
+    }
+    offsets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::BenchConfig;
+
+    #[test]
+    fn default_matrix_covers_acceptance_floor() {
+        let axes = MatrixAxes::default_matrix(42);
+        let specs = axes.expand();
+        assert!(specs.len() >= 20, "{} scenarios", specs.len());
+        let strategies: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| strategy_key(s.strategy)).collect();
+        assert_eq!(strategies.len(), 3);
+        let mixes: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| s.mix.name).collect();
+        assert!(mixes.len() >= 3, "{mixes:?}");
+        assert!(specs.iter().any(|s| s.arrival == ArrivalKind::Poisson));
+        // Names are unique (they key the report).
+        let names: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), specs.len());
+    }
+
+    #[test]
+    fn every_generated_config_parses() {
+        for axes in [MatrixAxes::default_matrix(7), MatrixAxes::full_matrix(7)] {
+            for spec in axes.expand() {
+                let yaml = spec.to_yaml();
+                let cfg = BenchConfig::parse(&yaml)
+                    .unwrap_or_else(|e| panic!("{}: {e}\n{yaml}", spec.name));
+                assert_eq!(cfg.tasks.len(), spec.mix.entries.len());
+                assert_eq!(cfg.strategy, spec.strategy);
+                assert_eq!(cfg.testbed, spec.testbed);
+                assert_eq!(cfg.seed, spec.seed);
+            }
+        }
+    }
+
+    #[test]
+    fn yaml_rendering_is_deterministic() {
+        let a = MatrixAxes::full_matrix(13).expand();
+        let b = MatrixAxes::full_matrix(13).expand();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_yaml(), y.to_yaml());
+        }
+    }
+
+    #[test]
+    fn burst_trace_is_sorted_and_sized() {
+        for n in [1, 2, 7, 20] {
+            let t = burst_trace(n, 99);
+            assert_eq!(t.len(), n);
+            assert!(t.windows(2).all(|w| w[1] >= w[0]), "{t:?}");
+            assert!(t[0] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn file_names_are_fs_safe() {
+        for spec in MatrixAxes::default_matrix(1).expand() {
+            let f = spec.file_name();
+            assert!(f.ends_with(".yaml"));
+            assert!(!f.contains('/') && !f.contains('='), "{f}");
+        }
+    }
+}

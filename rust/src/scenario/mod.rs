@@ -1,0 +1,33 @@
+//! Scenario-matrix subsystem: programmatic sweeps over realistic
+//! multi-application scenarios.
+//!
+//! The paper evaluates a handful of hand-written configurations; this
+//! module generalizes them into a generator over four axes — application
+//! mix × scheduling policy × device profile × arrival process — and
+//! executes the expanded cross-product through the regular coordinator
+//! pipeline on the deterministic simulator:
+//!
+//! ```text
+//! MatrixAxes ──expand──▶ [ScenarioSpec] ──to_yaml──▶ BenchConfig
+//!      │                                                  │
+//!      └────────── run_matrix ──▶ ScenarioRunner ─────────┘
+//!                       │
+//!                       ▼
+//!         MatrixReport (SLO attainment, p50/p99, fairness,
+//!                       trace digests) ──▶ deterministic JSON
+//! ```
+//!
+//! Because the simulator is deterministic and the report rendering is
+//! canonical, re-running a matrix with the same seed reproduces the JSON
+//! byte-for-byte — the golden-trace tests (`tests/golden_trace.rs`) turn
+//! that property into a regression harness for every engine refactor.
+//!
+//! Exposed on the command line as `consumerbench scenario`.
+
+pub mod matrix;
+pub mod runner;
+
+pub use matrix::{
+    strategy_key, testbed_key, AppMix, ArrivalKind, MatrixAxes, MixEntry, ScenarioSpec,
+};
+pub use runner::{run_matrix, run_scenario, AppOutcome, MatrixReport, ScenarioOutcome};

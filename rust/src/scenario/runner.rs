@@ -1,0 +1,379 @@
+//! Matrix execution and the aggregate, machine-readable report.
+//!
+//! Each [`ScenarioSpec`] is rendered to YAML, parsed, and executed through
+//! the regular coordinator pipeline (`config → dag → executor`), so the
+//! matrix exercises exactly the code paths a hand-written config would.
+//! Per scenario the runner aggregates SLO attainment, p50/p99 latency,
+//! fairness (min/max attainment spread across SLO-bearing apps), and the
+//! engine's trace digest; [`MatrixReport::to_json`] renders everything as a
+//! deterministic JSON document — byte-identical across runs with the same
+//! seed, which the golden-trace tests pin.
+
+use anyhow::{Context, Result};
+
+use crate::apps::Slo;
+use crate::coordinator::{run_config_text, ScenarioResult};
+use crate::gpusim::engine::trace_digest;
+use crate::scenario::matrix::{strategy_key, testbed_key, MatrixAxes, ScenarioSpec};
+use crate::util::stats::Summary;
+
+/// Aggregated result of one application node inside a scenario.
+#[derive(Debug, Clone)]
+pub struct AppOutcome {
+    pub node: String,
+    pub app: String,
+    pub requests: usize,
+    /// Whether the application carries an SLO (DeepResearch does not).
+    pub has_slo: bool,
+    pub attainment: f64,
+    pub mean_normalized: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub failed: Option<String>,
+}
+
+/// Aggregated result of one scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    pub mix: String,
+    pub strategy: String,
+    pub arrival: String,
+    pub testbed: String,
+    pub seed: u64,
+    pub makespan: f64,
+    /// FNV-1a digest of the canonical engine trace — the golden fingerprint.
+    pub trace_digest: u64,
+    pub min_attainment: f64,
+    pub max_attainment: f64,
+    /// max − min attainment across SLO-bearing apps (0 = perfectly fair).
+    pub fairness_spread: f64,
+    pub apps: Vec<AppOutcome>,
+}
+
+/// The aggregate report over a whole matrix.
+#[derive(Debug, Clone)]
+pub struct MatrixReport {
+    pub seed: u64,
+    pub scenarios: Vec<ScenarioOutcome>,
+}
+
+/// Execute one scenario spec through the coordinator.
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioOutcome> {
+    let yaml = spec.to_yaml();
+    let result = run_config_text(&yaml, None)
+        .with_context(|| format!("scenario `{}`", spec.name))?;
+    Ok(outcome_from(spec, &result))
+}
+
+/// Execute every scenario of the matrix in expansion order.
+pub fn run_matrix(axes: &MatrixAxes) -> Result<MatrixReport> {
+    let mut scenarios = Vec::new();
+    for spec in axes.expand() {
+        scenarios.push(run_scenario(&spec)?);
+    }
+    Ok(MatrixReport {
+        seed: axes.seed,
+        scenarios,
+    })
+}
+
+fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome {
+    let apps: Vec<AppOutcome> = result
+        .nodes
+        .iter()
+        .map(|n| {
+            let lats: Vec<f64> = n.metrics.iter().map(|m| m.latency).collect();
+            let (p50, p99) = Summary::of(&lats)
+                .map(|s| (s.p50, s.p99))
+                .unwrap_or((0.0, 0.0));
+            AppOutcome {
+                node: n.id.clone(),
+                app: n.app.to_string(),
+                requests: n.metrics.len(),
+                has_slo: !matches!(n.slo, Slo::None),
+                attainment: n.attainment(),
+                mean_normalized: n.mean_normalized(),
+                p50_latency: p50,
+                p99_latency: p99,
+                failed: n.failed.clone(),
+            }
+        })
+        .collect();
+    // Fairness over healthy SLO-bearing apps. A failed app (e.g. setup OOM)
+    // counts as zero attainment rather than being dropped — otherwise a
+    // scenario whose every SLO app failed would report a perfect 100%.
+    let attainments: Vec<f64> = apps
+        .iter()
+        .filter(|a| a.has_slo)
+        .map(|a| if a.failed.is_some() { 0.0 } else { a.attainment })
+        .collect();
+    let (min_attainment, max_attainment) = if attainments.is_empty() {
+        // No SLO-bearing apps at all (e.g. a DeepResearch-only mix):
+        // vacuously met.
+        (1.0, 1.0)
+    } else {
+        (
+            attainments.iter().copied().fold(f64::INFINITY, f64::min),
+            attainments.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        )
+    };
+    ScenarioOutcome {
+        name: spec.name.clone(),
+        mix: spec.mix.name.to_string(),
+        strategy: strategy_key(spec.strategy).to_string(),
+        arrival: spec.arrival.name().to_string(),
+        testbed: testbed_key(spec.testbed).to_string(),
+        seed: spec.seed,
+        makespan: result.makespan,
+        trace_digest: trace_digest(&result.trace),
+        min_attainment,
+        max_attainment,
+        fairness_spread: max_attainment - min_attainment,
+        apps,
+    }
+}
+
+impl MatrixReport {
+    /// Distinct strategies present, in first-seen order.
+    pub fn strategies(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for s in &self.scenarios {
+            if !out.contains(&s.strategy.as_str()) {
+                out.push(&s.strategy);
+            }
+        }
+        out
+    }
+
+    /// Deterministic JSON rendering of the whole report.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n");
+        out.push_str("  \"consumerbench_scenario_matrix\": 1,\n");
+        out.push_str(&format!("  \"seed\": {},\n", self.seed));
+        out.push_str(&format!(
+            "  \"num_scenarios\": {},\n",
+            self.scenarios.len()
+        ));
+        out.push_str("  \"scenarios\": [\n");
+        for (i, s) in self.scenarios.iter().enumerate() {
+            out.push_str("    {\n");
+            out.push_str(&format!("      \"name\": {},\n", json_str(&s.name)));
+            out.push_str(&format!("      \"mix\": {},\n", json_str(&s.mix)));
+            out.push_str(&format!("      \"strategy\": {},\n", json_str(&s.strategy)));
+            out.push_str(&format!("      \"arrival\": {},\n", json_str(&s.arrival)));
+            out.push_str(&format!("      \"testbed\": {},\n", json_str(&s.testbed)));
+            out.push_str(&format!("      \"seed\": {},\n", s.seed));
+            out.push_str(&format!(
+                "      \"makespan_s\": {},\n",
+                json_num(s.makespan)
+            ));
+            out.push_str(&format!(
+                "      \"trace_digest\": \"{:016x}\",\n",
+                s.trace_digest
+            ));
+            out.push_str(&format!(
+                "      \"min_attainment\": {},\n",
+                json_num(s.min_attainment)
+            ));
+            out.push_str(&format!(
+                "      \"max_attainment\": {},\n",
+                json_num(s.max_attainment)
+            ));
+            out.push_str(&format!(
+                "      \"fairness_spread\": {},\n",
+                json_num(s.fairness_spread)
+            ));
+            out.push_str("      \"apps\": [\n");
+            for (j, a) in s.apps.iter().enumerate() {
+                out.push_str("        {");
+                out.push_str(&format!("\"node\": {}, ", json_str(&a.node)));
+                out.push_str(&format!("\"app\": {}, ", json_str(&a.app)));
+                out.push_str(&format!("\"requests\": {}, ", a.requests));
+                out.push_str(&format!("\"has_slo\": {}, ", a.has_slo));
+                out.push_str(&format!("\"attainment\": {}, ", json_num(a.attainment)));
+                out.push_str(&format!(
+                    "\"mean_normalized\": {}, ",
+                    json_num(a.mean_normalized)
+                ));
+                out.push_str(&format!("\"p50_latency_s\": {}, ", json_num(a.p50_latency)));
+                out.push_str(&format!("\"p99_latency_s\": {}, ", json_num(a.p99_latency)));
+                match &a.failed {
+                    Some(e) => out.push_str(&format!("\"failed\": {}", json_str(e))),
+                    None => out.push_str("\"failed\": null"),
+                }
+                out.push('}');
+                out.push_str(if j + 1 < s.apps.len() { ",\n" } else { "\n" });
+            }
+            out.push_str("      ]\n");
+            out.push_str("    }");
+            out.push_str(if i + 1 < self.scenarios.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"summary\": {\n");
+        out.push_str("    \"by_strategy\": [\n");
+        let strategies = self.strategies();
+        for (i, strat) in strategies.iter().enumerate() {
+            let rows: Vec<&ScenarioOutcome> = self
+                .scenarios
+                .iter()
+                .filter(|s| s.strategy == *strat)
+                .collect();
+            let avg = |vals: Vec<f64>| -> f64 {
+                if vals.is_empty() {
+                    0.0
+                } else {
+                    vals.iter().sum::<f64>() / vals.len() as f64
+                }
+            };
+            let mean_min = avg(rows.iter().map(|r| r.min_attainment).collect());
+            let mean_spread = avg(rows.iter().map(|r| r.fairness_spread).collect());
+            let mean_makespan = avg(rows.iter().map(|r| r.makespan).collect());
+            out.push_str(&format!(
+                "      {{\"strategy\": {}, \"scenarios\": {}, \"mean_min_attainment\": {}, \"mean_fairness_spread\": {}, \"mean_makespan_s\": {}}}",
+                json_str(strat),
+                rows.len(),
+                json_num(mean_min),
+                json_num(mean_spread),
+                json_num(mean_makespan),
+            ));
+            out.push_str(if i + 1 < strategies.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("    ]\n");
+        out.push_str("  }\n");
+        out.push_str("}\n");
+        out
+    }
+
+    /// Human-readable summary table (one row per scenario).
+    pub fn summary_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<64} {:>9} {:>7} {:>7} {:>7}\n",
+            "scenario", "makespan", "min-att", "spread", "digest"
+        ));
+        for s in &self.scenarios {
+            out.push_str(&format!(
+                "{:<64} {:>8.1}s {:>6.0}% {:>7.2} {:>7}\n",
+                s.name,
+                s.makespan,
+                s.min_attainment * 100.0,
+                s.fairness_spread,
+                &format!("{:016x}", s.trace_digest)[..7],
+            ));
+        }
+        out
+    }
+}
+
+/// JSON string literal with escaping.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: shortest-roundtrip rendering; non-finite values (a failed
+/// request's ∞ normalized latency) become `null`.
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{AppType, Strategy, TestbedKind};
+    use crate::gpusim::kernel::Device;
+    use crate::scenario::matrix::{AppMix, ArrivalKind, MixEntry};
+
+    fn tiny_axes(seed: u64) -> MatrixAxes {
+        MatrixAxes {
+            mixes: vec![AppMix {
+                name: "captions",
+                entries: vec![MixEntry {
+                    app: AppType::LiveCaptions,
+                    num_requests: 3,
+                    device: Device::Gpu,
+                }],
+            }],
+            strategies: vec![Strategy::Greedy, Strategy::FairShare],
+            testbeds: vec![TestbedKind::IntelServer],
+            arrivals: vec![ArrivalKind::Poisson],
+            seed,
+        }
+    }
+
+    #[test]
+    fn tiny_matrix_runs_and_reports() {
+        let report = run_matrix(&tiny_axes(42)).unwrap();
+        assert_eq!(report.scenarios.len(), 2);
+        for s in &report.scenarios {
+            assert_eq!(s.apps.len(), 1);
+            assert_eq!(s.apps[0].requests, 3);
+            assert!(s.makespan > 0.0);
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"consumerbench_scenario_matrix\": 1"));
+        assert!(json.contains("\"strategy\": \"greedy\""));
+        assert!(json.contains("\"arrival\": \"poisson\""));
+        assert!(!json.contains("inf"), "non-finite leaked into JSON");
+    }
+
+    #[test]
+    fn failed_slo_app_counts_as_zero_attainment() {
+        use crate::coordinator::executor::NodeResult;
+        let spec = tiny_axes(1).expand().remove(0);
+        let result = ScenarioResult {
+            nodes: vec![NodeResult {
+                id: "Captions (livecaptions)".into(),
+                app: "LiveCaptions",
+                slo: Slo::SegmentTime(2.0),
+                metrics: vec![],
+                start: 0.0,
+                end: 1.0,
+                failed: Some("VRAM OOM".into()),
+            }],
+            trace: vec![],
+            client_names: vec![],
+            makespan: 1.0,
+            policy: "greedy".into(),
+            pjrt_calls: 0,
+        };
+        let outcome = outcome_from(&spec, &result);
+        assert_eq!(outcome.min_attainment, 0.0);
+        assert_eq!(outcome.max_attainment, 0.0);
+        assert!(outcome.apps[0].failed.is_some());
+    }
+
+    #[test]
+    fn json_escaping_and_numbers() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_num(1.5), "1.5");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(f64::NAN), "null");
+    }
+
+    #[test]
+    fn summary_table_lists_every_scenario() {
+        let report = run_matrix(&tiny_axes(7)).unwrap();
+        let table = report.summary_table();
+        assert_eq!(table.lines().count(), 1 + report.scenarios.len());
+    }
+}

@@ -1,0 +1,171 @@
+//! Golden-trace determinism suite.
+//!
+//! The simulator is a pure function of (config, seed): these tests pin that
+//! property end-to-end so engine refactors that silently perturb scheduling
+//! order, float summation order, or workload synthesis are caught by
+//! `cargo test`. "Golden" here means *self-golden*: two runs of the same
+//! scenario must be byte-identical (canonical trace encoding and JSON
+//! report), and a different seed must diverge — no absolute numbers are
+//! pinned, so legitimate calibration changes don't invalidate the suite.
+
+use consumerbench::coordinator::run_config_text;
+use consumerbench::gpusim::engine::{trace_canonical_bytes, trace_digest, TraceSample};
+use consumerbench::scenario::{run_matrix, MatrixAxes};
+
+/// A contended, open-loop heavy-traffic scenario: every arrival model and
+/// two app classes in one config.
+fn mixed_config(seed: u64) -> String {
+    format!(
+        "\
+Chat (chatbot):
+  num_requests: 4
+  device: gpu
+  arrival: poisson
+  rate: 0.5
+Captions (livecaptions):
+  num_requests: 6
+  device: gpu
+Image (imagegen):
+  num_requests: 2
+  device: gpu
+  arrival: trace
+  trace: [0, 0.2, 6]
+strategy: fair_share
+seed: {seed}
+"
+    )
+}
+
+fn run_trace(seed: u64) -> Vec<TraceSample> {
+    let result = run_config_text(&mixed_config(seed), None).unwrap();
+    result.trace
+}
+
+#[test]
+fn same_seed_produces_byte_identical_trace() {
+    let t1 = run_trace(42);
+    let t2 = run_trace(42);
+    assert!(!t1.is_empty());
+    assert_eq!(
+        trace_canonical_bytes(&t1),
+        trace_canonical_bytes(&t2),
+        "two runs of the same scenario+seed must be byte-identical"
+    );
+    assert_eq!(trace_digest(&t1), trace_digest(&t2));
+}
+
+#[test]
+fn same_seed_produces_identical_metrics() {
+    let collect = || {
+        let result = run_config_text(&mixed_config(7), None).unwrap();
+        let mut rows: Vec<(String, u64, u64)> = Vec::new();
+        for node in &result.nodes {
+            for m in &node.metrics {
+                rows.push((
+                    m.label.clone(),
+                    m.latency.to_bits(),
+                    m.normalized.to_bits(),
+                ));
+            }
+        }
+        (rows, result.makespan.to_bits())
+    };
+    assert_eq!(collect(), collect());
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let d42 = trace_digest(&run_trace(42));
+    let d43 = trace_digest(&run_trace(43));
+    assert_ne!(d42, d43, "different seeds must produce different traces");
+}
+
+#[test]
+fn matrix_report_is_byte_identical_across_runs() {
+    // Small matrix (one mix, all three policies, Poisson heavy traffic) so
+    // the byte-identity check stays fast; the default matrix is exercised
+    // once below and through the CLI test.
+    let axes = || {
+        let mut a = MatrixAxes::default_matrix(42);
+        a.mixes.truncate(1);
+        a
+    };
+    let j1 = run_matrix(&axes()).unwrap().to_json();
+    let j2 = run_matrix(&axes()).unwrap().to_json();
+    assert_eq!(j1, j2, "matrix JSON report must reproduce exactly");
+    let j3 = run_matrix(&MatrixAxes {
+        seed: 43,
+        ..axes()
+    })
+    .unwrap()
+    .to_json();
+    assert_ne!(j1, j3, "a different matrix seed must change the report");
+}
+
+#[test]
+fn default_matrix_executes_with_full_coverage() {
+    let axes = MatrixAxes::default_matrix(42);
+    let report = run_matrix(&axes).unwrap();
+    assert!(
+        report.scenarios.len() >= 20,
+        "acceptance floor: >= 20 scenarios, got {}",
+        report.scenarios.len()
+    );
+    assert_eq!(
+        report.strategies(),
+        vec!["greedy", "partition", "fair_share"],
+        "all three policies must be covered"
+    );
+    let mixes: std::collections::BTreeSet<&str> = report
+        .scenarios
+        .iter()
+        .map(|s| s.mix.as_str())
+        .collect();
+    assert!(mixes.len() >= 3, "need >= 3 app mixes, got {mixes:?}");
+    assert!(
+        report.scenarios.iter().any(|s| s.arrival == "poisson"),
+        "at least one open-loop Poisson workload"
+    );
+    // Every scenario actually executed its requests.
+    for s in &report.scenarios {
+        let total: usize = s.apps.iter().map(|a| a.requests).sum();
+        assert!(total > 0, "{}: no requests ran", s.name);
+        assert!(s.makespan > 0.0, "{}: empty makespan", s.name);
+    }
+    // Distinct scenarios produce distinct traces (policies/arrivals really
+    // change engine behaviour rather than being cosmetic labels).
+    let digests: std::collections::BTreeSet<u64> =
+        report.scenarios.iter().map(|s| s.trace_digest).collect();
+    assert!(
+        digests.len() > report.scenarios.len() / 2,
+        "suspiciously many identical traces: {} distinct of {}",
+        digests.len(),
+        report.scenarios.len()
+    );
+}
+
+#[test]
+fn open_loop_poisson_models_queueing_not_lockstep() {
+    // Closed loop: a new chat request only starts after the previous one
+    // finishes (+ think time). Open-loop Poisson at a high rate issues
+    // arrivals independent of completions, so the same request count can
+    // overlap and the span from first to last completion shrinks below the
+    // closed-loop span with its 5 s think gaps.
+    let closed = run_config_text(
+        "Chat (chatbot):\n  num_requests: 4\n  device: gpu\nseed: 9\n",
+        None,
+    )
+    .unwrap();
+    let open = run_config_text(
+        "Chat (chatbot):\n  num_requests: 4\n  device: gpu\n  arrival: poisson\n  rate: 20.0\nseed: 9\n",
+        None,
+    )
+    .unwrap();
+    assert_eq!(open.nodes[0].metrics.len(), 4);
+    assert!(
+        open.nodes[0].duration() < closed.nodes[0].duration(),
+        "high-rate open loop should finish sooner than think-gated closed loop: {} vs {}",
+        open.nodes[0].duration(),
+        closed.nodes[0].duration()
+    );
+}

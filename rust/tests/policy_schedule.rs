@@ -1,0 +1,203 @@
+//! Unit tests for `gpusim::policy::Policy::schedule` — the SM arbitration
+//! invariants each sharing regime must uphold:
+//!
+//! * **Greedy** starves late small kernels behind a device-filling kernel
+//!   (the paper's §4.2 finding) — and never invents SMs.
+//! * **Equal partition** conserves the SM sum: per-client `held + granted`
+//!   never exceeds the static cap, and idle partitions stay idle.
+//! * **Fair share** never grants more than the free capacity, even with
+//!   adversarial ready sets, and redistributes leftovers work-conservingly.
+
+use std::collections::BTreeMap;
+
+use consumerbench::gpusim::policy::{Policy, ReadyKernel};
+use consumerbench::gpusim::ClientId;
+use consumerbench::prop_assert;
+use consumerbench::util::proptest::check;
+
+const TOTAL_SMS: usize = 72;
+
+fn rk(client: usize, t: f64, seq: u64, want: usize) -> ReadyKernel {
+    ReadyKernel {
+        client: ClientId(client),
+        enqueue_time: t,
+        seq,
+        sms_wanted: want,
+    }
+}
+
+// ---------------------------------------------------------------- greedy --
+
+#[test]
+fn greedy_starves_late_small_kernel_while_device_full() {
+    let p = Policy::Greedy;
+    // Device-filler arrives first and takes everything …
+    let ready = [rk(0, 0.0, 0, TOTAL_SMS), rk(1, 0.5, 1, 2)];
+    let grants = p.schedule(&ready, TOTAL_SMS, &BTreeMap::new(), TOTAL_SMS);
+    assert_eq!(grants.len(), 1);
+    assert_eq!(grants[0].ready_index, 0);
+    assert_eq!(grants[0].sms, TOTAL_SMS);
+    // … and while it is resident the small kernel gets nothing at all.
+    let mut held = BTreeMap::new();
+    held.insert(ClientId(0), TOTAL_SMS);
+    let waiting = [rk(1, 0.5, 1, 2)];
+    let grants = p.schedule(&waiting, 0, &held, TOTAL_SMS);
+    assert!(grants.is_empty(), "greedy must starve the late small kernel");
+}
+
+#[test]
+fn greedy_releases_starved_kernel_once_sms_free() {
+    let p = Policy::Greedy;
+    let waiting = [rk(1, 0.5, 1, 2)];
+    let grants = p.schedule(&waiting, TOTAL_SMS, &BTreeMap::new(), TOTAL_SMS);
+    assert_eq!(grants.len(), 1);
+    assert_eq!(grants[0].sms, 2, "small kernel takes only what it wants");
+}
+
+#[test]
+fn greedy_grants_never_exceed_free_randomized() {
+    check("greedy-free-bound", 0x51, 200, |g| {
+        let n = g.usize(1, 10);
+        let ready: Vec<ReadyKernel> = (0..n)
+            .map(|i| rk(g.usize(0, 4), i as f64 * 0.01, i as u64, g.usize(1, 100)))
+            .collect();
+        let free = g.usize(0, TOTAL_SMS + 1);
+        let grants = Policy::Greedy.schedule(&ready, free, &BTreeMap::new(), TOTAL_SMS);
+        let granted: usize = grants.iter().map(|x| x.sms).sum();
+        prop_assert!(granted <= free, "granted {granted} > free {free}");
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------- equal partition ----
+
+#[test]
+fn equal_partition_sm_sum_invariant() {
+    // For every reachable holding state: per-client held + newly granted
+    // never exceeds the client's cap, and the grand total never exceeds the
+    // device.
+    let clients = [ClientId(0), ClientId(1), ClientId(2)];
+    let p = Policy::equal_partition(&clients, TOTAL_SMS);
+    let cap = TOTAL_SMS / clients.len();
+    check("partition-sm-sum", 0x62, 300, |g| {
+        let mut held = BTreeMap::new();
+        let mut held_total = 0;
+        for &c in &clients {
+            let h = g.usize(0, cap + 1);
+            if h > 0 {
+                held.insert(c, h);
+                held_total += h;
+            }
+        }
+        let free = TOTAL_SMS - held_total;
+        let n = g.usize(1, 8);
+        let ready: Vec<ReadyKernel> = (0..n)
+            .map(|i| rk(g.usize(0, clients.len()), i as f64 * 0.01, i as u64, g.usize(1, 100)))
+            .collect();
+        let grants = p.schedule(&ready, free, &held, TOTAL_SMS);
+        let mut after = held.clone();
+        for x in &grants {
+            *after.entry(ready[x.ready_index].client).or_insert(0) += x.sms;
+        }
+        for (&c, &used) in &after {
+            prop_assert!(used <= cap, "client {c:?} holds {used} > cap {cap}");
+        }
+        let total_after: usize = after.values().sum();
+        prop_assert!(
+            total_after <= TOTAL_SMS,
+            "SM sum {total_after} > device {TOTAL_SMS}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn equal_partition_idle_share_stays_idle() {
+    // Static MPS semantics: a lone active client is still capped, leaving
+    // the idle partitions' SMs unused (the paper's under-utilization).
+    let p = Policy::equal_partition(&[ClientId(0), ClientId(1), ClientId(2)], TOTAL_SMS);
+    let ready = [rk(0, 0.0, 0, TOTAL_SMS)];
+    let grants = p.schedule(&ready, TOTAL_SMS, &BTreeMap::new(), TOTAL_SMS);
+    assert_eq!(grants.len(), 1);
+    assert_eq!(grants[0].sms, TOTAL_SMS / 3);
+}
+
+#[test]
+fn equal_partition_full_client_skipped_not_blocking() {
+    let p = Policy::equal_partition(&[ClientId(0), ClientId(1)], TOTAL_SMS);
+    let mut held = BTreeMap::new();
+    held.insert(ClientId(0), TOTAL_SMS / 2); // client 0 at its cap
+    let ready = [rk(0, 0.0, 0, 8), rk(1, 0.1, 1, 8)];
+    let grants = p.schedule(&ready, TOTAL_SMS / 2, &held, TOTAL_SMS);
+    assert_eq!(grants.len(), 1);
+    assert_eq!(grants[0].ready_index, 1, "capped client must not block others");
+}
+
+// ------------------------------------------------------------ fair share --
+
+#[test]
+fn fair_share_never_grants_more_than_capacity() {
+    check("fair-share-capacity", 0x73, 300, |g| {
+        let n_clients = g.usize(1, 6);
+        let n = g.usize(1, 12);
+        let ready: Vec<ReadyKernel> = (0..n)
+            .map(|i| {
+                rk(
+                    g.usize(0, n_clients),
+                    i as f64 * 0.001,
+                    i as u64,
+                    g.usize(1, TOTAL_SMS + 10),
+                )
+            })
+            .collect();
+        let mut held = BTreeMap::new();
+        let mut held_total = 0;
+        for c in 0..n_clients {
+            let h = g.usize(0, 16);
+            if h > 0 && held_total + h <= TOTAL_SMS {
+                held.insert(ClientId(c), h);
+                held_total += h;
+            }
+        }
+        let free = TOTAL_SMS - held_total;
+        let grants = Policy::FairShare.schedule(&ready, free, &held, TOTAL_SMS);
+        let granted: usize = grants.iter().map(|x| x.sms).sum();
+        prop_assert!(
+            granted <= free,
+            "fair share granted {granted} > free {free}"
+        );
+        prop_assert!(
+            granted + held_total <= TOTAL_SMS,
+            "fair share overcommitted the device"
+        );
+        // No duplicate grants.
+        let mut seen = std::collections::BTreeSet::new();
+        for x in &grants {
+            prop_assert!(seen.insert(x.ready_index), "duplicate grant");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fair_share_redistributes_leftover_to_waiting_kernels() {
+    // Two active clients → fair cap 36 each; client 0's second kernel can
+    // still pick up leftovers after both caps are honored (work
+    // conservation, unlike the static partition).
+    let ready = [
+        rk(0, 0.0, 0, TOTAL_SMS),
+        rk(1, 0.1, 1, 10),
+        rk(0, 0.2, 2, TOTAL_SMS),
+    ];
+    let grants = Policy::FairShare.schedule(&ready, TOTAL_SMS, &BTreeMap::new(), TOTAL_SMS);
+    let granted: usize = grants.iter().map(|x| x.sms).sum();
+    assert!(granted <= TOTAL_SMS);
+    // First kernel gets the cap (36), second its want (10), and the third
+    // takes from the 26 leftover in pass 2.
+    assert_eq!(grants[0].sms, 36);
+    assert_eq!(grants[1].sms, 10);
+    assert!(
+        grants.iter().any(|x| x.ready_index == 2),
+        "leftover SMs must be redistributed to waiting kernels"
+    );
+}

@@ -1,5 +1,11 @@
 //! Property-based tests over the simulator, scheduler, and coordinator
 //! invariants, using the in-repo mini-framework (`util::proptest`).
+//!
+//! Triage note (scenario-matrix PR): this suite was failing in the seed
+//! only because the crate could not build (missing `Cargo.toml`, ungated
+//! `xla` dependency in `runtime/`). No property or seed below was changed;
+//! see `tests/policy_schedule.rs` and `tests/golden_trace.rs` for the
+//! schedule-invariant and determinism coverage added on top.
 
 use std::collections::BTreeMap;
 
