@@ -6,7 +6,13 @@
 //! under test are the *shapes*: who wins, by roughly what factor, where the
 //! crossovers fall (DESIGN.md §6).
 
+use std::time::Instant;
+
 use consumerbench::coordinator::{run_config_text, NodeResult, ScenarioResult};
+use consumerbench::gpusim::engine::{Engine, JobSpec, Phase, Trace};
+use consumerbench::gpusim::kernel::KernelDesc;
+use consumerbench::gpusim::policy::Policy;
+use consumerbench::gpusim::profiles::Testbed;
 use consumerbench::monitor::MonitorReport;
 
 /// Run a config without PJRT (virtual-time measurement only — artifacts are
@@ -15,9 +21,41 @@ pub fn run(cfg: &str) -> ScenarioResult {
     run_config_text(cfg, None).unwrap_or_else(|e| panic!("scenario failed: {e}"))
 }
 
-/// Monitor view of a result.
+/// Monitor view of a result (same grid as the coordinator's reports).
 pub fn monitor(result: &ScenarioResult) -> MonitorReport {
-    MonitorReport::from_trace(&result.trace, &result.client_names, 0.1)
+    MonitorReport::from_trace(
+        &result.trace,
+        &result.client_names,
+        consumerbench::monitor::DEFAULT_INTERVAL,
+    )
+}
+
+/// Shared engine-throughput workload (perf_engine + microbench): `jobs`
+/// jobs × `kernels_per_job` kernels with interleaved arrivals across four
+/// clients under Greedy. Returns (kernel-events per second, the recorded
+/// trace). One definition so the two bench targets stay comparable.
+#[allow(dead_code)]
+pub fn engine_events_per_sec(trace: bool, jobs: usize, kernels_per_job: usize) -> (f64, Trace) {
+    let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+    e.set_trace_enabled(trace);
+    let clients: Vec<_> = (0..4).map(|i| e.register_client(format!("c{i}"))).collect();
+    let kernel = KernelDesc::new("k", 288, 256, 80, 8 * 1024, 1e8, 5e6);
+    for j in 0..jobs {
+        e.submit(
+            JobSpec {
+                client: clients[j % clients.len()],
+                label: format!("j{j}"),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel.clone(); kernels_per_job])],
+            },
+            j as f64 * 1e-4,
+        );
+    }
+    let events = (jobs * kernels_per_job * 2) as f64; // launch + completion
+    let t0 = Instant::now();
+    e.run_all();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(e.take_completed().len(), jobs);
+    (events / dt.max(1e-9), e.take_trace())
 }
 
 /// Print the standard per-application row (Fig. 3/5-style).

@@ -1,0 +1,167 @@
+//! Micro-benchmark suite → `BENCH.json`.
+//!
+//! Three hot paths, each reported as a machine-readable entry so every
+//! future PR has a perf trajectory to regress against:
+//!
+//! * **engine-throughput** — simulated kernel-events per second through the
+//!   discrete-event engine, with trace recording on and off;
+//! * **sweep-wall-clock** — scenario-matrix wall time at `--jobs 1` vs.
+//!   all available workers (the parallel-sweep speedup);
+//! * **digest-rate** — bytes per second through the streaming FNV-1a trace
+//!   digest.
+//!
+//! Usage (a `harness = false` bench target):
+//!
+//! ```text
+//! cargo bench --bench microbench [-- --fast] [-- --out PATH]
+//! ```
+//!
+//! `--fast` shrinks the workloads for CI smoke runs; `--out` overrides the
+//! default output path. Only a full run defaults to the committed
+//! `BENCH.json` at the repository root — fast mode defaults to
+//! `target/BENCH-fast.json` so a smoke run can't silently overwrite the
+//! perf-trajectory baseline with non-comparable numbers.
+
+use std::time::Instant;
+
+use consumerbench::gpusim::engine::{trace_digest, Trace};
+use consumerbench::scenario::{run_matrix_jobs, MatrixAxes};
+use consumerbench::util::json::{json_num, json_str};
+
+#[path = "common.rs"]
+mod common;
+use common::engine_events_per_sec;
+
+struct Entry {
+    name: &'static str,
+    value: f64,
+    unit: &'static str,
+}
+
+/// Streaming digest throughput over a recorded engine trace.
+fn digest_bytes_per_sec(trace: &Trace, reps: usize) -> f64 {
+    // Canonical size: an 8-byte trace-length prefix, then per row 44 bytes
+    // of scalar counters (t f64 + 7×f32 + vram u64) + an 8-byte per-client
+    // count + 8 bytes per client entry.
+    let per_client_bytes: usize = (0..trace.len()).map(|i| trace.per_client(i).len() * 8).sum();
+    let bytes = 8 + trace.len() * 52 + per_client_bytes;
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..reps.max(1) {
+        acc = acc.wrapping_add(std::hint::black_box(trace_digest(trace)));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    (bytes * reps.max(1)) as f64 / dt.max(1e-9)
+}
+
+/// Scenario-matrix sweep wall-clock at a given worker count.
+fn sweep_wall_clock(axes: &MatrixAxes, jobs: usize) -> f64 {
+    let t0 = Instant::now();
+    let report = run_matrix_jobs(axes, jobs).expect("sweep failed");
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(!report.scenarios.is_empty());
+    dt
+}
+
+fn render_json(mode: &str, jobs: usize, entries: &[Entry]) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str("{\n");
+    out.push_str("  \"consumerbench_bench\": 1,\n");
+    out.push_str(&format!("  \"mode\": {},\n", json_str(mode)));
+    out.push_str(&format!("  \"sweep_jobs\": {jobs},\n"));
+    out.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": {}, \"value\": {}, \"unit\": {}}}",
+            json_str(e.name),
+            json_num(e.value),
+            json_str(e.unit)
+        ));
+        out.push_str(if i + 1 < entries.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| {
+            if fast {
+                // Don't clobber the committed full-mode baseline with
+                // non-comparable smoke numbers.
+                format!("{}/target/BENCH-fast.json", env!("CARGO_MANIFEST_DIR"))
+            } else {
+                format!("{}/../BENCH.json", env!("CARGO_MANIFEST_DIR"))
+            }
+        });
+
+    let (jobs, kernels, digest_reps) = if fast { (200, 25, 20) } else { (2_000, 50, 100) };
+    let mode = if fast { "fast" } else { "full" };
+
+    let (eps_traced, trace) = engine_events_per_sec(true, jobs, kernels);
+    let (eps_untraced, _) = engine_events_per_sec(false, jobs, kernels);
+    let digest_rate = digest_bytes_per_sec(&trace, digest_reps);
+
+    let mut axes = MatrixAxes::default_matrix(42);
+    if fast {
+        axes.mixes.truncate(1); // 6 scenarios instead of 24
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let sweep_seq = sweep_wall_clock(&axes, 1);
+    let sweep_par = sweep_wall_clock(&axes, workers);
+
+    let entries = [
+        Entry {
+            name: "engine_events_per_sec_traced",
+            value: eps_traced,
+            unit: "events/s",
+        },
+        Entry {
+            name: "engine_events_per_sec_untraced",
+            value: eps_untraced,
+            unit: "events/s",
+        },
+        Entry {
+            name: "trace_digest_rate",
+            value: digest_rate,
+            unit: "bytes/s",
+        },
+        Entry {
+            name: "sweep_wall_clock_jobs1",
+            value: sweep_seq,
+            unit: "s",
+        },
+        Entry {
+            name: "sweep_wall_clock_jobsN",
+            value: sweep_par,
+            unit: "s",
+        },
+        Entry {
+            name: "sweep_parallel_speedup",
+            value: sweep_seq / sweep_par.max(1e-9),
+            unit: "x",
+        },
+    ];
+
+    let json = render_json(mode, workers, &entries);
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(&out_path, &json).expect("writing BENCH.json");
+
+    println!("=== ConsumerBench micro-benchmarks ({mode}) ===");
+    for e in &entries {
+        println!("{:<34} {:>14.1} {}", e.name, e.value, e.unit);
+    }
+    println!("wrote {out_path}");
+}

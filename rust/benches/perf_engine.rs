@@ -7,36 +7,10 @@
 use std::time::Instant;
 
 use consumerbench::coordinator::run_config_text;
-use consumerbench::gpusim::engine::{Engine, JobSpec, Phase};
-use consumerbench::gpusim::kernel::KernelDesc;
-use consumerbench::gpusim::policy::Policy;
-use consumerbench::gpusim::profiles::Testbed;
 
-/// Raw engine throughput: N jobs × K kernels with interleaved arrivals.
-fn engine_events_per_sec(trace: bool) -> f64 {
-    let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
-    e.set_trace_enabled(trace);
-    let clients: Vec<_> = (0..4).map(|i| e.register_client(format!("c{i}"))).collect();
-    let kernel = KernelDesc::new("k", 288, 256, 80, 8 * 1024, 1e8, 5e6);
-    let jobs = 2_000;
-    let kernels_per_job = 50;
-    for j in 0..jobs {
-        e.submit(
-            JobSpec {
-                client: clients[j % clients.len()],
-                label: format!("j{j}"),
-                phases: vec![Phase::gpu("p", 0.0, vec![kernel.clone(); kernels_per_job])],
-            },
-            j as f64 * 1e-4,
-        );
-    }
-    let events = (jobs * kernels_per_job * 2) as f64; // launch + completion
-    let t0 = Instant::now();
-    e.run_all();
-    let dt = t0.elapsed().as_secs_f64();
-    assert_eq!(e.take_completed().len(), jobs);
-    events / dt
-}
+#[path = "common.rs"]
+mod common;
+use common::engine_events_per_sec;
 
 /// End-to-end scenario wallclock (the Fig. 5 workload).
 fn fig5_wallclock() -> f64 {
@@ -61,8 +35,8 @@ seed: 42
 }
 
 fn main() {
-    let eps_traced = engine_events_per_sec(true);
-    let eps_untraced = engine_events_per_sec(false);
+    let (eps_traced, _) = engine_events_per_sec(true, 2_000, 50);
+    let (eps_untraced, _) = engine_events_per_sec(false, 2_000, 50);
     let wall = fig5_wallclock();
     println!("=== §Perf: L3 engine hot path ===");
     println!("engine throughput (trace on):  {:>10.0} kernel-events/s", eps_traced);

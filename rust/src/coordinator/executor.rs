@@ -21,7 +21,7 @@ use crate::apps::{
 use crate::apps::models::{llama_3_1_8b, llama_3_2_3b};
 use crate::coordinator::config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
 use crate::coordinator::dag::{Dag, NodeId};
-use crate::gpusim::engine::{Engine, JobId, JobResult, JobSpec, Phase, TraceSample};
+use crate::gpusim::engine::{Engine, JobId, JobResult, JobSpec, Phase, Trace};
 use crate::gpusim::kernel::Device;
 use crate::gpusim::policy::Policy;
 use crate::gpusim::profiles::Testbed;
@@ -107,7 +107,8 @@ impl NodeResult {
 #[derive(Debug)]
 pub struct ScenarioResult {
     pub nodes: Vec<NodeResult>,
-    pub trace: Vec<TraceSample>,
+    /// Columnar monitor trace (right-sized when drained from the engine).
+    pub trace: Trace,
     pub client_names: Vec<String>,
     pub makespan: f64,
     pub policy: String,

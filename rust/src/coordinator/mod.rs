@@ -15,4 +15,4 @@ pub mod report;
 pub use config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
 pub use dag::Dag;
 pub use executor::{run_config_text, NodeResult, ScenarioResult, ScenarioRunner};
-pub use report::{generate, to_csv, BenchmarkReport};
+pub use report::{generate, to_csv, to_json_summary, BenchmarkReport};

@@ -8,6 +8,7 @@
 use crate::apps::Slo;
 use crate::coordinator::executor::ScenarioResult;
 use crate::monitor::MonitorReport;
+use crate::util::json::{json_num, json_str};
 use crate::util::stats::Summary;
 
 /// A rendered benchmark report.
@@ -19,7 +20,11 @@ pub struct BenchmarkReport {
 
 /// Build the report for a scenario result.
 pub fn generate(result: &ScenarioResult) -> BenchmarkReport {
-    let monitor = MonitorReport::from_trace(&result.trace, &result.client_names, 0.1);
+    let monitor = MonitorReport::from_trace(
+        &result.trace,
+        &result.client_names,
+        crate::monitor::DEFAULT_INTERVAL,
+    );
     let mut out = String::new();
     out.push_str("==============================================================\n");
     out.push_str(" ConsumerBench report\n");
@@ -92,6 +97,68 @@ pub fn generate(result: &ScenarioResult) -> BenchmarkReport {
     BenchmarkReport { text: out, monitor }
 }
 
+/// Deterministic machine-readable summary of a workflow run (per-node SLO
+/// attainment + system metrics), rendered with the shared `util::json`
+/// primitives — the same canonical style as the scenario-matrix report.
+/// Takes the already-resampled `monitor` (from [`generate`]) so the trace
+/// is not walked a second time.
+pub fn to_json_summary(result: &ScenarioResult, monitor: &MonitorReport) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str("{\n");
+    out.push_str("  \"consumerbench_run\": 1,\n");
+    out.push_str(&format!("  \"policy\": {},\n", json_str(&result.policy)));
+    out.push_str(&format!(
+        "  \"makespan_s\": {},\n",
+        json_num(result.makespan)
+    ));
+    out.push_str(&format!("  \"pjrt_calls\": {},\n", result.pjrt_calls));
+    out.push_str("  \"nodes\": [\n");
+    for (i, node) in result.nodes.iter().enumerate() {
+        let lats: Vec<f64> = node.metrics.iter().map(|m| m.latency).collect();
+        let (p50, p99) = Summary::of(&lats)
+            .map(|s| (s.p50, s.p99))
+            .unwrap_or((0.0, 0.0));
+        out.push_str("    {");
+        out.push_str(&format!("\"node\": {}, ", json_str(&node.id)));
+        out.push_str(&format!("\"app\": {}, ", json_str(node.app)));
+        out.push_str(&format!("\"requests\": {}, ", node.metrics.len()));
+        out.push_str(&format!("\"attainment\": {}, ", json_num(node.attainment())));
+        out.push_str(&format!("\"p50_latency_s\": {}, ", json_num(p50)));
+        out.push_str(&format!("\"p99_latency_s\": {}, ", json_num(p99)));
+        match &node.failed {
+            Some(e) => out.push_str(&format!("\"failed\": {}", json_str(e))),
+            None => out.push_str("\"failed\": null"),
+        }
+        out.push('}');
+        out.push_str(if i + 1 < result.nodes.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"system\": {\n");
+    out.push_str(&format!(
+        "    \"mean_busy_smact\": {},\n",
+        json_num(monitor.mean_busy_smact())
+    ));
+    out.push_str(&format!(
+        "    \"mean_busy_smocc\": {},\n",
+        json_num(monitor.mean_busy_smocc())
+    ));
+    out.push_str(&format!(
+        "    \"peak_vram_gib\": {},\n",
+        json_num(monitor.peak_vram_gib())
+    ));
+    out.push_str(&format!(
+        "    \"gpu_energy_j\": {},\n",
+        json_num(monitor.gpu_energy())
+    ));
+    out.push_str(&format!(
+        "    \"cpu_energy_j\": {}\n",
+        json_num(monitor.cpu_energy())
+    ));
+    out.push_str("  }\n");
+    out.push_str("}\n");
+    out
+}
+
 /// CSV export of the core per-request data (one row per request).
 pub fn to_csv(result: &ScenarioResult) -> String {
     let mut out = String::from("node,app,request,latency_s,normalized,slo_met\n");
@@ -149,5 +216,22 @@ mod tests {
         assert_eq!(truncate("short", 28), "short");
         let long = "x".repeat(64);
         assert_eq!(truncate(&long, 28).chars().count(), 28);
+    }
+
+    #[test]
+    fn json_summary_is_deterministic_and_complete() {
+        let cfg = "Chat (chatbot):\n  num_requests: 2\n";
+        let summarize = || {
+            let result = run_config_text(cfg, None).unwrap();
+            let report = generate(&result);
+            to_json_summary(&result, &report.monitor)
+        };
+        let j1 = summarize();
+        let j2 = summarize();
+        assert_eq!(j1, j2, "run summary JSON must reproduce byte-for-byte");
+        assert!(j1.contains("\"consumerbench_run\": 1"));
+        assert!(j1.contains("\"Chat (chatbot)\""));
+        assert!(j1.contains("\"mean_busy_smact\""));
+        assert!(!j1.contains("inf"), "non-finite leaked into JSON");
     }
 }

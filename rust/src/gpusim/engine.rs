@@ -16,13 +16,19 @@
 //! time without the engine knowing about them.
 
 use std::cmp::Ordering;
-use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::gpusim::kernel::{duration, occupancy, sms_wanted, Device, KernelDesc};
 use crate::gpusim::policy::{Policy, ReadyKernel};
 use crate::gpusim::power::{cpu_power, gpu_power};
 use crate::gpusim::profiles::Testbed;
 use crate::gpusim::vram::VramAllocator;
+
+// The trace lives in its own module; re-exported here so existing
+// `gpusim::engine::{TraceSample, trace_digest, …}` imports keep working.
+pub use crate::gpusim::trace::{
+    trace_canonical_bytes, trace_digest, Fnv1a, Trace, TraceRow, TraceSample, TraceView,
+};
 
 /// Identifies a registered application/client.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -160,71 +166,6 @@ impl JobResult {
     }
 }
 
-/// One sampled point of the monitor trace (piecewise-constant until the next).
-#[derive(Debug, Clone, PartialEq)]
-pub struct TraceSample {
-    pub t: f64,
-    pub gpu_smact: f32,
-    pub gpu_smocc: f32,
-    pub gpu_bw_frac: f32,
-    pub gpu_power: f32,
-    pub vram_used: u64,
-    pub cpu_util: f32,
-    pub dram_bw_frac: f32,
-    pub cpu_power: f32,
-    /// Per-client (smact, smocc), indexed by ClientId.
-    pub per_client: Vec<(f32, f32)>,
-}
-
-impl TraceSample {
-    /// Append this sample's canonical byte encoding to `out`.
-    ///
-    /// The encoding is exact-bit-pattern (little-endian `to_bits`), not a
-    /// decimal rendering, so two traces are byte-identical if and only if
-    /// every recorded float is bit-identical — the contract the golden-trace
-    /// determinism tests pin down.
-    pub fn canonical_bytes(&self, out: &mut Vec<u8>) {
-        out.extend_from_slice(&self.t.to_bits().to_le_bytes());
-        out.extend_from_slice(&self.gpu_smact.to_bits().to_le_bytes());
-        out.extend_from_slice(&self.gpu_smocc.to_bits().to_le_bytes());
-        out.extend_from_slice(&self.gpu_bw_frac.to_bits().to_le_bytes());
-        out.extend_from_slice(&self.gpu_power.to_bits().to_le_bytes());
-        out.extend_from_slice(&self.vram_used.to_le_bytes());
-        out.extend_from_slice(&self.cpu_util.to_bits().to_le_bytes());
-        out.extend_from_slice(&self.dram_bw_frac.to_bits().to_le_bytes());
-        out.extend_from_slice(&self.cpu_power.to_bits().to_le_bytes());
-        out.extend_from_slice(&(self.per_client.len() as u64).to_le_bytes());
-        for (act, occ) in &self.per_client {
-            out.extend_from_slice(&act.to_bits().to_le_bytes());
-            out.extend_from_slice(&occ.to_bits().to_le_bytes());
-        }
-    }
-}
-
-/// Canonical byte encoding of a whole trace (see
-/// [`TraceSample::canonical_bytes`]).
-pub fn trace_canonical_bytes(trace: &[TraceSample]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(trace.len() * 64);
-    out.extend_from_slice(&(trace.len() as u64).to_le_bytes());
-    for s in trace {
-        s.canonical_bytes(&mut out);
-    }
-    out
-}
-
-/// FNV-1a 64-bit digest over the canonical trace encoding — a compact
-/// fingerprint for golden-trace tests and scenario reports.
-pub fn trace_digest(trace: &[TraceSample]) -> u64 {
-    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut hash = FNV_OFFSET;
-    for byte in trace_canonical_bytes(trace) {
-        hash ^= byte as u64;
-        hash = hash.wrapping_mul(FNV_PRIME);
-    }
-    hash
-}
-
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum EventKind {
     PhaseBegin,
@@ -284,7 +225,7 @@ struct GpuReady {
 
 #[derive(Debug, Clone)]
 struct GpuResident {
-    #[allow(dead_code)]
+    /// Sort key of the resident set (ascending JobId).
     job: JobId,
     client: ClientId,
     sms: usize,
@@ -292,7 +233,7 @@ struct GpuResident {
     bw_rate: f64, // bytes/sec while resident
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct CpuReady {
     seq: u64,
     job: JobId,
@@ -301,7 +242,7 @@ struct CpuReady {
 
 #[derive(Debug, Clone)]
 struct CpuResident {
-    #[allow(dead_code)]
+    /// Sort key of the resident set (ascending JobId).
     job: JobId,
     cores: usize,
     bw_rate: f64,
@@ -325,20 +266,29 @@ pub struct Engine {
     gpu_ready: VecDeque<GpuReady>,
     /// Reused policy-view buffer (no allocation on the hot path).
     gpu_ready_scratch: Vec<ReadyKernel>,
-    /// BTreeMap (not HashMap): `record()` sums f64 rates over the resident
-    /// sets, and float addition is order-sensitive — iteration order must be
-    /// fixed for traces to be byte-identical across runs (golden-trace
-    /// determinism).
-    gpu_resident: BTreeMap<JobId, GpuResident>,
-    gpu_held: BTreeMap<ClientId, usize>,
+    /// Reused launch buffer for `schedule_gpu` (no allocation per pass).
+    gpu_launch_scratch: Vec<(GpuReady, usize)>,
+    /// Resident GPU kernels, kept sorted by JobId. `record()` sums f64
+    /// rates over the resident sets and float addition is order-sensitive,
+    /// so iteration order must be fixed for traces to be byte-identical
+    /// across runs (golden-trace determinism). A sorted Vec reproduces the
+    /// old BTreeMap's ascending-JobId order with dense cache-friendly
+    /// iteration on the per-event sampling path.
+    gpu_resident: Vec<GpuResident>,
+    /// SMs held per client, dense by ClientId (clients are interned 0..n).
+    gpu_held: Vec<usize>,
     vram: VramAllocator,
     // CPU state
     cpu_free_cores: usize,
-    cpu_ready: Vec<CpuReady>,
-    cpu_resident: BTreeMap<JobId, CpuResident>,
+    /// FIFO by construction (`now` and `seq` are monotone at push time), so
+    /// no per-pass sort; launches always drain a prefix.
+    cpu_ready: VecDeque<CpuReady>,
+    /// Resident CPU work, sorted by JobId (same determinism argument as
+    /// `gpu_resident`).
+    cpu_resident: Vec<CpuResident>,
     // Outputs
     completed: Vec<JobResult>,
-    trace: Vec<TraceSample>,
+    trace: Trace,
     trace_enabled: bool,
 }
 
@@ -353,20 +303,21 @@ impl Engine {
             now: 0.0,
             seq: 0,
             next_job: 0,
-            events: BinaryHeap::new(),
+            events: BinaryHeap::with_capacity(1024),
             clients: Vec::new(),
             jobs: HashMap::new(),
             gpu_free_sms: gpu_sms,
-            gpu_ready: VecDeque::new(),
+            gpu_ready: VecDeque::with_capacity(64),
             gpu_ready_scratch: Vec::new(),
-            gpu_resident: BTreeMap::new(),
-            gpu_held: BTreeMap::new(),
+            gpu_launch_scratch: Vec::new(),
+            gpu_resident: Vec::with_capacity(64),
+            gpu_held: Vec::new(),
             vram,
             cpu_free_cores: cpu_cores,
-            cpu_ready: Vec::new(),
-            cpu_resident: BTreeMap::new(),
+            cpu_ready: VecDeque::with_capacity(16),
+            cpu_resident: Vec::with_capacity(16),
             completed: Vec::new(),
-            trace: Vec::new(),
+            trace: Trace::new(),
             trace_enabled: true,
         }
     }
@@ -392,6 +343,7 @@ impl Engine {
 
     pub fn register_client(&mut self, name: impl Into<String>) -> ClientId {
         self.clients.push(name.into());
+        self.gpu_held.push(0);
         ClientId(self.clients.len() - 1)
     }
 
@@ -411,12 +363,17 @@ impl Engine {
         &self.vram
     }
 
-    pub fn trace(&self) -> &[TraceSample] {
+    pub fn trace(&self) -> &Trace {
         &self.trace
     }
 
-    pub fn take_trace(&mut self) -> Vec<TraceSample> {
-        std::mem::take(&mut self.trace)
+    /// Drain the recorded trace. The returned buffer is shrunk to its
+    /// length so long sweeps that hold many drained traces don't pin the
+    /// engines' peak recording capacity.
+    pub fn take_trace(&mut self) -> Trace {
+        let mut t = std::mem::take(&mut self.trace);
+        t.shrink_to_fit();
+        t
     }
 
     fn next_seq(&mut self) -> u64 {
@@ -471,11 +428,13 @@ impl Engine {
 
     /// Process all events with time <= `t`; afterwards `now == max(now, t)`.
     pub fn run_until(&mut self, t: f64) {
-        while let Some(ev) = self.events.peek() {
-            if ev.time > t {
+        // Single peek-then-pop: the heap head is inspected once and popped
+        // through the same `PeekMut` handle (no second sift/unwrap pass).
+        while let Some(head) = self.events.peek_mut() {
+            if head.time > t {
                 break;
             }
-            let ev = self.events.pop().unwrap();
+            let ev = std::collections::binary_heap::PeekMut::pop(head);
             debug_assert!(ev.time >= self.now - 1e-9, "event heap went backwards");
             self.now = ev.time.max(self.now);
             self.process(ev);
@@ -516,7 +475,7 @@ impl Engine {
     }
 
     fn on_phase_begin(&mut self, job: JobId) {
-        let (mem_ops, device, has_kernels, has_cpu, client, label) = {
+        let (num_mem_ops, device, has_kernels, has_cpu, client) = {
             let js = self.jobs.get_mut(&job).expect("unknown job");
             js.phase_start = self.now;
             js.cur_kernel = 0;
@@ -524,38 +483,40 @@ impl Engine {
             js.queue_wait = 0.0;
             let ph = &js.spec.phases[js.cur_phase];
             (
-                ph.mem_ops.clone(),
+                ph.mem_ops.len(),
                 ph.device,
                 !ph.kernels.is_empty(),
                 ph.cpu.is_some(),
                 js.spec.client,
-                js.spec.label.clone(),
             )
         };
-        // Apply memory ops; OOM fails the job.
-        for op in mem_ops {
-            match op {
-                MemOp::Alloc { label: l, bytes } => {
-                    let cname = self.clients[client.0].clone();
-                    if let Err(e) = self.vram.alloc(&cname, &l, bytes) {
-                        self.fail_job(job, format!("{e}"));
-                        return;
-                    }
-                }
+        // Apply memory ops in place (no clone of the op list or the client
+        // name); OOM fails the job.
+        for i in 0..num_mem_ops {
+            let js = &self.jobs[&job];
+            let op = &js.spec.phases[js.cur_phase].mem_ops[i];
+            let oom = match op {
+                MemOp::Alloc { label, bytes } => self
+                    .vram
+                    .alloc(&self.clients[client.0], label, *bytes)
+                    .err(),
                 MemOp::FreeAll => {
-                    let cname = self.clients[client.0].clone();
-                    self.vram.free_client(&cname);
+                    self.vram.free_client(&self.clients[client.0]);
+                    None
                 }
+            };
+            if let Some(e) = oom {
+                self.fail_job(job, format!("{e}"));
+                return;
             }
         }
-        let _ = label;
         match device {
             Device::Gpu if has_kernels => {
                 self.push_gpu_ready(job);
             }
             Device::Cpu if has_cpu => {
                 let seq = self.next_seq();
-                self.cpu_ready.push(CpuReady {
+                self.cpu_ready.push_back(CpuReady {
                     seq,
                     job,
                     ready_since: self.now,
@@ -567,13 +528,13 @@ impl Engine {
     }
 
     fn on_kernel_done(&mut self, job: JobId) {
-        let res = self.gpu_resident.remove(&job).expect("kernel done without residency");
+        let idx = self
+            .gpu_resident
+            .binary_search_by_key(&job, |r| r.job)
+            .expect("kernel done without residency");
+        let res = self.gpu_resident.remove(idx);
         self.gpu_free_sms += res.sms;
-        let held = self.gpu_held.get_mut(&res.client).expect("held_by missing");
-        *held -= res.sms;
-        if *held == 0 {
-            self.gpu_held.remove(&res.client);
-        }
+        self.gpu_held[res.client.0] -= res.sms;
 
         let more_kernels = {
             let js = self.jobs.get_mut(&job).expect("unknown job");
@@ -594,7 +555,11 @@ impl Engine {
     }
 
     fn on_cpu_done(&mut self, job: JobId) {
-        let res = self.cpu_resident.remove(&job).expect("cpu done without residency");
+        let idx = self
+            .cpu_resident
+            .binary_search_by_key(&job, |r| r.job)
+            .expect("cpu done without residency");
+        let res = self.cpu_resident.remove(idx);
         self.cpu_free_cores += res.cores;
         self.finish_phase(job);
     }
@@ -711,14 +676,15 @@ impl Engine {
         if grants.is_empty() {
             return;
         }
-        // Collect the granted entries, then remove them from the ready list
-        // — as one `drain` when the grant set is a prefix (the common case),
-        // otherwise by descending index.
+        // Collect the granted entries into the reused launch buffer, then
+        // remove them from the ready list — as a head advance when the grant
+        // set is a prefix (the common case), otherwise by descending index.
         let is_prefix = grants.iter().enumerate().all(|(i, g)| g.ready_index == i);
-        let mut launches: Vec<(GpuReady, usize)> = grants
-            .iter()
-            .map(|g| (self.gpu_ready[g.ready_index].clone(), g.sms))
-            .collect();
+        let mut launches = std::mem::take(&mut self.gpu_launch_scratch);
+        launches.clear();
+        for g in &grants {
+            launches.push((self.gpu_ready[g.ready_index].clone(), g.sms));
+        }
         if is_prefix {
             // Ring-buffer head advance: O(grants), not O(queue).
             for _ in 0..grants.len() {
@@ -754,9 +720,15 @@ impl Engine {
                 js.exec_time += dur;
             }
             self.gpu_free_sms -= sms;
-            *self.gpu_held.entry(client).or_insert(0) += sms;
+            self.gpu_held[client.0] += sms;
+            // Insert keeping the resident set sorted by JobId (the fixed
+            // iteration order the trace's float sums depend on).
+            let pos = self
+                .gpu_resident
+                .binary_search_by_key(&entry.job, |r| r.job)
+                .expect_err("job already resident");
             self.gpu_resident.insert(
-                entry.job,
+                pos,
                 GpuResident {
                     job: entry.job,
                     client,
@@ -773,23 +745,27 @@ impl Engine {
                 job: entry.job,
             });
         }
+        self.gpu_launch_scratch = launches;
     }
 
     fn schedule_cpu(&mut self) {
-        // FIFO over ready CPU work.
-        self.cpu_ready.sort_by(|a, b| {
-            a.ready_since
-                .partial_cmp(&b.ready_since)
-                .unwrap()
-                .then(a.seq.cmp(&b.seq))
-        });
+        if self.cpu_ready.is_empty() || self.cpu_free_cores == 0 {
+            return;
+        }
+        // The ready queue is FIFO by construction: entries are pushed with
+        // monotone (`now`, `seq`), so the old per-pass sort is a no-op.
+        debug_assert!(self
+            .cpu_ready
+            .iter()
+            .zip(self.cpu_ready.iter().skip(1))
+            .all(|(a, b)| (a.ready_since, a.seq) <= (b.ready_since, b.seq)));
         let cpu = self.testbed.cpu.clone();
-        let mut launched = Vec::new();
-        let ready_snapshot = self.cpu_ready.clone();
-        for (i, entry) in ready_snapshot.iter().enumerate() {
-            if self.cpu_free_cores == 0 {
+        // Every considered entry launches (cores = min(threads, free) >= 1),
+        // so the launched set is always a queue prefix: pop from the head.
+        while self.cpu_free_cores > 0 {
+            let Some(&entry) = self.cpu_ready.front() else {
                 break;
-            }
+            };
             let work = {
                 let js = &self.jobs[&entry.job];
                 js.spec.phases[js.cur_phase].cpu.clone().expect("cpu phase without work")
@@ -807,8 +783,12 @@ impl Engine {
                 js.exec_time += dur;
             }
             self.cpu_free_cores -= cores;
+            let pos = self
+                .cpu_resident
+                .binary_search_by_key(&entry.job, |r| r.job)
+                .expect_err("job already resident on cpu");
             self.cpu_resident.insert(
-                entry.job,
+                pos,
                 CpuResident {
                     job: entry.job,
                     cores,
@@ -822,10 +802,7 @@ impl Engine {
                 kind: EventKind::CpuDone,
                 job: entry.job,
             });
-            launched.push(i);
-        }
-        for &i in launched.iter().rev() {
-            self.cpu_ready.remove(i);
+            self.cpu_ready.pop_front();
         }
     }
 
@@ -841,62 +818,70 @@ impl Engine {
         let cpu = &self.testbed.cpu;
         let total_sms = gpu.num_sms as f64;
         let smact = (gpu.num_sms - self.gpu_free_sms) as f64 / total_sms;
-        let smocc: f64 = self
-            .gpu_resident
-            .values()
-            .map(|r| r.sms as f64 * r.occupancy)
-            .sum::<f64>()
-            / total_sms;
-        let bw_frac = (self
-            .gpu_resident
-            .values()
-            .map(|r| r.bw_rate)
-            .sum::<f64>()
-            / gpu.mem_bw)
-            .min(1.0);
+        // Single pass over the (JobId-sorted) resident set: same summation
+        // order as the old BTreeMap walk, one traversal instead of three.
+        let mut smocc = 0.0f64;
+        let mut gpu_bw = 0.0f64;
+        for r in &self.gpu_resident {
+            smocc += r.sms as f64 * r.occupancy;
+            gpu_bw += r.bw_rate;
+        }
+        let smocc = smocc / total_sms;
+        let bw_frac = (gpu_bw / gpu.mem_bw).min(1.0);
         let cpu_util = (cpu.num_cores - self.cpu_free_cores) as f64 / cpu.num_cores as f64;
         let dram_frac = (self
             .cpu_resident
-            .values()
+            .iter()
             .map(|r| r.bw_rate)
             .sum::<f64>()
             / cpu.mem_bw)
             .min(1.0);
-        let mut per_client = vec![(0.0f32, 0.0f32); self.clients.len()];
-        for r in self.gpu_resident.values() {
+        // Columnar append: the per-client slice is written in place — no
+        // per-sample heap allocation.
+        let per_client = self.trace.push_row(
+            TraceRow {
+                t: self.now,
+                gpu_smact: smact as f32,
+                gpu_smocc: smocc as f32,
+                gpu_bw_frac: bw_frac as f32,
+                gpu_power: gpu_power(gpu, smact, smocc, bw_frac) as f32,
+                vram_used: self.vram.used(),
+                cpu_util: cpu_util as f32,
+                dram_bw_frac: dram_frac as f32,
+                cpu_power: cpu_power(cpu, cpu_util, dram_frac) as f32,
+            },
+            self.clients.len(),
+        );
+        for r in &self.gpu_resident {
             let e = &mut per_client[r.client.0];
             e.0 += (r.sms as f64 / total_sms) as f32;
             e.1 += (r.sms as f64 * r.occupancy / total_sms) as f32;
         }
-        self.trace.push(TraceSample {
-            t: self.now,
-            gpu_smact: smact as f32,
-            gpu_smocc: smocc as f32,
-            gpu_bw_frac: bw_frac as f32,
-            gpu_power: gpu_power(gpu, smact, smocc, bw_frac) as f32,
-            vram_used: self.vram.used(),
-            cpu_util: cpu_util as f32,
-            dram_bw_frac: dram_frac as f32,
-            cpu_power: cpu_power(cpu, cpu_util, dram_frac) as f32,
-            per_client,
-        });
     }
 
     /// Invariant check used by property tests: SM/core accounting balances.
     pub fn check_invariants(&self) {
-        let gpu_held: usize = self.gpu_held.values().sum();
-        let resident: usize = self.gpu_resident.values().map(|r| r.sms).sum();
+        let gpu_held: usize = self.gpu_held.iter().sum();
+        let resident: usize = self.gpu_resident.iter().map(|r| r.sms).sum();
         assert_eq!(gpu_held, resident, "held/resident mismatch");
         assert_eq!(
             self.gpu_free_sms + resident,
             self.testbed.gpu.num_sms,
             "SM conservation violated"
         );
-        let cpu_busy: usize = self.cpu_resident.values().map(|r| r.cores).sum();
+        assert!(
+            self.gpu_resident.windows(2).all(|w| w[0].job < w[1].job),
+            "gpu resident set not sorted by JobId"
+        );
+        let cpu_busy: usize = self.cpu_resident.iter().map(|r| r.cores).sum();
         assert_eq!(
             self.cpu_free_cores + cpu_busy,
             self.testbed.cpu.num_cores,
             "core conservation violated"
+        );
+        assert!(
+            self.cpu_resident.windows(2).all(|w| w[0].job < w[1].job),
+            "cpu resident set not sorted by JobId"
         );
     }
 }
@@ -1228,6 +1213,32 @@ mod tests {
         assert_eq!(trace_canonical_bytes(&t1), trace_canonical_bytes(&t2));
         assert_eq!(trace_digest(&t1), trace_digest(&t2));
         assert!(!t1.is_empty());
+    }
+
+    #[test]
+    fn take_trace_returns_right_sized_buffer() {
+        let mut e = engine();
+        let c = e.register_client("chat");
+        for i in 0..50 {
+            e.submit(
+                JobSpec {
+                    client: c,
+                    label: format!("r{i}"),
+                    phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 100 + i, 1e7)])],
+                },
+                i as f64 * 0.001,
+            );
+        }
+        e.run_all();
+        let t = e.take_trace();
+        assert!(!t.is_empty());
+        assert!(
+            t.row_capacity() <= t.len() + 16,
+            "drained trace still holds peak capacity: cap {} len {}",
+            t.row_capacity(),
+            t.len()
+        );
+        assert!(e.trace().is_empty(), "take_trace must drain the engine");
     }
 
     #[test]

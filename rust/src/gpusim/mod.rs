@@ -12,7 +12,8 @@
 //! * [`profiles`] — calibrated architectural constants per device.
 //! * [`kernel`]   — kernel descriptors + CUDA-style occupancy model.
 //! * [`policy`]   — greedy / partition / fair-share SM arbitration.
-//! * [`engine`]   — the event-driven executor and trace recorder.
+//! * [`engine`]   — the event-driven executor.
+//! * [`trace`]    — columnar monitor-trace storage + canonical encoding.
 //! * [`vram`]     — capacity-enforcing device-memory allocator.
 //! * [`power`]    — board/package power models.
 
@@ -21,9 +22,11 @@ pub mod kernel;
 pub mod policy;
 pub mod power;
 pub mod profiles;
+pub mod trace;
 pub mod vram;
 
-pub use engine::{ClientId, CpuWork, Engine, JobId, JobResult, JobSpec, MemOp, Phase, TraceSample};
+pub use engine::{ClientId, CpuWork, Engine, JobId, JobResult, JobSpec, MemOp, Phase};
+pub use trace::{Trace, TraceRow, TraceSample, TraceView};
 pub use kernel::{Device, KernelDesc};
 pub use policy::Policy;
 pub use profiles::Testbed;

@@ -72,8 +72,9 @@ impl Policy {
     }
 
     /// Decide launches given the ready set, free SMs, and current per-client
-    /// holdings. Returns grants in launch order. `ready` MUST be sorted by
-    /// (enqueue_time, seq) — the engine guarantees this.
+    /// holdings (`held_by` is dense, indexed by `ClientId`; clients past its
+    /// end hold nothing). Returns grants in launch order. `ready` MUST be
+    /// sorted by (enqueue_time, seq) — the engine guarantees this.
     ///
     /// Policies are non-preemptive and work-conserving within their caps: a
     /// kernel launches with `min(wanted, allowed)` SMs as long as at least
@@ -83,14 +84,22 @@ impl Policy {
         &self,
         ready: &[ReadyKernel],
         mut free_sms: usize,
-        held_by: &BTreeMap<ClientId, usize>,
+        held_by: &[usize],
         total_sms: usize,
     ) -> Vec<Grant> {
         debug_assert!(ready.windows(2).all(|w| {
             (w[0].enqueue_time, w[0].seq) <= (w[1].enqueue_time, w[1].seq)
         }));
         let mut grants = Vec::new();
-        let mut held: BTreeMap<ClientId, usize> = held_by.clone();
+        // Dense working copy of the holdings, sized to cover every client
+        // appearing in the ready set (a handful of machine words — cheap
+        // compared to the BTreeMap clone this replaces).
+        let need = held_by
+            .len()
+            .max(ready.iter().map(|r| r.client.0 + 1).max().unwrap_or(0));
+        let mut held: Vec<usize> = Vec::with_capacity(need);
+        held.extend_from_slice(held_by);
+        held.resize(need, 0);
 
         match self {
             Policy::Greedy => {
@@ -109,14 +118,14 @@ impl Policy {
                         break;
                     }
                     let cap = caps.get(&rk.client).copied().unwrap_or(total_sms);
-                    let used = held.get(&rk.client).copied().unwrap_or(0);
+                    let used = held[rk.client.0];
                     let allowed = cap.saturating_sub(used).min(free_sms);
                     if allowed == 0 {
                         continue; // this client's partition is full; others may go
                     }
                     let sms = rk.sms_wanted.min(allowed).max(1);
                     grants.push(Grant { ready_index: i, sms });
-                    *held.entry(rk.client).or_insert(0) += sms;
+                    held[rk.client.0] += sms;
                     free_sms -= sms;
                 }
             }
@@ -124,7 +133,8 @@ impl Policy {
                 let priority_active = ready.iter().any(|rk| priority.contains(&rk.client))
                     || held
                         .iter()
-                        .any(|(c, &n)| n > 0 && priority.contains(c));
+                        .enumerate()
+                        .any(|(c, &n)| n > 0 && priority.contains(&ClientId(c)));
                 // Pass 1: priority clients in FIFO order, full device.
                 let mut launched = vec![false; ready.len()];
                 for (i, rk) in ready.iter().enumerate() {
@@ -156,10 +166,13 @@ impl Policy {
             }
             Policy::FairShare => {
                 // Active clients: anyone holding SMs or with ready work.
+                // Ascending-ClientId enumeration reproduces the old
+                // BTreeMap's iteration order exactly.
                 let mut active: Vec<ClientId> = held
                     .iter()
+                    .enumerate()
                     .filter(|(_, &n)| n > 0)
-                    .map(|(&c, _)| c)
+                    .map(|(c, _)| ClientId(c))
                     .collect();
                 for rk in ready {
                     if !active.contains(&rk.client) {
@@ -173,7 +186,7 @@ impl Policy {
                     if free_sms == 0 {
                         break;
                     }
-                    let used = held.get(&rk.client).copied().unwrap_or(0);
+                    let used = held[rk.client.0];
                     let allowed = fair_cap.saturating_sub(used).min(free_sms);
                     if allowed == 0 {
                         continue;
@@ -181,7 +194,7 @@ impl Policy {
                     let sms = rk.sms_wanted.min(allowed).max(1);
                     grants.push(Grant { ready_index: i, sms });
                     launched[i] = true;
-                    *held.entry(rk.client).or_insert(0) += sms;
+                    held[rk.client.0] += sms;
                     free_sms -= sms;
                 }
                 // Pass 2: leftover SMs go to still-waiting kernels FIFO —
@@ -195,7 +208,7 @@ impl Policy {
                     }
                     let sms = rk.sms_wanted.min(free_sms).max(1);
                     grants.push(Grant { ready_index: i, sms });
-                    *held.entry(rk.client).or_insert(0) += sms;
+                    held[rk.client.0] += sms;
                     free_sms -= sms;
                 }
             }
@@ -239,11 +252,21 @@ mod tests {
         }
     }
 
+    /// Dense holdings vector from (client, sms) pairs.
+    fn held(pairs: &[(usize, usize)]) -> Vec<usize> {
+        let n = pairs.iter().map(|&(c, _)| c + 1).max().unwrap_or(0);
+        let mut v = vec![0; n];
+        for &(c, h) in pairs {
+            v[c] = h;
+        }
+        v
+    }
+
     #[test]
     fn greedy_big_kernel_takes_everything() {
         let p = Policy::Greedy;
         let ready = [rk(0, 0.0, 0, 72), rk(1, 1.0, 1, 2)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         assert_eq!(grants, vec![Grant { ready_index: 0, sms: 72 }]);
     }
 
@@ -252,7 +275,7 @@ mod tests {
         let p = Policy::Greedy;
         // Small kernel enqueued first gets served first.
         let ready = [rk(1, 0.0, 0, 2), rk(0, 1.0, 1, 72)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         assert_eq!(grants.len(), 2);
         assert_eq!(grants[0], Grant { ready_index: 0, sms: 2 });
         assert_eq!(grants[1], Grant { ready_index: 1, sms: 70 });
@@ -262,22 +285,21 @@ mod tests {
     fn greedy_no_free_no_grant() {
         let p = Policy::Greedy;
         let ready = [rk(0, 0.0, 0, 1)];
-        assert!(p.schedule(&ready, 0, &BTreeMap::new(), 72).is_empty());
+        assert!(p.schedule(&ready, 0, &[], 72).is_empty());
     }
 
     #[test]
     fn partition_caps_each_client() {
         let p = Policy::equal_partition(&[ClientId(0), ClientId(1), ClientId(2)], 72);
         let ready = [rk(0, 0.0, 0, 72)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         assert_eq!(grants, vec![Grant { ready_index: 0, sms: 24 }]);
     }
 
     #[test]
     fn partition_full_client_does_not_block_others() {
         let p = Policy::equal_partition(&[ClientId(0), ClientId(1), ClientId(2)], 72);
-        let mut held = BTreeMap::new();
-        held.insert(ClientId(0), 24); // client 0 partition full
+        let held = held(&[(0, 24)]); // client 0 partition full
         let ready = [rk(0, 0.0, 0, 10), rk(1, 1.0, 1, 10)];
         let grants = p.schedule(&ready, 48, &held, 72);
         assert_eq!(grants, vec![Grant { ready_index: 1, sms: 10 }]);
@@ -289,7 +311,7 @@ mod tests {
         // under-utilization finding.
         let p = Policy::equal_partition(&[ClientId(0), ClientId(1), ClientId(2)], 72);
         let ready = [rk(0, 0.0, 0, 72)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         assert_eq!(grants[0].sms, 24);
     }
 
@@ -297,7 +319,7 @@ mod tests {
     fn fair_share_splits_between_active() {
         let p = Policy::FairShare;
         let ready = [rk(0, 0.0, 0, 72), rk(1, 0.5, 1, 72)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         // Both get their fair cap of 36.
         assert_eq!(grants.len(), 2);
         assert_eq!(grants[0].sms, 36);
@@ -309,7 +331,7 @@ mod tests {
         // One active client → it gets everything (unlike static partition).
         let p = Policy::FairShare;
         let ready = [rk(0, 0.0, 0, 72)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         assert_eq!(grants[0].sms, 72);
     }
 
@@ -318,7 +340,7 @@ mod tests {
         let p = Policy::FairShare;
         // Client 0 wants tiny, client 1 wants everything.
         let ready = [rk(0, 0.0, 0, 2), rk(1, 0.5, 1, 72)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         // Client 0 takes 2 (under its cap of 36), client 1 takes its cap 36,
         // then leftover 34 goes back to client 1? No — non-launched kernels
         // only; both launched, so grants are [2, 36].
@@ -335,7 +357,7 @@ mod tests {
         };
         // Best-effort device-filler arrived first; priority tiny kernel second.
         let ready = [rk(0, 0.0, 0, 72), rk(1, 1.0, 1, 4)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         // Priority kernel launches first with its full want …
         assert_eq!(grants[0], Grant { ready_index: 1, sms: 4 });
         // … and the best-effort kernel is capped so the reservation stays free.
@@ -349,7 +371,7 @@ mod tests {
             reserve_sms: 8,
         };
         let ready = [rk(0, 0.0, 0, 72)];
-        let grants = p.schedule(&ready, 72, &BTreeMap::new(), 72);
+        let grants = p.schedule(&ready, 72, &[], 72);
         // No priority work anywhere → no reservation withheld.
         assert_eq!(grants, vec![Grant { ready_index: 0, sms: 72 }]);
     }
@@ -360,8 +382,7 @@ mod tests {
             priority: vec![ClientId(1)],
             reserve_sms: 8,
         };
-        let mut held = BTreeMap::new();
-        held.insert(ClientId(1), 4); // priority kernel resident
+        let held = held(&[(1, 4)]); // priority kernel resident
         let ready = [rk(0, 0.0, 0, 72)];
         let grants = p.schedule(&ready, 68, &held, 72);
         assert_eq!(grants, vec![Grant { ready_index: 0, sms: 60 }]);
@@ -376,7 +397,7 @@ mod tests {
             Policy::SloAware { priority: vec![ClientId(1)], reserve_sms: 8 },
         ] {
             let ready = [rk(0, 0.0, 0, 50), rk(1, 0.1, 1, 50), rk(0, 0.2, 2, 50)];
-            let grants = policy.schedule(&ready, 30, &BTreeMap::new(), 72);
+            let grants = policy.schedule(&ready, 30, &[], 72);
             let total: usize = grants.iter().map(|g| g.sms).sum();
             assert!(total <= 30, "{policy}: granted {total} > 30 free");
         }

@@ -1,0 +1,408 @@
+//! Columnar monitor-trace storage and the canonical trace encoding.
+//!
+//! The engine records one sample per processed event, so the trace is the
+//! hottest output buffer in the simulator. Storing each sample as an owned
+//! struct with its own `Vec` of per-client counters (the pre-overhaul
+//! layout) paid one heap allocation per event; [`Trace`] instead keeps a
+//! flat row array plus one shared per-client column buffer, so recording a
+//! sample is two amortized appends and no per-sample allocation.
+//!
+//! The canonical byte encoding (and its FNV-1a digest) is unchanged from
+//! the row-of-structs era: exact little-endian bit patterns per field, a
+//! `u64` per-client count per row, and a `u64` row-count prefix. Two traces
+//! are byte-identical iff every recorded float is bit-identical — the
+//! golden-trace determinism contract. [`trace_digest`] streams rows through
+//! the hasher and never materializes the canonical byte vector;
+//! [`trace_canonical_bytes`] still builds it for tests, and the two are
+//! pinned equivalent by a unit test below.
+
+use std::ops::Deref;
+
+/// The scalar (non-per-client) counters of one sample.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TraceRow {
+    pub t: f64,
+    pub gpu_smact: f32,
+    pub gpu_smocc: f32,
+    pub gpu_bw_frac: f32,
+    pub gpu_power: f32,
+    pub vram_used: u64,
+    pub cpu_util: f32,
+    pub dram_bw_frac: f32,
+    pub cpu_power: f32,
+}
+
+/// One owned sampled point of the monitor trace (piecewise-constant until
+/// the next). Construction-friendly form used by tests and external
+/// producers; the engine's storage is the columnar [`Trace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSample {
+    pub t: f64,
+    pub gpu_smact: f32,
+    pub gpu_smocc: f32,
+    pub gpu_bw_frac: f32,
+    pub gpu_power: f32,
+    pub vram_used: u64,
+    pub cpu_util: f32,
+    pub dram_bw_frac: f32,
+    pub cpu_power: f32,
+    /// Per-client (smact, smocc), indexed by ClientId.
+    pub per_client: Vec<(f32, f32)>,
+}
+
+impl TraceSample {
+    fn row(&self) -> TraceRow {
+        TraceRow {
+            t: self.t,
+            gpu_smact: self.gpu_smact,
+            gpu_smocc: self.gpu_smocc,
+            gpu_bw_frac: self.gpu_bw_frac,
+            gpu_power: self.gpu_power,
+            vram_used: self.vram_used,
+            cpu_util: self.cpu_util,
+            dram_bw_frac: self.dram_bw_frac,
+            cpu_power: self.cpu_power,
+        }
+    }
+
+    /// Append this sample's canonical byte encoding to `out`.
+    pub fn canonical_bytes(&self, out: &mut Vec<u8>) {
+        sink_row(&self.row(), &self.per_client, out);
+    }
+}
+
+/// A borrowed view of one trace row plus its per-client slice. Derefs to
+/// [`TraceRow`], so scalar counters read exactly like the old owned sample
+/// (`view.gpu_smact`, `view.per_client[c]`).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceView<'a> {
+    row: &'a TraceRow,
+    pub per_client: &'a [(f32, f32)],
+}
+
+impl Deref for TraceView<'_> {
+    type Target = TraceRow;
+    fn deref(&self) -> &TraceRow {
+        self.row
+    }
+}
+
+impl TraceView<'_> {
+    /// Materialize an owned sample (cold paths / tests).
+    pub fn to_sample(&self) -> TraceSample {
+        TraceSample {
+            t: self.row.t,
+            gpu_smact: self.row.gpu_smact,
+            gpu_smocc: self.row.gpu_smocc,
+            gpu_bw_frac: self.row.gpu_bw_frac,
+            gpu_power: self.row.gpu_power,
+            vram_used: self.row.vram_used,
+            cpu_util: self.row.cpu_util,
+            dram_bw_frac: self.row.dram_bw_frac,
+            cpu_power: self.row.cpu_power,
+            per_client: self.per_client.to_vec(),
+        }
+    }
+}
+
+/// Columnar trace storage: a flat row array plus one shared per-client
+/// column buffer (rows index into it via end offsets, so a mid-run client
+/// registration keeps every historical row's slice intact).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    rows: Vec<TraceRow>,
+    per_client: Vec<(f32, f32)>,
+    /// End offset of row `i`'s slice in `per_client` (start = end of `i-1`).
+    pc_end: Vec<u32>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    /// Preallocate for `rows` samples of `clients` clients each.
+    pub fn with_capacity(rows: usize, clients: usize) -> Trace {
+        Trace {
+            rows: Vec::with_capacity(rows),
+            per_client: Vec::with_capacity(rows * clients),
+            pc_end: Vec::with_capacity(rows),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The scalar rows, contiguous (use for `windows`, `last`, etc.).
+    pub fn rows(&self) -> &[TraceRow] {
+        &self.rows
+    }
+
+    fn pc_range(&self, i: usize) -> (usize, usize) {
+        let end = self.pc_end[i] as usize;
+        let start = if i == 0 { 0 } else { self.pc_end[i - 1] as usize };
+        (start, end)
+    }
+
+    /// Per-client (smact, smocc) slice of row `i`.
+    pub fn per_client(&self, i: usize) -> &[(f32, f32)] {
+        let (start, end) = self.pc_range(i);
+        &self.per_client[start..end]
+    }
+
+    pub fn get(&self, i: usize) -> TraceView<'_> {
+        TraceView {
+            row: &self.rows[i],
+            per_client: self.per_client(i),
+        }
+    }
+
+    pub fn last(&self) -> Option<TraceView<'_>> {
+        if self.is_empty() {
+            None
+        } else {
+            Some(self.get(self.len() - 1))
+        }
+    }
+
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = TraceView<'_>> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// Hot-path append: push the scalar row, then fill the returned
+    /// zero-initialized per-client slice in place. Amortized O(clients),
+    /// no per-sample allocation.
+    pub fn push_row(&mut self, row: TraceRow, clients: usize) -> &mut [(f32, f32)] {
+        let start = self.per_client.len();
+        let end = start + clients;
+        assert!(end <= u32::MAX as usize, "trace per-client buffer overflow");
+        self.rows.push(row);
+        self.per_client.resize(end, (0.0, 0.0));
+        self.pc_end.push(end as u32);
+        &mut self.per_client[start..end]
+    }
+
+    /// Append an owned sample (test/compat path).
+    pub fn push(&mut self, sample: TraceSample) {
+        let slot = self.push_row(sample.row(), sample.per_client.len());
+        slot.copy_from_slice(&sample.per_client);
+    }
+
+    /// Build a trace from owned samples (test/compat path).
+    pub fn from_samples(samples: &[TraceSample]) -> Trace {
+        let clients = samples.first().map(|s| s.per_client.len()).unwrap_or(0);
+        let mut t = Trace::with_capacity(samples.len(), clients);
+        for s in samples {
+            t.push(s.clone());
+        }
+        t
+    }
+
+    /// Drop excess capacity so a drained engine doesn't pin peak memory
+    /// for the rest of a long sweep.
+    pub fn shrink_to_fit(&mut self) {
+        self.rows.shrink_to_fit();
+        self.per_client.shrink_to_fit();
+        self.pc_end.shrink_to_fit();
+    }
+
+    /// Total reserved capacity in rows (diagnostics/tests).
+    pub fn row_capacity(&self) -> usize {
+        self.rows.capacity()
+    }
+}
+
+/// Byte consumer shared by the canonical encoder and the streaming digest.
+trait ByteSink {
+    fn put(&mut self, bytes: &[u8]);
+}
+
+impl ByteSink for Vec<u8> {
+    fn put(&mut self, bytes: &[u8]) {
+        self.extend_from_slice(bytes);
+    }
+}
+
+/// Incremental 64-bit FNV-1a hasher.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Fnv1a {
+        Fnv1a(Self::OFFSET)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut hash = self.0;
+        for &b in bytes {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(Self::PRIME);
+        }
+        self.0 = hash;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ByteSink for Fnv1a {
+    fn put(&mut self, bytes: &[u8]) {
+        self.update(bytes);
+    }
+}
+
+/// Canonical encoding of one row: exact little-endian bit patterns, then a
+/// `u64` per-client count and the per-client pairs.
+fn sink_row(row: &TraceRow, per_client: &[(f32, f32)], out: &mut impl ByteSink) {
+    out.put(&row.t.to_bits().to_le_bytes());
+    out.put(&row.gpu_smact.to_bits().to_le_bytes());
+    out.put(&row.gpu_smocc.to_bits().to_le_bytes());
+    out.put(&row.gpu_bw_frac.to_bits().to_le_bytes());
+    out.put(&row.gpu_power.to_bits().to_le_bytes());
+    out.put(&row.vram_used.to_le_bytes());
+    out.put(&row.cpu_util.to_bits().to_le_bytes());
+    out.put(&row.dram_bw_frac.to_bits().to_le_bytes());
+    out.put(&row.cpu_power.to_bits().to_le_bytes());
+    out.put(&(per_client.len() as u64).to_le_bytes());
+    for (act, occ) in per_client {
+        out.put(&act.to_bits().to_le_bytes());
+        out.put(&occ.to_bits().to_le_bytes());
+    }
+}
+
+/// Canonical byte encoding of a whole trace. Kept for tests and external
+/// tooling; the digest below streams the same bytes without materializing
+/// this vector.
+pub fn trace_canonical_bytes(trace: &Trace) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + trace.len() * 64);
+    out.put(&(trace.len() as u64).to_le_bytes());
+    for i in 0..trace.len() {
+        sink_row(&trace.rows[i], trace.per_client(i), &mut out);
+    }
+    out
+}
+
+/// FNV-1a 64-bit digest over the canonical trace encoding — a compact
+/// fingerprint for golden-trace tests and scenario reports. Streaming: the
+/// canonical byte vector is never built.
+pub fn trace_digest(trace: &Trace) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(&(trace.len() as u64).to_le_bytes());
+    for i in 0..trace.len() {
+        sink_row(&trace.rows[i], trace.per_client(i), &mut h);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: f64, clients: usize) -> TraceSample {
+        TraceSample {
+            t,
+            gpu_smact: 0.5,
+            gpu_smocc: 0.25,
+            gpu_bw_frac: 0.1,
+            gpu_power: 120.0,
+            vram_used: 1 << 30,
+            cpu_util: 0.3,
+            dram_bw_frac: 0.05,
+            cpu_power: 40.0,
+            per_client: (0..clients).map(|i| (i as f32 * 0.1, i as f32 * 0.05)).collect(),
+        }
+    }
+
+    #[test]
+    fn push_row_and_push_sample_agree() {
+        let s0 = sample(0.0, 3);
+        let s1 = sample(1.0, 3);
+        let mut a = Trace::new();
+        a.push(s0.clone());
+        a.push(s1.clone());
+        let mut b = Trace::new();
+        for s in [&s0, &s1] {
+            let slot = b.push_row(s.row(), s.per_client.len());
+            slot.copy_from_slice(&s.per_client);
+        }
+        assert_eq!(trace_canonical_bytes(&a), trace_canonical_bytes(&b));
+        assert_eq!(a.get(1).to_sample(), s1);
+    }
+
+    #[test]
+    fn streaming_digest_matches_canonical_bytes() {
+        let trace = Trace::from_samples(&[sample(0.0, 2), sample(0.5, 2), sample(1.0, 2)]);
+        let mut h = Fnv1a::new();
+        h.update(&trace_canonical_bytes(&trace));
+        assert_eq!(
+            trace_digest(&trace),
+            h.finish(),
+            "streaming digest must equal FNV-1a over the canonical byte vector"
+        );
+    }
+
+    #[test]
+    fn digest_sensitive_to_every_field() {
+        let base = Trace::from_samples(&[sample(0.0, 2)]);
+        let d0 = trace_digest(&base);
+        let mut s = sample(0.0, 2);
+        s.per_client[1].1 += 1e-6;
+        assert_ne!(d0, trace_digest(&Trace::from_samples(&[s])));
+        let mut s = sample(0.0, 2);
+        s.vram_used += 1;
+        assert_ne!(d0, trace_digest(&Trace::from_samples(&[s])));
+    }
+
+    #[test]
+    fn variable_client_counts_keep_slices_intact() {
+        let mut t = Trace::new();
+        t.push(sample(0.0, 1));
+        t.push(sample(1.0, 3));
+        assert_eq!(t.per_client(0).len(), 1);
+        assert_eq!(t.per_client(1).len(), 3);
+        assert_eq!(t.get(1).per_client[2], (0.2, 0.1));
+    }
+
+    #[test]
+    fn views_deref_to_scalar_counters() {
+        let t = Trace::from_samples(&[sample(2.5, 0)]);
+        let v = t.last().unwrap();
+        assert_eq!(v.t, 2.5);
+        assert!(v.gpu_smact > 0.49);
+        assert!(t.iter().any(|s| s.cpu_util > 0.2));
+    }
+
+    #[test]
+    fn shrink_to_fit_right_sizes() {
+        let mut t = Trace::with_capacity(1024, 4);
+        t.push(sample(0.0, 4));
+        assert!(t.row_capacity() >= 1024);
+        t.shrink_to_fit();
+        assert!(t.row_capacity() < 1024);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn empty_trace_encodes_as_count_prefix() {
+        let t = Trace::new();
+        assert_eq!(trace_canonical_bytes(&t), 0u64.to_le_bytes().to_vec());
+        let mut h = Fnv1a::new();
+        h.update(&0u64.to_le_bytes());
+        assert_eq!(trace_digest(&t), h.finish());
+    }
+}

@@ -25,12 +25,17 @@ pub struct OomError {
 
 #[derive(Debug, Clone)]
 struct Allocation {
-    client: String,
+    /// Index into the allocator's interned client-name table.
+    client: u32,
     label: String,
     bytes: u64,
 }
 
 /// A capacity-enforcing allocator over device memory.
+///
+/// Client names are interned on first use: the engine's per-phase memory
+/// ops and per-client accounting queries (`used_by`, `free_client`) compare
+/// dense indices instead of walking every allocation with string equality.
 #[derive(Debug, Clone)]
 pub struct VramAllocator {
     capacity: u64,
@@ -38,6 +43,10 @@ pub struct VramAllocator {
     peak: u64,
     next_id: u64,
     allocs: BTreeMap<AllocId, Allocation>,
+    /// Interned client names; `client_used[i]` tracks live bytes of
+    /// `client_names[i]`.
+    client_names: Vec<String>,
+    client_used: Vec<u64>,
 }
 
 impl VramAllocator {
@@ -48,7 +57,24 @@ impl VramAllocator {
             peak: 0,
             next_id: 0,
             allocs: BTreeMap::new(),
+            client_names: Vec::new(),
+            client_used: Vec::new(),
         }
+    }
+
+    fn intern(&mut self, client: &str) -> u32 {
+        match self.client_names.iter().position(|n| n == client) {
+            Some(i) => i as u32,
+            None => {
+                self.client_names.push(client.to_string());
+                self.client_used.push(0);
+                (self.client_names.len() - 1) as u32
+            }
+        }
+    }
+
+    fn lookup(&self, client: &str) -> Option<u32> {
+        self.client_names.iter().position(|n| n == client).map(|i| i as u32)
     }
 
     /// Allocate `bytes` on behalf of `client`. `label` names the buffer
@@ -63,14 +89,16 @@ impl VramAllocator {
                 capacity: self.capacity,
             });
         }
+        let cidx = self.intern(client);
         let id = AllocId(self.next_id);
         self.next_id += 1;
         self.used += bytes;
         self.peak = self.peak.max(self.used);
+        self.client_used[cidx as usize] += bytes;
         self.allocs.insert(
             id,
             Allocation {
-                client: client.to_string(),
+                client: cidx,
                 label: label.to_string(),
                 bytes,
             },
@@ -87,21 +115,25 @@ impl VramAllocator {
     pub fn free(&mut self, id: AllocId) {
         let a = self.allocs.remove(&id).expect("double free / unknown AllocId");
         self.used -= a.bytes;
+        self.client_used[a.client as usize] -= a.bytes;
     }
 
     /// Free everything owned by a client (cleanup path).
     pub fn free_client(&mut self, client: &str) -> u64 {
-        let ids: Vec<AllocId> = self
-            .allocs
-            .iter()
-            .filter(|(_, a)| a.client == client)
-            .map(|(id, _)| *id)
-            .collect();
+        let Some(cidx) = self.lookup(client) else {
+            return 0;
+        };
         let mut freed = 0;
-        for id in ids {
-            freed += self.allocs[&id].bytes;
-            self.free(id);
-        }
+        self.allocs.retain(|_, a| {
+            if a.client == cidx {
+                freed += a.bytes;
+                false
+            } else {
+                true
+            }
+        });
+        self.used -= freed;
+        self.client_used[cidx as usize] = 0;
         freed
     }
 
@@ -121,20 +153,24 @@ impl VramAllocator {
         self.capacity - self.used
     }
 
-    /// Bytes currently held by a client.
+    /// Bytes currently held by a client. O(1) per-client counter.
     pub fn used_by(&self, client: &str) -> u64 {
-        self.allocs
-            .values()
-            .filter(|a| a.client == client)
-            .map(|a| a.bytes)
-            .sum()
+        self.lookup(client)
+            .map(|i| self.client_used[i as usize])
+            .unwrap_or(0)
     }
 
     /// (client, label, bytes) inventory, for the report's memory section.
     pub fn inventory(&self) -> Vec<(String, String, u64)> {
         self.allocs
             .values()
-            .map(|a| (a.client.clone(), a.label.clone(), a.bytes))
+            .map(|a| {
+                (
+                    self.client_names[a.client as usize].clone(),
+                    a.label.clone(),
+                    a.bytes,
+                )
+            })
             .collect()
     }
 }

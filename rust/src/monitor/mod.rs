@@ -7,7 +7,7 @@
 //! monitor's fixed grid and derives the aggregate statistics the paper's
 //! figures plot.
 
-use crate::gpusim::engine::TraceSample;
+use crate::gpusim::trace::Trace;
 use crate::util::TimeSeries;
 
 /// Monitor sampling interval (the paper samples at sub-second resolution).
@@ -38,8 +38,10 @@ pub struct MonitorReport {
 impl MonitorReport {
     /// Resample an engine trace onto a fixed grid. The trace is piecewise
     /// constant: the value at grid time `t` is the last sample with
-    /// `sample.t <= t`.
-    pub fn from_trace(trace: &[TraceSample], client_names: &[String], interval: f64) -> Self {
+    /// `sample.t <= t`. Operates on the columnar [`Trace`] directly — the
+    /// scalar sweep walks the dense row array and only the per-client loop
+    /// touches the per-client column.
+    pub fn from_trace(trace: &Trace, client_names: &[String], interval: f64) -> Self {
         assert!(interval > 0.0);
         let mut r = MonitorReport {
             gpu_smact: TimeSeries::new("SMACT", "frac"),
@@ -66,11 +68,12 @@ impl MonitorReport {
         if trace.is_empty() {
             return r;
         }
+        let rows = trace.rows();
         // Time-weighted busy means over the raw piecewise-constant trace.
         let mut busy_time = 0.0;
         let mut smact_int = 0.0;
         let mut smocc_int = 0.0;
-        for w in trace.windows(2) {
+        for w in rows.windows(2) {
             let dt = w[1].t - w[0].t;
             if w[0].gpu_smact > 1e-6 && dt > 0.0 {
                 busy_time += dt;
@@ -82,16 +85,16 @@ impl MonitorReport {
             r.busy_smact_tw = smact_int / busy_time;
             r.busy_smocc_tw = smocc_int / busy_time;
         }
-        let t_end = trace.last().unwrap().t;
+        let t_end = rows.last().unwrap().t;
         let mut idx = 0usize;
         let steps = (t_end / interval).ceil() as usize + 1;
         for k in 0..steps {
             let t = k as f64 * interval;
             // Advance to the last sample at or before t.
-            while idx + 1 < trace.len() && trace[idx + 1].t <= t {
+            while idx + 1 < rows.len() && rows[idx + 1].t <= t {
                 idx += 1;
             }
-            let s = &trace[idx];
+            let s = &rows[idx];
             if s.t > t {
                 // Before the first sample: idle.
                 r.push_idle(t, client_names.len());
@@ -105,8 +108,9 @@ impl MonitorReport {
             r.cpu_util.push(t, s.cpu_util as f64);
             r.dram_bw.push(t, s.dram_bw_frac as f64);
             r.cpu_power.push(t, s.cpu_power as f64);
+            let pc = trace.per_client(idx);
             for (c, (act, occ)) in r.per_client.iter_mut().enumerate() {
-                let (a, o) = s.per_client.get(c).copied().unwrap_or((0.0, 0.0));
+                let (a, o) = pc.get(c).copied().unwrap_or((0.0, 0.0));
                 act.push(t, a as f64);
                 occ.push(t, o as f64);
             }
@@ -160,6 +164,7 @@ impl MonitorReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpusim::trace::TraceSample;
 
     fn sample(t: f64, smact: f32, smocc: f32, clients: usize) -> TraceSample {
         TraceSample {
@@ -178,11 +183,11 @@ mod tests {
 
     #[test]
     fn resamples_piecewise_constant() {
-        let trace = vec![
+        let trace = Trace::from_samples(&[
             sample(0.0, 1.0, 0.5, 1),
             sample(0.35, 0.5, 0.25, 1),
             sample(1.0, 0.0, 0.0, 1),
-        ];
+        ]);
         let names = vec!["app".to_string()];
         let r = MonitorReport::from_trace(&trace, &names, 0.1);
         // At t=0.0..0.3 → first sample; t=0.4..0.9 → second.
@@ -196,14 +201,18 @@ mod tests {
 
     #[test]
     fn empty_trace_is_empty_report() {
-        let r = MonitorReport::from_trace(&[], &[], 0.1);
+        let r = MonitorReport::from_trace(&Trace::new(), &[], 0.1);
         assert!(r.gpu_smact.is_empty());
         assert_eq!(r.gpu_energy(), 0.0);
     }
 
     #[test]
     fn busy_means_ignore_idle() {
-        let trace = vec![sample(0.0, 0.0, 0.0, 0), sample(1.0, 0.8, 0.4, 0), sample(2.0, 0.0, 0.0, 0)];
+        let trace = Trace::from_samples(&[
+            sample(0.0, 0.0, 0.0, 0),
+            sample(1.0, 0.8, 0.4, 0),
+            sample(2.0, 0.0, 0.0, 0),
+        ]);
         let r = MonitorReport::from_trace(&trace, &[], 0.5);
         // f32 storage in the trace → ~1e-8 rounding.
         assert!((r.mean_busy_smact() - 0.8).abs() < 1e-6);
@@ -212,7 +221,7 @@ mod tests {
 
     #[test]
     fn energy_integrates_power() {
-        let trace = vec![sample(0.0, 1.0, 0.5, 0), sample(10.0, 1.0, 0.5, 0)];
+        let trace = Trace::from_samples(&[sample(0.0, 1.0, 0.5, 0), sample(10.0, 1.0, 0.5, 0)]);
         let r = MonitorReport::from_trace(&trace, &[], 1.0);
         // 150 W for 10 s = 1500 J.
         assert!((r.gpu_energy() - 1500.0).abs() < 1.0);
@@ -220,7 +229,7 @@ mod tests {
 
     #[test]
     fn peak_vram() {
-        let trace = vec![sample(0.0, 0.1, 0.1, 0)];
+        let trace = Trace::from_samples(&[sample(0.0, 0.1, 0.1, 0)]);
         let r = MonitorReport::from_trace(&trace, &[], 0.1);
         assert!((r.peak_vram_gib() - 2.0).abs() < 1e-9);
     }

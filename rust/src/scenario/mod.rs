@@ -30,4 +30,6 @@ pub mod runner;
 pub use matrix::{
     strategy_key, testbed_key, AppMix, ArrivalKind, MatrixAxes, MixEntry, ScenarioSpec,
 };
-pub use runner::{run_matrix, run_scenario, AppOutcome, MatrixReport, ScenarioOutcome};
+pub use runner::{
+    run_matrix, run_matrix_jobs, run_scenario, AppOutcome, MatrixReport, ScenarioOutcome,
+};

@@ -8,6 +8,20 @@
 //! engine's trace digest; [`MatrixReport::to_json`] renders everything as a
 //! deterministic JSON document — byte-identical across runs with the same
 //! seed, which the golden-trace tests pin.
+//!
+//! # Parallel deterministic execution
+//!
+//! Scenarios are mutually independent: each one builds its own engine from
+//! `(spec, seed)` and shares no mutable state, so [`run_matrix_jobs`] farms
+//! the expansion across a work-stealing pool of scoped threads (an atomic
+//! cursor over the spec list — idle workers steal the next undone index).
+//! Workers may finish in any order; outcomes land in their canonical slot
+//! and the report is assembled in matrix-expansion order, so the JSON is
+//! **byte-identical for `--jobs 1` and `--jobs N`**. Errors are surfaced
+//! deterministically too: the failure at the lowest canonical index wins.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
@@ -15,6 +29,7 @@ use crate::apps::Slo;
 use crate::coordinator::{run_config_text, ScenarioResult};
 use crate::gpusim::engine::trace_digest;
 use crate::scenario::matrix::{strategy_key, testbed_key, MatrixAxes, ScenarioSpec};
+use crate::util::json::{json_num, json_str};
 use crate::util::stats::Summary;
 
 /// Aggregated result of one application node inside a scenario.
@@ -66,11 +81,76 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioOutcome> {
     Ok(outcome_from(spec, &result))
 }
 
-/// Execute every scenario of the matrix in expansion order.
+/// Execute every scenario of the matrix in expansion order (single worker).
 pub fn run_matrix(axes: &MatrixAxes) -> Result<MatrixReport> {
-    let mut scenarios = Vec::new();
-    for spec in axes.expand() {
-        scenarios.push(run_scenario(&spec)?);
+    run_matrix_jobs(axes, 1)
+}
+
+/// Execute the matrix on up to `jobs` worker threads.
+///
+/// The report is assembled in canonical expansion order regardless of which
+/// worker finished which scenario first, so the output (and therefore
+/// [`MatrixReport::to_json`]) is byte-identical for any `jobs` value. If
+/// several scenarios fail, the error of the lowest-index one is returned —
+/// also independent of scheduling.
+pub fn run_matrix_jobs(axes: &MatrixAxes, jobs: usize) -> Result<MatrixReport> {
+    let specs = axes.expand();
+    let n = specs.len();
+    let jobs = jobs.clamp(1, n.max(1));
+    let mut slots: Vec<Option<Result<ScenarioOutcome>>> = (0..n).map(|_| None).collect();
+    if jobs <= 1 {
+        // Sequential path keeps the old early-abort: the first failure stops
+        // the sweep (the assembly loop below surfaces it before reaching any
+        // unexecuted slot).
+        for (slot, spec) in slots.iter_mut().zip(&specs) {
+            let outcome = run_scenario(spec);
+            let failed = outcome.is_err();
+            *slot = Some(outcome);
+            if failed {
+                break;
+            }
+        }
+    } else {
+        // Work-stealing over the canonical spec order: a shared atomic
+        // cursor hands the next undone index to whichever worker is idle.
+        // A failure cancels further stealing (in-flight scenarios finish);
+        // because indices are claimed in order, every index below the first
+        // failure has still been executed, so the lowest-index-error rule
+        // of the assembly loop below is unaffected.
+        let cursor = AtomicUsize::new(0);
+        let cancel = AtomicBool::new(false);
+        let finished: Mutex<Vec<(usize, Result<ScenarioOutcome>)>> =
+            Mutex::new(Vec::with_capacity(n));
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        if cancel.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let outcome = run_scenario(&specs[i]);
+                        if outcome.is_err() {
+                            cancel.store(true, Ordering::Relaxed);
+                        }
+                        local.push((i, outcome));
+                    }
+                    finished.lock().unwrap().extend(local);
+                });
+            }
+        });
+        for (i, outcome) in finished.into_inner().unwrap() {
+            slots[i] = Some(outcome);
+        }
+    }
+    let mut scenarios = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        let outcome = slot.unwrap_or_else(|| panic!("scenario {i} was never executed"));
+        scenarios.push(outcome?);
     }
     Ok(MatrixReport {
         seed: axes.seed,
@@ -267,35 +347,6 @@ impl MatrixReport {
     }
 }
 
-/// JSON string literal with escaping.
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
-}
-
-/// JSON number: shortest-roundtrip rendering; non-finite values (a failed
-/// request's ∞ normalized latency) become `null`.
-fn json_num(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x}")
-    } else {
-        "null".to_string()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,7 +401,7 @@ mod tests {
                 end: 1.0,
                 failed: Some("VRAM OOM".into()),
             }],
-            trace: vec![],
+            trace: crate::gpusim::engine::Trace::new(),
             client_names: vec![],
             makespan: 1.0,
             policy: "greedy".into(),
@@ -363,17 +414,20 @@ mod tests {
     }
 
     #[test]
-    fn json_escaping_and_numbers() {
-        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
-        assert_eq!(json_num(1.5), "1.5");
-        assert_eq!(json_num(f64::INFINITY), "null");
-        assert_eq!(json_num(f64::NAN), "null");
-    }
-
-    #[test]
     fn summary_table_lists_every_scenario() {
         let report = run_matrix(&tiny_axes(7)).unwrap();
         let table = report.summary_table();
         assert_eq!(table.lines().count(), 1 + report.scenarios.len());
+    }
+
+    #[test]
+    fn parallel_jobs_match_sequential_byte_for_byte() {
+        let axes = tiny_axes(42);
+        let sequential = run_matrix_jobs(&axes, 1).unwrap().to_json();
+        let parallel = run_matrix_jobs(&axes, 2).unwrap().to_json();
+        assert_eq!(sequential, parallel, "jobs must not change the report");
+        // More workers than scenarios is fine (pool clamps to the matrix).
+        let oversubscribed = run_matrix_jobs(&axes, 64).unwrap().to_json();
+        assert_eq!(sequential, oversubscribed);
     }
 }

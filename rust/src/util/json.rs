@@ -1,0 +1,59 @@
+//! Minimal deterministic JSON rendering helpers.
+//!
+//! The offline crate set has no serde, and the scenario/bench reports need
+//! *canonical* output anyway (byte-identical across runs — the golden-trace
+//! contract), so the emitters hand-roll their JSON from two primitives
+//! shared here: escaped string literals and shortest-roundtrip numbers.
+//! Used by the scenario-matrix report (`scenario::runner`), the workflow
+//! report (`coordinator::report`), and the micro-benchmark suite
+//! (`benches/microbench.rs`).
+
+/// JSON string literal with escaping.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: shortest-roundtrip rendering; non-finite values (a failed
+/// request's ∞ normalized latency) become `null`.
+pub fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping_and_numbers() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+        assert_eq!(json_num(1.5), "1.5");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(f64::NAN), "null");
+    }
+
+    #[test]
+    fn numbers_roundtrip_shortest() {
+        assert_eq!(json_num(0.1), "0.1");
+        assert_eq!(json_num(3.0), "3");
+        assert_eq!(json_num(-2.25), "-2.25");
+    }
+}

@@ -4,9 +4,11 @@
 //! so ConsumerBench carries its own minimal implementations of the pieces a
 //! benchmark framework needs: a YAML-subset parser for workflow configs, a
 //! deterministic PRNG for workload synthesis, descriptive statistics for
-//! report generation, time-series storage for the system monitor, and a tiny
-//! property-based testing kit used across the test suite.
+//! report generation, time-series storage for the system monitor, canonical
+//! JSON rendering primitives shared by every machine-readable report, and a
+//! tiny property-based testing kit used across the test suite.
 
+pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

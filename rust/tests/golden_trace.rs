@@ -9,7 +9,7 @@
 //! pinned, so legitimate calibration changes don't invalidate the suite.
 
 use consumerbench::coordinator::run_config_text;
-use consumerbench::gpusim::engine::{trace_canonical_bytes, trace_digest, TraceSample};
+use consumerbench::gpusim::engine::{trace_canonical_bytes, trace_digest, Trace};
 use consumerbench::scenario::{run_matrix, MatrixAxes};
 
 /// A contended, open-loop heavy-traffic scenario: every arrival model and
@@ -36,7 +36,7 @@ seed: {seed}
     )
 }
 
-fn run_trace(seed: u64) -> Vec<TraceSample> {
+fn run_trace(seed: u64) -> Trace {
     let result = run_config_text(&mixed_config(seed), None).unwrap();
     result.trace
 }

@@ -1,0 +1,99 @@
+//! Determinism-under-parallelism suite.
+//!
+//! The scenario sweep is executed by a work-stealing pool whose workers
+//! finish in nondeterministic wall-clock order; these tests pin the
+//! contract that makes that safe: the matrix report (and every per-scenario
+//! trace digest inside it) is **byte-identical** across `--jobs 1`,
+//! `--jobs 4`, and repeated runs with the same seed — and diverges for a
+//! different seed. The last test pins the acceptance path end-to-end
+//! through the CLI on the full 96-scenario sweep.
+
+use consumerbench::cli::run_cli;
+use consumerbench::scenario::{run_matrix_jobs, MatrixAxes};
+
+/// A small but heterogeneous matrix: two mixes × three policies × two
+/// arrival models (12 scenarios) keeps byte-identity checks fast.
+fn small_axes(seed: u64) -> MatrixAxes {
+    let mut axes = MatrixAxes::default_matrix(seed);
+    axes.mixes.truncate(2);
+    axes
+}
+
+#[test]
+fn jobs_do_not_change_the_report() {
+    let sequential = run_matrix_jobs(&small_axes(42), 1).unwrap();
+    let parallel = run_matrix_jobs(&small_axes(42), 4).unwrap();
+    assert_eq!(
+        sequential.to_json(),
+        parallel.to_json(),
+        "matrix JSON must be byte-identical across --jobs 1 and --jobs 4"
+    );
+    // The per-scenario golden fingerprints agree individually, too.
+    let digests = |r: &consumerbench::scenario::MatrixReport| -> Vec<(String, u64)> {
+        r.scenarios
+            .iter()
+            .map(|s| (s.name.clone(), s.trace_digest))
+            .collect()
+    };
+    assert_eq!(digests(&sequential), digests(&parallel));
+}
+
+#[test]
+fn repeated_parallel_runs_are_byte_identical() {
+    let a = run_matrix_jobs(&small_axes(7), 4).unwrap().to_json();
+    let b = run_matrix_jobs(&small_axes(7), 4).unwrap().to_json();
+    assert_eq!(a, b, "same seed + same jobs must reproduce exactly");
+}
+
+#[test]
+fn different_seeds_diverge_under_parallelism() {
+    let a = run_matrix_jobs(&small_axes(42), 4).unwrap().to_json();
+    let b = run_matrix_jobs(&small_axes(43), 4).unwrap().to_json();
+    assert_ne!(a, b, "a different seed must change the parallel report");
+}
+
+#[test]
+fn oversubscribed_pool_clamps_to_matrix_size() {
+    let mut axes = small_axes(3);
+    axes.mixes.truncate(1);
+    axes.strategies.truncate(1);
+    axes.arrivals.truncate(1); // a single scenario
+    let one = run_matrix_jobs(&axes, 1).unwrap().to_json();
+    let many = run_matrix_jobs(&axes, 32).unwrap().to_json();
+    assert_eq!(one, many);
+}
+
+/// The acceptance pin: `consumerbench scenario --full --seed S --jobs 1`
+/// and `--jobs N` produce byte-identical JSON report files.
+#[test]
+fn cli_full_sweep_byte_identical_across_jobs() {
+    let dir = std::env::temp_dir().join("cb_parallel_full");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut reports = Vec::new();
+    for jobs in ["1", "4"] {
+        let path = dir.join(format!("full_j{jobs}.json"));
+        let args: Vec<String> = [
+            "scenario",
+            "--full",
+            "--seed",
+            "5",
+            "--jobs",
+            jobs,
+            "--out",
+            path.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut buf = Vec::new();
+        run_cli(&args, &mut buf).unwrap_or_else(|e| panic!("--jobs {jobs}: {e}"));
+        reports.push(std::fs::read(&path).unwrap());
+    }
+    assert_eq!(
+        reports[0], reports[1],
+        "full-sweep JSON must be byte-identical for --jobs 1 and --jobs 4"
+    );
+    let text = String::from_utf8(reports[0].clone()).unwrap();
+    assert!(text.contains("\"num_scenarios\": 96"), "full sweep is 96 scenarios");
+    assert!(text.contains("\"testbed\": \"macbook_m1_pro\""));
+}

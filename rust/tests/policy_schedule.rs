@@ -8,8 +8,6 @@
 //! * **Fair share** never grants more than the free capacity, even with
 //!   adversarial ready sets, and redistributes leftovers work-conservingly.
 
-use std::collections::BTreeMap;
-
 use consumerbench::gpusim::policy::{Policy, ReadyKernel};
 use consumerbench::gpusim::ClientId;
 use consumerbench::prop_assert;
@@ -33,13 +31,12 @@ fn greedy_starves_late_small_kernel_while_device_full() {
     let p = Policy::Greedy;
     // Device-filler arrives first and takes everything …
     let ready = [rk(0, 0.0, 0, TOTAL_SMS), rk(1, 0.5, 1, 2)];
-    let grants = p.schedule(&ready, TOTAL_SMS, &BTreeMap::new(), TOTAL_SMS);
+    let grants = p.schedule(&ready, TOTAL_SMS, &[], TOTAL_SMS);
     assert_eq!(grants.len(), 1);
     assert_eq!(grants[0].ready_index, 0);
     assert_eq!(grants[0].sms, TOTAL_SMS);
     // … and while it is resident the small kernel gets nothing at all.
-    let mut held = BTreeMap::new();
-    held.insert(ClientId(0), TOTAL_SMS);
+    let held = vec![TOTAL_SMS];
     let waiting = [rk(1, 0.5, 1, 2)];
     let grants = p.schedule(&waiting, 0, &held, TOTAL_SMS);
     assert!(grants.is_empty(), "greedy must starve the late small kernel");
@@ -49,7 +46,7 @@ fn greedy_starves_late_small_kernel_while_device_full() {
 fn greedy_releases_starved_kernel_once_sms_free() {
     let p = Policy::Greedy;
     let waiting = [rk(1, 0.5, 1, 2)];
-    let grants = p.schedule(&waiting, TOTAL_SMS, &BTreeMap::new(), TOTAL_SMS);
+    let grants = p.schedule(&waiting, TOTAL_SMS, &[], TOTAL_SMS);
     assert_eq!(grants.len(), 1);
     assert_eq!(grants[0].sms, 2, "small kernel takes only what it wants");
 }
@@ -62,7 +59,7 @@ fn greedy_grants_never_exceed_free_randomized() {
             .map(|i| rk(g.usize(0, 4), i as f64 * 0.01, i as u64, g.usize(1, 100)))
             .collect();
         let free = g.usize(0, TOTAL_SMS + 1);
-        let grants = Policy::Greedy.schedule(&ready, free, &BTreeMap::new(), TOTAL_SMS);
+        let grants = Policy::Greedy.schedule(&ready, free, &[], TOTAL_SMS);
         let granted: usize = grants.iter().map(|x| x.sms).sum();
         prop_assert!(granted <= free, "granted {granted} > free {free}");
         Ok(())
@@ -80,14 +77,12 @@ fn equal_partition_sm_sum_invariant() {
     let p = Policy::equal_partition(&clients, TOTAL_SMS);
     let cap = TOTAL_SMS / clients.len();
     check("partition-sm-sum", 0x62, 300, |g| {
-        let mut held = BTreeMap::new();
+        let mut held = vec![0usize; clients.len()];
         let mut held_total = 0;
         for &c in &clients {
             let h = g.usize(0, cap + 1);
-            if h > 0 {
-                held.insert(c, h);
-                held_total += h;
-            }
+            held[c.0] = h;
+            held_total += h;
         }
         let free = TOTAL_SMS - held_total;
         let n = g.usize(1, 8);
@@ -97,12 +92,12 @@ fn equal_partition_sm_sum_invariant() {
         let grants = p.schedule(&ready, free, &held, TOTAL_SMS);
         let mut after = held.clone();
         for x in &grants {
-            *after.entry(ready[x.ready_index].client).or_insert(0) += x.sms;
+            after[ready[x.ready_index].client.0] += x.sms;
         }
-        for (&c, &used) in &after {
-            prop_assert!(used <= cap, "client {c:?} holds {used} > cap {cap}");
+        for (c, &used) in after.iter().enumerate() {
+            prop_assert!(used <= cap, "client {c} holds {used} > cap {cap}");
         }
-        let total_after: usize = after.values().sum();
+        let total_after: usize = after.iter().sum();
         prop_assert!(
             total_after <= TOTAL_SMS,
             "SM sum {total_after} > device {TOTAL_SMS}"
@@ -117,7 +112,7 @@ fn equal_partition_idle_share_stays_idle() {
     // the idle partitions' SMs unused (the paper's under-utilization).
     let p = Policy::equal_partition(&[ClientId(0), ClientId(1), ClientId(2)], TOTAL_SMS);
     let ready = [rk(0, 0.0, 0, TOTAL_SMS)];
-    let grants = p.schedule(&ready, TOTAL_SMS, &BTreeMap::new(), TOTAL_SMS);
+    let grants = p.schedule(&ready, TOTAL_SMS, &[], TOTAL_SMS);
     assert_eq!(grants.len(), 1);
     assert_eq!(grants[0].sms, TOTAL_SMS / 3);
 }
@@ -125,8 +120,7 @@ fn equal_partition_idle_share_stays_idle() {
 #[test]
 fn equal_partition_full_client_skipped_not_blocking() {
     let p = Policy::equal_partition(&[ClientId(0), ClientId(1)], TOTAL_SMS);
-    let mut held = BTreeMap::new();
-    held.insert(ClientId(0), TOTAL_SMS / 2); // client 0 at its cap
+    let held = vec![TOTAL_SMS / 2]; // client 0 at its cap
     let ready = [rk(0, 0.0, 0, 8), rk(1, 0.1, 1, 8)];
     let grants = p.schedule(&ready, TOTAL_SMS / 2, &held, TOTAL_SMS);
     assert_eq!(grants.len(), 1);
@@ -150,12 +144,12 @@ fn fair_share_never_grants_more_than_capacity() {
                 )
             })
             .collect();
-        let mut held = BTreeMap::new();
+        let mut held = vec![0usize; n_clients];
         let mut held_total = 0;
         for c in 0..n_clients {
             let h = g.usize(0, 16);
             if h > 0 && held_total + h <= TOTAL_SMS {
-                held.insert(ClientId(c), h);
+                held[c] = h;
                 held_total += h;
             }
         }
@@ -189,7 +183,7 @@ fn fair_share_redistributes_leftover_to_waiting_kernels() {
         rk(1, 0.1, 1, 10),
         rk(0, 0.2, 2, TOTAL_SMS),
     ];
-    let grants = Policy::FairShare.schedule(&ready, TOTAL_SMS, &BTreeMap::new(), TOTAL_SMS);
+    let grants = Policy::FairShare.schedule(&ready, TOTAL_SMS, &[], TOTAL_SMS);
     let granted: usize = grants.iter().map(|x| x.sms).sum();
     assert!(granted <= TOTAL_SMS);
     // First kernel gets the cap (36), second its want (10), and the third

@@ -7,8 +7,6 @@
 //! see `tests/policy_schedule.rs` and `tests/golden_trace.rs` for the
 //! schedule-invariant and determinism coverage added on top.
 
-use std::collections::BTreeMap;
-
 use consumerbench::coordinator::config::WorkflowNodeConfig;
 use consumerbench::coordinator::Dag;
 use consumerbench::gpusim::engine::{CpuWork, Engine, JobSpec, Phase};
@@ -79,12 +77,12 @@ fn prop_policies_never_overcommit() {
         // Pre-existing holdings never exceed the per-client cap (the only
         // states reachable through the policy itself).
         let cap = total / n_clients;
-        let mut held = BTreeMap::new();
+        let mut held = vec![0usize; n_clients];
         let mut held_total = 0;
         for c in 0..n_clients {
             let h = g.usize(0, cap.min(20) + 1);
             if h > 0 && held_total + h <= total {
-                held.insert(ClientId(c), h);
+                held[c] = h;
                 held_total += h;
             }
         }
@@ -110,10 +108,10 @@ fn prop_policies_never_overcommit() {
             if let Policy::Partition(caps) = p {
                 let mut after = held.clone();
                 for x in &grants {
-                    *after.entry(ready[x.ready_index].client).or_insert(0) += x.sms;
+                    after[ready[x.ready_index].client.0] += x.sms;
                 }
                 for (c, cap) in caps {
-                    let used = after.get(c).copied().unwrap_or(0);
+                    let used = after.get(c.0).copied().unwrap_or(0);
                     prop_assert!(used <= *cap, "partition cap violated: {used} > {cap}");
                 }
             }
@@ -186,11 +184,11 @@ fn prop_engine_conserves_resources_and_time() {
             }
         }
         // Trace times are non-decreasing.
-        let trace = e.trace();
-        for w in trace.windows(2) {
+        let rows = e.trace().rows();
+        for w in rows.windows(2) {
             prop_assert!(w[1].t >= w[0].t, "trace time went backwards");
         }
-        for s in trace {
+        for s in rows {
             prop_assert!((0.0..=1.0 + 1e-9).contains(&(s.gpu_smact as f64)), "smact range");
             prop_assert!(s.gpu_smocc <= s.gpu_smact + 1e-6, "SMOCC exceeded SMACT");
         }

@@ -139,7 +139,7 @@ seed: 42
     let mon = consumerbench::monitor::MonitorReport::from_trace(
         &result.trace,
         &result.client_names,
-        0.1,
+        consumerbench::monitor::DEFAULT_INTERVAL,
     );
     assert!(mon.gpu_power.max() <= 31.0, "peak {}", mon.gpu_power.max());
 }
