@@ -1,6 +1,6 @@
 //! Micro-benchmark suite → `BENCH.json`.
 //!
-//! Three hot paths, each reported as a machine-readable entry so every
+//! Four hot paths, each reported as a machine-readable entry so every
 //! future PR has a perf trajectory to regress against:
 //!
 //! * **engine-throughput** — simulated kernel-events per second through the
@@ -8,7 +8,10 @@
 //! * **sweep-wall-clock** — scenario-matrix wall time at `--jobs 1` vs.
 //!   all available workers (the parallel-sweep speedup);
 //! * **digest-rate** — bytes per second through the streaming FNV-1a trace
-//!   digest.
+//!   digest;
+//! * **server-throughput** — unified-batch iterations per second through
+//!   the inference server's hot path, static vs. under adaptive
+//!   reconfiguration churn (slot/batch resizes every 32 iterations).
 //!
 //! Usage (a `harness = false` bench target):
 //!
@@ -24,8 +27,12 @@
 
 use std::time::Instant;
 
-use consumerbench::gpusim::engine::{trace_digest, Trace};
+use consumerbench::apps::models::llama_3_2_3b;
+use consumerbench::gpusim::engine::{trace_digest, Engine, Trace};
+use consumerbench::gpusim::policy::Policy;
+use consumerbench::gpusim::profiles::Testbed;
 use consumerbench::scenario::{run_matrix_jobs, MatrixAxes};
+use consumerbench::server::{InferenceServer, ServerConfig, ServerRequest, ServerTuning};
 use consumerbench::util::json::{json_num, json_str};
 
 #[path = "common.rs"]
@@ -53,6 +60,62 @@ fn digest_bytes_per_sec(trace: &Trace, reps: usize) -> f64 {
     let dt = t0.elapsed().as_secs_f64();
     std::hint::black_box(acc);
     (bytes * reps.max(1)) as f64 / dt.max(1e-9)
+}
+
+/// Unified-batch iterations per second through the serving hot path. With
+/// `adaptive`, the tuning is flipped (slots 4↔2, batch 512↔256) every 32
+/// iterations, so the number includes drain + reconfiguration overhead —
+/// the cost the adaptive controller pays for each action.
+fn server_batches_per_sec(adaptive: bool, n_requests: usize) -> f64 {
+    let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+    e.set_trace_enabled(false);
+    let c = e.register_client("llama-server");
+    let mut s = InferenceServer::new(ServerConfig::kv_gpu(llama_3_2_3b()), c);
+    s.start(&mut e, 0.0);
+    e.run_all();
+    e.take_completed();
+    for i in 0..n_requests {
+        s.enqueue(
+            ServerRequest {
+                id: i as u64,
+                app: "Chatbot",
+                prompt_tokens: 128 + (i % 7) * 64,
+                output_tokens: 48,
+            },
+            0.0,
+        );
+    }
+    let t0 = Instant::now();
+    let mut last_flip = 0u64;
+    let mut shrunk = false;
+    loop {
+        s.pump(&mut e, e.now());
+        let Some(t) = e.next_event_time() else { break };
+        e.run_until(t);
+        for r in e.take_completed() {
+            s.on_job_done(&r);
+        }
+        if adaptive && s.iterations() >= last_flip + 32 {
+            last_flip = s.iterations();
+            shrunk = !shrunk;
+            let (n_slots, batch_size) = if shrunk { (2, 256) } else { (4, 512) };
+            s.reconfigure(
+                &mut e,
+                e.now(),
+                ServerTuning {
+                    n_slots,
+                    batch_size,
+                    ..s.tuning()
+                },
+            );
+        }
+        if s.idle() && e.next_event_time().is_none() {
+            break;
+        }
+    }
+    let iters = s.iterations();
+    assert_eq!(s.take_responses().len(), n_requests, "bench must serve all");
+    iters as f64 / t0.elapsed().as_secs_f64().max(1e-9)
 }
 
 /// Scenario-matrix sweep wall-clock at a given worker count.
@@ -103,16 +166,19 @@ fn main() {
             }
         });
 
-    let (jobs, kernels, digest_reps) = if fast { (200, 25, 20) } else { (2_000, 50, 100) };
+    let (jobs, kernels, digest_reps, server_reqs) =
+        if fast { (200, 25, 20, 64) } else { (2_000, 50, 100, 512) };
     let mode = if fast { "fast" } else { "full" };
 
     let (eps_traced, trace) = engine_events_per_sec(true, jobs, kernels);
     let (eps_untraced, _) = engine_events_per_sec(false, jobs, kernels);
     let digest_rate = digest_bytes_per_sec(&trace, digest_reps);
+    let server_static = server_batches_per_sec(false, server_reqs);
+    let server_adaptive = server_batches_per_sec(true, server_reqs);
 
     let mut axes = MatrixAxes::default_matrix(42);
     if fast {
-        axes.mixes.truncate(1); // 6 scenarios instead of 24
+        axes.mixes.truncate(1); // 12 scenarios (static + adaptive chat) instead of 42
     }
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -135,6 +201,16 @@ fn main() {
             name: "trace_digest_rate",
             value: digest_rate,
             unit: "bytes/s",
+        },
+        Entry {
+            name: "server_batches_per_sec_static",
+            value: server_static,
+            unit: "batches/s",
+        },
+        Entry {
+            name: "server_batches_per_sec_adaptive",
+            value: server_adaptive,
+            unit: "batches/s",
         },
         Entry {
             name: "sweep_wall_clock_jobs1",

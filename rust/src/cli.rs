@@ -5,7 +5,8 @@
 //! ```text
 //! consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--json FILE] [--no-pjrt]
 //! consumerbench validate <config.yaml>
-//! consumerbench scenario [--seed N] [--jobs N] [--out FILE] [--full] [--list] [--dump DIR]
+//! consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--out FILE] [--full]
+//!                        [--list] [--dump DIR]
 //! consumerbench apps
 //! consumerbench help
 //! ```
@@ -15,7 +16,7 @@ use anyhow::{bail, Context, Result};
 use crate::apps::{Application, Chatbot, DeepResearch, ImageGen, LiveCaptions};
 use crate::coordinator::{generate, to_csv, to_json_summary, BenchConfig, Dag, ScenarioRunner};
 use crate::runtime::Runtime;
-use crate::scenario::{run_matrix_jobs, MatrixAxes};
+use crate::scenario::{run_specs_jobs, MatrixAxes, ScenarioSpec};
 
 const USAGE: &str = "\
 ConsumerBench — benchmarking generative AI applications on end-user devices
@@ -23,7 +24,8 @@ ConsumerBench — benchmarking generative AI applications on end-user devices
 USAGE:
     consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--json FILE] [--no-pjrt]
     consumerbench validate <config.yaml>
-    consumerbench scenario [--seed N] [--jobs N] [--out FILE] [--full] [--list] [--dump DIR]
+    consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--out FILE] [--full]
+                           [--list] [--dump DIR]
     consumerbench apps
     consumerbench help
 
@@ -45,9 +47,11 @@ OPTIONS (scenario):
     --jobs N          Worker threads for the sweep (default: available
                       parallelism). The JSON report is byte-identical for
                       any N — scenarios are deterministic and independent
+    --filter SUBSTR   Only expand scenarios whose name contains SUBSTR
+                      (e.g. --filter server=adaptive, --filter mix=chat/)
     --out FILE        Write the JSON report to FILE (default: print to stdout)
     --full            Sweep the full axes (periodic + trace arrivals, Apple
-                      Silicon testbed) instead of the default 24 scenarios
+                      Silicon testbed) instead of the default 42 scenarios
     --list            Print scenario names without running anything
     --dump DIR        Write each expanded scenario config as YAML into DIR
 ";
@@ -134,6 +138,9 @@ struct ScenarioOpts {
     seed: u64,
     /// Worker threads for the sweep; `None` = available parallelism.
     jobs: Option<usize>,
+    /// Substring filter over scenario names (for iterating on a slice of
+    /// the 42/168-scenario matrix).
+    filter: Option<String>,
     out: Option<String>,
     full: bool,
     list: bool,
@@ -168,6 +175,14 @@ fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
                 opts.jobs = Some(jobs);
                 i += 2;
             }
+            "--filter" => {
+                let f = args.get(i + 1).context("--filter requires a value")?;
+                if f.is_empty() {
+                    bail!("--filter must be a non-empty substring");
+                }
+                opts.filter = Some(f.clone());
+                i += 2;
+            }
             "--out" => {
                 opts.out = Some(args.get(i + 1).context("--out requires a value")?.clone());
                 i += 2;
@@ -196,7 +211,13 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
     } else {
         MatrixAxes::default_matrix(opts.seed)
     };
-    let specs = axes.expand();
+    let mut specs: Vec<ScenarioSpec> = axes.expand();
+    if let Some(filter) = &opts.filter {
+        specs.retain(|s| s.name.contains(filter.as_str()));
+        if specs.is_empty() {
+            bail!("--filter `{filter}` matches no scenario (try `scenario --list`)");
+        }
+    }
     if opts.list {
         for spec in &specs {
             writeln!(out, "{}", spec.name)?;
@@ -226,7 +247,7 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
         opts.seed,
         jobs
     )?;
-    let report = run_matrix_jobs(&axes, jobs)?;
+    let report = run_specs_jobs(&specs, opts.seed, jobs)?;
     write!(out, "{}", report.summary_table())?;
     writeln!(
         out,
@@ -383,10 +404,52 @@ mod tests {
     fn scenario_list_names_matrix() {
         let (r, out) = run(&["scenario", "--list"]);
         assert!(r.is_ok(), "{out}");
-        assert!(out.contains("24 scenarios"), "{out}");
+        assert!(out.contains("42 scenarios"), "{out}");
         assert!(out.contains("mix=chat/policy=greedy/arrival=closed/testbed=intel_server"));
         assert!(out.contains("policy=fair_share"));
         assert!(out.contains("arrival=poisson"));
+        assert!(out.contains("server=adaptive"));
+    }
+
+    #[test]
+    fn scenario_filter_narrows_the_matrix() {
+        let (r, out) = run(&["scenario", "--list", "--filter", "server=adaptive"]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("18 scenarios"), "{out}");
+        assert!(!out.contains("server=static"), "{out}");
+
+        let (r, out) = run(&[
+            "scenario",
+            "--list",
+            "--filter",
+            "mix=captions+imagegen/policy=greedy/",
+        ]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("2 scenarios"), "{out}");
+
+        // A filter that matches nothing is an error, not an empty sweep.
+        let (r, _) = run(&["scenario", "--list", "--filter", "mix=nonexistent"]);
+        assert!(r.is_err());
+        let (r, _) = run(&["scenario", "--filter"]);
+        assert!(r.is_err(), "--filter without a value must be rejected");
+    }
+
+    #[test]
+    fn scenario_filter_runs_only_the_subset() {
+        let dir = std::env::temp_dir().join("cb_scenario_filter_run");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json_path = dir.join("subset.json");
+        let (r, out) = run(&[
+            "scenario",
+            "--filter",
+            "mix=chat/policy=greedy/arrival=closed/testbed=intel_server/server=static",
+            "--out",
+            json_path.to_str().unwrap(),
+        ]);
+        assert!(r.is_ok(), "{out}");
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        assert!(json.contains("\"num_scenarios\": 1"), "{json}");
+        assert!(json.contains("\"server_mode\": \"static\""));
     }
 
     #[test]
@@ -396,14 +459,15 @@ mod tests {
         let (r, out) = run(&["scenario", "--dump", dir.to_str().unwrap()]);
         assert!(r.is_ok(), "{out}");
         let n = std::fs::read_dir(&dir).unwrap().count();
-        assert_eq!(n, 24, "expected 24 dumped configs");
+        assert_eq!(n, 42, "expected 42 dumped configs");
     }
 
     #[test]
     fn scenario_runs_default_matrix_to_json() {
         // The acceptance path: one invocation expands and executes the full
         // default matrix (>= 20 scenarios, all three policies, open-loop
-        // Poisson included) and emits the aggregate JSON report.
+        // Poisson and the static/adaptive serving ablation included) and
+        // emits the aggregate JSON report.
         let dir = std::env::temp_dir().join("cb_scenario_run");
         std::fs::create_dir_all(&dir).unwrap();
         let json_path = dir.join("report.json");
@@ -417,9 +481,11 @@ mod tests {
         assert!(r.is_ok(), "{out}");
         assert!(out.contains("policies covered: greedy, partition, fair_share"), "{out}");
         let json = std::fs::read_to_string(&json_path).unwrap();
-        assert!(json.contains("\"num_scenarios\": 24"));
+        assert!(json.contains("\"num_scenarios\": 42"));
         assert!(json.contains("\"arrival\": \"poisson\""));
         assert!(json.contains("\"mix\": \"full-stack\""));
+        assert!(json.contains("\"server_mode\": \"adaptive\""));
+        assert!(json.contains("\"adaptive_vs_static\""));
     }
 
     #[test]

@@ -19,6 +19,7 @@ use std::collections::BTreeSet;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::controller::ControllerConfig;
 use crate::gpusim::kernel::Device;
 use crate::server::KvPlacement;
 use crate::util::yaml::{self, Value};
@@ -120,6 +121,9 @@ pub struct ServerDef {
     pub context_window: usize,
     pub kv_placement: KvPlacement,
     pub n_slots: usize,
+    /// Max tokens per unified batch (runtime-tunable, like `n_slots` and
+    /// `kv_placement` — see `server::ServerTuning`).
+    pub batch_size: usize,
 }
 
 /// GPU sharing strategy (§3.2 resource orchestrator).
@@ -161,6 +165,9 @@ pub struct BenchConfig {
     pub strategy: Strategy,
     pub testbed: TestbedKind,
     pub seed: u64,
+    /// Adaptive-serving feedback controller (`controller:` block). `None`
+    /// keeps every server/policy configuration static for the run.
+    pub controller: Option<ControllerConfig>,
 }
 
 impl BenchConfig {
@@ -173,12 +180,14 @@ impl BenchConfig {
         let mut strategy = Strategy::Greedy;
         let mut testbed = TestbedKind::IntelServer;
         let mut seed = 42u64;
+        let mut controller = None;
 
         for key in root.keys() {
             let value = root.get(key).unwrap();
             match key {
                 "workflows" => workflow = parse_workflows(value)?,
                 "servers" => servers = parse_servers(value)?,
+                "controller" => controller = parse_controller(value)?,
                 "strategy" => {
                     let s = value.as_str().context("strategy must be a string")?;
                     strategy =
@@ -221,6 +230,7 @@ impl BenchConfig {
             strategy,
             testbed,
             seed,
+            controller,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -444,10 +454,16 @@ fn parse_servers(v: &Value) -> Result<Vec<ServerDef>> {
     let map = v.as_map().context("`servers` must be a mapping")?;
     let mut servers = Vec::new();
     for (name, body) in map {
+        // Validate before casting: a negative i64 would wrap to a huge
+        // usize and sail past the >= 1 checks below.
         let context_window = body
             .get("context_window")
             .and_then(|c| c.as_i64())
-            .unwrap_or(16_384) as usize;
+            .unwrap_or(16_384);
+        if context_window < 1 {
+            bail!("server `{name}`: context_window must be >= 1");
+        }
+        let context_window = context_window as usize;
         let kv_placement = match body
             .get("kv_placement")
             .and_then(|k| k.as_str())
@@ -457,16 +473,110 @@ fn parse_servers(v: &Value) -> Result<Vec<ServerDef>> {
             "cpu" => KvPlacement::Cpu,
             other => bail!("server `{name}`: unknown kv_placement `{other}`"),
         };
-        let n_slots = body.get("n_slots").and_then(|n| n.as_i64()).unwrap_or(4) as usize;
+        let n_slots = body.get("n_slots").and_then(|n| n.as_i64()).unwrap_or(4);
+        if n_slots < 1 {
+            bail!("server `{name}`: n_slots must be >= 1");
+        }
+        let n_slots = n_slots as usize;
+        let batch_size = body
+            .get("batch_size")
+            .and_then(|b| b.as_i64())
+            .unwrap_or(512);
+        if batch_size < 1 {
+            bail!("server `{name}`: batch_size must be >= 1");
+        }
+        let batch_size = batch_size as usize;
         servers.push(ServerDef {
             name: name.clone(),
             model: body.get("model").and_then(|m| m.as_str()).map(String::from),
             context_window,
             kv_placement,
             n_slots,
+            batch_size,
         });
     }
     Ok(servers)
+}
+
+/// Parse the `controller:` block into the adaptive-serving feedback
+/// controller's configuration. `enabled: false` turns the block off
+/// without deleting it; every other key overrides a
+/// [`ControllerConfig::default`] field:
+///
+/// ```yaml
+/// controller:
+///   epoch: 2s               # decision spacing (virtual time)
+///   window: 8s              # sliding observation window
+///   target_attainment: 0.9  # tight-SLO attainment target
+///   reserve_step: 8         # SM-reserve adjustment per action
+///   max_reserve: 32
+///   min_reserve: 4
+///   cooldown_epochs: 2
+///   min_observations: 3
+/// ```
+fn parse_controller(v: &Value) -> Result<Option<ControllerConfig>> {
+    if v.as_map().is_none() {
+        bail!("`controller` must be a mapping");
+    }
+    if let Some(e) = v.get("enabled") {
+        let enabled = e
+            .as_bool()
+            .context("controller: enabled must be a boolean")?;
+        if !enabled {
+            return Ok(None);
+        }
+    }
+    let mut cfg = ControllerConfig::default();
+    if let Some(e) = v.get("epoch") {
+        cfg.epoch = parse_duration_value("controller", e)?;
+    }
+    if let Some(w) = v.get("window") {
+        cfg.window = parse_duration_value("controller", w)?;
+    }
+    if let Some(t) = v.get("target_attainment").or_else(|| v.get("target")) {
+        cfg.target = t.as_f64().context("controller: target must be numeric")?;
+    }
+    let usize_key = |key: &str, slot: &mut usize| -> Result<()> {
+        if let Some(n) = v.get(key) {
+            let n = n
+                .as_i64()
+                .with_context(|| format!("controller: {key} must be an integer"))?;
+            if n < 0 {
+                bail!("controller: {key} must be >= 0");
+            }
+            *slot = n as usize;
+        }
+        Ok(())
+    };
+    usize_key("reserve_step", &mut cfg.reserve_step)?;
+    usize_key("max_reserve", &mut cfg.max_reserve)?;
+    usize_key("min_reserve", &mut cfg.min_reserve)?;
+    usize_key("min_observations", &mut cfg.min_observations)?;
+    if let Some(n) = v.get("cooldown_epochs") {
+        let n = n
+            .as_i64()
+            .context("controller: cooldown_epochs must be an integer")?;
+        if n < 0 {
+            bail!("controller: cooldown_epochs must be >= 0");
+        }
+        cfg.cooldown_epochs = n as u32;
+    }
+    if cfg.epoch <= 0.0 {
+        bail!("controller: epoch must be > 0");
+    }
+    if cfg.window < cfg.epoch {
+        bail!("controller: window must cover at least one epoch");
+    }
+    if !(cfg.target > 0.0 && cfg.target <= 1.0) {
+        bail!("controller: target_attainment must be in (0, 1]");
+    }
+    if cfg.min_reserve > cfg.max_reserve {
+        bail!("controller: min_reserve must be <= max_reserve");
+    }
+    if cfg.reserve_step == 0 {
+        bail!("controller: reserve_step must be >= 1");
+    }
+    Ok(Some(cfg))
 }
 
 fn parse_slo(task: &str, v: &Value) -> Result<SloSpec> {
@@ -696,6 +806,88 @@ workflows:
         let err = BenchConfig::parse(&cfg("  arrival: poisson\n  rate: 1\n")).unwrap_err();
         assert!(err.to_string().contains("closed-loop"), "{err}");
         assert!(BenchConfig::parse(&cfg("  arrival: periodic\n  period: 5\n")).is_err());
+    }
+
+    #[test]
+    fn controller_block_parses_with_defaults_and_overrides() {
+        let base = "A (chatbot):\n  num_requests: 1\n";
+        let cfg = BenchConfig::parse(base).unwrap();
+        assert!(cfg.controller.is_none(), "no block => static run");
+
+        let cfg = BenchConfig::parse(&format!("{base}controller:\n  epoch: 1s\n")).unwrap();
+        let c = cfg.controller.expect("controller enabled");
+        assert_eq!(c.epoch, 1.0);
+        assert_eq!(c.window, ControllerConfig::default().window);
+
+        let text = format!(
+            "{base}controller:\n  epoch: 500ms\n  window: 4\n  target_attainment: 0.8\n  \
+             reserve_step: 4\n  max_reserve: 16\n  min_reserve: 2\n  cooldown_epochs: 1\n  \
+             min_observations: 5\n"
+        );
+        let c = BenchConfig::parse(&text).unwrap().controller.unwrap();
+        assert_eq!(c.epoch, 0.5);
+        assert_eq!(c.window, 4.0);
+        assert_eq!(c.target, 0.8);
+        assert_eq!(c.reserve_step, 4);
+        assert_eq!(c.max_reserve, 16);
+        assert_eq!(c.min_reserve, 2);
+        assert_eq!(c.cooldown_epochs, 1);
+        assert_eq!(c.min_observations, 5);
+
+        let cfg =
+            BenchConfig::parse(&format!("{base}controller:\n  enabled: false\n  epoch: 1\n"))
+                .unwrap();
+        assert!(cfg.controller.is_none(), "enabled: false => static run");
+    }
+
+    #[test]
+    fn controller_block_validated() {
+        let base = "A (chatbot):\n  num_requests: 1\n";
+        for bad in [
+            "controller:\n  epoch: 0\n",
+            "controller:\n  epoch: 4\n  window: 2\n",
+            "controller:\n  target_attainment: 0\n",
+            "controller:\n  target_attainment: 1.5\n",
+            "controller:\n  min_reserve: 64\n  max_reserve: 8\n",
+            "controller: greedy\n",
+            // A malformed `enabled` must error, not silently leave the
+            // controller on.
+            "controller:\n  enabled: 0\n",
+            // A zero step would wedge the escalation ladder on no-op
+            // reserve updates.
+            "controller:\n  reserve_step: 0\n",
+        ] {
+            let text = format!("{base}{bad}");
+            assert!(BenchConfig::parse(&text).is_err(), "should reject:\n{text}");
+        }
+    }
+
+    #[test]
+    fn server_batch_size_parses_and_validates() {
+        let text = "\
+A (chatbot):
+  num_requests: 1
+  server: s
+servers:
+  s:
+    model: Llama-3.2-3B
+    batch_size: 256
+";
+        let cfg = BenchConfig::parse(text).unwrap();
+        assert_eq!(cfg.server("s").unwrap().batch_size, 256);
+        assert_eq!(cfg.server("s").unwrap().n_slots, 4);
+        // Zero and negative values are both rejected (a negative i64 must
+        // not wrap into a huge usize).
+        for bad_field in [
+            "batch_size: 0",
+            "batch_size: -5",
+            "n_slots: 0",
+            "n_slots: -1",
+            "context_window: -1",
+        ] {
+            let bad = text.replace("batch_size: 256", bad_field);
+            assert!(BenchConfig::parse(&bad).is_err(), "should reject {bad_field}");
+        }
     }
 
     #[test]

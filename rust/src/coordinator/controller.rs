@@ -1,0 +1,513 @@
+//! Deterministic feedback controller for the adaptive serving layer.
+//!
+//! The paper's §5.2 "practical insight" — SLO-aware scheduling recovers
+//! chat attainment that static configurations lose under contention — is
+//! made a *runtime* mechanism here: the controller samples per-app SLO
+//! attainment over a sliding window of **virtual time** and issues
+//! reconfiguration actions (migrate the shared server's KV cache, grow or
+//! shrink the `SloAware` SM reservation, resize serving slots) from a pure
+//! function of the observed metrics.
+//!
+//! # Determinism contract
+//!
+//! The controller holds no clock and draws no randomness.
+//! [`Controller::decide`] is a pure function of (the observation window,
+//! the observed reserve/server state, its own cooldown counters) — all of
+//! which are
+//! themselves deterministic products of the scenario seed. The executor
+//! invokes it at fixed virtual-time epoch boundaries, so two runs with the
+//! same seed issue byte-identical action sequences and the engine traces —
+//! including every reconfiguration event — digest identically. This is what
+//! lets the scenario matrix treat `server_mode: adaptive` as just another
+//! axis with golden, byte-reproducible reports.
+
+use std::collections::VecDeque;
+
+use crate::server::KvPlacement;
+
+/// Tunables of the feedback loop (the YAML `controller:` block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControllerConfig {
+    /// Virtual-time spacing of controller decisions (seconds).
+    pub epoch: f64,
+    /// Sliding observation window (seconds of virtual time).
+    pub window: f64,
+    /// SLO-attainment target for latency-sensitive apps.
+    pub target: f64,
+    /// Reserve adjustment per action under `SloAware`.
+    pub reserve_step: usize,
+    pub max_reserve: usize,
+    pub min_reserve: usize,
+    /// Decision epochs to hold off after acting, so an action's effect
+    /// shows up in the window before the controller reacts again.
+    pub cooldown_epochs: u32,
+    /// Minimum tight-SLO observations in the window before acting.
+    pub min_observations: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            epoch: 2.0,
+            window: 8.0,
+            target: 0.9,
+            reserve_step: 8,
+            max_reserve: 32,
+            min_reserve: 4,
+            cooldown_epochs: 2,
+            min_observations: 3,
+        }
+    }
+}
+
+/// One completed request as the controller sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    /// Virtual completion time.
+    pub end: f64,
+    pub slo_met: bool,
+    /// Whether the app carries a tight (sub-second-scale) SLO — only these
+    /// drive the feedback loop.
+    pub tight: bool,
+}
+
+/// Server state observed at decision time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerView {
+    pub kv_placement: KvPlacement,
+    pub n_slots: usize,
+    /// Whether the server currently holds queued or active work.
+    pub busy: bool,
+    /// Whether the KV region would currently fit in VRAM (always true when
+    /// it already lives there). An infeasible onload must not pin the
+    /// escalation ladder on its first rung — `decide` falls through to the
+    /// next knob instead.
+    pub kv_fits_gpu: bool,
+}
+
+/// A reconfiguration decision. The executor validates feasibility (e.g.
+/// VRAM headroom for a KV onload) before applying — a skipped action is
+/// itself deterministic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ControllerAction {
+    /// Set the `SloAware` SM reservation.
+    SetReserve { reserve_sms: usize },
+    /// Migrate server `server`'s KV region to `to`.
+    MigrateKv { server: usize, to: KvPlacement },
+    /// Resize server `server` to `n_slots` concurrent sequences.
+    ResizeSlots { server: usize, n_slots: usize },
+}
+
+impl std::fmt::Display for ControllerAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControllerAction::SetReserve { reserve_sms } => {
+                write!(f, "set-reserve({reserve_sms})")
+            }
+            ControllerAction::MigrateKv { server, to } => {
+                write!(f, "migrate-kv(server{server} -> {to})")
+            }
+            ControllerAction::ResizeSlots { server, n_slots } => {
+                write!(f, "resize-slots(server{server} -> {n_slots})")
+            }
+        }
+    }
+}
+
+/// The feedback controller.
+pub struct Controller {
+    cfg: ControllerConfig,
+    window: VecDeque<Observation>,
+    /// Epochs left before the next action may fire.
+    cooldown: u32,
+    /// Consecutive healthy epochs (hysteresis for releasing the reserve).
+    healthy_epochs: u32,
+    /// `(virtual time, rendered action)` log for reports.
+    log: Vec<(f64, String)>,
+}
+
+impl Controller {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        assert!(cfg.epoch > 0.0, "controller epoch must be > 0");
+        assert!(cfg.window >= cfg.epoch, "window must cover >= one epoch");
+        assert!(
+            cfg.target > 0.0 && cfg.target <= 1.0,
+            "target attainment must be in (0, 1]"
+        );
+        Controller {
+            cfg,
+            window: VecDeque::new(),
+            cooldown: 0,
+            healthy_epochs: 0,
+            log: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// Record a completed request. Only tight-SLO observations enter the
+    /// window — everything else is invisible to the feedback loop.
+    pub fn observe(&mut self, obs: Observation) {
+        if obs.tight {
+            self.window.push_back(obs);
+        }
+    }
+
+    /// Time-stamped rendering of every action issued so far.
+    pub fn log(&self) -> &[(f64, String)] {
+        &self.log
+    }
+
+    /// Tight-SLO attainment over the window ending at `now`, with the
+    /// sample count. When fewer than `min_observations` completions fall
+    /// inside the time window — the slow regime where a single contended
+    /// request outlasts it, which is precisely when intervention matters —
+    /// the freshest `min_observations` completions are used instead.
+    pub fn window_attainment(&self, now: f64) -> Option<(f64, usize)> {
+        let cutoff = now - self.cfg.window;
+        let in_window = self.window.iter().filter(|o| o.end >= cutoff).count();
+        let samples: Vec<bool> = if in_window >= self.cfg.min_observations {
+            self.window
+                .iter()
+                .filter(|o| o.end >= cutoff)
+                .map(|o| o.slo_met)
+                .collect()
+        } else {
+            self.window
+                .iter()
+                .rev()
+                .take(self.cfg.min_observations)
+                .map(|o| o.slo_met)
+                .collect()
+        };
+        if samples.is_empty() {
+            return None;
+        }
+        let met = samples.iter().filter(|&&m| m).count();
+        Some((met as f64 / samples.len() as f64, samples.len()))
+    }
+
+    /// The decision function, invoked once per epoch at virtual time `now`.
+    ///
+    /// Escalation ladder when tight-SLO attainment falls below target,
+    /// biggest hammer first (mirroring §4.2.1's root cause ordering):
+    /// 1. a busy server with a CPU-resident KV cache whose region would
+    ///    fit in VRAM → migrate it to the GPU (the dominant interference
+    ///    source);
+    /// 2. grow the `SloAware` SM reservation, when the policy carries one;
+    /// 3. shrink a busy server's slots so long prefills stop crowding the
+    ///    unified batch.
+    ///
+    /// When attainment holds above target for consecutive epochs, the SM
+    /// reservation is released back toward `min_reserve` (work
+    /// conservation). KV migration is one-way hysteresis: the controller
+    /// never migrates back to the CPU, avoiding oscillation.
+    pub fn decide(
+        &mut self,
+        now: f64,
+        reserve: Option<usize>,
+        servers: &[ServerView],
+    ) -> Vec<ControllerAction> {
+        // Evict observations that fell out of the window, always retaining
+        // the freshest `min_observations` (see `window_attainment`).
+        let cutoff = now - self.cfg.window;
+        while self.window.len() > self.cfg.min_observations
+            && self.window.front().is_some_and(|o| o.end < cutoff)
+        {
+            self.window.pop_front();
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return Vec::new();
+        }
+        // Whether the time window itself holds enough samples; the
+        // freshest-K fallback may only *escalate* (stale misses are still
+        // misses), never certify health (stale successes say nothing about
+        // requests currently stuck in flight).
+        let in_window = self.window.iter().filter(|o| o.end >= cutoff).count();
+        let fresh = in_window >= self.cfg.min_observations;
+        let Some((attainment, samples)) = self.window_attainment(now) else {
+            return Vec::new();
+        };
+        if samples < self.cfg.min_observations {
+            return Vec::new();
+        }
+
+        let mut actions = Vec::new();
+        if attainment < self.cfg.target {
+            self.healthy_epochs = 0;
+            if let Some((i, _)) = servers
+                .iter()
+                .enumerate()
+                .find(|(_, s)| s.kv_placement == KvPlacement::Cpu && s.busy && s.kv_fits_gpu)
+            {
+                actions.push(ControllerAction::MigrateKv {
+                    server: i,
+                    to: KvPlacement::Gpu,
+                });
+            } else if let Some(r) = reserve {
+                let next = (r + self.cfg.reserve_step).min(self.cfg.max_reserve);
+                // Strict inequality: a no-op SetReserve would reset the
+                // cooldown and wedge the ladder without changing anything.
+                if next > r {
+                    actions.push(ControllerAction::SetReserve { reserve_sms: next });
+                }
+            }
+            if actions.is_empty() {
+                if let Some((i, s)) = servers
+                    .iter()
+                    .enumerate()
+                    .find(|(_, s)| s.busy && s.n_slots > 2)
+                {
+                    actions.push(ControllerAction::ResizeSlots {
+                        server: i,
+                        n_slots: s.n_slots - 1,
+                    });
+                }
+            }
+            if !actions.is_empty() {
+                self.cooldown = self.cfg.cooldown_epochs;
+            }
+        } else if fresh {
+            self.healthy_epochs += 1;
+            if self.healthy_epochs >= self.cfg.cooldown_epochs.max(1) {
+                if let Some(r) = reserve {
+                    let next = r
+                        .saturating_sub(self.cfg.reserve_step)
+                        .max(self.cfg.min_reserve);
+                    if next < r {
+                        actions.push(ControllerAction::SetReserve { reserve_sms: next });
+                        self.healthy_epochs = 0;
+                    }
+                }
+            }
+        }
+        actions
+    }
+
+    /// Record what the executor did with a decided action. `applied:
+    /// false` marks a deterministic feasibility skip (e.g. the previous
+    /// reconfiguration has not landed yet) and is rendered with a
+    /// `skipped ` prefix so reports distinguish decided from done.
+    pub fn record_outcome(&mut self, now: f64, action: ControllerAction, applied: bool) {
+        let prefix = if applied { "" } else { "skipped " };
+        self.log.push((now, format!("{prefix}{action}")));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(end: f64, slo_met: bool) -> Observation {
+        Observation {
+            end,
+            slo_met,
+            tight: true,
+        }
+    }
+
+    fn cpu_server(busy: bool) -> ServerView {
+        ServerView {
+            kv_placement: KvPlacement::Cpu,
+            n_slots: 4,
+            busy,
+            kv_fits_gpu: true,
+        }
+    }
+
+    #[test]
+    fn no_action_without_enough_observations() {
+        let mut c = Controller::new(ControllerConfig::default());
+        c.observe(obs(1.0, false));
+        assert!(c.decide(2.0, Some(8), &[cpu_server(true)]).is_empty());
+    }
+
+    #[test]
+    fn missed_slo_migrates_busy_cpu_kv_server_first() {
+        let mut c = Controller::new(ControllerConfig::default());
+        for i in 0..4 {
+            c.observe(obs(i as f64 * 0.5, false));
+        }
+        let actions = c.decide(3.0, Some(8), &[cpu_server(true)]);
+        assert_eq!(
+            actions,
+            vec![ControllerAction::MigrateKv {
+                server: 0,
+                to: KvPlacement::Gpu
+            }]
+        );
+        // Cooldown suppresses the next decisions.
+        for _ in 0..ControllerConfig::default().cooldown_epochs {
+            assert!(c.decide(4.0, Some(8), &[cpu_server(true)]).is_empty());
+        }
+    }
+
+    #[test]
+    fn idle_cpu_kv_server_is_not_migrated() {
+        let mut c = Controller::new(ControllerConfig::default());
+        for i in 0..4 {
+            c.observe(obs(i as f64 * 0.5, false));
+        }
+        // Idle server: fall through to the reserve ladder.
+        let actions = c.decide(3.0, Some(8), &[cpu_server(false)]);
+        assert_eq!(actions, vec![ControllerAction::SetReserve { reserve_sms: 16 }]);
+    }
+
+    #[test]
+    fn infeasible_migration_falls_through_to_the_next_rung() {
+        // A busy CPU-KV server whose region cannot fit must not pin the
+        // ladder on an action the executor would skip forever.
+        let mut c = Controller::new(ControllerConfig::default());
+        for i in 0..4 {
+            c.observe(obs(i as f64 * 0.5, false));
+        }
+        let blocked = ServerView {
+            kv_fits_gpu: false,
+            ..cpu_server(true)
+        };
+        let actions = c.decide(3.0, Some(8), &[blocked]);
+        assert_eq!(actions, vec![ControllerAction::SetReserve { reserve_sms: 16 }]);
+        // And with no reserve either, the slot knob is reached.
+        let mut c = Controller::new(ControllerConfig::default());
+        for i in 0..4 {
+            c.observe(obs(i as f64 * 0.5, false));
+        }
+        let actions = c.decide(3.0, None, &[blocked]);
+        assert_eq!(
+            actions,
+            vec![ControllerAction::ResizeSlots { server: 0, n_slots: 3 }]
+        );
+    }
+
+    #[test]
+    fn reserve_grows_until_max_then_slots_shrink() {
+        let cfg = ControllerConfig {
+            cooldown_epochs: 0,
+            ..ControllerConfig::default()
+        };
+        let mut c = Controller::new(cfg.clone());
+        for i in 0..6 {
+            c.observe(obs(i as f64 * 0.1, false));
+        }
+        let gpu_server = ServerView {
+            kv_placement: KvPlacement::Gpu,
+            n_slots: 4,
+            busy: true,
+            kv_fits_gpu: true,
+        };
+        // At max reserve the controller reaches for the slot knob.
+        let actions = c.decide(1.0, Some(cfg.max_reserve), &[gpu_server]);
+        assert_eq!(
+            actions,
+            vec![ControllerAction::ResizeSlots { server: 0, n_slots: 3 }]
+        );
+    }
+
+    #[test]
+    fn sustained_health_releases_reserve_with_hysteresis() {
+        let cfg = ControllerConfig::default();
+        let mut c = Controller::new(cfg.clone());
+        for i in 0..5 {
+            c.observe(obs(10.0 + i as f64 * 0.1, true));
+        }
+        // First healthy epoch: hysteresis holds.
+        assert!(c.decide(11.0, Some(16), &[]).is_empty());
+        // Second: release one step.
+        let actions = c.decide(11.5, Some(16), &[]);
+        assert_eq!(actions, vec![ControllerAction::SetReserve { reserve_sms: 8 }]);
+        // Never below the floor.
+        assert!(c.decide(11.6, Some(cfg.min_reserve), &[]).is_empty());
+        assert!(c.decide(11.7, Some(cfg.min_reserve), &[]).is_empty());
+    }
+
+    #[test]
+    fn stale_successes_do_not_certify_health() {
+        // The freshest-K fallback may escalate on stale misses, but stale
+        // successes say nothing about requests currently stuck in flight:
+        // the reserve must not be released during total completion
+        // starvation.
+        let mut c = Controller::new(ControllerConfig::default());
+        for i in 0..5 {
+            c.observe(obs(1.0 + i as f64 * 0.1, true));
+        }
+        for t in [100.0, 102.0, 104.0, 106.0] {
+            assert!(
+                c.decide(t, Some(16), &[]).is_empty(),
+                "stale successes released the reserve at t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn slow_regime_retains_the_freshest_observations() {
+        // Requests can outlast the time window under heavy contention —
+        // the controller must still reason over the freshest completions
+        // rather than going blind exactly when intervention matters.
+        let mut c = Controller::new(ControllerConfig::default());
+        for i in 0..5 {
+            c.observe(obs(i as f64 * 0.1, false));
+        }
+        let (att, samples) = c.window_attainment(100.0).unwrap();
+        assert_eq!(att, 0.0);
+        assert_eq!(samples, ControllerConfig::default().min_observations);
+        let actions = c.decide(100.0, Some(8), &[cpu_server(true)]);
+        assert_eq!(
+            actions,
+            vec![ControllerAction::MigrateKv {
+                server: 0,
+                to: KvPlacement::Gpu
+            }]
+        );
+        // Eviction keeps exactly the retained minimum.
+        assert!(c.window_attainment(100.0).is_some());
+    }
+
+    #[test]
+    fn non_tight_observations_are_invisible() {
+        let mut c = Controller::new(ControllerConfig::default());
+        for i in 0..6 {
+            c.observe(Observation {
+                end: i as f64,
+                slo_met: false,
+                tight: false,
+            });
+        }
+        assert_eq!(c.window_attainment(6.0), None);
+        assert!(c.decide(6.0, Some(8), &[cpu_server(true)]).is_empty());
+    }
+
+    #[test]
+    fn decisions_are_reproducible() {
+        let run = || {
+            let mut c = Controller::new(ControllerConfig::default());
+            let mut out = Vec::new();
+            for step in 0..20 {
+                let t = step as f64;
+                c.observe(obs(t, step % 3 == 0));
+                out.extend(c.decide(t, Some(8), &[cpu_server(true)]));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn log_distinguishes_applied_from_skipped() {
+        let mut c = Controller::new(ControllerConfig::default());
+        for i in 0..4 {
+            c.observe(obs(2.0 + i as f64 * 0.1, false));
+        }
+        let actions = c.decide(3.0, None, &[cpu_server(true)]);
+        assert_eq!(actions.len(), 1);
+        assert!(c.log().is_empty(), "decide only decides; the executor logs");
+        c.record_outcome(3.0, actions[0], true);
+        c.record_outcome(3.5, actions[0], false);
+        assert_eq!(c.log().len(), 2);
+        assert!(c.log()[0].1.starts_with("migrate-kv"));
+        assert_eq!(c.log()[0].0, 3.0);
+        assert!(c.log()[1].1.starts_with("skipped migrate-kv"));
+    }
+}

@@ -8,11 +8,13 @@
 //! ([`report::generate`]).
 
 pub mod config;
+pub mod controller;
 pub mod dag;
 pub mod executor;
 pub mod report;
 
 pub use config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
+pub use controller::{Controller, ControllerAction, ControllerConfig, Observation, ServerView};
 pub use dag::Dag;
 pub use executor::{run_config_text, NodeResult, ScenarioResult, ScenarioRunner};
 pub use report::{generate, to_csv, to_json_summary, BenchmarkReport};

@@ -32,6 +32,13 @@ pub fn generate(result: &ScenarioResult) -> BenchmarkReport {
     out.push_str(&format!("policy:            {}\n", result.policy));
     out.push_str(&format!("workflow makespan: {:.2} s\n", result.makespan));
     out.push_str(&format!("PJRT validations:  {}\n", result.pjrt_calls));
+    out.push_str(&format!(
+        "reconfigurations:  {}\n",
+        result.reconfigurations
+    ));
+    for action in &result.controller_actions {
+        out.push_str(&format!("  controller: {action}\n"));
+    }
     out.push('\n');
 
     out.push_str("-- Applications ----------------------------------------------\n");
@@ -112,6 +119,18 @@ pub fn to_json_summary(result: &ScenarioResult, monitor: &MonitorReport) -> Stri
         json_num(result.makespan)
     ));
     out.push_str(&format!("  \"pjrt_calls\": {},\n", result.pjrt_calls));
+    out.push_str(&format!(
+        "  \"reconfigurations\": {},\n",
+        result.reconfigurations
+    ));
+    out.push_str("  \"controller_actions\": [");
+    for (i, a) in result.controller_actions.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&json_str(a));
+    }
+    out.push_str("],\n");
     out.push_str("  \"nodes\": [\n");
     for (i, node) in result.nodes.iter().enumerate() {
         let lats: Vec<f64> = node.metrics.iter().map(|m| m.latency).collect();

@@ -51,6 +51,9 @@ pub struct CpuWork {
 pub enum MemOp {
     /// Allocate VRAM for the job's client.
     Alloc { label: String, bytes: u64 },
+    /// Free the client's allocations carrying one label (e.g. just the
+    /// `kv-cache` region during a GPU→CPU migration, weights staying put).
+    Free { label: String },
     /// Free all VRAM held by the job's client (cleanup).
     FreeAll,
 }
@@ -336,6 +339,20 @@ impl Engine {
         self.policy = policy;
     }
 
+    /// Mutate the policy **at runtime** and apply it immediately: a
+    /// scheduling pass runs under the updated policy and a trace row is
+    /// recorded at the current virtual time, so the reconfiguration itself
+    /// is an event in the trace (and therefore in the golden digest).
+    /// Deterministic as long as the caller invokes it at deterministic
+    /// virtual times — the adaptive controller's contract.
+    pub fn update_policy<R>(&mut self, f: impl FnOnce(&mut Policy) -> R) -> R {
+        let r = f(&mut self.policy);
+        self.schedule_gpu();
+        self.schedule_cpu();
+        self.record();
+        r
+    }
+
     /// Disable trace recording (benchmarking the engine itself).
     pub fn set_trace_enabled(&mut self, enabled: bool) {
         self.trace_enabled = enabled;
@@ -500,6 +517,10 @@ impl Engine {
                     .vram
                     .alloc(&self.clients[client.0], label, *bytes)
                     .err(),
+                MemOp::Free { label } => {
+                    self.vram.free_labeled(&self.clients[client.0], label);
+                    None
+                }
                 MemOp::FreeAll => {
                     self.vram.free_client(&self.clients[client.0]);
                     None
@@ -1140,6 +1161,66 @@ mod tests {
         );
         e.run_all();
         assert_eq!(e.vram().used(), 0);
+    }
+
+    #[test]
+    fn mem_op_free_releases_only_the_label() {
+        let mut e = engine();
+        let c = e.register_client("server");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "setup".into(),
+                phases: vec![Phase::host("load", 0.0).with_mem_ops(vec![
+                    MemOp::Alloc { label: "weights".into(), bytes: 2 << 30 },
+                    MemOp::Alloc { label: "kv-cache".into(), bytes: 1 << 30 },
+                ])],
+            },
+            0.0,
+        );
+        e.run_all();
+        assert_eq!(e.vram().used(), (2 << 30) + (1 << 30));
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "offload".into(),
+                phases: vec![Phase::host("kv.offload", 0.1)
+                    .with_mem_ops(vec![MemOp::Free { label: "kv-cache".into() }])],
+            },
+            e.now(),
+        );
+        e.run_all();
+        assert_eq!(e.vram().used(), 2 << 30, "weights must stay resident");
+    }
+
+    #[test]
+    fn update_policy_reschedules_and_records() {
+        let mut e = engine();
+        let a = e.register_client("a");
+        let b = e.register_client("b");
+        e.set_policy(Policy::SloAware {
+            priority: vec![b],
+            reserve_sms: 8,
+        });
+        e.submit(
+            JobSpec {
+                client: a,
+                label: "bulk".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 10_000, 2e10); 3])],
+            },
+            0.0,
+        );
+        e.run_until(0.001);
+        let rows_before = e.trace().len();
+        let changed = e.update_policy(|p| p.set_reserve_sms(16));
+        assert!(changed, "SloAware must accept a reserve update");
+        assert_eq!(e.policy().reserve_sms(), Some(16));
+        assert!(
+            e.trace().len() > rows_before,
+            "a policy update must land in the trace"
+        );
+        e.run_all();
+        e.check_invariants();
     }
 
     #[test]

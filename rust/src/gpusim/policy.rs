@@ -71,6 +71,28 @@ impl Policy {
         Policy::Partition(clients.iter().map(|&c| (c, share)).collect())
     }
 
+    /// The `SloAware` SM reservation, if this policy carries one. The
+    /// adaptive controller reads this to decide grow/shrink actions.
+    pub fn reserve_sms(&self) -> Option<usize> {
+        match self {
+            Policy::SloAware { reserve_sms, .. } => Some(*reserve_sms),
+            _ => None,
+        }
+    }
+
+    /// Set the `SloAware` reservation (runtime reconfiguration via
+    /// [`crate::gpusim::engine::Engine::update_policy`]). Returns `false`
+    /// — and changes nothing — for policies without a reservation.
+    pub fn set_reserve_sms(&mut self, n: usize) -> bool {
+        match self {
+            Policy::SloAware { reserve_sms, .. } => {
+                *reserve_sms = n;
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Decide launches given the ready set, free SMs, and current per-client
     /// holdings (`held_by` is dense, indexed by `ClientId`; clients past its
     /// end hold nothing). Returns grants in launch order. `ready` MUST be
@@ -386,6 +408,22 @@ mod tests {
         let ready = [rk(0, 0.0, 0, 72)];
         let grants = p.schedule(&ready, 68, &held, 72);
         assert_eq!(grants, vec![Grant { ready_index: 0, sms: 60 }]);
+    }
+
+    #[test]
+    fn reserve_accessors_only_touch_slo_aware() {
+        let mut p = Policy::SloAware {
+            priority: vec![ClientId(1)],
+            reserve_sms: 8,
+        };
+        assert_eq!(p.reserve_sms(), Some(8));
+        assert!(p.set_reserve_sms(24));
+        assert_eq!(p.reserve_sms(), Some(24));
+        for mut other in [Policy::Greedy, Policy::FairShare] {
+            assert_eq!(other.reserve_sms(), None);
+            assert!(!other.set_reserve_sms(12));
+            assert_eq!(other.reserve_sms(), None);
+        }
     }
 
     #[test]

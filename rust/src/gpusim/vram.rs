@@ -118,6 +118,26 @@ impl VramAllocator {
         self.client_used[a.client as usize] -= a.bytes;
     }
 
+    /// Free every allocation of `client` carrying `label` (e.g. the KV
+    /// region during a GPU→CPU migration, leaving weights resident).
+    pub fn free_labeled(&mut self, client: &str, label: &str) -> u64 {
+        let Some(cidx) = self.lookup(client) else {
+            return 0;
+        };
+        let mut freed = 0;
+        self.allocs.retain(|_, a| {
+            if a.client == cidx && a.label == label {
+                freed += a.bytes;
+                false
+            } else {
+                true
+            }
+        });
+        self.used -= freed;
+        self.client_used[cidx as usize] -= freed;
+        freed
+    }
+
     /// Free everything owned by a client (cleanup path).
     pub fn free_client(&mut self, client: &str) -> u64 {
         let Some(cidx) = self.lookup(client) else {
@@ -221,6 +241,20 @@ mod tests {
         v.alloc("a", "w", gib(5)).unwrap();
         assert!(v.would_fit(gib(3)));
         assert!(!v.would_fit(gib(4)));
+    }
+
+    #[test]
+    fn free_labeled_releases_only_matching_buffers() {
+        let mut v = VramAllocator::new(gib(24));
+        v.alloc("server", "weights", gib(2)).unwrap();
+        v.alloc("server", "kv-cache", gib(14)).unwrap();
+        v.alloc("img", "kv-cache", gib(1)).unwrap();
+        let freed = v.free_labeled("server", "kv-cache");
+        assert_eq!(freed, gib(14));
+        assert_eq!(v.used_by("server"), gib(2));
+        assert_eq!(v.used_by("img"), gib(1));
+        assert_eq!(v.free_labeled("server", "kv-cache"), 0);
+        assert_eq!(v.free_labeled("ghost", "kv-cache"), 0);
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! * **Arrival process** — the client model: the apps' built-in closed
 //!   loop, a fixed-period open loop, an open-loop Poisson stream (heavy
 //!   traffic), or a bursty trace replay.
+//! * **Server mode** — for mixes with text apps (Chatbot/DeepResearch),
+//!   whether the shared llama.cpp-style server keeps its KV-CPU
+//!   configuration frozen (`static`, the paper's §4.2.1 pitfall) or runs
+//!   under the adaptive feedback controller (`adaptive`, the §5.2 loop
+//!   made live). Mixes without a text app carry no server and only appear
+//!   as `static`.
 //!
 //! [`MatrixAxes::expand`] enumerates the cross-product in a fixed order and
 //! renders each point as a YAML workflow configuration understood by
@@ -37,6 +43,14 @@ pub struct AppMix {
 }
 
 impl AppMix {
+    /// Whether the mix contains an app that can route through a shared
+    /// text-model server (the `server_mode` axis only applies to these).
+    pub fn has_text_app(&self) -> bool {
+        self.entries
+            .iter()
+            .any(|e| matches!(e.app, AppType::Chatbot | AppType::DeepResearch))
+    }
+
     fn entry(app: AppType, num_requests: usize, device: Device) -> MixEntry {
         MixEntry {
             app,
@@ -115,6 +129,27 @@ impl ArrivalKind {
     }
 }
 
+/// Server-mode axis: how the shared text-model server is configured for
+/// mixes containing Chatbot/DeepResearch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerMode {
+    /// The §4.2.1 pitfall: a KV-CPU server configuration frozen for the
+    /// run (text apps still share the server — only adaptation is off).
+    Static,
+    /// Same starting configuration plus the feedback controller, which may
+    /// migrate the KV cache, adjust the SM reservation, or resize slots at
+    /// runtime.
+    Adaptive,
+}
+
+/// Stable key for a server mode in scenario names and YAML.
+pub fn server_mode_key(m: ServerMode) -> &'static str {
+    match m {
+        ServerMode::Static => "static",
+        ServerMode::Adaptive => "adaptive",
+    }
+}
+
 /// Stable key for a strategy in scenario names and YAML.
 pub fn strategy_key(s: Strategy) -> &'static str {
     match s {
@@ -140,13 +175,16 @@ pub struct MatrixAxes {
     pub strategies: Vec<Strategy>,
     pub testbeds: Vec<TestbedKind>,
     pub arrivals: Vec<ArrivalKind>,
+    pub server_modes: Vec<ServerMode>,
     pub seed: u64,
 }
 
 impl MatrixAxes {
-    /// The default matrix: 4 mixes × 3 policies × {closed, poisson} on the
-    /// Intel testbed — 24 scenarios covering every policy, every Table 1
-    /// application, and open-loop heavy traffic.
+    /// The default matrix: 4 mixes × 3 policies × {closed, poisson} ×
+    /// {static, adaptive} on the Intel testbed — 42 scenarios (the
+    /// adaptive mode only applies to the 3 mixes with text apps) covering
+    /// every policy, every Table 1 application, open-loop heavy traffic,
+    /// and the static-vs-adaptive serving ablation.
     pub fn default_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             mixes: vec![
@@ -158,12 +196,13 @@ impl MatrixAxes {
             strategies: vec![Strategy::Greedy, Strategy::Partition, Strategy::FairShare],
             testbeds: vec![TestbedKind::IntelServer],
             arrivals: vec![ArrivalKind::Closed, ArrivalKind::Poisson],
+            server_modes: vec![ServerMode::Static, ServerMode::Adaptive],
             seed,
         }
     }
 
     /// The full sweep: adds periodic + trace-replay arrivals and the Apple
-    /// Silicon testbed (4 × 3 × 4 × 2 = 96 scenarios).
+    /// Silicon testbed (96 static + 72 adaptive = 168 scenarios).
     pub fn full_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             testbeds: vec![TestbedKind::IntelServer, TestbedKind::MacbookM1Pro],
@@ -178,28 +217,37 @@ impl MatrixAxes {
     }
 
     /// Enumerate the cross-product in a fixed (mix, strategy, arrival,
-    /// testbed) order. The order is part of the report format: re-running
-    /// with the same seed must reproduce the report byte-for-byte.
+    /// testbed, server-mode) order. The order is part of the report
+    /// format: re-running with the same seed must reproduce the report
+    /// byte-for-byte. The adaptive server mode is skipped for mixes with
+    /// no text app (there is no server to adapt).
     pub fn expand(&self) -> Vec<ScenarioSpec> {
         let mut specs = Vec::new();
         for mix in &self.mixes {
             for &strategy in &self.strategies {
                 for &arrival in &self.arrivals {
                     for &testbed in &self.testbeds {
-                        specs.push(ScenarioSpec {
-                            name: format!(
-                                "mix={}/policy={}/arrival={}/testbed={}",
-                                mix.name,
-                                strategy_key(strategy),
-                                arrival.name(),
-                                testbed_key(testbed)
-                            ),
-                            mix: mix.clone(),
-                            strategy,
-                            testbed,
-                            arrival,
-                            seed: self.seed,
-                        });
+                        for &server_mode in &self.server_modes {
+                            if server_mode == ServerMode::Adaptive && !mix.has_text_app() {
+                                continue;
+                            }
+                            specs.push(ScenarioSpec {
+                                name: format!(
+                                    "mix={}/policy={}/arrival={}/testbed={}/server={}",
+                                    mix.name,
+                                    strategy_key(strategy),
+                                    arrival.name(),
+                                    testbed_key(testbed),
+                                    server_mode_key(server_mode)
+                                ),
+                                mix: mix.clone(),
+                                strategy,
+                                testbed,
+                                arrival,
+                                server_mode,
+                                seed: self.seed,
+                            });
+                        }
                     }
                 }
             }
@@ -216,6 +264,7 @@ pub struct ScenarioSpec {
     pub strategy: Strategy,
     pub testbed: TestbedKind,
     pub arrival: ArrivalKind,
+    pub server_mode: ServerMode,
     pub seed: u64,
 }
 
@@ -250,9 +299,20 @@ fn app_rate(app: AppType) -> f64 {
     }
 }
 
+/// Context window of the matrix's shared text-model server. 32K keeps the
+/// KV region (~3.5 GiB for the 3B model) small enough that an adaptive
+/// onload can succeed next to ImageGen/LiveCaptions on both testbeds, while
+/// still being large enough that the CPU-resident placement hurts (§4.2.1).
+const MATRIX_SERVER_CONTEXT: usize = 32_768;
+
 impl ScenarioSpec {
-    /// Render the scenario as a YAML workflow configuration.
+    /// Render the scenario as a YAML workflow configuration. Mixes with
+    /// text apps route them through a shared KV-CPU server; the adaptive
+    /// server mode additionally enables the feedback controller, so the
+    /// static/adaptive pair differs in exactly one thing — whether the
+    /// serving configuration may change at runtime.
     pub fn to_yaml(&self) -> String {
+        let shared_server = self.mix.has_text_app();
         let mut out = String::new();
         out.push_str(&format!("# scenario: {}\n", self.name));
         for (i, e) in self.mix.entries.iter().enumerate() {
@@ -266,6 +326,9 @@ impl ScenarioSpec {
                     Device::Cpu => "cpu",
                 }
             ));
+            if shared_server && matches!(e.app, AppType::Chatbot | AppType::DeepResearch) {
+                out.push_str("  server: llama\n");
+            }
             // DeepResearch is the background agent; its closed loop is part
             // of the workload semantics, so arrival overrides only apply to
             // the interactive apps.
@@ -296,6 +359,18 @@ impl ScenarioSpec {
                     }
                 }
             }
+        }
+        if shared_server {
+            out.push_str(&format!(
+                "servers:\n  llama:\n    model: Llama-3.2-3B\n    context_window: {MATRIX_SERVER_CONTEXT}\n    kv_placement: cpu\n    n_slots: 4\n    batch_size: 512\n"
+            ));
+        }
+        if self.server_mode == ServerMode::Adaptive {
+            // No reserve knobs: the matrix strategies (greedy / partition /
+            // fair_share) carry no `SloAware` reservation, so the adaptive
+            // axis exercises KV migration and slot resizing; reserve
+            // adjustment is covered by slo_aware hand-written configs.
+            out.push_str("controller:\n  epoch: 2\n  window: 8\n  target_attainment: 0.9\n");
         }
         out.push_str(&format!("strategy: {}\n", strategy_key(self.strategy)));
         out.push_str(&format!("testbed: {}\n", testbed_key(self.testbed)));
@@ -346,7 +421,7 @@ mod tests {
     fn default_matrix_covers_acceptance_floor() {
         let axes = MatrixAxes::default_matrix(42);
         let specs = axes.expand();
-        assert!(specs.len() >= 20, "{} scenarios", specs.len());
+        assert_eq!(specs.len(), 42, "24 static + 18 adaptive scenarios");
         let strategies: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| strategy_key(s.strategy)).collect();
         assert_eq!(strategies.len(), 3);
@@ -354,10 +429,67 @@ mod tests {
             specs.iter().map(|s| s.mix.name).collect();
         assert!(mixes.len() >= 3, "{mixes:?}");
         assert!(specs.iter().any(|s| s.arrival == ArrivalKind::Poisson));
+        assert!(specs.iter().any(|s| s.server_mode == ServerMode::Adaptive));
         // Names are unique (they key the report).
         let names: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| s.name.as_str()).collect();
         assert_eq!(names.len(), specs.len());
+    }
+
+    #[test]
+    fn adaptive_mode_applies_only_to_text_mixes() {
+        let specs = MatrixAxes::full_matrix(1).expand();
+        assert_eq!(specs.len(), 96 + 72, "96 static + 72 adaptive");
+        for spec in &specs {
+            let yaml = spec.to_yaml();
+            match spec.server_mode {
+                ServerMode::Adaptive => {
+                    assert!(spec.mix.has_text_app(), "{}", spec.name);
+                    assert!(yaml.contains("controller:"), "{}", spec.name);
+                    assert!(yaml.contains("server: llama"), "{}", spec.name);
+                }
+                ServerMode::Static => {
+                    assert!(!yaml.contains("controller:"), "{}", spec.name);
+                    // Text mixes still share the server — the static/
+                    // adaptive pair differs only in the controller.
+                    assert_eq!(
+                        yaml.contains("server: llama"),
+                        spec.mix.has_text_app(),
+                        "{}",
+                        spec.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_adaptive_pairs_differ_only_in_the_controller_block() {
+        let specs = MatrixAxes::default_matrix(3).expand();
+        for spec in specs.iter().filter(|s| s.server_mode == ServerMode::Adaptive) {
+            let twin_name = spec.name.replace("/server=adaptive", "/server=static");
+            let twin = specs.iter().find(|s| s.name == twin_name).unwrap();
+            let adaptive_yaml = spec.to_yaml();
+            let static_yaml = twin.to_yaml();
+            let stripped: String = adaptive_yaml
+                .lines()
+                .filter(|l| {
+                    !l.starts_with("controller:")
+                        && !["  epoch:", "  window:", "  target_attainment:"]
+                            .iter()
+                            .any(|p| l.starts_with(p))
+                })
+                .map(|l| format!("{l}\n"))
+                .collect();
+            // Apart from the name comment, removing the controller block
+            // recovers the static twin exactly.
+            assert_eq!(
+                stripped.lines().skip(1).collect::<Vec<_>>(),
+                static_yaml.lines().skip(1).collect::<Vec<_>>(),
+                "{}",
+                spec.name
+            );
+        }
     }
 
     #[test]

@@ -28,8 +28,10 @@ pub mod matrix;
 pub mod runner;
 
 pub use matrix::{
-    strategy_key, testbed_key, AppMix, ArrivalKind, MatrixAxes, MixEntry, ScenarioSpec,
+    server_mode_key, strategy_key, testbed_key, AppMix, ArrivalKind, MatrixAxes, MixEntry,
+    ScenarioSpec, ServerMode,
 };
 pub use runner::{
-    run_matrix, run_matrix_jobs, run_scenario, AppOutcome, MatrixReport, ScenarioOutcome,
+    run_matrix, run_matrix_jobs, run_scenario, run_specs_jobs, AppOutcome, MatrixReport,
+    ScenarioOutcome,
 };

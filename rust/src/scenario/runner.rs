@@ -28,7 +28,9 @@ use anyhow::{Context, Result};
 use crate::apps::Slo;
 use crate::coordinator::{run_config_text, ScenarioResult};
 use crate::gpusim::engine::trace_digest;
-use crate::scenario::matrix::{strategy_key, testbed_key, MatrixAxes, ScenarioSpec};
+use crate::scenario::matrix::{
+    server_mode_key, strategy_key, testbed_key, MatrixAxes, ScenarioSpec,
+};
 use crate::util::json::{json_num, json_str};
 use crate::util::stats::Summary;
 
@@ -55,6 +57,8 @@ pub struct ScenarioOutcome {
     pub strategy: String,
     pub arrival: String,
     pub testbed: String,
+    /// `static` | `adaptive` — the serving-configuration axis.
+    pub server_mode: String,
     pub seed: u64,
     pub makespan: f64,
     /// FNV-1a digest of the canonical engine trace — the golden fingerprint.
@@ -63,6 +67,9 @@ pub struct ScenarioOutcome {
     pub max_attainment: f64,
     /// max − min attainment across SLO-bearing apps (0 = perfectly fair).
     pub fairness_spread: f64,
+    /// Runtime reconfigurations applied by the adaptive controller (0 for
+    /// static scenarios).
+    pub reconfigurations: usize,
     pub apps: Vec<AppOutcome>,
 }
 
@@ -94,7 +101,13 @@ pub fn run_matrix(axes: &MatrixAxes) -> Result<MatrixReport> {
 /// several scenarios fail, the error of the lowest-index one is returned —
 /// also independent of scheduling.
 pub fn run_matrix_jobs(axes: &MatrixAxes, jobs: usize) -> Result<MatrixReport> {
-    let specs = axes.expand();
+    run_specs_jobs(&axes.expand(), axes.seed, jobs)
+}
+
+/// Execute an explicit spec list (e.g. a `--filter`ed subset of a matrix)
+/// on up to `jobs` workers, with the same canonical-order/byte-identity
+/// guarantees as [`run_matrix_jobs`].
+pub fn run_specs_jobs(specs: &[ScenarioSpec], seed: u64, jobs: usize) -> Result<MatrixReport> {
     let n = specs.len();
     let jobs = jobs.clamp(1, n.max(1));
     let mut slots: Vec<Option<Result<ScenarioOutcome>>> = (0..n).map(|_| None).collect();
@@ -102,7 +115,7 @@ pub fn run_matrix_jobs(axes: &MatrixAxes, jobs: usize) -> Result<MatrixReport> {
         // Sequential path keeps the old early-abort: the first failure stops
         // the sweep (the assembly loop below surfaces it before reaching any
         // unexecuted slot).
-        for (slot, spec) in slots.iter_mut().zip(&specs) {
+        for (slot, spec) in slots.iter_mut().zip(specs) {
             let outcome = run_scenario(spec);
             let failed = outcome.is_err();
             *slot = Some(outcome);
@@ -152,10 +165,7 @@ pub fn run_matrix_jobs(axes: &MatrixAxes, jobs: usize) -> Result<MatrixReport> {
         let outcome = slot.unwrap_or_else(|| panic!("scenario {i} was never executed"));
         scenarios.push(outcome?);
     }
-    Ok(MatrixReport {
-        seed: axes.seed,
-        scenarios,
-    })
+    Ok(MatrixReport { seed, scenarios })
 }
 
 fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome {
@@ -204,14 +214,30 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
         strategy: strategy_key(spec.strategy).to_string(),
         arrival: spec.arrival.name().to_string(),
         testbed: testbed_key(spec.testbed).to_string(),
+        server_mode: server_mode_key(spec.server_mode).to_string(),
         seed: spec.seed,
         makespan: result.makespan,
         trace_digest: trace_digest(&result.trace),
         min_attainment,
         max_attainment,
         fairness_spread: max_attainment - min_attainment,
+        reconfigurations: result.reconfigurations,
         apps,
     }
+}
+
+/// One static/adaptive scenario pair and its attainment delta — the
+/// measurable value of runtime adaptation (ISSUE 3 acceptance metric).
+#[derive(Debug, Clone)]
+pub struct AdaptiveDelta {
+    /// Scenario name without the `/server=…` suffix.
+    pub base: String,
+    pub static_min_attainment: f64,
+    pub adaptive_min_attainment: f64,
+    /// adaptive − static min-attainment (positive = adaptation helped).
+    pub delta: f64,
+    /// Reconfigurations the adaptive run applied.
+    pub reconfigurations: usize,
 }
 
 impl MatrixReport {
@@ -222,6 +248,34 @@ impl MatrixReport {
             if !out.contains(&s.strategy.as_str()) {
                 out.push(&s.strategy);
             }
+        }
+        out
+    }
+
+    /// Pair every adaptive scenario with its static twin (same axes, only
+    /// the server mode differs), in canonical order.
+    pub fn adaptive_deltas(&self) -> Vec<AdaptiveDelta> {
+        let mut out = Vec::new();
+        for s in &self.scenarios {
+            if s.server_mode != "adaptive" {
+                continue;
+            }
+            let base = s
+                .name
+                .strip_suffix("/server=adaptive")
+                .unwrap_or(&s.name)
+                .to_string();
+            let twin_name = format!("{base}/server=static");
+            let Some(twin) = self.scenarios.iter().find(|t| t.name == twin_name) else {
+                continue;
+            };
+            out.push(AdaptiveDelta {
+                base,
+                static_min_attainment: twin.min_attainment,
+                adaptive_min_attainment: s.min_attainment,
+                delta: s.min_attainment - twin.min_attainment,
+                reconfigurations: s.reconfigurations,
+            });
         }
         out
     }
@@ -244,6 +298,14 @@ impl MatrixReport {
             out.push_str(&format!("      \"strategy\": {},\n", json_str(&s.strategy)));
             out.push_str(&format!("      \"arrival\": {},\n", json_str(&s.arrival)));
             out.push_str(&format!("      \"testbed\": {},\n", json_str(&s.testbed)));
+            out.push_str(&format!(
+                "      \"server_mode\": {},\n",
+                json_str(&s.server_mode)
+            ));
+            out.push_str(&format!(
+                "      \"reconfigurations\": {},\n",
+                s.reconfigurations
+            ));
             out.push_str(&format!("      \"seed\": {},\n", s.seed));
             out.push_str(&format!(
                 "      \"makespan_s\": {},\n",
@@ -320,6 +382,20 @@ impl MatrixReport {
             ));
             out.push_str(if i + 1 < strategies.len() { ",\n" } else { "\n" });
         }
+        out.push_str("    ],\n");
+        out.push_str("    \"adaptive_vs_static\": [\n");
+        let deltas = self.adaptive_deltas();
+        for (i, d) in deltas.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"scenario\": {}, \"static_min_attainment\": {}, \"adaptive_min_attainment\": {}, \"attainment_delta\": {}, \"reconfigurations\": {}}}",
+                json_str(&d.base),
+                json_num(d.static_min_attainment),
+                json_num(d.adaptive_min_attainment),
+                json_num(d.delta),
+                d.reconfigurations,
+            ));
+            out.push_str(if i + 1 < deltas.len() { ",\n" } else { "\n" });
+        }
         out.push_str("    ]\n");
         out.push_str("  }\n");
         out.push_str("}\n");
@@ -330,16 +406,17 @@ impl MatrixReport {
     pub fn summary_table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<64} {:>9} {:>7} {:>7} {:>7}\n",
-            "scenario", "makespan", "min-att", "spread", "digest"
+            "{:<80} {:>9} {:>7} {:>7} {:>6} {:>7}\n",
+            "scenario", "makespan", "min-att", "spread", "reconf", "digest"
         ));
         for s in &self.scenarios {
             out.push_str(&format!(
-                "{:<64} {:>8.1}s {:>6.0}% {:>7.2} {:>7}\n",
+                "{:<80} {:>8.1}s {:>6.0}% {:>7.2} {:>6} {:>7}\n",
                 s.name,
                 s.makespan,
                 s.min_attainment * 100.0,
                 s.fairness_spread,
+                s.reconfigurations,
                 &format!("{:016x}", s.trace_digest)[..7],
             ));
         }
@@ -352,7 +429,7 @@ mod tests {
     use super::*;
     use crate::coordinator::config::{AppType, Strategy, TestbedKind};
     use crate::gpusim::kernel::Device;
-    use crate::scenario::matrix::{AppMix, ArrivalKind, MixEntry};
+    use crate::scenario::matrix::{AppMix, ArrivalKind, MixEntry, ServerMode};
 
     fn tiny_axes(seed: u64) -> MatrixAxes {
         MatrixAxes {
@@ -367,6 +444,7 @@ mod tests {
             strategies: vec![Strategy::Greedy, Strategy::FairShare],
             testbeds: vec![TestbedKind::IntelServer],
             arrivals: vec![ArrivalKind::Poisson],
+            server_modes: vec![ServerMode::Static, ServerMode::Adaptive],
             seed,
         }
     }
@@ -384,7 +462,31 @@ mod tests {
         assert!(json.contains("\"consumerbench_scenario_matrix\": 1"));
         assert!(json.contains("\"strategy\": \"greedy\""));
         assert!(json.contains("\"arrival\": \"poisson\""));
+        assert!(json.contains("\"server_mode\": \"static\""));
+        assert!(json.contains("\"adaptive_vs_static\""));
         assert!(!json.contains("inf"), "non-finite leaked into JSON");
+    }
+
+    #[test]
+    fn adaptive_deltas_pair_twins_in_canonical_order() {
+        // A text mix so both server modes expand.
+        let mut axes = MatrixAxes::default_matrix(11);
+        axes.mixes = vec![AppMix::chat()];
+        axes.strategies.truncate(1);
+        axes.arrivals.truncate(1);
+        let report = run_matrix(&axes).unwrap();
+        assert_eq!(report.scenarios.len(), 2, "one static + one adaptive");
+        let deltas = report.adaptive_deltas();
+        assert_eq!(deltas.len(), 1);
+        let d = &deltas[0];
+        assert!(d.base.contains("mix=chat"));
+        assert!(!d.base.contains("server="));
+        assert_eq!(
+            d.delta,
+            d.adaptive_min_attainment - d.static_min_attainment
+        );
+        let json = report.to_json();
+        assert!(json.contains("\"attainment_delta\""), "{json}");
     }
 
     #[test]
@@ -406,6 +508,8 @@ mod tests {
             makespan: 1.0,
             policy: "greedy".into(),
             pjrt_calls: 0,
+            reconfigurations: 0,
+            controller_actions: vec![],
         };
         let outcome = outcome_from(&spec, &result);
         assert_eq!(outcome.min_attainment, 0.0);

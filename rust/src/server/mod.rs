@@ -8,12 +8,20 @@
 //! * **Unified batching**: each server iteration builds one batch combining
 //!   one decode token for every decoding slot plus a chunk (≤ `batch_size`
 //!   tokens) of one pending prefill — llama.cpp's continuous batching.
-//! * **Static configuration**: the KV cache is sized for `context_window`
-//!   at startup and placed on the GPU, or in CPU DRAM when
-//!   `kv_placement = Cpu` (the `--no-kv-offload` flag). CPU placement moves
-//!   every attention operation to the CPU — the paper's Chatbot-KVCache-CPU
-//!   configuration whose interference DeepResearch's long contexts turn
-//!   into ~40% chat SLO misses.
+//! * **Configuration in two halves**: an immutable [`ServerProfile`] (which
+//!   model, how much context the KV region is provisioned for) and a
+//!   mutable [`ServerTuning`] (`kv_placement`, `n_slots`, `batch_size`).
+//!   The paper's §4.2.1 finding is that freezing the tuning for the
+//!   server's lifetime is a poor fit for mixed workloads: the
+//!   Chatbot-KVCache-CPU configuration (`--no-kv-offload`) moves every
+//!   attention operation to the CPU, and DeepResearch's long contexts turn
+//!   that into ~40% chat SLO misses.
+//! * **Runtime reconfiguration**: [`InferenceServer::reconfigure`] applies
+//!   a new tuning between iterations — the in-flight unified batch drains
+//!   first, occupied slots are never dropped, and a KV placement change
+//!   runs as an engine job whose DMA transfer cost and VRAM `MemOp`s show
+//!   up in the monitor trace like any other work. This is the substrate
+//!   the adaptive controller (`coordinator::controller`) acts on.
 //!
 //! The server is an actor over the simulated testbed: the coordinator calls
 //! [`InferenceServer::pump`] whenever virtual time advances; the server
@@ -28,13 +36,20 @@ use std::collections::VecDeque;
 use crate::apps::models::LlamaProfile;
 use crate::gpusim::engine::{ClientId, Engine, JobId, JobResult, JobSpec, MemOp, Phase};
 
-/// Server configuration (static for the server's lifetime — the paper's
-/// §4.2.1 point is precisely that this is a poor fit for mixed workloads).
+/// The immutable half of the server configuration: what the server *is*.
+/// Changing either field means a different model deployment, not a runtime
+/// adjustment — the KV region is provisioned for `context_window` once.
 #[derive(Debug, Clone)]
-pub struct ServerConfig {
+pub struct ServerProfile {
     pub model: LlamaProfile,
     /// Tokens of context the KV cache is provisioned for.
     pub context_window: usize,
+}
+
+/// The mutable half: the serving knobs a runtime controller may change
+/// while requests are in flight (llama.cpp restart flags, made live).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerTuning {
     pub kv_placement: KvPlacement,
     /// Concurrent sequence slots.
     pub n_slots: usize,
@@ -42,16 +57,27 @@ pub struct ServerConfig {
     pub batch_size: usize,
 }
 
+/// Full server configuration: immutable profile + current tuning.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub profile: ServerProfile,
+    pub tuning: ServerTuning,
+}
+
 impl ServerConfig {
     /// The paper's DeepResearch-friendly configuration: 128K context,
     /// 16 GB-class KV cache kept in CPU DRAM to save VRAM.
     pub fn kv_cpu(model: LlamaProfile) -> ServerConfig {
         ServerConfig {
-            model,
-            context_window: 131_072,
-            kv_placement: KvPlacement::Cpu,
-            n_slots: 4,
-            batch_size: 512,
+            profile: ServerProfile {
+                model,
+                context_window: 131_072,
+            },
+            tuning: ServerTuning {
+                kv_placement: KvPlacement::Cpu,
+                n_slots: 4,
+                batch_size: 512,
+            },
         }
     }
 
@@ -59,11 +85,15 @@ impl ServerConfig {
     /// KV on the GPU (DeepResearch quality degrades — not modeled here).
     pub fn kv_gpu(model: LlamaProfile) -> ServerConfig {
         ServerConfig {
-            model,
-            context_window: 16_384,
-            kv_placement: KvPlacement::Gpu,
-            n_slots: 4,
-            batch_size: 512,
+            profile: ServerProfile {
+                model,
+                context_window: 16_384,
+            },
+            tuning: ServerTuning {
+                kv_placement: KvPlacement::Gpu,
+                n_slots: 4,
+                batch_size: 512,
+            },
         }
     }
 }
@@ -114,23 +144,44 @@ struct Slot {
     first_token: Option<f64>,
 }
 
+/// What the server's single in-flight engine job is doing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Inflight {
+    /// A unified-batch iteration.
+    Iteration(JobId),
+    /// A KV migration transfer; the placement flips to the carried target
+    /// only when the job completes without error (GPU OOM rolls back).
+    Migration(JobId, KvPlacement),
+}
+
+/// Effective PCIe-class DMA bandwidth used to cost KV migrations (bytes/s).
+const KV_DMA_BW: f64 = 24e9;
+
+/// Fixed per-migration latency (driver synchronization + region setup).
+const KV_DMA_LATENCY: f64 = 1e-3;
+
 /// The shared inference server actor.
 pub struct InferenceServer {
     cfg: ServerConfig,
     client: ClientId,
     queue: VecDeque<(ServerRequest, f64)>,
     slots: Vec<Option<Slot>>,
-    inflight: Option<JobId>,
+    inflight: Option<Inflight>,
     responses: Vec<ServerResponse>,
     started: bool,
     iteration_count: u64,
     /// Slot-advances committed when the in-flight iteration completes.
     pending_advance: Option<PendingAdvance>,
+    /// Tuning waiting for the in-flight iteration to drain.
+    pending_tuning: Option<ServerTuning>,
+    reconfigurations: u64,
+    /// Migrations rolled back because the target placement did not fit.
+    failed_migrations: u64,
 }
 
 impl InferenceServer {
     pub fn new(cfg: ServerConfig, client: ClientId) -> Self {
-        let n = cfg.n_slots;
+        let n = cfg.tuning.n_slots;
         InferenceServer {
             cfg,
             client,
@@ -141,6 +192,9 @@ impl InferenceServer {
             started: false,
             iteration_count: 0,
             pending_advance: None,
+            pending_tuning: None,
+            reconfigurations: 0,
+            failed_migrations: 0,
         }
     }
 
@@ -152,8 +206,41 @@ impl InferenceServer {
         &self.cfg
     }
 
+    /// The current tuning (post any applied reconfigurations).
+    pub fn tuning(&self) -> ServerTuning {
+        self.cfg.tuning
+    }
+
     pub fn iterations(&self) -> u64 {
         self.iteration_count
+    }
+
+    /// Runtime reconfigurations that actually landed: slot/batch changes
+    /// count when applied, placement changes only once the migration
+    /// transfer completes (a rolled-back migration is not counted).
+    pub fn reconfigurations(&self) -> u64 {
+        self.reconfigurations
+    }
+
+    /// KV migrations that were rolled back (target placement OOM).
+    pub fn failed_migrations(&self) -> u64 {
+        self.failed_migrations
+    }
+
+    /// Whether a requested reconfiguration has not fully landed yet (still
+    /// draining the in-flight batch or migrating the KV region).
+    pub fn reconfig_pending(&self) -> bool {
+        self.pending_tuning.is_some() || matches!(self.inflight, Some(Inflight::Migration(..)))
+    }
+
+    /// Queued requests not yet admitted to a slot.
+    pub fn queued_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests currently occupying slots.
+    pub fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
     }
 
     /// Submit the server startup job (weight load + KV allocation). Must be
@@ -161,21 +248,21 @@ impl InferenceServer {
     pub fn start(&mut self, engine: &mut Engine, at: f64) -> JobId {
         assert!(!self.started, "server already started");
         self.started = true;
+        let m = &self.cfg.profile.model;
         let mut mem_ops = vec![MemOp::Alloc {
             label: "weights".into(),
-            bytes: self.cfg.model.weights_bytes,
+            bytes: m.weights_bytes,
         }];
-        if self.cfg.kv_placement == KvPlacement::Gpu {
+        if self.cfg.tuning.kv_placement == KvPlacement::Gpu {
             mem_ops.push(MemOp::Alloc {
                 label: "kv-cache".into(),
-                bytes: self.cfg.model.kv_cache_bytes(self.cfg.context_window),
+                bytes: m.kv_cache_bytes(self.cfg.profile.context_window),
             });
         }
         let spec = JobSpec {
             client: self.client,
             label: "server.start".into(),
-            phases: vec![Phase::host("server.load", self.cfg.model.load_seconds())
-                .with_mem_ops(mem_ops)],
+            phases: vec![Phase::host("server.load", m.load_seconds()).with_mem_ops(mem_ops)],
         };
         engine.submit(spec, at)
     }
@@ -189,6 +276,7 @@ impl InferenceServer {
     pub fn enqueue(&mut self, mut request: ServerRequest, now: f64) {
         let budget = self
             .cfg
+            .profile
             .context_window
             .saturating_sub(request.output_tokens)
             .max(16);
@@ -199,31 +287,149 @@ impl InferenceServer {
     /// Notify the server that one of its jobs completed. Returns true if the
     /// result belonged to this server.
     pub fn on_job_done(&mut self, result: &JobResult) -> bool {
-        if Some(result.id) != self.inflight {
-            return false;
+        match self.inflight {
+            Some(Inflight::Iteration(id)) if id == result.id => {
+                self.inflight = None;
+                self.finish_iteration(result.end);
+                true
+            }
+            Some(Inflight::Migration(id, target)) if id == result.id => {
+                self.inflight = None;
+                if result.error.is_none() {
+                    self.cfg.tuning.kv_placement = target;
+                    // The placement change only counts once it has landed.
+                    self.reconfigurations += 1;
+                } else {
+                    // The target region did not fit (GPU OOM): the KV cache
+                    // stays where it was; the rest of the tuning keeps.
+                    self.failed_migrations += 1;
+                }
+                true
+            }
+            _ => false,
         }
-        self.inflight = None;
-        self.finish_iteration(result.end);
-        true
     }
 
-    /// Drive the server: admit queued requests and launch the next iteration
-    /// if idle. Call whenever virtual time advances or jobs complete.
-    pub fn pump(&mut self, engine: &mut Engine, now: f64) {
-        if !self.started || self.inflight.is_some() {
+    /// Request a runtime reconfiguration. The change lands between
+    /// iterations: the in-flight unified batch drains first, occupied
+    /// slots keep their prefill/decode progress (a shrink below the
+    /// occupancy retires surplus slots lazily), and a KV placement change
+    /// runs as an engine job with a realistic DMA transfer cost before
+    /// iterations resume. Calling again before the previous request
+    /// applied replaces it (last writer wins).
+    pub fn reconfigure(&mut self, engine: &mut Engine, now: f64, tuning: ServerTuning) {
+        assert!(tuning.n_slots > 0, "n_slots must be >= 1");
+        assert!(tuning.batch_size > 0, "batch_size must be >= 1");
+        if !self.started {
+            // Nothing allocated yet: the new tuning simply becomes the
+            // startup configuration.
+            self.cfg.tuning = tuning;
+            self.slots = (0..tuning.n_slots).map(|_| None).collect();
             return;
         }
-        self.admit(now);
+        self.pending_tuning = Some(tuning);
+        self.try_apply_tuning(engine, now);
+    }
+
+    /// Apply a pending tuning once nothing is in flight.
+    fn try_apply_tuning(&mut self, engine: &mut Engine, now: f64) {
+        if self.inflight.is_some() {
+            return;
+        }
+        let Some(t) = self.pending_tuning.take() else {
+            return;
+        };
+        let old = self.cfg.tuning;
+        if t == old {
+            return;
+        }
+        // Slot resize: occupied slots are never dropped — compact them to
+        // the front; on a shrink below the occupancy the vector stays long
+        // enough and contracts as slots retire (see `admit`).
+        let occupied: Vec<Slot> = self.slots.drain(..).flatten().collect();
+        let len = t.n_slots.max(occupied.len());
+        self.slots = occupied.into_iter().map(Some).collect();
+        self.slots.resize_with(len, || None);
+        // Non-placement knobs apply immediately; the placement flips when
+        // the migration transfer completes (`on_job_done`). Each knob group
+        // is counted when it actually lands — a rolled-back migration
+        // (target OOM) never inflates the reconfiguration count.
+        self.cfg.tuning = ServerTuning {
+            kv_placement: old.kv_placement,
+            ..t
+        };
+        if t.n_slots != old.n_slots || t.batch_size != old.batch_size {
+            self.reconfigurations += 1;
+        }
+        if t.kv_placement != old.kv_placement {
+            let id = self.submit_migration(engine, now, t.kv_placement);
+            self.inflight = Some(Inflight::Migration(id, t.kv_placement));
+        }
+    }
+
+    /// Submit the KV migration transfer: the region is (de)allocated via
+    /// `MemOp`s and the live cells cross the PCIe bus at DMA speed, so the
+    /// reconfiguration is itself visible in the monitor trace.
+    fn submit_migration(&mut self, engine: &mut Engine, now: f64, target: KvPlacement) -> JobId {
+        let m = &self.cfg.profile.model;
+        let region = m.kv_cache_bytes(self.cfg.profile.context_window);
+        let live_tokens: usize = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| s.prefilled + s.decoded)
+            .sum();
+        let moved = (m.kv_bytes_per_token * live_tokens as u64).min(region);
+        let dma = KV_DMA_LATENCY + moved as f64 / KV_DMA_BW;
+        let (tag, ops) = match target {
+            KvPlacement::Gpu => (
+                "server.kv_onload",
+                vec![MemOp::Alloc {
+                    label: "kv-cache".into(),
+                    bytes: region,
+                }],
+            ),
+            KvPlacement::Cpu => (
+                "server.kv_offload",
+                vec![MemOp::Free {
+                    label: "kv-cache".into(),
+                }],
+            ),
+        };
+        let spec = JobSpec {
+            client: self.client,
+            label: format!("server.migrate.{target}"),
+            phases: vec![Phase::host(tag, dma).with_mem_ops(ops)],
+        };
+        engine.submit(spec, now)
+    }
+
+    /// Drive the server: apply any pending reconfiguration, admit queued
+    /// requests, and launch the next iteration if idle. Call whenever
+    /// virtual time advances or jobs complete.
+    pub fn pump(&mut self, engine: &mut Engine, now: f64) {
+        if !self.started {
+            return;
+        }
+        self.try_apply_tuning(engine, now);
+        if self.inflight.is_some() {
+            return;
+        }
+        self.admit();
         if let Some(spec) = self.build_iteration() {
             let id = engine.submit(spec, now);
-            self.inflight = Some(id);
+            self.inflight = Some(Inflight::Iteration(id));
             self.iteration_count += 1;
         }
     }
 
-    /// True when no queued work, no active slots, and nothing in flight.
+    /// True when no queued work, no active slots, nothing in flight, and no
+    /// reconfiguration waiting to land.
     pub fn idle(&self) -> bool {
-        self.queue.is_empty() && self.inflight.is_none() && self.slots.iter().all(|s| s.is_none())
+        self.queue.is_empty()
+            && self.inflight.is_none()
+            && self.pending_tuning.is_none()
+            && self.slots.iter().all(|s| s.is_none())
     }
 
     /// Drain finished responses.
@@ -231,41 +437,58 @@ impl InferenceServer {
         std::mem::take(&mut self.responses)
     }
 
-    fn admit(&mut self, now: f64) {
+    fn admit(&mut self) {
+        let cap = self.cfg.tuning.n_slots;
+        // A shrink leaves the vector longer than the cap until the surplus
+        // occupied slots retire; contract over trailing empties first.
+        while self.slots.len() > cap && matches!(self.slots.last(), Some(None)) {
+            self.slots.pop();
+        }
+        if self.slots.len() < cap {
+            self.slots.resize_with(cap, || None);
+        }
+        let mut occupied = self.active_slots();
         for slot in self.slots.iter_mut() {
+            if occupied >= cap {
+                break;
+            }
             if slot.is_none() {
-                if let Some((request, submit)) = self.queue.pop_front() {
-                    let _ = now;
-                    *slot = Some(Slot {
-                        request,
-                        submit,
-                        prefilled: 0,
-                        decoded: 0,
-                        first_token: None,
-                    });
-                } else {
+                let Some((request, submit)) = self.queue.pop_front() else {
                     break;
-                }
+                };
+                *slot = Some(Slot {
+                    request,
+                    submit,
+                    prefilled: 0,
+                    decoded: 0,
+                    first_token: None,
+                });
+                occupied += 1;
             }
         }
     }
 
-    /// Build the next unified batch: one decode token per decoding slot plus
-    /// prefill chunks from every slot still prefilling, filling the token
-    /// budget round-robin (llama.cpp's unified batch — a long prefill must
-    /// not monopolize the server).
-    fn build_iteration(&mut self) -> Option<JobSpec> {
-        let mut decode_ctx: Vec<usize> = Vec::new();
-        let mut prefill_chunks: Vec<(usize, usize)> = Vec::new(); // (slot, tokens)
-        let mut budget = self.cfg.batch_size;
+    /// Plan the next unified batch without mutating any state: one decode
+    /// token per decoding slot plus prefill chunks from every slot still
+    /// prefilling, filling the token budget round-robin (llama.cpp's
+    /// unified batch — a long prefill must not monopolize the server).
+    ///
+    /// This is the verification surface for the batching-invariant property
+    /// tests: immediately after an iteration launches, the plan equals the
+    /// in-flight batch (slot state only advances when the iteration
+    /// completes).
+    pub fn plan_batch(&self) -> Option<BatchPlan> {
+        let mut decode_slots: Vec<usize> = Vec::new();
+        let mut prefill: Vec<(usize, usize)> = Vec::new(); // (slot, tokens)
+        let mut budget = self.cfg.tuning.batch_size;
 
-        for (_i, slot) in self.slots.iter().enumerate() {
+        for (i, slot) in self.slots.iter().enumerate() {
             let Some(s) = slot else { continue };
             if s.prefilled >= s.request.prompt_tokens
                 && s.decoded < s.request.output_tokens
                 && budget > 0
             {
-                decode_ctx.push(s.request.prompt_tokens + s.decoded);
+                decode_slots.push(i);
                 budget -= 1;
             }
         }
@@ -274,22 +497,39 @@ impl InferenceServer {
             if s.prefilled < s.request.prompt_tokens && budget > 0 {
                 let remaining = s.request.prompt_tokens - s.prefilled;
                 let chunk = remaining.min(budget);
-                prefill_chunks.push((i, chunk));
+                prefill.push((i, chunk));
                 budget -= chunk;
             }
         }
-
-        if decode_ctx.is_empty() && prefill_chunks.is_empty() {
-            return None;
+        if decode_slots.is_empty() && prefill.is_empty() {
+            None
+        } else {
+            Some(BatchPlan {
+                decode_slots,
+                prefill,
+            })
         }
+    }
+
+    /// Lower the planned batch into an engine job.
+    fn build_iteration(&mut self) -> Option<JobSpec> {
+        let plan = self.plan_batch()?;
+        let decode_ctx: Vec<usize> = plan
+            .decode_slots
+            .iter()
+            .map(|&i| {
+                let s = self.slots[i].as_ref().unwrap();
+                s.request.prompt_tokens + s.decoded
+            })
+            .collect();
 
         let mut phases = Vec::new();
-        let m = &self.cfg.model;
+        let m = &self.cfg.profile.model;
         // Decode part: batched — weights are read once for the whole batch,
         // per-sequence KV is read per slot.
         if !decode_ctx.is_empty() {
             let batch = decode_ctx.len();
-            match self.cfg.kv_placement {
+            match self.cfg.tuning.kv_placement {
                 KvPlacement::Gpu => {
                     // Batched decode kernels: scale flops by batch, weights
                     // traffic shared, KV traffic summed.
@@ -319,10 +559,10 @@ impl InferenceServer {
             }
         }
         // Prefill chunks: each prefilling slot's next tokens.
-        for &(slot_idx, chunk) in &prefill_chunks {
+        for &(slot_idx, chunk) in &plan.prefill {
             let s = self.slots[slot_idx].as_ref().unwrap();
             let ctx_so_far = s.prefilled + chunk;
-            match self.cfg.kv_placement {
+            match self.cfg.tuning.kv_placement {
                 KvPlacement::Gpu => {
                     phases.push(Phase::gpu("server.prefill", 0.001, m.prefill_kernels(chunk)));
                 }
@@ -346,20 +586,8 @@ impl InferenceServer {
         // Record what this iteration advances so `finish_iteration` can
         // commit it.
         self.pending_advance = Some(PendingAdvance {
-            decode_slots: self
-                .slots
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| {
-                    s.as_ref().is_some_and(|s| {
-                        s.prefilled >= s.request.prompt_tokens
-                            && s.decoded < s.request.output_tokens
-                    })
-                })
-                .map(|(i, _)| i)
-                .take(decode_ctx.len())
-                .collect(),
-            prefill: prefill_chunks,
+            decode_slots: plan.decode_slots,
+            prefill: plan.prefill,
         });
 
         Some(JobSpec {
@@ -407,6 +635,22 @@ impl InferenceServer {
     }
 }
 
+/// A planned unified batch: which slots decode and which prefill how much.
+/// `decode_slots` contribute exactly one token each; `prefill` entries are
+/// `(slot index, tokens)` chunks. Total tokens never exceed `batch_size`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub decode_slots: Vec<usize>,
+    pub prefill: Vec<(usize, usize)>,
+}
+
+impl BatchPlan {
+    /// Total tokens in the unified batch.
+    pub fn tokens(&self) -> usize {
+        self.decode_slots.len() + self.prefill.iter().map(|&(_, c)| c).sum::<usize>()
+    }
+}
+
 /// Bookkeeping for the iteration in flight.
 #[derive(Debug)]
 struct PendingAdvance {
@@ -428,12 +672,12 @@ fn kernels_per_token() -> usize {
 
 /// VRAM bytes the server needs at startup under its configuration.
 pub fn server_vram_bytes(cfg: &ServerConfig) -> u64 {
-    let kv = if cfg.kv_placement == KvPlacement::Gpu {
-        cfg.model.kv_cache_bytes(cfg.context_window)
+    let kv = if cfg.tuning.kv_placement == KvPlacement::Gpu {
+        cfg.profile.model.kv_cache_bytes(cfg.profile.context_window)
     } else {
         0
     };
-    cfg.model.weights_bytes + kv
+    cfg.profile.model.weights_bytes + kv
 }
 
 /// Drive an engine + server pair until the server is idle (helper for tests
@@ -528,7 +772,7 @@ mod tests {
         );
         run_server_to_idle(&mut e, &mut s);
         // With --no-kv-offload, no KV cache sits in VRAM …
-        assert_eq!(e.vram().used(), s.config().model.weights_bytes);
+        assert_eq!(e.vram().used(), s.config().profile.model.weights_bytes);
         // … and the CPU sees real utilization during decoding (Fig. 6).
         assert!(e.trace().iter().any(|t| t.cpu_util > 0.2));
     }
@@ -546,7 +790,7 @@ mod tests {
         // §4.2.1: 128K-context KV on the GPU (~14 GiB) + weights + ImageGen
         // exceeds 24 GB — the reason the paper moves it to the CPU.
         let mut cfg = ServerConfig::kv_cpu(llama_3_2_3b());
-        cfg.kv_placement = KvPlacement::Gpu;
+        cfg.tuning.kv_placement = KvPlacement::Gpu;
         let server_bytes = server_vram_bytes(&cfg);
         let imagegen = crate::apps::models::sd35_medium_turbo();
         let total = server_bytes + imagegen.weights_bytes + imagegen.activation_bytes;
@@ -596,5 +840,159 @@ mod tests {
         run_server_to_idle(&mut e, &mut s);
         assert_eq!(s.take_responses().len(), 10);
         assert!(s.idle());
+    }
+
+    #[test]
+    fn reconfigure_before_start_rewrites_startup_tuning() {
+        let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let c = e.register_client("llama-server");
+        let mut s = InferenceServer::new(ServerConfig::kv_cpu(llama_3_2_3b()), c);
+        s.reconfigure(
+            &mut e,
+            0.0,
+            ServerTuning { kv_placement: KvPlacement::Gpu, n_slots: 2, batch_size: 256 },
+        );
+        assert_eq!(s.tuning().kv_placement, KvPlacement::Gpu);
+        assert_eq!(s.reconfigurations(), 0, "pre-start changes are free");
+        s.start(&mut e, 0.0);
+        e.run_all();
+        e.take_completed();
+        // KV was allocated on the GPU at startup under the new tuning.
+        assert_eq!(e.vram().used(), server_vram_bytes(s.config()));
+    }
+
+    #[test]
+    fn migration_moves_kv_between_devices_with_dma_cost() {
+        let mut cfg = ServerConfig::kv_gpu(llama_3_2_3b());
+        cfg.profile.context_window = 8_192;
+        cfg.tuning.kv_placement = KvPlacement::Gpu;
+        let (mut e, mut s) = setup(cfg);
+        let weights = s.config().profile.model.weights_bytes;
+        let kv = s
+            .config()
+            .profile
+            .model
+            .kv_cache_bytes(s.config().profile.context_window);
+        assert_eq!(e.vram().used(), weights + kv);
+        // Offload: KV leaves VRAM, weights stay; virtual time advances by
+        // at least the fixed DMA latency.
+        let t0 = e.now();
+        s.reconfigure(
+            &mut e,
+            e.now(),
+            ServerTuning { kv_placement: KvPlacement::Cpu, ..s.tuning() },
+        );
+        assert!(s.reconfig_pending());
+        run_server_to_idle(&mut e, &mut s);
+        assert_eq!(s.tuning().kv_placement, KvPlacement::Cpu);
+        assert_eq!(e.vram().used(), weights);
+        assert!(e.now() >= t0 + KV_DMA_LATENCY);
+        assert_eq!(s.reconfigurations(), 1);
+        // And back on: the region is re-allocated.
+        s.reconfigure(
+            &mut e,
+            e.now(),
+            ServerTuning { kv_placement: KvPlacement::Gpu, ..s.tuning() },
+        );
+        run_server_to_idle(&mut e, &mut s);
+        assert_eq!(s.tuning().kv_placement, KvPlacement::Gpu);
+        assert_eq!(e.vram().used(), weights + kv);
+        assert_eq!(s.failed_migrations(), 0);
+    }
+
+    #[test]
+    fn infeasible_onload_rolls_back_placement() {
+        // 128K-context KV (~14 GiB) + a 12 GiB squatter cannot fit in
+        // 24 GiB next to the weights: the migration job fails and the KV
+        // stays in CPU DRAM.
+        let (mut e, mut s) = setup(ServerConfig::kv_cpu(llama_3_2_3b()));
+        let squatter = e.register_client("squatter");
+        e.submit(
+            JobSpec {
+                client: squatter,
+                label: "hog".into(),
+                phases: vec![Phase::host("alloc", 0.0).with_mem_ops(vec![MemOp::Alloc {
+                    label: "buf".into(),
+                    bytes: 12 * (1u64 << 30),
+                }])],
+            },
+            e.now(),
+        );
+        e.run_all();
+        e.take_completed();
+        s.reconfigure(
+            &mut e,
+            e.now(),
+            ServerTuning { kv_placement: KvPlacement::Gpu, ..s.tuning() },
+        );
+        run_server_to_idle(&mut e, &mut s);
+        assert_eq!(s.tuning().kv_placement, KvPlacement::Cpu, "OOM must roll back");
+        assert_eq!(s.failed_migrations(), 1);
+        assert_eq!(
+            s.reconfigurations(),
+            0,
+            "a rolled-back migration must not count as a landed reconfiguration"
+        );
+        // The server still serves afterwards.
+        s.enqueue(
+            ServerRequest { id: 0, app: "Chatbot", prompt_tokens: 32, output_tokens: 8 },
+            e.now(),
+        );
+        run_server_to_idle(&mut e, &mut s);
+        assert_eq!(s.take_responses().len(), 1);
+    }
+
+    #[test]
+    fn shrink_mid_flight_drains_slots_without_losing_requests() {
+        let (mut e, mut s) = setup(ServerConfig::kv_gpu(llama_3_2_3b()));
+        for i in 0..8 {
+            s.enqueue(
+                ServerRequest { id: i, app: "Chatbot", prompt_tokens: 700, output_tokens: 24 },
+                e.now(),
+            );
+        }
+        // Let a few iterations run (mid-prefill), then shrink 4 → 1 slots
+        // and halve the batch.
+        for _ in 0..3 {
+            s.pump(&mut e, e.now());
+            let t = e.next_event_time().unwrap();
+            e.run_until(t);
+            for r in e.take_completed() {
+                s.on_job_done(&r);
+            }
+        }
+        assert!(s.active_slots() > 1, "setup: several slots mid-flight");
+        s.reconfigure(
+            &mut e,
+            e.now(),
+            ServerTuning { n_slots: 1, batch_size: 256, ..s.tuning() },
+        );
+        run_server_to_idle(&mut e, &mut s);
+        let responses = s.take_responses();
+        assert_eq!(responses.len(), 8, "no request lost or duplicated");
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>());
+        assert!(s.idle());
+        assert_eq!(s.tuning().n_slots, 1);
+    }
+
+    #[test]
+    fn plan_batch_matches_inflight_iteration() {
+        let (mut e, mut s) = setup(ServerConfig::kv_gpu(llama_3_2_3b()));
+        for i in 0..3 {
+            s.enqueue(
+                ServerRequest { id: i, app: "Chatbot", prompt_tokens: 900, output_tokens: 4 },
+                e.now(),
+            );
+        }
+        let before = s.iterations();
+        s.pump(&mut e, e.now());
+        assert_eq!(s.iterations(), before + 1);
+        let plan = s.plan_batch().expect("an iteration is in flight");
+        assert!(plan.tokens() <= s.tuning().batch_size);
+        assert!(!plan.prefill.is_empty(), "fresh requests start with prefill");
+        run_server_to_idle(&mut e, &mut s);
+        assert_eq!(s.take_responses().len(), 3);
     }
 }

@@ -6,13 +6,16 @@
 //! trace digest inside it) is **byte-identical** across `--jobs 1`,
 //! `--jobs 4`, and repeated runs with the same seed — and diverges for a
 //! different seed. The last test pins the acceptance path end-to-end
-//! through the CLI on the full 96-scenario sweep.
+//! through the CLI on the full 168-scenario sweep (96 static + 72
+//! adaptive — reconfiguration events are part of the pinned digests).
 
 use consumerbench::cli::run_cli;
 use consumerbench::scenario::{run_matrix_jobs, MatrixAxes};
 
 /// A small but heterogeneous matrix: two mixes × three policies × two
-/// arrival models (12 scenarios) keeps byte-identity checks fast.
+/// arrival models × both server modes (24 scenarios, half of them
+/// adaptive) keeps byte-identity checks fast while still covering the
+/// controller path.
 fn small_axes(seed: u64) -> MatrixAxes {
     let mut axes = MatrixAxes::default_matrix(seed);
     axes.mixes.truncate(2);
@@ -94,6 +97,10 @@ fn cli_full_sweep_byte_identical_across_jobs() {
         "full-sweep JSON must be byte-identical for --jobs 1 and --jobs 4"
     );
     let text = String::from_utf8(reports[0].clone()).unwrap();
-    assert!(text.contains("\"num_scenarios\": 96"), "full sweep is 96 scenarios");
+    assert!(
+        text.contains("\"num_scenarios\": 168"),
+        "full sweep is 96 static + 72 adaptive scenarios"
+    );
     assert!(text.contains("\"testbed\": \"macbook_m1_pro\""));
+    assert!(text.contains("\"server_mode\": \"adaptive\""));
 }

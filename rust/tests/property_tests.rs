@@ -7,6 +7,7 @@
 //! see `tests/policy_schedule.rs` and `tests/golden_trace.rs` for the
 //! schedule-invariant and determinism coverage added on top.
 
+use consumerbench::apps::models::llama_3_2_3b;
 use consumerbench::coordinator::config::WorkflowNodeConfig;
 use consumerbench::coordinator::Dag;
 use consumerbench::gpusim::engine::{CpuWork, Engine, JobSpec, Phase};
@@ -16,7 +17,10 @@ use consumerbench::gpusim::profiles::{rtx6000, Testbed};
 use consumerbench::gpusim::vram::VramAllocator;
 use consumerbench::gpusim::ClientId;
 use consumerbench::prop_assert;
-use consumerbench::server::{KvCacheManager, KvPlacement};
+use consumerbench::server::{
+    InferenceServer, KvCacheManager, KvPlacement, ServerConfig, ServerProfile, ServerRequest,
+    ServerTuning,
+};
 use consumerbench::util::proptest::{check, Gen};
 
 fn random_kernel(g: &mut Gen) -> KernelDesc {
@@ -402,6 +406,176 @@ fn prop_partition_latency_bounded_by_exclusive_share() {
         prop_assert!(
             lat <= d_cap * 1.01 + 1e-6,
             "partitioned latency {lat} > capped-exclusive {d_cap}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Adaptive serving layer: unified-batching and reconfiguration invariants
+// ---------------------------------------------------------------------
+
+/// Random server tuning within the ranges the adaptive controller uses.
+fn random_tuning(g: &mut Gen) -> ServerTuning {
+    ServerTuning {
+        kv_placement: if g.bool() {
+            KvPlacement::Gpu
+        } else {
+            KvPlacement::Cpu
+        },
+        n_slots: g.usize(1, 7),
+        batch_size: *g.pick(&[32, 128, 512]),
+    }
+}
+
+/// Fresh engine + started server with a small context window (so KV
+/// migrations always fit next to the weights on the 24 GiB testbed).
+fn started_server(tuning: ServerTuning) -> (Engine, InferenceServer) {
+    let cfg = ServerConfig {
+        profile: ServerProfile {
+            model: llama_3_2_3b(),
+            context_window: 4096,
+        },
+        tuning,
+    };
+    let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+    let c = e.register_client("llama-server");
+    let mut s = InferenceServer::new(cfg, c);
+    s.start(&mut e, 0.0);
+    e.run_all();
+    e.take_completed();
+    (e, s)
+}
+
+#[test]
+fn prop_unified_batch_invariants() {
+    check("server-unified-batch", 0xC3, 40, |g| {
+        let tuning = random_tuning(g);
+        let (mut e, mut s) = started_server(tuning);
+        let n_req = g.usize(1, 10);
+        for i in 0..n_req {
+            s.enqueue(
+                ServerRequest {
+                    id: i as u64,
+                    app: "Chatbot",
+                    prompt_tokens: g.usize(1, 900),
+                    output_tokens: g.usize(1, 24),
+                },
+                e.now(),
+            );
+        }
+        let mut guard = 0u32;
+        loop {
+            guard += 1;
+            prop_assert!(guard < 100_000, "server did not converge");
+            let before = s.iterations();
+            s.pump(&mut e, e.now());
+            if s.iterations() > before {
+                // The just-launched batch equals the current plan (slot
+                // state only advances when the iteration completes).
+                let plan = s.plan_batch().expect("in-flight batch must plan");
+                prop_assert!(
+                    plan.tokens() <= tuning.batch_size,
+                    "batch of {} tokens exceeds batch_size {}",
+                    plan.tokens(),
+                    tuning.batch_size
+                );
+                let mut seen = std::collections::BTreeSet::new();
+                for &slot in &plan.decode_slots {
+                    // Exactly one decode token per decoding slot.
+                    prop_assert!(seen.insert(slot), "slot {slot} decodes twice");
+                }
+                for &(slot, chunk) in &plan.prefill {
+                    prop_assert!(chunk >= 1, "empty prefill chunk");
+                    prop_assert!(
+                        seen.insert(slot),
+                        "slot {slot} decodes and prefills in one batch"
+                    );
+                }
+            }
+            let Some(t) = e.next_event_time() else { break };
+            e.run_until(t);
+            for r in e.take_completed() {
+                s.on_job_done(&r);
+            }
+            if s.idle() && e.next_event_time().is_none() {
+                break;
+            }
+        }
+        let responses = s.take_responses();
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        prop_assert!(
+            ids == (0..n_req as u64).collect::<Vec<u64>>(),
+            "served ids {ids:?}, expected 0..{n_req}"
+        );
+        for r in &responses {
+            prop_assert!(
+                r.end >= r.first_token && r.first_token >= r.submit,
+                "response timestamps out of order"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reconfigure_never_loses_or_duplicates_requests() {
+    check("server-reconfigure-chaos", 0xD4, 30, |g| {
+        let (mut e, mut s) = started_server(random_tuning(g));
+        let n_req = g.usize(2, 14);
+        for i in 0..n_req {
+            s.enqueue(
+                ServerRequest {
+                    id: i as u64,
+                    app: "Chatbot",
+                    prompt_tokens: g.usize(200, 1500),
+                    output_tokens: g.usize(1, 16),
+                },
+                e.now(),
+            );
+        }
+        // Inject reconfigurations mid-prefill/mid-decode: every few event
+        // rounds flip the placement, resize slots, and change the batch.
+        let reconfig_every = g.usize(2, 7);
+        let mut rounds = 0usize;
+        let mut requested = 0u32;
+        let mut guard = 0u32;
+        loop {
+            guard += 1;
+            prop_assert!(guard < 200_000, "server did not converge");
+            s.pump(&mut e, e.now());
+            let Some(t) = e.next_event_time() else { break };
+            e.run_until(t);
+            for r in e.take_completed() {
+                s.on_job_done(&r);
+            }
+            rounds += 1;
+            if rounds % reconfig_every == 0 && requested < 20 {
+                requested += 1;
+                s.reconfigure(&mut e, e.now(), random_tuning(g));
+            }
+            if s.idle() && e.next_event_time().is_none() {
+                break;
+            }
+        }
+        prop_assert!(s.idle(), "server must drain to idle after reconfigs");
+        prop_assert!(
+            s.queued_requests() == 0 && s.active_slots() == 0,
+            "leftover work after drain"
+        );
+        let responses = s.take_responses();
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        prop_assert!(
+            ids == (0..n_req as u64).collect::<Vec<u64>>(),
+            "lost/duplicated requests after {requested} reconfigs: {ids:?} (expected 0..{n_req})"
+        );
+        // The tuning that finally stuck is the last requested one's shape.
+        prop_assert!(
+            s.tuning().n_slots >= 1 && s.tuning().batch_size >= 32,
+            "tuning corrupted: {:?}",
+            s.tuning()
         );
         Ok(())
     });
