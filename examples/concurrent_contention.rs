@@ -32,10 +32,10 @@ seed: 42
 
 fn describe(node: &NodeResult) {
     println!(
-        "  {:<24} mean-norm {:>6.2}  SLO attainment {:>5.1}%",
+        "  {:<24} mean-norm {:>6.2}  SLO attainment {}",
         node.id,
         node.mean_normalized(),
-        node.attainment() * 100.0
+        consumerbench::apps::attainment_pct(node.attainment())
     );
 }
 

@@ -55,8 +55,8 @@ fn main() -> anyhow::Result<()> {
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
         println!("=== {label} ===");
         println!(
-            "  chat SLO attainment: {:>5.1}%   mean TTFT {:.2}s   mean TPOT {:.3}s",
-            chat.attainment() * 100.0,
+            "  chat SLO attainment: {}   mean TTFT {:.2}s   mean TPOT {:.3}s",
+            consumerbench::apps::attainment_pct(chat.attainment()),
             mean(&ttfts),
             mean(&tpots),
         );

@@ -34,10 +34,10 @@ fn main() -> anyhow::Result<()> {
 
     for node in &result.nodes {
         println!(
-            "{}: {} requests, SLO attainment {:.0}%, mean normalized latency {:.2}",
+            "{}: {} requests, SLO attainment {}, mean normalized latency {:.2}",
             node.id,
             node.metrics.len(),
-            node.attainment() * 100.0,
+            consumerbench::apps::attainment_pct(node.attainment()).trim(),
             node.mean_normalized()
         );
     }

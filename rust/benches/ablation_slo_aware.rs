@@ -42,7 +42,8 @@ fn main() {
             print_app_row(&node.id, node);
         }
         println!("  makespan: {:.1} s", result.makespan);
-        let lc = result.node("Captions (livecaptions)").unwrap().attainment();
+        let lc_node = result.node("Captions (livecaptions)").unwrap();
+        let lc = lc_node.attainment().expect("requests ran");
         let ig = result.node("Image (imagegen)").unwrap();
         rows.push((strategy, lc, ig.mean_normalized(), result.makespan));
     }

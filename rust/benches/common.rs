@@ -61,10 +61,10 @@ pub fn engine_events_per_sec(trace: bool, jobs: usize, kernels_per_job: usize) -
 /// Print the standard per-application row (Fig. 3/5-style).
 pub fn print_app_row(label: &str, node: &NodeResult) {
     println!(
-        "  {:<26} norm-latency {:>7.2}x   SLO attainment {:>5.1}%   ({} reqs)",
+        "  {:<26} norm-latency {:>7.2}x   SLO attainment {}   ({} reqs)",
         label,
         node.mean_normalized(),
-        node.attainment() * 100.0,
+        consumerbench::apps::attainment_pct(node.attainment()),
         node.metrics.len()
     );
 }

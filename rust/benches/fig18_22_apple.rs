@@ -105,9 +105,9 @@ seed: 42
         let result = run(&cfg);
         let chat = result.node("Chat (chatbot)").unwrap();
         println!(
-            "  {:<24} chat SLO attainment {:>5.1}%",
+            "  {:<24} chat SLO attainment {}",
             label,
-            chat.attainment() * 100.0
+            consumerbench::apps::attainment_pct(chat.attainment())
         );
     }
     println!(

@@ -54,8 +54,8 @@ fn main() {
                 / mean
         };
         println!(
-            "  chat: SLO attainment {:>5.1}%  mean TTFT {:.2}s (cv {:.2})  mean TPOT {:.3}s",
-            chat.attainment() * 100.0,
+            "  chat: SLO attainment {}  mean TTFT {:.2}s (cv {:.2})  mean TPOT {:.3}s",
+            consumerbench::apps::attainment_pct(chat.attainment()),
             mean_component(chat, "ttft"),
             var,
             mean_component(chat, "tpot"),

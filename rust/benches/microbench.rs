@@ -178,7 +178,8 @@ fn main() {
 
     let mut axes = MatrixAxes::default_matrix(42);
     if fast {
-        axes.mixes.truncate(1); // 12 scenarios (static + adaptive chat) instead of 42
+        axes.mixes.truncate(1); // static + adaptive chat only …
+        axes.workflows.clear(); // … and no workflow slice: 12 scenarios, not 52
     }
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())

@@ -203,7 +203,7 @@ mod tests {
         // misses are the re-encoded segments — and even those usually fit
         // within 2 s when exclusive).
         let metrics = run_segments(Device::Gpu, 50, 42);
-        let attainment = crate::apps::slo_attainment(&metrics);
+        let attainment = crate::apps::slo_attainment(&metrics).expect("segments ran");
         assert!(attainment > 0.9, "attainment {attainment}");
         // Latencies far below SLO when exclusive.
         let mean = crate::apps::mean_normalized(&metrics);

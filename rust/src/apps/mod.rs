@@ -163,11 +163,25 @@ pub trait Application {
 }
 
 /// Aggregate SLO attainment over request metrics — the Fig. 3b/5a metric.
-pub fn slo_attainment(metrics: &[RequestMetrics]) -> f64 {
+///
+/// `None` when no requests completed (e.g. the node's setup OOM'd): such a
+/// node has no attainment, and report layers render `n/a` instead of the
+/// perfect 100% the old `1.0` default implied.
+pub fn slo_attainment(metrics: &[RequestMetrics]) -> Option<f64> {
     if metrics.is_empty() {
-        return 1.0;
+        return None;
     }
-    metrics.iter().filter(|m| m.slo_met).count() as f64 / metrics.len() as f64
+    Some(metrics.iter().filter(|m| m.slo_met).count() as f64 / metrics.len() as f64)
+}
+
+/// Display-layer counterpart of [`slo_attainment`]: render an optional
+/// attainment as a fixed-width percentage, `n/a` when no requests completed
+/// — never a fabricated score in either direction.
+pub fn attainment_pct(attainment: Option<f64>) -> String {
+    match attainment {
+        Some(a) => format!("{:>5.1}%", a * 100.0),
+        None => "  n/a ".to_string(),
+    }
 }
 
 /// Mean normalized latency — the Fig. 3a/5a metric.
@@ -203,8 +217,16 @@ mod tests {
             components: vec![],
         };
         let ms = vec![m(true), m(true), m(false), m(true)];
-        assert!((slo_attainment(&ms) - 0.75).abs() < 1e-12);
-        assert_eq!(slo_attainment(&[]), 1.0);
+        assert!((slo_attainment(&ms).unwrap() - 0.75).abs() < 1e-12);
+        // Regression: empty metrics are `None`, never a perfect score.
+        assert_eq!(slo_attainment(&[]), None);
+    }
+
+    #[test]
+    fn attainment_pct_renders_na_for_empty() {
+        assert_eq!(attainment_pct(Some(1.0)), "100.0%");
+        assert_eq!(attainment_pct(Some(0.953)), " 95.3%");
+        assert_eq!(attainment_pct(None), "  n/a ");
     }
 
     #[test]

@@ -33,7 +33,9 @@ COMMANDS:
     run        Execute a workflow configuration and print the benchmark report
     validate   Parse the configuration and check the workflow DAG
     scenario   Expand and execute the scenario matrix (app mix × policy ×
-               testbed × arrival process), emitting an aggregate JSON report
+               testbed × arrival process × server mode, plus generated
+               workflow DAG shapes with end-to-end latency and critical-path
+               attribution), emitting an aggregate JSON report
     apps       List the built-in applications (paper Table 1)
 
 OPTIONS (run):
@@ -48,10 +50,12 @@ OPTIONS (scenario):
                       parallelism). The JSON report is byte-identical for
                       any N — scenarios are deterministic and independent
     --filter SUBSTR   Only expand scenarios whose name contains SUBSTR
-                      (e.g. --filter server=adaptive, --filter mix=chat/)
+                      (e.g. --filter server=adaptive, --filter mix=chat/,
+                      --filter workflow=content_creation or just workflow)
     --out FILE        Write the JSON report to FILE (default: print to stdout)
     --full            Sweep the full axes (periodic + trace arrivals, Apple
-                      Silicon testbed) instead of the default 42 scenarios
+                      Silicon testbed, every policy on the workflow shapes)
+                      instead of the default 52 scenarios
     --list            Print scenario names without running anything
     --dump DIR        Write each expanded scenario config as YAML into DIR
 ";
@@ -404,18 +408,35 @@ mod tests {
     fn scenario_list_names_matrix() {
         let (r, out) = run(&["scenario", "--list"]);
         assert!(r.is_ok(), "{out}");
-        assert!(out.contains("42 scenarios"), "{out}");
+        assert!(out.contains("52 scenarios"), "{out}");
         assert!(out.contains("mix=chat/policy=greedy/arrival=closed/testbed=intel_server"));
         assert!(out.contains("policy=fair_share"));
         assert!(out.contains("arrival=poisson"));
         assert!(out.contains("server=adaptive"));
+        // The workflow axis: every shape, including the slo_aware slice.
+        assert!(out.contains("workflow=pipeline/policy=greedy"), "{out}");
+        assert!(out.contains("workflow=content_creation/policy=slo_aware"), "{out}");
+    }
+
+    #[test]
+    fn scenario_filter_selects_the_workflow_slice() {
+        let (r, out) = run(&["scenario", "--list", "--filter", "workflow"]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("10 scenarios"), "{out}");
+        assert!(!out.contains("mix="), "{out}");
+        for shape in ["pipeline", "fanout", "diamond", "content_creation"] {
+            assert!(out.contains(&format!("workflow={shape}")), "{out}");
+        }
     }
 
     #[test]
     fn scenario_filter_narrows_the_matrix() {
         let (r, out) = run(&["scenario", "--list", "--filter", "server=adaptive"]);
         assert!(r.is_ok(), "{out}");
-        assert!(out.contains("18 scenarios"), "{out}");
+        assert!(
+            out.contains("20 scenarios"),
+            "18 flat + 2 content_creation: {out}"
+        );
         assert!(!out.contains("server=static"), "{out}");
 
         let (r, out) = run(&[
@@ -459,7 +480,7 @@ mod tests {
         let (r, out) = run(&["scenario", "--dump", dir.to_str().unwrap()]);
         assert!(r.is_ok(), "{out}");
         let n = std::fs::read_dir(&dir).unwrap().count();
-        assert_eq!(n, 42, "expected 42 dumped configs");
+        assert_eq!(n, 52, "expected 52 dumped configs");
     }
 
     #[test]
@@ -479,13 +500,22 @@ mod tests {
             json_path.to_str().unwrap(),
         ]);
         assert!(r.is_ok(), "{out}");
-        assert!(out.contains("policies covered: greedy, partition, fair_share"), "{out}");
+        assert!(
+            out.contains("policies covered: greedy, partition, fair_share, slo_aware"),
+            "{out}"
+        );
         let json = std::fs::read_to_string(&json_path).unwrap();
-        assert!(json.contains("\"num_scenarios\": 42"));
+        assert!(json.contains("\"num_scenarios\": 52"));
         assert!(json.contains("\"arrival\": \"poisson\""));
         assert!(json.contains("\"mix\": \"full-stack\""));
         assert!(json.contains("\"server_mode\": \"adaptive\""));
         assert!(json.contains("\"adaptive_vs_static\""));
+        // Workflow scenarios land in the same report with their e2e and
+        // critical-path columns, and the per-strategy e2e comparison.
+        assert!(json.contains("\"workflow\": \"content_creation\""));
+        assert!(json.contains("\"critical_path\""));
+        assert!(json.contains("\"e2e_latency_s\""));
+        assert!(json.contains("\"workflows\": ["));
     }
 
     #[test]

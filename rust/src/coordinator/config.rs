@@ -168,6 +168,10 @@ pub struct BenchConfig {
     /// Adaptive-serving feedback controller (`controller:` block). `None`
     /// keeps every server/policy configuration static for the run.
     pub controller: Option<ControllerConfig>,
+    /// End-to-end workflow SLO (`workflow_slo:` key, seconds): the bound on
+    /// the latest completion of any foreground workflow node, evaluated
+    /// alongside the per-node `slo:` bounds. `None` = no workflow-level SLO.
+    pub workflow_slo: Option<f64>,
 }
 
 impl BenchConfig {
@@ -181,6 +185,7 @@ impl BenchConfig {
         let mut testbed = TestbedKind::IntelServer;
         let mut seed = 42u64;
         let mut controller = None;
+        let mut workflow_slo = None;
 
         for key in root.keys() {
             let value = root.get(key).unwrap();
@@ -188,6 +193,13 @@ impl BenchConfig {
                 "workflows" => workflow = parse_workflows(value)?,
                 "servers" => servers = parse_servers(value)?,
                 "controller" => controller = parse_controller(value)?,
+                "workflow_slo" => {
+                    let bound = parse_duration_value("workflow_slo", value)?;
+                    if bound <= 0.0 {
+                        bail!("workflow_slo must be > 0");
+                    }
+                    workflow_slo = Some(bound);
+                }
                 "strategy" => {
                     let s = value.as_str().context("strategy must be a string")?;
                     strategy =
@@ -231,6 +243,7 @@ impl BenchConfig {
             testbed,
             seed,
             controller,
+            workflow_slo,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -887,6 +900,22 @@ servers:
         ] {
             let bad = text.replace("batch_size: 256", bad_field);
             assert!(BenchConfig::parse(&bad).is_err(), "should reject {bad_field}");
+        }
+    }
+
+    #[test]
+    fn workflow_slo_parses_and_validates() {
+        let base = "A (chatbot):\n  num_requests: 1\n";
+        assert_eq!(BenchConfig::parse(base).unwrap().workflow_slo, None);
+        let cfg = BenchConfig::parse(&format!("{base}workflow_slo: 90s\n")).unwrap();
+        assert_eq!(cfg.workflow_slo, Some(90.0));
+        let cfg = BenchConfig::parse(&format!("{base}workflow_slo: 500ms\n")).unwrap();
+        assert_eq!(cfg.workflow_slo, Some(0.5));
+        for bad in ["workflow_slo: 0\n", "workflow_slo: -3\n", "workflow_slo: fast\n"] {
+            assert!(
+                BenchConfig::parse(&format!("{base}{bad}")).is_err(),
+                "should reject {bad}"
+            );
         }
     }
 

@@ -44,6 +44,13 @@ impl Dag {
                 if j == i {
                     bail!("node `{}` depends on itself", n.id);
                 }
+                // A repeated entry would double-count the edge in both
+                // `deps` and `dependents`: inflated in-degrees for Kahn's
+                // algorithm and a duplicated hop once edges carry timings
+                // (the weighted critical path walks `deps`).
+                if deps[i].contains(&j) {
+                    bail!("node `{}` lists duplicate dependency `{d}`", n.id);
+                }
                 deps[i].push(j);
                 dependents[j].push(i);
             }
@@ -206,6 +213,14 @@ mod tests {
     fn unknown_dep_rejected() {
         let err = Dag::build(&[node("a", "A", &["ghost"])]).unwrap_err();
         assert!(err.to_string().contains("unknown"));
+    }
+
+    #[test]
+    fn duplicate_dep_rejected() {
+        // Regression: `depend_on: [a, a]` used to double-count the edge,
+        // misreporting `deps(n).len()` and inflating the in-degree.
+        let err = Dag::build(&[node("a", "A", &[]), node("b", "B", &["a", "a"])]).unwrap_err();
+        assert!(err.to_string().contains("duplicate dependency"), "{err}");
     }
 
     #[test]

@@ -65,6 +65,9 @@ struct NodeRuntime {
     issued: usize,
     finished: usize,
     metrics: Vec<RequestMetrics>,
+    /// When every dependency had completed (0 for roots) — the first point
+    /// of the node's `(ready, start, end)` lifecycle.
+    ready: f64,
     start: f64,
     end: f64,
     failed: Option<String>,
@@ -109,13 +112,19 @@ pub struct NodeResult {
     pub app: &'static str,
     pub slo: Slo,
     pub metrics: Vec<RequestMetrics>,
+    /// When the node's dependencies had all completed (0 for roots).
+    pub ready: f64,
     pub start: f64,
     pub end: f64,
+    /// Whether the node was declared `background: true` — excluded from the
+    /// workflow's end-to-end latency and critical-path attribution.
+    pub background: bool,
     pub failed: Option<String>,
 }
 
 impl NodeResult {
-    pub fn attainment(&self) -> f64 {
+    /// SLO attainment, `None` when no requests completed (rendered `n/a`).
+    pub fn attainment(&self) -> Option<f64> {
         slo_attainment(&self.metrics)
     }
 
@@ -128,10 +137,169 @@ impl NodeResult {
     }
 }
 
+/// Per-stage lifecycle of one foreground workflow node, with its slack
+/// against the workflow's end-to-end completion.
+#[derive(Debug, Clone)]
+pub struct StageStat {
+    pub id: String,
+    pub app: &'static str,
+    /// All dependencies completed.
+    pub ready: f64,
+    /// Node started (setup submitted).
+    pub start: f64,
+    /// Node completed (cleanup done).
+    pub end: f64,
+    /// How much later this node could have finished without delaying the
+    /// workflow's end-to-end completion (0 on the critical path).
+    pub slack: f64,
+    pub on_critical_path: bool,
+}
+
+/// Workflow-level metrics: end-to-end latency, the e2e SLO verdict, and the
+/// weighted critical path over the completed DAG (§3.2 — which nodes
+/// bounded the run, and how much slack the others had).
+///
+/// Background nodes (`background: true`) are excluded from the end-to-end
+/// latency and the stage table: they model long-running side work, not the
+/// user-perceived workflow completion. A background node can still appear
+/// *on* the critical path when a foreground node's start was gated by it.
+#[derive(Debug, Clone, Default)]
+pub struct WorkflowMetrics {
+    /// Latest completion across foreground nodes (the user-perceived
+    /// workflow latency; `makespan` also counts background nodes).
+    pub e2e_latency: f64,
+    /// The configured `workflow_slo:` bound, if any.
+    pub workflow_slo: Option<f64>,
+    /// Whether any foreground node failed (e.g. setup OOM): the workflow
+    /// never completed, so its `e2e_latency` is the truncated span of what
+    /// did run, not a real end-to-end latency.
+    pub failed: bool,
+    /// `e2e_latency <= workflow_slo`; `None` when no bound is configured.
+    /// A workflow with a failed foreground node never meets its bound — a
+    /// failed node ends *early*, which would otherwise fabricate a short
+    /// e2e and a spurious `met` verdict.
+    pub e2e_slo_met: Option<bool>,
+    /// Node ids from a root to the latest-finishing foreground node,
+    /// following at each step the dependency that gated the node's start.
+    pub critical_path: Vec<String>,
+    /// Sum of node durations along the critical path (the weighted length;
+    /// the gap to `e2e_latency` is scheduling/queueing time between stages).
+    pub critical_path_len: f64,
+    /// Foreground stages in workflow-declaration order.
+    pub stages: Vec<StageStat>,
+}
+
+impl WorkflowMetrics {
+    /// `a -> b -> c` rendering of the critical path (report columns).
+    pub fn critical_path_str(&self) -> String {
+        self.critical_path.join(" -> ")
+    }
+}
+
+/// Compute workflow-level metrics from the completed node results.
+///
+/// Deterministic by construction: ties (equal completion times) resolve to
+/// the lowest node index, and all inputs are pure functions of the run.
+fn workflow_metrics(
+    dag: &Dag,
+    nodes: &[NodeResult],
+    workflow_slo: Option<f64>,
+) -> WorkflowMetrics {
+    debug_assert_eq!(dag.len(), nodes.len());
+    if nodes.is_empty() {
+        return WorkflowMetrics::default();
+    }
+    // Foreground scope; degenerate all-background workflows fall back to
+    // every node so the metrics stay defined.
+    let mut in_scope: Vec<bool> = (0..dag.len()).map(|i| !dag.is_background(i)).collect();
+    if !in_scope.iter().any(|&b| b) {
+        in_scope.iter_mut().for_each(|b| *b = true);
+    }
+    // Sink: latest-finishing in-scope node (first index wins ties).
+    let mut sink = None;
+    for i in 0..dag.len() {
+        if !in_scope[i] {
+            continue;
+        }
+        match sink {
+            None => sink = Some(i),
+            Some(s) if nodes[i].end > nodes[s].end => sink = Some(i),
+            _ => {}
+        }
+    }
+    let sink = sink.expect("non-empty scope");
+    let e2e = nodes[sink].end;
+
+    // Critical path: walk back from the sink, at each node following the
+    // dependency whose completion gated its start (latest dep end; first
+    // declared wins ties). Background gates are kept — they bounded the run.
+    let mut path = vec![sink];
+    let mut cur = sink;
+    while let Some((&first, rest)) = dag.deps(cur).split_first() {
+        let mut binding = first;
+        for &d in rest {
+            if nodes[d].end > nodes[binding].end {
+                binding = d;
+            }
+        }
+        path.push(binding);
+        cur = binding;
+    }
+    path.reverse();
+    let critical_path_len: f64 = path.iter().map(|&i| nodes[i].duration()).sum();
+    let on_path: BTreeSet<NodeId> = path.iter().copied().collect();
+
+    // Slack by reverse-CPM over the actual schedule: a node may finish as
+    // late as the earliest point where an in-scope dependent would have
+    // started anyway (its actual start plus its own slack); sinks may
+    // finish as late as the e2e completion itself.
+    let order = dag.toposort().expect("validated DAG");
+    let mut slack = vec![0.0f64; dag.len()];
+    for &n in order.iter().rev() {
+        let mut allow = f64::INFINITY;
+        for &d in dag.dependents(n) {
+            if in_scope[d] {
+                allow = allow.min(nodes[d].start + slack[d]);
+            }
+        }
+        if allow.is_infinite() {
+            allow = e2e;
+        }
+        slack[n] = (allow - nodes[n].end).max(0.0);
+    }
+
+    let stages = (0..dag.len())
+        .filter(|&i| in_scope[i])
+        .map(|i| StageStat {
+            id: nodes[i].id.clone(),
+            app: nodes[i].app,
+            ready: nodes[i].ready,
+            start: nodes[i].start,
+            end: nodes[i].end,
+            slack: slack[i],
+            on_critical_path: on_path.contains(&i),
+        })
+        .collect();
+
+    let failed = (0..dag.len()).any(|i| in_scope[i] && nodes[i].failed.is_some());
+    WorkflowMetrics {
+        e2e_latency: e2e,
+        workflow_slo,
+        failed,
+        e2e_slo_met: workflow_slo.map(|bound| !failed && e2e <= bound),
+        critical_path: path.iter().map(|&i| nodes[i].id.clone()).collect(),
+        critical_path_len,
+        stages,
+    }
+}
+
 /// Result of a full scenario run.
 #[derive(Debug)]
 pub struct ScenarioResult {
     pub nodes: Vec<NodeResult>,
+    /// Workflow-level metrics: end-to-end latency, e2e SLO verdict, and the
+    /// weighted critical path with per-stage slack.
+    pub workflow: WorkflowMetrics,
     /// Columnar monitor trace (right-sized when drained from the engine).
     pub trace: Trace,
     pub client_names: Vec<String>,
@@ -172,6 +340,7 @@ pub struct ScenarioRunner {
     runtime: Option<Runtime>,
     pjrt_calls: usize,
     seed: u64,
+    workflow_slo: Option<f64>,
 }
 
 impl ScenarioRunner {
@@ -270,6 +439,7 @@ impl ScenarioRunner {
                 issued: 0,
                 finished: 0,
                 metrics: Vec::new(),
+                ready: 0.0,
                 start: 0.0,
                 end: 0.0,
                 failed: None,
@@ -305,6 +475,7 @@ impl ScenarioRunner {
             runtime,
             pjrt_calls: 0,
             seed: cfg.seed,
+            workflow_slo: cfg.workflow_slo,
         })
     }
 
@@ -361,7 +532,7 @@ impl ScenarioRunner {
             .map(|i| self.engine.client_name(crate::gpusim::engine::ClientId(i)).to_string())
             .collect();
         let trace = self.engine.take_trace();
-        let nodes = self
+        let nodes: Vec<NodeResult> = self
             .nodes
             .iter()
             .enumerate()
@@ -370,11 +541,14 @@ impl ScenarioRunner {
                 app: n.app.name(),
                 slo: n.app.slo(),
                 metrics: n.metrics.clone(),
+                ready: n.ready,
                 start: n.start,
                 end: n.end,
+                background: self.dag.is_background(i),
                 failed: n.failed.clone(),
             })
             .collect();
+        let workflow = workflow_metrics(&self.dag, &nodes, self.workflow_slo);
         let server_reconfigs: usize = self
             .servers
             .iter()
@@ -393,6 +567,7 @@ impl ScenarioRunner {
         };
         Ok(ScenarioResult {
             nodes,
+            workflow,
             trace,
             client_names,
             makespan,
@@ -407,6 +582,10 @@ impl ScenarioRunner {
         let node = &mut self.nodes[n];
         debug_assert_eq!(node.state, NodeState::Waiting);
         node.state = NodeState::Setup;
+        // The scheduler starts a node the instant its last dependency
+        // completes, so ready == start today; both are recorded so the
+        // lifecycle stays meaningful if admission control ever delays one.
+        node.ready = at;
         node.start = at;
         let spec = if node.server.is_some() {
             // Server-backed: the model is owned by the server; setup is a
@@ -976,9 +1155,14 @@ Chat (chatbot):
         let node = &result.nodes[0];
         assert_eq!(node.metrics.len(), 3);
         assert!(node.failed.is_none());
-        assert!(node.attainment() > 0.99, "attainment {}", node.attainment());
+        let att = node.attainment().unwrap();
+        assert!(att > 0.99, "attainment {att}");
         assert!(result.makespan > 0.0);
         assert!(!result.trace.is_empty());
+        // A single-node workflow is its own critical path.
+        assert_eq!(result.workflow.critical_path, vec!["Chat (chatbot)"]);
+        assert_eq!(result.workflow.e2e_latency, node.end);
+        assert_eq!(result.workflow.e2e_slo_met, None, "no workflow_slo configured");
     }
 
     #[test]
@@ -1034,7 +1218,8 @@ servers:
         let node = &result.nodes[0];
         assert_eq!(node.metrics.len(), 3);
         // Exclusive server with KV on GPU → chat meets its SLO.
-        assert!(node.attainment() > 0.99, "attainment {}", node.attainment());
+        let att = node.attainment().unwrap();
+        assert!(att > 0.99, "attainment {att}");
     }
 
     #[test]
@@ -1145,7 +1330,92 @@ seed: 4
         assert_eq!(result.nodes[0].metrics.len(), 3);
         // GPU-resident KV, exclusive server: nothing for the loop to fix.
         assert_eq!(result.reconfigurations, 0, "{:?}", result.controller_actions);
-        assert!(result.nodes[0].attainment() > 0.99);
+        assert!(result.nodes[0].attainment().unwrap() > 0.99);
+    }
+
+    #[test]
+    fn critical_path_follows_the_binding_dependency() {
+        // fanout: first → {slow (imagegen), fast (livecaptions)} — the
+        // critical path must run through whichever branch finished last,
+        // and the other branch carries the slack.
+        let text = "\
+A (chatbot):
+  num_requests: 1
+Slow (imagegen):
+  num_requests: 3
+Fast (livecaptions):
+  num_requests: 2
+workflows:
+  first:
+    uses: A (chatbot)
+  slow:
+    uses: Slow (imagegen)
+    depend_on: [\"first\"]
+  fast:
+    uses: Fast (livecaptions)
+    depend_on: [\"first\"]
+seed: 2
+";
+        let result = run_config_text(text, None).unwrap();
+        let wf = &result.workflow;
+        let slow = result.node("slow").unwrap();
+        let fast = result.node("fast").unwrap();
+        let (tail, other) = if slow.end > fast.end {
+            ("slow", fast)
+        } else {
+            ("fast", slow)
+        };
+        assert_eq!(wf.critical_path, vec!["first", tail]);
+        assert_eq!(wf.e2e_latency, slow.end.max(fast.end));
+        // Stage stats: critical stages have zero slack; the other branch's
+        // slack is exactly the gap to the e2e completion (both are leaves).
+        for s in &wf.stages {
+            if s.on_critical_path {
+                assert!(s.slack.abs() < 1e-9, "{}: slack {}", s.id, s.slack);
+            }
+        }
+        let other_stage = wf.stages.iter().find(|s| s.id == other.id).unwrap();
+        assert!(
+            (other_stage.slack - (wf.e2e_latency - other.end)).abs() < 1e-9,
+            "leaf slack {} vs gap {}",
+            other_stage.slack,
+            wf.e2e_latency - other.end
+        );
+        // Lifecycle: both branches became ready when `first` completed.
+        let first = result.node("first").unwrap();
+        assert_eq!(slow.ready, first.end);
+        assert_eq!(fast.ready, first.end);
+        assert!(wf.critical_path_len <= wf.e2e_latency + 1e-9);
+    }
+
+    #[test]
+    fn workflow_slo_verdict_and_background_exclusion() {
+        let base = "\
+Bg (imagegen):
+  num_requests: 2
+Fg (livecaptions):
+  num_requests: 2
+workflows:
+  bg:
+    uses: Bg (imagegen)
+    background: true
+  fg:
+    uses: Fg (livecaptions)
+";
+        let result = run_config_text(&format!("{base}workflow_slo: 10000\n"), None).unwrap();
+        let fg = result.node("fg").unwrap();
+        // Background node excluded from e2e and the stage table …
+        assert_eq!(result.workflow.e2e_latency, fg.end);
+        assert_eq!(result.workflow.critical_path, vec!["fg"]);
+        assert_eq!(result.workflow.stages.len(), 1);
+        assert!(result.nodes.iter().any(|n| n.background && n.id == "bg"));
+        // … but still counted in the makespan.
+        assert!(result.makespan >= result.workflow.e2e_latency);
+        assert_eq!(result.workflow.e2e_slo_met, Some(true));
+        assert_eq!(result.workflow.workflow_slo, Some(10000.0));
+
+        let tight = run_config_text(&format!("{base}workflow_slo: 1ms\n"), None).unwrap();
+        assert_eq!(tight.workflow.e2e_slo_met, Some(false));
     }
 
     #[test]
@@ -1171,5 +1441,13 @@ Research (deepresearch):
         assert!(!failed.is_empty(), "expected at least one OOM node");
         // Workflow still produced results for the others.
         assert!(result.nodes.iter().any(|n| n.failed.is_none() && !n.metrics.is_empty()));
+        assert!(result.workflow.failed, "a failed node marks the workflow failed");
+
+        // Regression: a failed node ends *early*, which used to fabricate a
+        // short e2e latency and a spurious `met` verdict under a generous
+        // workflow_slo. A failed workflow never meets its bound.
+        let with_slo = run_config_text(&format!("{text}workflow_slo: 10000\n"), None).unwrap();
+        assert!(with_slo.workflow.failed);
+        assert_eq!(with_slo.workflow.e2e_slo_met, Some(false));
     }
 }

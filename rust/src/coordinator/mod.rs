@@ -16,5 +16,7 @@ pub mod report;
 pub use config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
 pub use controller::{Controller, ControllerAction, ControllerConfig, Observation, ServerView};
 pub use dag::Dag;
-pub use executor::{run_config_text, NodeResult, ScenarioResult, ScenarioRunner};
+pub use executor::{
+    run_config_text, NodeResult, ScenarioResult, ScenarioRunner, StageStat, WorkflowMetrics,
+};
 pub use report::{generate, to_csv, to_json_summary, BenchmarkReport};

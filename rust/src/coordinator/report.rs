@@ -8,7 +8,7 @@
 use crate::apps::Slo;
 use crate::coordinator::executor::ScenarioResult;
 use crate::monitor::MonitorReport;
-use crate::util::json::{json_num, json_str};
+use crate::util::json::{json_num, json_opt_bool, json_opt_num, json_str};
 use crate::util::stats::Summary;
 
 /// A rendered benchmark report.
@@ -50,14 +50,20 @@ pub fn generate(result: &ScenarioResult) -> BenchmarkReport {
         let lats: Vec<f64> = node.metrics.iter().map(|m| m.latency).collect();
         let s = Summary::of(&lats);
         let (mean, p99) = s.map(|s| (s.mean, s.p99)).unwrap_or((0.0, 0.0));
+        // A node with no completed requests has no attainment — `n/a`, not
+        // the perfect score the old 1.0 default printed.
+        let attain = match node.attainment() {
+            Some(a) => format!("{:>9.0}%", a * 100.0),
+            None => format!("{:>10}", "n/a"),
+        };
         out.push_str(&format!(
-            "{:<28} {:>5} {:>8.2}s {:>8.2}s {:>9.2} {:>9.0}% {:>7.1}s{}\n",
+            "{:<28} {:>5} {:>8.2}s {:>8.2}s {:>9.2} {} {:>7.1}s{}\n",
             truncate(&node.id, 28),
             node.metrics.len(),
             mean,
             p99,
             node.mean_normalized(),
-            node.attainment() * 100.0,
+            attain,
             node.duration(),
             node.failed
                 .as_ref()
@@ -70,6 +76,42 @@ pub fn generate(result: &ScenarioResult) -> BenchmarkReport {
             slo_brief(&node.slo)
         ));
     }
+    out.push('\n');
+
+    out.push_str("-- Workflow --------------------------------------------------\n");
+    let wf = &result.workflow;
+    let verdict = match (wf.workflow_slo, wf.e2e_slo_met) {
+        (Some(bound), Some(true)) => format!("  (SLO {bound}s: met)"),
+        (Some(bound), Some(false)) if wf.failed => {
+            format!("  (SLO {bound}s: MISSED — a workflow node failed)")
+        }
+        (Some(bound), Some(false)) => format!("  (SLO {bound}s: MISSED)"),
+        _ if wf.failed => String::from("  (no workflow SLO; a workflow node failed)"),
+        _ => String::from("  (no workflow SLO)"),
+    };
+    out.push_str(&format!("e2e latency:   {:.2} s{verdict}\n", wf.e2e_latency));
+    out.push_str(&format!(
+        "critical path: {}  ({:.2} s of work on the path)\n",
+        wf.critical_path_str(),
+        wf.critical_path_len
+    ));
+    out.push_str(&format!(
+        "{:<28} {:>8} {:>8} {:>8} {:>9} {:>8}\n",
+        "stage", "ready", "start", "end", "duration", "slack"
+    ));
+    for s in &wf.stages {
+        out.push_str(&format!(
+            "{:<28} {:>7.2}s {:>7.2}s {:>7.2}s {:>8.2}s {:>7.2}s{}\n",
+            truncate(&s.id, 28),
+            s.ready,
+            s.start,
+            s.end,
+            s.end - s.start,
+            s.slack,
+            if s.on_critical_path { "  *" } else { "" }
+        ));
+    }
+    out.push_str("(* = on the critical path)\n");
     out.push('\n');
 
     out.push_str("-- System metrics --------------------------------------------\n");
@@ -141,7 +183,11 @@ pub fn to_json_summary(result: &ScenarioResult, monitor: &MonitorReport) -> Stri
         out.push_str(&format!("\"node\": {}, ", json_str(&node.id)));
         out.push_str(&format!("\"app\": {}, ", json_str(node.app)));
         out.push_str(&format!("\"requests\": {}, ", node.metrics.len()));
-        out.push_str(&format!("\"attainment\": {}, ", json_num(node.attainment())));
+        // null = no completed requests (never a fabricated 100%).
+        out.push_str(&format!(
+            "\"attainment\": {}, ",
+            json_opt_num(node.attainment())
+        ));
         out.push_str(&format!("\"p50_latency_s\": {}, ", json_num(p50)));
         out.push_str(&format!("\"p99_latency_s\": {}, ", json_num(p99)));
         match &node.failed {
@@ -152,6 +198,47 @@ pub fn to_json_summary(result: &ScenarioResult, monitor: &MonitorReport) -> Stri
         out.push_str(if i + 1 < result.nodes.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ],\n");
+    let wf = &result.workflow;
+    out.push_str("  \"workflow\": {\n");
+    out.push_str(&format!(
+        "    \"e2e_latency_s\": {},\n",
+        json_num(wf.e2e_latency)
+    ));
+    out.push_str(&format!(
+        "    \"workflow_slo_s\": {},\n",
+        json_opt_num(wf.workflow_slo)
+    ));
+    out.push_str(&format!("    \"failed\": {},\n", wf.failed));
+    out.push_str(&format!(
+        "    \"e2e_slo_met\": {},\n",
+        json_opt_bool(wf.e2e_slo_met)
+    ));
+    out.push_str("    \"critical_path\": [");
+    for (i, id) in wf.critical_path.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&json_str(id));
+    }
+    out.push_str("],\n");
+    out.push_str(&format!(
+        "    \"critical_path_len_s\": {},\n",
+        json_num(wf.critical_path_len)
+    ));
+    out.push_str("    \"stages\": [\n");
+    for (i, s) in wf.stages.iter().enumerate() {
+        out.push_str("      {");
+        out.push_str(&format!("\"id\": {}, ", json_str(&s.id)));
+        out.push_str(&format!("\"ready_s\": {}, ", json_num(s.ready)));
+        out.push_str(&format!("\"start_s\": {}, ", json_num(s.start)));
+        out.push_str(&format!("\"end_s\": {}, ", json_num(s.end)));
+        out.push_str(&format!("\"slack_s\": {}, ", json_num(s.slack)));
+        out.push_str(&format!("\"critical\": {}", s.on_critical_path));
+        out.push('}');
+        out.push_str(if i + 1 < wf.stages.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("    ]\n");
+    out.push_str("  },\n");
     out.push_str("  \"system\": {\n");
     out.push_str(&format!(
         "    \"mean_busy_smact\": {},\n",
@@ -220,6 +307,61 @@ mod tests {
         assert!(report.text.contains("SMACT"));
         // Attainment column shows 100% for exclusive GPU chat.
         assert!(report.text.contains("100%"), "{}", report.text);
+    }
+
+    #[test]
+    fn workflow_section_renders_critical_path_and_slo() {
+        let text = "\
+A (chatbot):
+  num_requests: 1
+B (imagegen):
+  num_requests: 1
+workflows:
+  first:
+    uses: A (chatbot)
+  second:
+    uses: B (imagegen)
+    depend_on: [\"first\"]
+workflow_slo: 10000
+";
+        let result = run_config_text(text, None).unwrap();
+        let report = generate(&result);
+        assert!(report.text.contains("-- Workflow --"), "{}", report.text);
+        assert!(report.text.contains("first -> second"), "{}", report.text);
+        assert!(report.text.contains("SLO 10000s: met"), "{}", report.text);
+        let json = to_json_summary(&result, &report.monitor);
+        assert!(json.contains("\"critical_path\": [\"first\", \"second\"]"), "{json}");
+        assert!(json.contains("\"e2e_slo_met\": true"), "{json}");
+        assert!(json.contains("\"stages\""), "{json}");
+    }
+
+    #[test]
+    fn empty_attainment_renders_na_not_perfect() {
+        // Both GPU tasks cannot coexist with the 8B chatbot: the OOM'd
+        // node(s) must render `n/a` / null attainment, never 100%.
+        let text = "\
+Big (chatbot):
+  model: Llama-3.1-8B
+  num_requests: 1
+  device: gpu
+Img (imagegen):
+  num_requests: 6
+  device: gpu
+Research (deepresearch):
+  num_requests: 1
+  device: gpu
+";
+        let result = run_config_text(text, None).unwrap();
+        let failed = result
+            .nodes
+            .iter()
+            .find(|n| n.failed.is_some() && n.metrics.is_empty())
+            .expect("an OOM'd node with no completed requests");
+        assert_eq!(failed.attainment(), None);
+        let report = generate(&result);
+        assert!(report.text.contains("n/a"), "{}", report.text);
+        let json = to_json_summary(&result, &report.monitor);
+        assert!(json.contains("\"attainment\": null"), "{json}");
     }
 
     #[test]

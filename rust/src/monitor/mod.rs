@@ -89,7 +89,11 @@ impl MonitorReport {
         let mut idx = 0usize;
         let steps = (t_end / interval).ceil() as usize + 1;
         for k in 0..steps {
-            let t = k as f64 * interval;
+            // Clamp the final grid point to the end of the trace: when
+            // `t_end` is not a multiple of `interval`, `ceil` would
+            // otherwise place the last sample *past* the run, extending
+            // every series and inflating the energy trapezoid integrals.
+            let t = (k as f64 * interval).min(t_end);
             // Advance to the last sample at or before t.
             while idx + 1 < rows.len() && rows[idx + 1].t <= t {
                 idx += 1;
@@ -225,6 +229,33 @@ mod tests {
         let r = MonitorReport::from_trace(&trace, &[], 1.0);
         // 150 W for 10 s = 1500 J.
         assert!((r.gpu_energy() - 1500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn grid_clamps_to_unaligned_trace_end() {
+        // Regression: a trace ending at 0.35 s on a 0.1 s grid used to get a
+        // final sample at t = 0.4 s — past the run — inflating the energy
+        // integral from 52.5 J (150 W × 0.35 s) to 60 J.
+        let trace = Trace::from_samples(&[sample(0.0, 1.0, 0.5, 1), sample(0.35, 1.0, 0.5, 1)]);
+        let names = vec!["app".to_string()];
+        let r = MonitorReport::from_trace(&trace, &names, 0.1);
+        let times = r.gpu_power.times();
+        assert_eq!(
+            *times.last().unwrap(),
+            0.35,
+            "last grid point must land on t_end, not past it"
+        );
+        assert!(
+            times.windows(2).all(|w| w[1] > w[0]),
+            "grid stays strictly increasing: {times:?}"
+        );
+        assert!((r.gpu_energy() - 150.0 * 0.35).abs() < 1e-9, "{}", r.gpu_energy());
+        // Per-client series ride the same grid.
+        assert_eq!(*r.per_client[0].0.times().last().unwrap(), 0.35);
+        // Aligned traces are untouched (no duplicated end point).
+        let aligned = Trace::from_samples(&[sample(0.0, 1.0, 0.5, 0), sample(0.4, 1.0, 0.5, 0)]);
+        let ra = MonitorReport::from_trace(&aligned, &[], 0.1);
+        assert_eq!(ra.gpu_power.times(), &[0.0, 0.1, 0.2, 0.3, 0.4]);
     }
 
     #[test]

@@ -150,6 +150,195 @@ pub fn server_mode_key(m: ServerMode) -> &'static str {
     }
 }
 
+/// Workflow-shape axis (§3.2's customizable multi-application workflows):
+/// generated DAG shapes executed through the same `workflows:` config
+/// machinery as hand-written runs, and reported with end-to-end latency,
+/// e2e SLO attainment, and critical-path attribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkflowShape {
+    /// No DAG: the flat app-mix scenarios (every task an independent root).
+    Flat,
+    /// Linear chain: script → storyboard → captions.
+    Pipeline,
+    /// One root fanning out to three parallel branches.
+    Fanout,
+    /// Fan-out then join: draft → {art, captions} → publish.
+    Diamond,
+    /// The paper's content-creation graph (Figs. 2–3): brainstorm (via a
+    /// shared KV-CPU llama server) gates the outline, which fans out to
+    /// cover art + captions — while two background side tasks contend the
+    /// whole time (a deep-research analysis on the same server, and a
+    /// b-roll render on the GPU).
+    ContentCreation,
+}
+
+/// Stable key for a workflow shape in scenario names and reports.
+pub fn workflow_key(w: WorkflowShape) -> &'static str {
+    match w {
+        WorkflowShape::Flat => "flat",
+        WorkflowShape::Pipeline => "pipeline",
+        WorkflowShape::Fanout => "fanout",
+        WorkflowShape::Diamond => "diamond",
+        WorkflowShape::ContentCreation => "content_creation",
+    }
+}
+
+/// One node of a generated workflow shape.
+struct WfNodeDef {
+    id: &'static str,
+    label: &'static str,
+    app: AppType,
+    num_requests: usize,
+    device: Device,
+    /// Route through the shared llama server (text apps only).
+    server: bool,
+    background: bool,
+    deps: &'static [&'static str],
+}
+
+/// Plain GPU-placed foreground node.
+const fn wf(
+    id: &'static str,
+    label: &'static str,
+    app: AppType,
+    num_requests: usize,
+    deps: &'static [&'static str],
+) -> WfNodeDef {
+    WfNodeDef {
+        id,
+        label,
+        app,
+        num_requests,
+        device: Device::Gpu,
+        server: false,
+        background: false,
+        deps,
+    }
+}
+
+static PIPELINE_NODES: [WfNodeDef; 3] = [
+    wf("script", "Script", AppType::Chatbot, 4, &[]),
+    wf("storyboard", "Storyboard", AppType::ImageGen, 2, &["script"]),
+    wf("captions", "Captions", AppType::LiveCaptions, 6, &["storyboard"]),
+];
+
+static FANOUT_NODES: [WfNodeDef; 4] = [
+    wf("brief", "Brief", AppType::Chatbot, 3, &[]),
+    wf("art", "Art", AppType::ImageGen, 2, &["brief"]),
+    wf("captions", "Captions", AppType::LiveCaptions, 6, &["brief"]),
+    WfNodeDef {
+        id: "research",
+        label: "Research",
+        app: AppType::DeepResearch,
+        num_requests: 1,
+        device: Device::Cpu,
+        server: false,
+        background: false,
+        deps: &["brief"],
+    },
+];
+
+static DIAMOND_NODES: [WfNodeDef; 4] = [
+    wf("draft", "Draft", AppType::Chatbot, 3, &[]),
+    wf("art", "Art", AppType::ImageGen, 2, &["draft"]),
+    wf("captions", "Captions", AppType::LiveCaptions, 6, &["draft"]),
+    wf("publish", "Publish", AppType::Chatbot, 2, &["art", "captions"]),
+];
+
+// The paper's five content-creation stages (Figs. 2–3). The two
+// long-running side tasks are `background: true` — the deep-research
+// analysis keeps the shared server busy and the b-roll render keeps the GPU
+// busy for the whole run (the greedy-starvation sources), but neither is
+// part of the user-perceived brainstorm → outline → {cover art, captions}
+// completion, so they are excluded from the e2e latency and critical path.
+static CONTENT_CREATION_NODES: [WfNodeDef; 6] = [
+    WfNodeDef {
+        id: "analysis",
+        label: "Analysis",
+        app: AppType::DeepResearch,
+        num_requests: 1,
+        device: Device::Gpu,
+        server: true,
+        background: true,
+        deps: &[],
+    },
+    WfNodeDef {
+        id: "brainstorm",
+        label: "Brainstorm",
+        app: AppType::Chatbot,
+        num_requests: 4,
+        device: Device::Gpu,
+        server: true,
+        background: false,
+        deps: &[],
+    },
+    // 8 requests × 24 denoise steps ≈ the whole foreground chain: the
+    // render overlaps brainstorm, outline, and both leaves under every
+    // policy, so the greedy-vs-slo_aware comparison measures protection of
+    // the text branch, not how much of the run happened to be contended.
+    WfNodeDef {
+        id: "broll",
+        label: "BRoll",
+        app: AppType::ImageGen,
+        num_requests: 8,
+        device: Device::Gpu,
+        server: false,
+        background: true,
+        deps: &[],
+    },
+    wf("outline", "Outline", AppType::Chatbot, 4, &["brainstorm"]),
+    wf("cover_art", "CoverArt", AppType::ImageGen, 2, &["outline"]),
+    wf("captions", "Captions", AppType::LiveCaptions, 8, &["outline"]),
+];
+
+impl WorkflowShape {
+    /// The DAG nodes of a generated shape (empty for `Flat`).
+    fn nodes(&self) -> &'static [WfNodeDef] {
+        match self {
+            WorkflowShape::Flat => &[],
+            WorkflowShape::Pipeline => &PIPELINE_NODES,
+            WorkflowShape::Fanout => &FANOUT_NODES,
+            WorkflowShape::Diamond => &DIAMOND_NODES,
+            WorkflowShape::ContentCreation => &CONTENT_CREATION_NODES,
+        }
+    }
+
+    /// End-to-end `workflow_slo:` bound (seconds) emitted for the shape.
+    fn workflow_slo(&self) -> Option<f64> {
+        match self {
+            WorkflowShape::Flat => None,
+            WorkflowShape::Pipeline => Some(120.0),
+            WorkflowShape::Fanout => Some(150.0),
+            WorkflowShape::Diamond => Some(180.0),
+            WorkflowShape::ContentCreation => Some(300.0),
+        }
+    }
+
+    /// Whether the shape routes text nodes through the shared llama server
+    /// (gates the adaptive server mode, exactly like `has_text_app` gates
+    /// it for flat mixes).
+    pub fn has_server(&self) -> bool {
+        self.nodes().iter().any(|n| n.server)
+    }
+
+    /// The shape's applications as an [`AppMix`] (one entry per DAG node),
+    /// so workflow scenarios carry the same mix metadata as flat ones.
+    fn mix(&self) -> AppMix {
+        AppMix {
+            name: workflow_key(*self),
+            entries: self
+                .nodes()
+                .iter()
+                .map(|n| MixEntry {
+                    app: n.app,
+                    num_requests: n.num_requests,
+                    device: n.device,
+                })
+                .collect(),
+        }
+    }
+}
+
 /// Stable key for a strategy in scenario names and YAML.
 pub fn strategy_key(s: Strategy) -> &'static str {
     match s {
@@ -176,15 +365,27 @@ pub struct MatrixAxes {
     pub testbeds: Vec<TestbedKind>,
     pub arrivals: Vec<ArrivalKind>,
     pub server_modes: Vec<ServerMode>,
+    /// Generated DAG shapes appended to the sweep (the workflow axis).
+    /// `Flat` entries are ignored — flat scenarios come from `mixes`.
+    pub workflows: Vec<WorkflowShape>,
+    /// Strategies the workflow slice crosses with. Kept separate from
+    /// `strategies` so the default matrix can add a *curated* slice (the
+    /// paper's greedy-vs-SLO-aware workflow comparison) without inflating
+    /// the flat cross-product, while the full matrix takes the whole
+    /// cross-product.
+    pub workflow_strategies: Vec<Strategy>,
     pub seed: u64,
 }
 
 impl MatrixAxes {
     /// The default matrix: 4 mixes × 3 policies × {closed, poisson} ×
-    /// {static, adaptive} on the Intel testbed — 42 scenarios (the
-    /// adaptive mode only applies to the 3 mixes with text apps) covering
-    /// every policy, every Table 1 application, open-loop heavy traffic,
-    /// and the static-vs-adaptive serving ablation.
+    /// {static, adaptive} on the Intel testbed — 42 flat scenarios (the
+    /// adaptive mode only applies to the 3 mixes with text apps) — plus a
+    /// curated workflow slice: 4 DAG shapes × {greedy, slo_aware} ×
+    /// {static, adaptive where a server exists} = 10 workflow scenarios,
+    /// 52 total. Covers every policy, every Table 1 application, open-loop
+    /// heavy traffic, the serving ablation, and the paper's end-to-end
+    /// workflow comparison.
     pub fn default_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             mixes: vec![
@@ -197,12 +398,21 @@ impl MatrixAxes {
             testbeds: vec![TestbedKind::IntelServer],
             arrivals: vec![ArrivalKind::Closed, ArrivalKind::Poisson],
             server_modes: vec![ServerMode::Static, ServerMode::Adaptive],
+            workflows: vec![
+                WorkflowShape::Pipeline,
+                WorkflowShape::Fanout,
+                WorkflowShape::Diamond,
+                WorkflowShape::ContentCreation,
+            ],
+            workflow_strategies: vec![Strategy::Greedy, Strategy::SloAware],
             seed,
         }
     }
 
     /// The full sweep: adds periodic + trace-replay arrivals and the Apple
-    /// Silicon testbed (96 static + 72 adaptive = 168 scenarios).
+    /// Silicon testbed to the flat part (96 static + 72 adaptive), and
+    /// crosses the workflow shapes with every strategy and testbed
+    /// (32 static + 8 adaptive) — 208 scenarios.
     pub fn full_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             testbeds: vec![TestbedKind::IntelServer, TestbedKind::MacbookM1Pro],
@@ -212,15 +422,25 @@ impl MatrixAxes {
                 ArrivalKind::Poisson,
                 ArrivalKind::TraceReplay,
             ],
+            workflow_strategies: vec![
+                Strategy::Greedy,
+                Strategy::Partition,
+                Strategy::FairShare,
+                Strategy::SloAware,
+            ],
             ..Self::default_matrix(seed)
         }
     }
 
-    /// Enumerate the cross-product in a fixed (mix, strategy, arrival,
-    /// testbed, server-mode) order. The order is part of the report
-    /// format: re-running with the same seed must reproduce the report
-    /// byte-for-byte. The adaptive server mode is skipped for mixes with
-    /// no text app (there is no server to adapt).
+    /// Enumerate the cross-product in a fixed order: first the flat
+    /// (mix, strategy, arrival, testbed, server-mode) scenarios, then the
+    /// workflow (shape, strategy, testbed, server-mode) slice. The order is
+    /// part of the report format: re-running with the same seed must
+    /// reproduce the report byte-for-byte. The adaptive server mode is
+    /// skipped where there is no server to adapt (flat mixes with no text
+    /// app; workflow shapes without a shared server). Workflow stages keep
+    /// their applications' built-in client models, so the arrival axis does
+    /// not cross the workflow slice.
     pub fn expand(&self) -> Vec<ScenarioSpec> {
         let mut specs = Vec::new();
         for mix in &self.mixes {
@@ -241,6 +461,7 @@ impl MatrixAxes {
                                     server_mode_key(server_mode)
                                 ),
                                 mix: mix.clone(),
+                                workflow: WorkflowShape::Flat,
                                 strategy,
                                 testbed,
                                 arrival,
@@ -248,6 +469,36 @@ impl MatrixAxes {
                                 seed: self.seed,
                             });
                         }
+                    }
+                }
+            }
+        }
+        for &shape in &self.workflows {
+            if shape == WorkflowShape::Flat {
+                continue;
+            }
+            for &strategy in &self.workflow_strategies {
+                for &testbed in &self.testbeds {
+                    for &server_mode in &self.server_modes {
+                        if server_mode == ServerMode::Adaptive && !shape.has_server() {
+                            continue;
+                        }
+                        specs.push(ScenarioSpec {
+                            name: format!(
+                                "workflow={}/policy={}/testbed={}/server={}",
+                                workflow_key(shape),
+                                strategy_key(strategy),
+                                testbed_key(testbed),
+                                server_mode_key(server_mode)
+                            ),
+                            mix: shape.mix(),
+                            workflow: shape,
+                            strategy,
+                            testbed,
+                            arrival: ArrivalKind::Closed,
+                            server_mode,
+                            seed: self.seed,
+                        });
                     }
                 }
             }
@@ -261,6 +512,8 @@ impl MatrixAxes {
 pub struct ScenarioSpec {
     pub name: String,
     pub mix: AppMix,
+    /// `Flat` for app-mix scenarios; otherwise the generated DAG shape.
+    pub workflow: WorkflowShape,
     pub strategy: Strategy,
     pub testbed: TestbedKind,
     pub arrival: ArrivalKind,
@@ -305,13 +558,49 @@ fn app_rate(app: AppType) -> f64 {
 /// still being large enough that the CPU-resident placement hurts (§4.2.1).
 const MATRIX_SERVER_CONTEXT: usize = 32_768;
 
+/// The shared llama-server block, used verbatim by both flat text mixes and
+/// workflow shapes with a server — the two slices must always run the same
+/// serving configuration or the static-vs-adaptive and flat-vs-workflow
+/// comparisons stop measuring what they claim to.
+fn shared_server_yaml() -> String {
+    format!(
+        "servers:\n  llama:\n    model: Llama-3.2-3B\n    context_window: {MATRIX_SERVER_CONTEXT}\n    kv_placement: cpu\n    n_slots: 4\n    batch_size: 512\n"
+    )
+}
+
+/// The adaptive-mode controller block, shared for the same reason. No
+/// reserve knobs: the flat matrix strategies carry no `SloAware`
+/// reservation, so the adaptive axis exercises KV migration and slot
+/// resizing; the workflow slice's `slo_aware` scenarios add the
+/// reserve-adjustment rung on top.
+const CONTROLLER_YAML: &str = "controller:\n  epoch: 2\n  window: 8\n  target_attainment: 0.9\n";
+
+/// Explicit per-node `slo:` rendering for generated workflow tasks — the
+/// application defaults (Table 1), spelled out so dumped configs are
+/// self-describing. `generated_slo_overrides_match_app_defaults` pins these
+/// strings to the applications' built-in SLOs.
+fn app_slo_yaml(app: AppType) -> Option<&'static str> {
+    match app {
+        AppType::Chatbot => Some("[1s, 0.25s]"),
+        AppType::ImageGen => Some("1s"),
+        AppType::LiveCaptions => Some("2s"),
+        AppType::DeepResearch => None,
+    }
+}
+
 impl ScenarioSpec {
     /// Render the scenario as a YAML workflow configuration. Mixes with
     /// text apps route them through a shared KV-CPU server; the adaptive
     /// server mode additionally enables the feedback controller, so the
     /// static/adaptive pair differs in exactly one thing — whether the
-    /// serving configuration may change at runtime.
+    /// serving configuration may change at runtime. Workflow-shaped
+    /// scenarios additionally emit the `workflows:` DAG (with `depend_on`
+    /// edges and `background:` flags), per-node `slo:` bounds, and the
+    /// shape's end-to-end `workflow_slo:`.
     pub fn to_yaml(&self) -> String {
+        if self.workflow != WorkflowShape::Flat {
+            return self.workflow_yaml();
+        }
         let shared_server = self.mix.has_text_app();
         let mut out = String::new();
         out.push_str(&format!("# scenario: {}\n", self.name));
@@ -361,16 +650,66 @@ impl ScenarioSpec {
             }
         }
         if shared_server {
-            out.push_str(&format!(
-                "servers:\n  llama:\n    model: Llama-3.2-3B\n    context_window: {MATRIX_SERVER_CONTEXT}\n    kv_placement: cpu\n    n_slots: 4\n    batch_size: 512\n"
-            ));
+            out.push_str(&shared_server_yaml());
         }
         if self.server_mode == ServerMode::Adaptive {
-            // No reserve knobs: the matrix strategies (greedy / partition /
-            // fair_share) carry no `SloAware` reservation, so the adaptive
-            // axis exercises KV migration and slot resizing; reserve
-            // adjustment is covered by slo_aware hand-written configs.
-            out.push_str("controller:\n  epoch: 2\n  window: 8\n  target_attainment: 0.9\n");
+            out.push_str(CONTROLLER_YAML);
+        }
+        out.push_str(&format!("strategy: {}\n", strategy_key(self.strategy)));
+        out.push_str(&format!("testbed: {}\n", testbed_key(self.testbed)));
+        out.push_str(&format!("seed: {}\n", self.seed));
+        out
+    }
+
+    /// YAML for a workflow-shaped scenario: one task per DAG node, a
+    /// `servers:` block when the shape shares a llama server, the
+    /// `workflows:` DAG, and the shape's `workflow_slo:`.
+    fn workflow_yaml(&self) -> String {
+        let nodes = self.workflow.nodes();
+        let mut out = String::new();
+        out.push_str(&format!("# scenario: {}\n", self.name));
+        for n in nodes {
+            out.push_str(&format!(
+                "{} ({}):\n  num_requests: {}\n  device: {}\n",
+                n.label,
+                n.app.name().to_ascii_lowercase(),
+                n.num_requests,
+                match n.device {
+                    Device::Gpu => "gpu",
+                    Device::Cpu => "cpu",
+                }
+            ));
+            if let Some(slo) = app_slo_yaml(n.app) {
+                out.push_str(&format!("  slo: {slo}\n"));
+            }
+            if n.server {
+                out.push_str("  server: llama\n");
+            }
+        }
+        if self.workflow.has_server() {
+            out.push_str(&shared_server_yaml());
+        }
+        if self.server_mode == ServerMode::Adaptive {
+            out.push_str(CONTROLLER_YAML);
+        }
+        out.push_str("workflows:\n");
+        for n in nodes {
+            out.push_str(&format!(
+                "  {}:\n    uses: {} ({})\n",
+                n.id,
+                n.label,
+                n.app.name().to_ascii_lowercase()
+            ));
+            if !n.deps.is_empty() {
+                let deps: Vec<String> = n.deps.iter().map(|d| format!("\"{d}\"")).collect();
+                out.push_str(&format!("    depend_on: [{}]\n", deps.join(", ")));
+            }
+            if n.background {
+                out.push_str("    background: true\n");
+            }
+        }
+        if let Some(bound) = self.workflow.workflow_slo() {
+            out.push_str(&format!("workflow_slo: {bound}\n"));
         }
         out.push_str(&format!("strategy: {}\n", strategy_key(self.strategy)));
         out.push_str(&format!("testbed: {}\n", testbed_key(self.testbed)));
@@ -421,15 +760,39 @@ mod tests {
     fn default_matrix_covers_acceptance_floor() {
         let axes = MatrixAxes::default_matrix(42);
         let specs = axes.expand();
-        assert_eq!(specs.len(), 42, "24 static + 18 adaptive scenarios");
+        assert_eq!(
+            specs.len(),
+            52,
+            "24 static + 18 adaptive flat + 10 workflow scenarios"
+        );
         let strategies: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| strategy_key(s.strategy)).collect();
-        assert_eq!(strategies.len(), 3);
+        assert_eq!(strategies.len(), 4, "3 flat policies + slo_aware on workflows");
         let mixes: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| s.mix.name).collect();
         assert!(mixes.len() >= 3, "{mixes:?}");
         assert!(specs.iter().any(|s| s.arrival == ArrivalKind::Poisson));
         assert!(specs.iter().any(|s| s.server_mode == ServerMode::Adaptive));
+        // The workflow slice: every generated shape, greedy + slo_aware.
+        let shapes: std::collections::BTreeSet<&str> = specs
+            .iter()
+            .filter(|s| s.workflow != WorkflowShape::Flat)
+            .map(|s| workflow_key(s.workflow))
+            .collect();
+        assert_eq!(
+            shapes.into_iter().collect::<Vec<_>>(),
+            vec!["content_creation", "diamond", "fanout", "pipeline"]
+        );
+        for shape in ["pipeline", "content_creation"] {
+            for policy in ["greedy", "slo_aware"] {
+                assert!(
+                    specs
+                        .iter()
+                        .any(|s| s.name.contains(&format!("workflow={shape}/policy={policy}"))),
+                    "missing workflow={shape}/policy={policy}"
+                );
+            }
+        }
         // Names are unique (they key the report).
         let names: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| s.name.as_str()).collect();
@@ -437,30 +800,84 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_mode_applies_only_to_text_mixes() {
+    fn adaptive_mode_applies_only_where_a_server_exists() {
         let specs = MatrixAxes::full_matrix(1).expand();
-        assert_eq!(specs.len(), 96 + 72, "96 static + 72 adaptive");
+        assert_eq!(
+            specs.len(),
+            96 + 72 + 32 + 8,
+            "flat 96 static + 72 adaptive, workflow 32 static + 8 adaptive"
+        );
         for spec in &specs {
             let yaml = spec.to_yaml();
+            let flat = spec.workflow == WorkflowShape::Flat;
             match spec.server_mode {
                 ServerMode::Adaptive => {
                     assert!(spec.mix.has_text_app(), "{}", spec.name);
                     assert!(yaml.contains("controller:"), "{}", spec.name);
                     assert!(yaml.contains("server: llama"), "{}", spec.name);
+                    if !flat {
+                        assert!(spec.workflow.has_server(), "{}", spec.name);
+                    }
                 }
                 ServerMode::Static => {
                     assert!(!yaml.contains("controller:"), "{}", spec.name);
-                    // Text mixes still share the server — the static/
-                    // adaptive pair differs only in the controller.
+                    // Flat text mixes still share the server — the static/
+                    // adaptive pair differs only in the controller. Workflow
+                    // shapes only share one when the shape declares it.
+                    let expect_server = if flat {
+                        spec.mix.has_text_app()
+                    } else {
+                        spec.workflow.has_server()
+                    };
                     assert_eq!(
                         yaml.contains("server: llama"),
-                        spec.mix.has_text_app(),
+                        expect_server,
                         "{}",
                         spec.name
                     );
                 }
             }
         }
+    }
+
+    #[test]
+    fn workflow_yaml_carries_dag_slos_and_e2e_bound() {
+        let specs = MatrixAxes::default_matrix(5).expand();
+        let wf: Vec<&ScenarioSpec> = specs
+            .iter()
+            .filter(|s| s.workflow != WorkflowShape::Flat)
+            .collect();
+        assert!(!wf.is_empty());
+        for spec in &wf {
+            let yaml = spec.to_yaml();
+            assert!(yaml.contains("workflows:"), "{}", spec.name);
+            assert!(yaml.contains("depend_on: ["), "{}", spec.name);
+            assert!(yaml.contains("workflow_slo: "), "{}", spec.name);
+            assert!(yaml.contains("slo: "), "{}", spec.name);
+            assert!(spec.name.starts_with("workflow="), "{}", spec.name);
+            // The generated DAG validates (cycles, dup deps, unknown ids).
+            let cfg = BenchConfig::parse(&yaml).unwrap();
+            crate::coordinator::Dag::build(&cfg.workflow)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        }
+        // content_creation carries the background analysis/b-roll nodes and
+        // the diamond join exists in the diamond shape.
+        let cc = wf
+            .iter()
+            .find(|s| s.workflow == WorkflowShape::ContentCreation)
+            .unwrap();
+        let yaml = cc.to_yaml();
+        assert_eq!(yaml.matches("background: true").count(), 2, "{yaml}");
+        assert!(yaml.contains("depend_on: [\"brainstorm\"]"), "{yaml}");
+        let diamond = wf
+            .iter()
+            .find(|s| s.workflow == WorkflowShape::Diamond)
+            .unwrap();
+        assert!(
+            diamond.to_yaml().contains("depend_on: [\"art\", \"captions\"]"),
+            "{}",
+            diamond.to_yaml()
+        );
     }
 
     #[test]
@@ -505,6 +922,41 @@ mod tests {
                 assert_eq!(cfg.seed, spec.seed);
             }
         }
+    }
+
+    #[test]
+    fn generated_slo_overrides_match_app_defaults() {
+        use crate::apps::{Application, Chatbot, ImageGen, LiveCaptions, Slo};
+        use crate::coordinator::config::SloSpec;
+        // The explicit `slo:` strings emitted for workflow tasks must parse
+        // back to the applications' built-in defaults — otherwise the
+        // workflow slice silently measures different SLOs than the flat one.
+        let apps: Vec<(AppType, Slo)> = vec![
+            (AppType::Chatbot, Chatbot::new(0, 1).slo()),
+            (AppType::ImageGen, ImageGen::new(0, 1).slo()),
+            (AppType::LiveCaptions, LiveCaptions::new(0, 1).slo()),
+        ];
+        for (app, built_in) in apps {
+            let rendered = app_slo_yaml(app).expect("SLO-bearing app");
+            let cfg = BenchConfig::parse(&format!(
+                "A ({}):\n  num_requests: 1\n  slo: {rendered}\n",
+                app.name().to_ascii_lowercase()
+            ))
+            .unwrap();
+            let parsed = cfg.tasks[0].slo.clone().expect("slo parsed");
+            match (parsed, built_in) {
+                (SloSpec::Chat(a, b), Slo::Chat { ttft, tpot }) => {
+                    assert_eq!((a, b), (ttft, tpot));
+                }
+                (SloSpec::Single(x), Slo::StepTime(s) | Slo::SegmentTime(s)) => {
+                    assert_eq!(x, s);
+                }
+                (parsed, built_in) => {
+                    panic!("{app:?}: SLO kinds diverged: {parsed:?} vs {built_in:?}")
+                }
+            }
+        }
+        assert_eq!(app_slo_yaml(AppType::DeepResearch), None, "background app has no SLO");
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //! multi-application scenarios.
 //!
 //! The paper evaluates a handful of hand-written configurations; this
-//! module generalizes them into a generator over four axes — application
-//! mix × scheduling policy × device profile × arrival process — and
-//! executes the expanded cross-product through the regular coordinator
-//! pipeline on the deterministic simulator:
+//! module generalizes them into a generator over the axes — application
+//! mix × scheduling policy × device profile × arrival process × server
+//! mode, plus a workflow axis of generated DAG shapes (pipeline, fanout,
+//! diamond, and the paper's content-creation graph) reported with
+//! end-to-end latency and critical-path attribution — and executes the
+//! expanded cross-product through the regular coordinator pipeline on the
+//! deterministic simulator:
 //!
 //! ```text
 //! MatrixAxes ──expand──▶ [ScenarioSpec] ──to_yaml──▶ BenchConfig
@@ -28,10 +31,10 @@ pub mod matrix;
 pub mod runner;
 
 pub use matrix::{
-    server_mode_key, strategy_key, testbed_key, AppMix, ArrivalKind, MatrixAxes, MixEntry,
-    ScenarioSpec, ServerMode,
+    server_mode_key, strategy_key, testbed_key, workflow_key, AppMix, ArrivalKind, MatrixAxes,
+    MixEntry, ScenarioSpec, ServerMode, WorkflowShape,
 };
 pub use runner::{
     run_matrix, run_matrix_jobs, run_scenario, run_specs_jobs, AppOutcome, MatrixReport,
-    ScenarioOutcome,
+    ScenarioOutcome, WorkflowRow,
 };

@@ -29,9 +29,9 @@ use crate::apps::Slo;
 use crate::coordinator::{run_config_text, ScenarioResult};
 use crate::gpusim::engine::trace_digest;
 use crate::scenario::matrix::{
-    server_mode_key, strategy_key, testbed_key, MatrixAxes, ScenarioSpec,
+    server_mode_key, strategy_key, testbed_key, workflow_key, MatrixAxes, ScenarioSpec,
 };
-use crate::util::json::{json_num, json_str};
+use crate::util::json::{json_num, json_opt_bool, json_opt_num, json_str};
 use crate::util::stats::Summary;
 
 /// Aggregated result of one application node inside a scenario.
@@ -42,7 +42,8 @@ pub struct AppOutcome {
     pub requests: usize,
     /// Whether the application carries an SLO (DeepResearch does not).
     pub has_slo: bool,
-    pub attainment: f64,
+    /// `None` when no requests completed (rendered `null`, never 100%).
+    pub attainment: Option<f64>,
     pub mean_normalized: f64,
     pub p50_latency: f64,
     pub p99_latency: f64,
@@ -59,8 +60,19 @@ pub struct ScenarioOutcome {
     pub testbed: String,
     /// `static` | `adaptive` — the serving-configuration axis.
     pub server_mode: String,
+    /// Workflow-shape axis: `flat` for app-mix scenarios, otherwise the
+    /// generated DAG shape (`pipeline`, `fanout`, `diamond`,
+    /// `content_creation`).
+    pub workflow: String,
     pub seed: u64,
     pub makespan: f64,
+    /// End-to-end workflow latency (latest foreground-node completion).
+    pub e2e_latency: f64,
+    /// `e2e_latency <= workflow_slo`; `None` when no bound is configured.
+    pub e2e_slo_met: Option<bool>,
+    /// Critical-path attribution (`a -> b -> c`): which nodes bounded the
+    /// run, root to sink.
+    pub critical_path: String,
     /// FNV-1a digest of the canonical engine trace — the golden fingerprint.
     pub trace_digest: u64,
     pub min_attainment: f64,
@@ -192,11 +204,19 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
         .collect();
     // Fairness over healthy SLO-bearing apps. A failed app (e.g. setup OOM)
     // counts as zero attainment rather than being dropped — otherwise a
-    // scenario whose every SLO app failed would report a perfect 100%.
+    // scenario whose every SLO app failed would report a perfect 100%. An
+    // app that ran no requests without failing has no attainment and is
+    // excluded.
     let attainments: Vec<f64> = apps
         .iter()
         .filter(|a| a.has_slo)
-        .map(|a| if a.failed.is_some() { 0.0 } else { a.attainment })
+        .filter_map(|a| {
+            if a.failed.is_some() {
+                Some(0.0)
+            } else {
+                a.attainment
+            }
+        })
         .collect();
     let (min_attainment, max_attainment) = if attainments.is_empty() {
         // No SLO-bearing apps at all (e.g. a DeepResearch-only mix):
@@ -215,8 +235,12 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
         arrival: spec.arrival.name().to_string(),
         testbed: testbed_key(spec.testbed).to_string(),
         server_mode: server_mode_key(spec.server_mode).to_string(),
+        workflow: workflow_key(spec.workflow).to_string(),
         seed: spec.seed,
         makespan: result.makespan,
+        e2e_latency: result.workflow.e2e_latency,
+        e2e_slo_met: result.workflow.e2e_slo_met,
+        critical_path: result.workflow.critical_path_str(),
         trace_digest: trace_digest(&result.trace),
         min_attainment,
         max_attainment,
@@ -240,6 +264,22 @@ pub struct AdaptiveDelta {
     pub reconfigurations: usize,
 }
 
+/// Aggregate of one (workflow shape, strategy) cell — the `summary.workflows`
+/// comparison of end-to-end latency across strategies (which reproduces the
+/// paper's finding that greedy allocation stretches the critical path while
+/// SLO-aware scheduling shortens it).
+#[derive(Debug, Clone)]
+pub struct WorkflowRow {
+    /// Shape key (`pipeline`, `fanout`, `diamond`, `content_creation`).
+    pub workflow: String,
+    pub strategy: String,
+    /// Scenarios in this cell (testbed × server-mode variants).
+    pub scenarios: usize,
+    pub mean_e2e_latency: f64,
+    /// Fraction of the cell's scenarios meeting their `workflow_slo`.
+    pub e2e_slo_attainment: f64,
+}
+
 impl MatrixReport {
     /// Distinct strategies present, in first-seen order.
     pub fn strategies(&self) -> Vec<&str> {
@@ -250,6 +290,43 @@ impl MatrixReport {
             }
         }
         out
+    }
+
+    /// Per-(shape, strategy) end-to-end aggregates over the workflow slice,
+    /// in first-seen (canonical) order. Empty when the matrix carries no
+    /// workflow scenarios.
+    pub fn workflow_rows(&self) -> Vec<WorkflowRow> {
+        let mut keys: Vec<(&str, &str)> = Vec::new();
+        for s in &self.scenarios {
+            if s.workflow == "flat" {
+                continue;
+            }
+            let key = (s.workflow.as_str(), s.strategy.as_str());
+            if !keys.contains(&key) {
+                keys.push(key);
+            }
+        }
+        keys.into_iter()
+            .map(|(wf, strat)| {
+                let rows: Vec<&ScenarioOutcome> = self
+                    .scenarios
+                    .iter()
+                    .filter(|s| s.workflow == wf && s.strategy == strat)
+                    .collect();
+                let n = rows.len().max(1) as f64;
+                let met = rows
+                    .iter()
+                    .filter(|r| r.e2e_slo_met == Some(true))
+                    .count() as f64;
+                WorkflowRow {
+                    workflow: wf.to_string(),
+                    strategy: strat.to_string(),
+                    scenarios: rows.len(),
+                    mean_e2e_latency: rows.iter().map(|r| r.e2e_latency).sum::<f64>() / n,
+                    e2e_slo_attainment: met / n,
+                }
+            })
+            .collect()
     }
 
     /// Pair every adaptive scenario with its static twin (same axes, only
@@ -303,6 +380,10 @@ impl MatrixReport {
                 json_str(&s.server_mode)
             ));
             out.push_str(&format!(
+                "      \"workflow\": {},\n",
+                json_str(&s.workflow)
+            ));
+            out.push_str(&format!(
                 "      \"reconfigurations\": {},\n",
                 s.reconfigurations
             ));
@@ -310,6 +391,18 @@ impl MatrixReport {
             out.push_str(&format!(
                 "      \"makespan_s\": {},\n",
                 json_num(s.makespan)
+            ));
+            out.push_str(&format!(
+                "      \"e2e_latency_s\": {},\n",
+                json_num(s.e2e_latency)
+            ));
+            out.push_str(&format!(
+                "      \"e2e_slo_met\": {},\n",
+                json_opt_bool(s.e2e_slo_met)
+            ));
+            out.push_str(&format!(
+                "      \"critical_path\": {},\n",
+                json_str(&s.critical_path)
             ));
             out.push_str(&format!(
                 "      \"trace_digest\": \"{:016x}\",\n",
@@ -334,7 +427,10 @@ impl MatrixReport {
                 out.push_str(&format!("\"app\": {}, ", json_str(&a.app)));
                 out.push_str(&format!("\"requests\": {}, ", a.requests));
                 out.push_str(&format!("\"has_slo\": {}, ", a.has_slo));
-                out.push_str(&format!("\"attainment\": {}, ", json_num(a.attainment)));
+                out.push_str(&format!(
+                    "\"attainment\": {}, ",
+                    json_opt_num(a.attainment)
+                ));
                 out.push_str(&format!(
                     "\"mean_normalized\": {}, ",
                     json_num(a.mean_normalized)
@@ -381,6 +477,20 @@ impl MatrixReport {
                 json_num(mean_makespan),
             ));
             out.push_str(if i + 1 < strategies.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("    ],\n");
+        out.push_str("    \"workflows\": [\n");
+        let wf_rows = self.workflow_rows();
+        for (i, w) in wf_rows.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"workflow\": {}, \"strategy\": {}, \"scenarios\": {}, \"mean_e2e_latency_s\": {}, \"e2e_slo_attainment\": {}}}",
+                json_str(&w.workflow),
+                json_str(&w.strategy),
+                w.scenarios,
+                json_num(w.mean_e2e_latency),
+                json_num(w.e2e_slo_attainment),
+            ));
+            out.push_str(if i + 1 < wf_rows.len() { ",\n" } else { "\n" });
         }
         out.push_str("    ],\n");
         out.push_str("    \"adaptive_vs_static\": [\n");
@@ -445,6 +555,8 @@ mod tests {
             testbeds: vec![TestbedKind::IntelServer],
             arrivals: vec![ArrivalKind::Poisson],
             server_modes: vec![ServerMode::Static, ServerMode::Adaptive],
+            workflows: vec![],
+            workflow_strategies: vec![],
             seed,
         }
     }
@@ -474,6 +586,7 @@ mod tests {
         axes.mixes = vec![AppMix::chat()];
         axes.strategies.truncate(1);
         axes.arrivals.truncate(1);
+        axes.workflows.clear();
         let report = run_matrix(&axes).unwrap();
         assert_eq!(report.scenarios.len(), 2, "one static + one adaptive");
         let deltas = report.adaptive_deltas();
@@ -499,10 +612,13 @@ mod tests {
                 app: "LiveCaptions",
                 slo: Slo::SegmentTime(2.0),
                 metrics: vec![],
+                ready: 0.0,
                 start: 0.0,
                 end: 1.0,
+                background: false,
                 failed: Some("VRAM OOM".into()),
             }],
+            workflow: crate::coordinator::WorkflowMetrics::default(),
             trace: crate::gpusim::engine::Trace::new(),
             client_names: vec![],
             makespan: 1.0,
@@ -515,6 +631,40 @@ mod tests {
         assert_eq!(outcome.min_attainment, 0.0);
         assert_eq!(outcome.max_attainment, 0.0);
         assert!(outcome.apps[0].failed.is_some());
+        // The failed app's own attainment is `null`/absent, not a number —
+        // only the fairness aggregate folds it to zero.
+        assert_eq!(outcome.apps[0].attainment, None);
+    }
+
+    #[test]
+    fn workflow_scenarios_report_e2e_and_critical_path() {
+        // One DAG shape, greedy only, static only: a fast slice that still
+        // exercises the workflow reporting path end-to-end.
+        let mut axes = MatrixAxes::default_matrix(3);
+        axes.mixes.clear();
+        axes.server_modes = vec![ServerMode::Static];
+        axes.workflows = vec![crate::scenario::matrix::WorkflowShape::Pipeline];
+        axes.workflow_strategies = vec![Strategy::Greedy];
+        let report = run_matrix(&axes).unwrap();
+        assert_eq!(report.scenarios.len(), 1);
+        let s = &report.scenarios[0];
+        assert_eq!(s.workflow, "pipeline");
+        assert!(s.e2e_latency > 0.0);
+        assert!(s.e2e_slo_met.is_some(), "pipeline carries a workflow_slo");
+        assert_eq!(
+            s.critical_path, "script -> storyboard -> captions",
+            "a linear pipeline is its own critical path"
+        );
+        let rows = report.workflow_rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].workflow, "pipeline");
+        assert_eq!(rows[0].scenarios, 1);
+        assert!((rows[0].mean_e2e_latency - s.e2e_latency).abs() < 1e-12);
+        let json = report.to_json();
+        assert!(json.contains("\"workflow\": \"pipeline\""), "{json}");
+        assert!(json.contains("\"critical_path\": \"script -> storyboard -> captions\""));
+        assert!(json.contains("\"e2e_latency_s\""));
+        assert!(json.contains("\"workflows\": ["));
     }
 
     #[test]

@@ -37,6 +37,22 @@ pub fn json_num(x: f64) -> String {
     }
 }
 
+/// Optional JSON number: `None` renders as `null` (e.g. the attainment of a
+/// node with no completed requests).
+pub fn json_opt_num(x: Option<f64>) -> String {
+    x.map(json_num).unwrap_or_else(|| "null".to_string())
+}
+
+/// Optional JSON boolean: `None` renders as `null` (e.g. an SLO verdict
+/// with no configured bound).
+pub fn json_opt_bool(x: Option<bool>) -> &'static str {
+    match x {
+        Some(true) => "true",
+        Some(false) => "false",
+        None => "null",
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,5 +71,14 @@ mod tests {
         assert_eq!(json_num(0.1), "0.1");
         assert_eq!(json_num(3.0), "3");
         assert_eq!(json_num(-2.25), "-2.25");
+    }
+
+    #[test]
+    fn optional_values_render_null() {
+        assert_eq!(json_opt_num(Some(0.5)), "0.5");
+        assert_eq!(json_opt_num(None), "null");
+        assert_eq!(json_opt_bool(Some(true)), "true");
+        assert_eq!(json_opt_bool(Some(false)), "false");
+        assert_eq!(json_opt_bool(None), "null");
     }
 }

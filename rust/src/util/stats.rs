@@ -66,11 +66,15 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
 
 /// Fraction of samples that are <= the threshold. Used for SLO attainment:
 /// attainment = fraction of request latencies within the SLO bound.
-pub fn fraction_within(samples: &[f64], threshold: f64) -> f64 {
+///
+/// Returns `None` for an empty sample slice: a node whose requests never
+/// ran (e.g. an OOM'd setup) has *no* attainment, not a perfect one —
+/// report layers render it as `n/a` rather than 100%.
+pub fn fraction_within(samples: &[f64], threshold: f64) -> Option<f64> {
     if samples.is_empty() {
-        return 1.0;
+        return None;
     }
-    samples.iter().filter(|&&x| x <= threshold).count() as f64 / samples.len() as f64
+    Some(samples.iter().filter(|&&x| x <= threshold).count() as f64 / samples.len() as f64)
 }
 
 /// Streaming mean/variance (Welford). Used by the monitor where sample
@@ -180,10 +184,16 @@ mod tests {
     #[test]
     fn fraction_within_basics() {
         let xs = [0.5, 1.0, 1.5, 2.0];
-        assert!((fraction_within(&xs, 1.0) - 0.5).abs() < 1e-12);
-        assert_eq!(fraction_within(&xs, 10.0), 1.0);
-        assert_eq!(fraction_within(&xs, 0.1), 0.0);
-        assert_eq!(fraction_within(&[], 1.0), 1.0);
+        assert!((fraction_within(&xs, 1.0).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(fraction_within(&xs, 10.0), Some(1.0));
+        assert_eq!(fraction_within(&xs, 0.1), Some(0.0));
+    }
+
+    #[test]
+    fn fraction_within_empty_is_none_not_perfect() {
+        // Regression: an empty sample set used to report 1.0 — a node whose
+        // requests all failed would show 100% SLO attainment.
+        assert_eq!(fraction_within(&[], 1.0), None);
     }
 
     #[test]

@@ -53,8 +53,11 @@ fn adaptive_controller_strictly_improves_chat_attainment() {
     let static_run = run_config_text(&contention_config(false), None).unwrap();
     let adaptive_run = run_config_text(&contention_config(true), None).unwrap();
 
-    let chat_static = static_run.node("Chat (chatbot)").unwrap().attainment();
-    let chat_adaptive = adaptive_run.node("Chat (chatbot)").unwrap().attainment();
+    let chat = |r: &consumerbench::coordinator::ScenarioResult| {
+        r.node("Chat (chatbot)").unwrap().attainment().expect("requests ran")
+    };
+    let chat_static = chat(&static_run);
+    let chat_adaptive = chat(&adaptive_run);
 
     // The §4.2.1 failure mode is present in the static run …
     assert!(
@@ -113,12 +116,14 @@ fn adaptive_runs_replay_byte_for_byte() {
 }
 
 /// Chat-only slice of the default matrix: one text mix, two policies, one
-/// arrival — four scenarios, two of them adaptive.
+/// arrival — four scenarios, two of them adaptive. The workflow slice is
+/// dropped (it has its own suites in parallel_matrix/golden_trace).
 fn adaptive_axes(seed: u64) -> MatrixAxes {
     let mut axes = MatrixAxes::default_matrix(seed);
     axes.mixes.truncate(1); // chat
     axes.strategies.truncate(2);
     axes.arrivals.truncate(1);
+    axes.workflows.clear();
     axes
 }
 

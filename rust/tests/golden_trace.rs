@@ -10,7 +10,7 @@
 
 use consumerbench::coordinator::run_config_text;
 use consumerbench::gpusim::engine::{trace_canonical_bytes, trace_digest, Trace};
-use consumerbench::scenario::{run_matrix, MatrixAxes};
+use consumerbench::scenario::{run_matrix, run_scenario, MatrixAxes};
 
 /// A contended, open-loop heavy-traffic scenario: every arrival model and
 /// two app classes in one config.
@@ -88,6 +88,7 @@ fn matrix_report_is_byte_identical_across_runs() {
     let axes = || {
         let mut a = MatrixAxes::default_matrix(42);
         a.mixes.truncate(1);
+        a.workflows.clear();
         a
     };
     let j1 = run_matrix(&axes()).unwrap().to_json();
@@ -113,9 +114,24 @@ fn default_matrix_executes_with_full_coverage() {
     );
     assert_eq!(
         report.strategies(),
-        vec!["greedy", "partition", "fair_share"],
-        "all three policies must be covered"
+        vec!["greedy", "partition", "fair_share", "slo_aware"],
+        "three flat policies plus the workflow slice's slo_aware"
     );
+    // The workflow axis is part of the default matrix: rows carry e2e
+    // latency, an e2e SLO verdict, and a critical-path attribution.
+    let wf_rows: Vec<_> = report
+        .scenarios
+        .iter()
+        .filter(|s| s.workflow != "flat")
+        .collect();
+    assert_eq!(wf_rows.len(), 10, "curated workflow slice");
+    for s in &wf_rows {
+        assert!(s.e2e_latency > 0.0, "{}", s.name);
+        assert!(s.e2e_slo_met.is_some(), "{}: workflow_slo verdict", s.name);
+        assert!(s.critical_path.contains(" -> "), "{}: {}", s.name, s.critical_path);
+        assert!(s.e2e_latency <= s.makespan + 1e-9, "{}", s.name);
+    }
+    assert!(!report.workflow_rows().is_empty());
     let mixes: std::collections::BTreeSet<&str> = report
         .scenarios
         .iter()
@@ -141,6 +157,58 @@ fn default_matrix_executes_with_full_coverage() {
         "suspiciously many identical traces: {} distinct of {}",
         digests.len(),
         report.scenarios.len()
+    );
+}
+
+/// §4.3 / §5.2 golden workflow ablation: in the content-creation DAG the
+/// critical path runs through the text branch (brainstorm → outline), which
+/// greedy allocation starves behind the background b-roll render's
+/// device-filling diffusion kernels — SLO-aware scheduling protects the
+/// text stages and shortens the end-to-end latency.
+#[test]
+fn content_creation_greedy_starves_text_branch_slo_aware_shortens_e2e() {
+    let spec = |policy: &str| {
+        MatrixAxes::default_matrix(42)
+            .expand()
+            .into_iter()
+            .find(|s| {
+                s.name
+                    == format!(
+                        "workflow=content_creation/policy={policy}/testbed=intel_server/server=static"
+                    )
+            })
+            .expect("content_creation spec in the default matrix")
+    };
+    let greedy = run_scenario(&spec("greedy")).unwrap();
+    let aware = run_scenario(&spec("slo_aware")).unwrap();
+
+    // The critical path runs through the text branch under both policies
+    // (brainstorm gates the outline, which gates both leaves) …
+    for r in [&greedy, &aware] {
+        assert!(
+            r.critical_path.starts_with("brainstorm -> outline"),
+            "{}: {}",
+            r.name,
+            r.critical_path
+        );
+    }
+    // … and under greedy that branch is starved: the outline's chat
+    // requests queue behind the b-roll diffusion kernels.
+    let outline_p99 = |r: &consumerbench::scenario::ScenarioOutcome| {
+        r.apps.iter().find(|a| a.node == "outline").unwrap().p99_latency
+    };
+    assert!(
+        outline_p99(&greedy) > outline_p99(&aware),
+        "greedy must starve the outline: {} vs {}",
+        outline_p99(&greedy),
+        outline_p99(&aware)
+    );
+    // SLO-aware scheduling shortens the workflow's end-to-end latency.
+    assert!(
+        aware.e2e_latency < greedy.e2e_latency,
+        "slo_aware must shorten e2e: {} vs {}",
+        aware.e2e_latency,
+        greedy.e2e_latency
     );
 }
 

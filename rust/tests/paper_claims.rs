@@ -29,11 +29,8 @@ fn fig3_gpu_upper_bound() {
     ] {
         let r = run_config_text(&exclusive(app, "gpu", n, slo), None).unwrap();
         let node = &r.nodes[0];
-        assert!(
-            node.attainment() >= 0.9,
-            "{app} gpu attainment {}",
-            node.attainment()
-        );
+        let att = node.attainment().expect("requests ran");
+        assert!(att >= 0.9, "{app} gpu attainment {att}");
     }
 }
 
@@ -133,7 +130,7 @@ fn fig5_greedy_starves_livecaptions() {
     // ImageGen unaffected by contention under greedy.
     let ig = greedy.node("Image (imagegen)").unwrap();
     assert!(ig.mean_normalized() < 0.7, "imagegen normalized {}", ig.mean_normalized());
-    assert!(ig.attainment() > 0.95);
+    assert!(ig.attainment().unwrap() > 0.95);
 }
 
 /// §4.2 / Fig. 5: partitioning protects LiveCaptions and pushes ImageGen to
@@ -142,7 +139,8 @@ fn fig5_greedy_starves_livecaptions() {
 fn fig5_partition_tradeoff() {
     let part = run_config_text(&fig5_config("partition"), None).unwrap();
     let lc = part.node("Captions (livecaptions)").unwrap();
-    assert!(lc.attainment() > 0.9, "LC attainment {}", lc.attainment());
+    let lc_att = lc.attainment().expect("requests ran");
+    assert!(lc_att > 0.9, "LC attainment {lc_att}");
     let ig = part.node("Image (imagegen)").unwrap();
     assert!(
         ig.mean_normalized() > 0.9 && ig.mean_normalized() < 2.0,
@@ -150,7 +148,7 @@ fn fig5_partition_tradeoff() {
         ig.mean_normalized()
     );
     let chat = part.node("Chat (chatbot)").unwrap();
-    assert!(chat.attainment() > 0.9);
+    assert!(chat.attainment().unwrap() > 0.9);
 }
 
 fn fig6_config(kv: &str, ctx: usize) -> String {
@@ -181,9 +179,9 @@ seed: 42
 #[test]
 fn fig6_kv_placement_tradeoff() {
     let gpu_kv = run_config_text(&fig6_config("gpu", 4096), None).unwrap();
-    let chat_gpu = gpu_kv.node("Chat (chatbot)").unwrap().attainment();
+    let chat_gpu = gpu_kv.node("Chat (chatbot)").unwrap().attainment().expect("requests ran");
     let cpu_kv = run_config_text(&fig6_config("cpu", 131_072), None).unwrap();
-    let chat_cpu = cpu_kv.node("Chat (chatbot)").unwrap().attainment();
+    let chat_cpu = cpu_kv.node("Chat (chatbot)").unwrap().attainment().expect("requests ran");
     assert!(chat_gpu > 0.85, "gpu-kv attainment {chat_gpu}");
     assert!(
         chat_cpu < chat_gpu - 0.15,
@@ -280,7 +278,7 @@ seed: 42
     };
     let greedy = run_config_text(&cfg("greedy"), None).unwrap();
     let chat = greedy.node("Chat8B (chatbot)").unwrap();
-    assert!(chat.attainment() < 0.9, "8B-on-CPU should violate SLOs");
+    assert!(chat.attainment().unwrap() < 0.9, "8B-on-CPU should violate SLOs");
     let part = run_config_text(&cfg("partition"), None).unwrap();
     let lc_g = greedy.node("Captions (livecaptions)").unwrap().mean_normalized();
     let lc_p = part.node("Captions (livecaptions)").unwrap().mean_normalized();
@@ -322,7 +320,7 @@ fn sec52_slo_aware_dominates() {
     let aware = run_config_text(&fig5_config("slo_aware"), None).unwrap();
 
     let lc = |r: &consumerbench::coordinator::ScenarioResult| {
-        r.node("Captions (livecaptions)").unwrap().attainment()
+        r.node("Captions (livecaptions)").unwrap().attainment().unwrap()
     };
     let ig = |r: &consumerbench::coordinator::ScenarioResult| {
         r.node("Image (imagegen)").unwrap().mean_normalized()

@@ -5,20 +5,24 @@
 //! contract that makes that safe: the matrix report (and every per-scenario
 //! trace digest inside it) is **byte-identical** across `--jobs 1`,
 //! `--jobs 4`, and repeated runs with the same seed — and diverges for a
-//! different seed. The last test pins the acceptance path end-to-end
-//! through the CLI on the full 168-scenario sweep (96 static + 72
-//! adaptive — reconfiguration events are part of the pinned digests).
+//! different seed. The workflow axis gets its own identity checks (its
+//! critical-path and e2e columns are part of the report bytes). The last
+//! test pins the acceptance path end-to-end through the CLI on the full
+//! 208-scenario sweep (96 static + 72 adaptive flat, 32 static + 8
+//! adaptive workflow — reconfiguration events are part of the pinned
+//! digests).
 
 use consumerbench::cli::run_cli;
-use consumerbench::scenario::{run_matrix_jobs, MatrixAxes};
+use consumerbench::scenario::{run_matrix_jobs, run_specs_jobs, MatrixAxes};
 
 /// A small but heterogeneous matrix: two mixes × three policies × two
 /// arrival models × both server modes (24 scenarios, half of them
 /// adaptive) keeps byte-identity checks fast while still covering the
-/// controller path.
+/// controller path. The workflow slice has its own suite below.
 fn small_axes(seed: u64) -> MatrixAxes {
     let mut axes = MatrixAxes::default_matrix(seed);
     axes.mixes.truncate(2);
+    axes.workflows.clear();
     axes
 }
 
@@ -53,6 +57,35 @@ fn different_seeds_diverge_under_parallelism() {
     let a = run_matrix_jobs(&small_axes(42), 4).unwrap().to_json();
     let b = run_matrix_jobs(&small_axes(43), 4).unwrap().to_json();
     assert_ne!(a, b, "a different seed must change the parallel report");
+}
+
+/// The default matrix's workflow slice (10 scenarios: 4 DAG shapes ×
+/// {greedy, slo_aware}, plus the content_creation adaptive pair).
+fn workflow_specs(seed: u64) -> Vec<consumerbench::scenario::ScenarioSpec> {
+    let mut specs = MatrixAxes::default_matrix(seed).expand();
+    specs.retain(|s| s.name.starts_with("workflow="));
+    assert_eq!(specs.len(), 10);
+    specs
+}
+
+#[test]
+fn workflow_scenarios_byte_identical_across_jobs_and_repeats() {
+    let j1 = run_specs_jobs(&workflow_specs(42), 42, 1).unwrap().to_json();
+    let j4 = run_specs_jobs(&workflow_specs(42), 42, 4).unwrap().to_json();
+    assert_eq!(
+        j1, j4,
+        "workflow-axis JSON (incl. critical-path fields) must be identical across jobs"
+    );
+    let again = run_specs_jobs(&workflow_specs(42), 42, 4).unwrap().to_json();
+    assert_eq!(j1, again, "same seed must reproduce exactly");
+    // The critical-path/e2e columns are present and pinned by the identity.
+    assert!(j1.contains("\"critical_path\": \""), "{j1}");
+    assert!(j1.contains("\"e2e_latency_s\""));
+    assert!(j1.contains("\"e2e_slo_met\""));
+    assert!(j1.contains("\"workflows\": ["), "summary.workflows present");
+    // Seed divergence holds on the workflow slice too.
+    let other = run_specs_jobs(&workflow_specs(43), 43, 4).unwrap().to_json();
+    assert_ne!(j1, other);
 }
 
 #[test]
@@ -98,9 +131,11 @@ fn cli_full_sweep_byte_identical_across_jobs() {
     );
     let text = String::from_utf8(reports[0].clone()).unwrap();
     assert!(
-        text.contains("\"num_scenarios\": 168"),
-        "full sweep is 96 static + 72 adaptive scenarios"
+        text.contains("\"num_scenarios\": 208"),
+        "full sweep is 168 flat + 40 workflow scenarios"
     );
     assert!(text.contains("\"testbed\": \"macbook_m1_pro\""));
     assert!(text.contains("\"server_mode\": \"adaptive\""));
+    assert!(text.contains("\"workflow\": \"diamond\""));
+    assert!(text.contains("workflow=content_creation/policy=partition"));
 }
