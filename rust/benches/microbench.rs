@@ -1,6 +1,6 @@
 //! Micro-benchmark suite → `BENCH.json`.
 //!
-//! Four hot paths, each reported as a machine-readable entry so every
+//! Five hot paths, each reported as a machine-readable entry so every
 //! future PR has a perf trajectory to regress against:
 //!
 //! * **engine-throughput** — simulated kernel-events per second through the
@@ -11,7 +11,10 @@
 //!   digest;
 //! * **server-throughput** — unified-batch iterations per second through
 //!   the inference server's hot path, static vs. under adaptive
-//!   reconfiguration churn (slot/batch resizes every 32 iterations).
+//!   reconfiguration churn (slot/batch resizes every 32 iterations);
+//! * **kernel-trace-gen** — per-backend kernel-trace generation throughput
+//!   (llama decode + prefill, SD denoise step, whisper token) — the
+//!   per-request synthesis path every scenario pays, per kernel backend.
 //!
 //! Usage (a `harness = false` bench target):
 //!
@@ -27,7 +30,8 @@
 
 use std::time::Instant;
 
-use consumerbench::apps::models::llama_3_2_3b;
+use consumerbench::apps::models::{llama_3_2_3b, sd35_medium_turbo, whisper_large_v3_turbo};
+use consumerbench::gpusim::backend::KernelBackend;
 use consumerbench::gpusim::engine::{trace_digest, Engine, Trace};
 use consumerbench::gpusim::policy::Policy;
 use consumerbench::gpusim::profiles::Testbed;
@@ -43,6 +47,28 @@ struct Entry {
     name: &'static str,
     value: f64,
     unit: &'static str,
+}
+
+/// Kernel-trace generations per second for one backend: each iteration
+/// synthesizes a llama decode token (long context), a llama prefill, an SD
+/// denoise step, and a whisper decode token — the per-request work the
+/// executor pays before the engine ever sees a kernel.
+fn kernel_trace_gens_per_sec(backend: KernelBackend, reps: usize) -> f64 {
+    let llama = llama_3_2_3b().with_backend(backend);
+    let sd = sd35_medium_turbo().with_backend(backend);
+    let whisper = whisper_large_v3_turbo().with_backend(backend);
+    let t0 = Instant::now();
+    let mut kernels = 0usize;
+    for i in 0..reps.max(1) {
+        let ctx = 4096 + (i % 16) * 64;
+        kernels += std::hint::black_box(llama.decode_kernels(ctx)).len();
+        kernels += std::hint::black_box(llama.prefill_kernels(512)).len();
+        kernels += std::hint::black_box(sd.denoise_step_kernels()).len();
+        kernels += std::hint::black_box(whisper.decode_token_kernels()).len();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(kernels);
+    (reps.max(1) * 4) as f64 / dt.max(1e-9)
 }
 
 /// Streaming digest throughput over a recorded engine trace.
@@ -166,8 +192,8 @@ fn main() {
             }
         });
 
-    let (jobs, kernels, digest_reps, server_reqs) =
-        if fast { (200, 25, 20, 64) } else { (2_000, 50, 100, 512) };
+    let (jobs, kernels, digest_reps, server_reqs, gen_reps) =
+        if fast { (200, 25, 20, 64, 500) } else { (2_000, 50, 100, 512, 5_000) };
     let mode = if fast { "fast" } else { "full" };
 
     let (eps_traced, trace) = engine_events_per_sec(true, jobs, kernels);
@@ -175,11 +201,15 @@ fn main() {
     let digest_rate = digest_bytes_per_sec(&trace, digest_reps);
     let server_static = server_batches_per_sec(false, server_reqs);
     let server_adaptive = server_batches_per_sec(true, server_reqs);
+    let gen_tuned = kernel_trace_gens_per_sec(KernelBackend::TunedNative, gen_reps);
+    let gen_generic = kernel_trace_gens_per_sec(KernelBackend::GenericTorch, gen_reps);
+    let gen_fused = kernel_trace_gens_per_sec(KernelBackend::FusedCustom, gen_reps);
 
     let mut axes = MatrixAxes::default_matrix(42);
     if fast {
         axes.mixes.truncate(1); // static + adaptive chat only …
-        axes.workflows.clear(); // … and no workflow slice: 12 scenarios, not 52
+        axes.workflows.clear(); // … no workflow slice …
+        axes.backends.clear(); // … no backend-ablation slice: 12 scenarios, not 58
     }
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -212,6 +242,21 @@ fn main() {
             name: "server_batches_per_sec_adaptive",
             value: server_adaptive,
             unit: "batches/s",
+        },
+        Entry {
+            name: "kernel_trace_gen_tuned_native",
+            value: gen_tuned,
+            unit: "traces/s",
+        },
+        Entry {
+            name: "kernel_trace_gen_generic_torch",
+            value: gen_generic,
+            unit: "traces/s",
+        },
+        Entry {
+            name: "kernel_trace_gen_fused_custom",
+            value: gen_fused,
+            unit: "traces/s",
         },
         Entry {
             name: "sweep_wall_clock_jobs1",

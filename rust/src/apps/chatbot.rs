@@ -44,6 +44,13 @@ impl Chatbot {
         }
     }
 
+    /// Serve the same requests through a different kernel implementation
+    /// (the §6 tuned-vs-generic ablation).
+    pub fn with_backend(mut self, backend: crate::gpusim::backend::KernelBackend) -> Self {
+        self.model = self.model.with_backend(backend);
+        self
+    }
+
     pub fn model(&self) -> &LlamaProfile {
         &self.model
     }

@@ -31,6 +31,12 @@ impl DeepResearch {
         }
     }
 
+    /// Run the agent loop through a different kernel implementation.
+    pub fn with_backend(mut self, backend: crate::gpusim::backend::KernelBackend) -> Self {
+        self.model = self.model.with_backend(backend);
+        self
+    }
+
     pub fn model(&self) -> &LlamaProfile {
         &self.model
     }

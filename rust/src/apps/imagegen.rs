@@ -49,6 +49,12 @@ impl ImageGen {
         app
     }
 
+    /// Render through a different kernel implementation.
+    pub fn with_backend(mut self, backend: crate::gpusim::backend::KernelBackend) -> Self {
+        self.model = self.model.with_backend(backend);
+        self
+    }
+
     pub fn model(&self) -> &DiffusionProfile {
         &self.model
     }

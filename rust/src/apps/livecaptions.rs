@@ -46,6 +46,12 @@ impl LiveCaptions {
         }
     }
 
+    /// Transcribe through a different kernel implementation.
+    pub fn with_backend(mut self, backend: crate::gpusim::backend::KernelBackend) -> Self {
+        self.model = self.model.with_backend(backend);
+        self
+    }
+
     pub fn model(&self) -> &WhisperProfile {
         &self.model
     }

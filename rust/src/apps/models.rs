@@ -1,9 +1,13 @@
 //! Model execution profiles: per-request kernel traces and CPU work models.
 //!
 //! Each GenAI model in Table 1 is characterized by (a) its memory footprint
-//! and (b) the *kernel footprint trace* its backend launches per unit of
-//! work (token, denoise step, audio segment). The footprints — grid sizes,
-//! registers/thread, shared memory — encode the paper's §4.1 analysis:
+//! and FLOP/byte magnitudes (owned here) and (b) the *kernel footprint
+//! trace* its backend launches per unit of work (token, denoise step, audio
+//! segment) — the grid sizes, registers/thread, shared memory, and launch
+//! counts, which are owned by the pluggable
+//! [`KernelBackend`](crate::gpusim::backend::KernelBackend) launch-shape
+//! tables. The default `TunedNative` backend reproduces the paper's §4.1
+//! measurements:
 //!
 //! * **Llama-3.2-3B via llama.cpp**: kernels tuned to the GPU architecture →
 //!   high SMOCC; decode is memory-bandwidth-bound (reads all weights per
@@ -14,10 +18,13 @@
 //!   occupancy; decoder = hundreds of tiny kernels with high register and
 //!   shared-memory pressure → very low SMOCC and launch-bound latency.
 //!
-//! CPU variants model llama.cpp/PyTorch CPU backends with empirically-shaped
-//! inefficiency factors (quantized GEMV without AVX-friendly layout, no
-//! operator fusion), documented per model.
+//! Selecting `GenericTorch` or `FusedCustom` re-cuts the same logical work
+//! into that implementation's launch shapes (the §6 tuned-vs-generic
+//! ablation). CPU variants model llama.cpp/PyTorch CPU backends with
+//! empirically-shaped inefficiency factors, scaled by the backend's CPU
+//! multipliers.
 
+use crate::gpusim::backend::KernelBackend;
 use crate::gpusim::engine::CpuWork;
 use crate::gpusim::kernel::KernelDesc;
 use crate::gpusim::vram::{gib, mib};
@@ -42,6 +49,8 @@ pub struct LlamaProfile {
     pub cpu_flops_factor: f64,
     /// CPU backend inefficiency: effective bytes multiplier.
     pub cpu_bytes_factor: f64,
+    /// Which kernel implementation cuts this model's work into launches.
+    pub backend: KernelBackend,
 }
 
 /// Llama-3.2-3B, Q4_K_M quantization (the paper's default Chatbot /
@@ -57,6 +66,7 @@ pub fn llama_3_2_3b() -> LlamaProfile {
         max_context: 131_072,
         cpu_flops_factor: 4.0,
         cpu_bytes_factor: 3.0,
+        backend: KernelBackend::TunedNative,
     }
 }
 
@@ -72,94 +82,127 @@ pub fn llama_3_1_8b() -> LlamaProfile {
         max_context: 131_072,
         cpu_flops_factor: 4.0,
         cpu_bytes_factor: 1.5, // fp16 weights stream better than Q4 dequant
+        backend: KernelBackend::TunedNative,
     }
 }
 
-/// Number of kernels llama.cpp launches per decoded token (fused per-layer
-/// pipeline: qkv, rope+attn, o-proj, 2×norm, ffn — ~1 fused launch each plus
-/// head/embedding).
-const LLAMA_KERNELS_PER_TOKEN: usize = 30;
-
 impl LlamaProfile {
-    /// Prefill `tokens` of prompt on the GPU: one large fused kernel per
-    /// layer, compute-bound, llama.cpp-tuned occupancy.
-    pub fn prefill_kernels(&self, tokens: usize) -> Vec<KernelDesc> {
-        let flops_total = 2.0 * self.params * tokens as f64;
-        let per_layer = flops_total / self.layers as f64;
-        let bytes_per_layer = self.weights_bytes as f64 / self.layers as f64;
-        (0..self.layers)
-            .map(|_| {
-                KernelDesc::new(
-                    "prefill.layer",
-                    2048.min(tokens * 8).max(72),
-                    256,
-                    64,
-                    16 * 1024,
-                    per_layer,
-                    bytes_per_layer,
-                )
-            })
-            .collect()
+    /// Re-cut this model's work with a different kernel implementation.
+    pub fn with_backend(mut self, backend: KernelBackend) -> Self {
+        self.backend = backend;
+        self
     }
 
-    /// Decode one token on the GPU at the given context length. Memory-bound:
-    /// every kernel streams its slice of the weights plus the KV cache.
+    /// Kernel launches per decoded token under the selected backend — the
+    /// single source of truth shared with the inference server's batched
+    /// iterations (formerly the hardcoded `LLAMA_KERNELS_PER_TOKEN`).
+    pub fn decode_launches(&self) -> usize {
+        self.backend.llama().decode_launches()
+    }
+
+    /// Prefill `tokens` of prompt on the GPU: compute-bound layer kernels
+    /// at the backend's launch shapes (llama.cpp fuses one launch per
+    /// layer; eager backends split attention out at its 168-register
+    /// footprint).
+    pub fn prefill_kernels(&self, tokens: usize) -> Vec<KernelDesc> {
+        let t = self.backend.llama();
+        let blocks = 2048.min(tokens * 8).max(72);
+        let per_layer = 2.0 * self.params * tokens as f64 / self.layers as f64;
+        let bytes_per_layer = self.weights_bytes as f64 / self.layers as f64;
+        let mut v = Vec::with_capacity(self.layers * (1 + t.prefill_attn.is_some() as usize));
+        for _ in 0..self.layers {
+            match &t.prefill_attn {
+                None => v.push(t.prefill_matmul.kernel_with_blocks(blocks, per_layer, bytes_per_layer)),
+                Some(attn) => {
+                    let frac = t.attn_flops_frac;
+                    v.push(t.prefill_matmul.kernel_with_blocks(
+                        blocks,
+                        per_layer * (1.0 - frac),
+                        bytes_per_layer,
+                    ));
+                    v.push(attn.kernel_with_blocks(
+                        blocks,
+                        per_layer * frac,
+                        bytes_per_layer * 0.25,
+                    ));
+                }
+            }
+        }
+        v
+    }
+
+    /// Decode one token on the GPU at the given context length.
+    /// Memory-bound: the matmul launches stream the full weights between
+    /// them, the attention launches stream the context's KV (times the
+    /// backend's intermediate-materialization factor).
     pub fn decode_kernels(&self, context: usize) -> Vec<KernelDesc> {
-        let n = LLAMA_KERNELS_PER_TOKEN;
-        let weight_bytes = self.weights_bytes as f64 / n as f64;
-        let kv_bytes = (self.kv_bytes_per_token * context as u64) as f64 / n as f64;
-        let flops = 2.0 * self.params / n as f64;
-        (0..n)
-            .map(|_| {
-                // 288 blocks at 3 blocks/SM spans all 72 SMs (SMACT 100%)
-                // at 24/32 resident warps (SMOCC 75%) — llama.cpp's tuned
-                // launch shape on Turing.
-                KernelDesc::new("decode.layer", 288, 256, 80, 8 * 1024, flops, weight_bytes + kv_bytes)
-            })
-            .collect()
+        let t = self.backend.llama();
+        let total_flops = 2.0 * self.params;
+        let kv_bytes = (self.kv_bytes_per_token * context as u64) as f64 * t.attn_bytes_factor;
+        let mut v = self.decode_kernels_no_attn();
+        let n_a = t.decode_attn_launches;
+        for _ in 0..n_a {
+            v.push(t.decode_attn.kernel(
+                total_flops * t.attn_flops_frac / n_a as f64,
+                kv_bytes / n_a as f64,
+            ));
+        }
+        v
     }
 
     /// Decode-token kernels *excluding* attention — used when the KV cache
-    /// lives in CPU DRAM (`--no-kv-offload`): llama.cpp then runs attention
-    /// on the CPU (§4.2.1).
+    /// lives in CPU DRAM (`--no-kv-offload`): the runtime then computes
+    /// attention on the CPU (§4.2.1). This is literally the matmul prefix
+    /// of [`Self::decode_kernels`], so the two variants share one launch
+    /// table and cannot drift apart.
     pub fn decode_kernels_no_attn(&self) -> Vec<KernelDesc> {
-        // Attention is ~8 of the 30 launches; the rest are weight matmuls.
-        let n = LLAMA_KERNELS_PER_TOKEN - 8;
-        let weight_bytes = self.weights_bytes as f64 / LLAMA_KERNELS_PER_TOKEN as f64;
-        let flops = 2.0 * self.params / LLAMA_KERNELS_PER_TOKEN as f64;
-        (0..n)
-            .map(|_| KernelDesc::new("decode.matmul", 256, 256, 64, 8 * 1024, flops, weight_bytes))
+        let t = self.backend.llama();
+        let n_m = t.decode_matmul_launches;
+        let total_flops = 2.0 * self.params;
+        let weight_bytes = self.weights_bytes as f64;
+        (0..n_m)
+            .map(|_| {
+                t.decode_matmul.kernel(
+                    total_flops * (1.0 - t.attn_flops_frac) / n_m as f64,
+                    weight_bytes / n_m as f64,
+                )
+            })
             .collect()
     }
 
     /// CPU-side attention over the KV cache for one token (KV-cache-on-CPU
     /// mode). Bandwidth-bound over the context's K/V.
     pub fn attention_cpu(&self, context: usize) -> CpuWork {
+        let t = self.backend.llama();
         let kv_bytes = (self.kv_bytes_per_token * context as u64) as f64;
         CpuWork {
-            flops: 4.0 * context as f64 * 4096.0, // qk^T + pv per layer-aggregate
+            flops: 4.0 * context as f64 * 4096.0 * t.cpu_flops_mult, // qk^T + pv per layer-aggregate
             // f32 up-conversion + strided K/V walks: the CPU attention path
             // moves ~3x the nominal KV bytes through DRAM.
-            bytes: kv_bytes * self.cpu_bytes_factor,
+            bytes: kv_bytes * self.cpu_bytes_factor * t.cpu_bytes_mult,
             threads: 6,
         }
     }
 
     /// Full prefill on the CPU backend.
     pub fn prefill_cpu(&self, tokens: usize) -> CpuWork {
+        let t = self.backend.llama();
         CpuWork {
-            flops: 2.0 * self.params * tokens as f64 * self.cpu_flops_factor,
-            bytes: self.weights_bytes as f64 * self.cpu_bytes_factor,
+            flops: 2.0 * self.params * tokens as f64 * self.cpu_flops_factor * t.cpu_flops_mult,
+            bytes: self.weights_bytes as f64 * self.cpu_bytes_factor * t.cpu_bytes_mult,
             threads: 24,
         }
     }
 
     /// Decode one token on the CPU backend.
     pub fn decode_cpu(&self, context: usize) -> CpuWork {
+        let t = self.backend.llama();
         let kv_bytes = (self.kv_bytes_per_token * context as u64) as f64;
         CpuWork {
-            flops: 2.0 * self.params * self.cpu_flops_factor,
-            bytes: (self.weights_bytes as f64 + kv_bytes) * self.cpu_bytes_factor,
+            flops: 2.0 * self.params * self.cpu_flops_factor * t.cpu_flops_mult,
+            bytes: (self.weights_bytes as f64 + kv_bytes)
+                * self.cpu_bytes_factor
+                * t.cpu_bytes_mult,
             threads: 24,
         }
     }
@@ -196,6 +239,8 @@ pub struct DiffusionProfile {
     /// Host-side overhead per step (webui scheduler + sampler).
     pub step_host_overhead: f64,
     pub cpu_flops_factor: f64,
+    /// Which kernel implementation cuts this model's work into launches.
+    pub backend: KernelBackend,
 }
 
 /// SD-3.5-Medium-Turbo (2.5 B params, fp16, few-step turbo sampling).
@@ -214,6 +259,7 @@ pub fn sd35_medium_turbo() -> DiffusionProfile {
         // PyTorch CPU diffusion runs fp32 without fused attention: measured
         // step times are ~30x the GPU SLO on server-class CPUs (Fig. 3).
         cpu_flops_factor: 10.0,
+        backend: KernelBackend::TunedNative,
     }
 }
 
@@ -231,62 +277,69 @@ pub fn sd_v1_4() -> DiffusionProfile {
         other_flops: 1.0e10,
         step_host_overhead: 0.005,
         cpu_flops_factor: 10.0,
+        backend: KernelBackend::TunedNative,
     }
 }
 
 impl DiffusionProfile {
-    /// One denoise step on the GPU. The attention kernels reproduce §4.1:
-    /// 168 registers/thread → 1 block/SM → SMOCC ≈ 0.25.
+    /// Re-cut this model's work with a different kernel implementation.
+    pub fn with_backend(mut self, backend: KernelBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// One denoise step on the GPU at the backend's launch shapes. The
+    /// default (webui/PyTorch) attention reproduces §4.1: 168
+    /// registers/thread → 1 block/SM → SMOCC ≈ 0.25; the eager backend
+    /// additionally splits each attention op into three launches with
+    /// materialized intermediates; the fused backend runs it
+    /// flash-attention-style at healthy occupancy.
     pub fn denoise_step_kernels(&self) -> Vec<KernelDesc> {
-        let mut v = Vec::with_capacity(self.attn_kernels_per_step + self.other_kernels_per_step);
-        for i in 0..(self.attn_kernels_per_step + self.other_kernels_per_step) {
+        let t = self.backend.diffusion();
+        let ops = self.attn_kernels_per_step + self.other_kernels_per_step;
+        let mut v =
+            Vec::with_capacity(self.attn_kernels_per_step * t.attn_split + self.other_kernels_per_step);
+        for i in 0..ops {
             // Interleave attention and other kernels as a transformer block
             // sequence would.
             if i % 5 < 2 {
-                v.push(KernelDesc::new(
-                    "denoise.attn",
-                    2048,
-                    256,
-                    168, // the paper's register-pressure pathology
-                    16 * 1024,
-                    self.attn_flops,
-                    64.0 * 1024.0 * 1024.0,
-                ));
+                for _ in 0..t.attn_split {
+                    v.push(t.attn.kernel(
+                        self.attn_flops / t.attn_split as f64,
+                        t.attn_bytes_per_op / t.attn_split as f64,
+                    ));
+                }
             } else {
-                v.push(KernelDesc::new(
-                    "denoise.matmul",
-                    2048,
-                    256,
-                    96,
-                    8 * 1024,
-                    self.other_flops,
-                    128.0 * 1024.0 * 1024.0,
-                ));
+                v.push(t.other.kernel(self.other_flops, t.other_bytes_per_op));
             }
         }
         v
     }
 
-    /// Prompt encoding + VAE decode bracketing a request.
+    /// Prompt encoding + VAE decode bracketing a request (geometry is
+    /// single-sourced in the backend table, identical across backends).
     pub fn preamble_kernels(&self) -> Vec<KernelDesc> {
-        (0..8)
-            .map(|_| KernelDesc::new("clip.encode", 512, 256, 64, 8 * 1024, 2e10, 32e6))
+        let t = self.backend.diffusion();
+        (0..t.clip_launches)
+            .map(|_| t.clip.kernel(t.clip_flops, t.clip_bytes))
             .collect()
     }
 
     pub fn vae_kernels(&self) -> Vec<KernelDesc> {
-        (0..12)
-            .map(|_| KernelDesc::new("vae.decode", 4096, 256, 96, 8 * 1024, 4e10, 256e6))
+        let t = self.backend.diffusion();
+        (0..t.vae_launches)
+            .map(|_| t.vae.kernel(t.vae_flops, t.vae_bytes))
             .collect()
     }
 
     /// One denoise step on the CPU backend (PyTorch CPU): heavily
     /// compute-bound, ~30–60× the GPU step.
     pub fn denoise_step_cpu(&self) -> CpuWork {
+        let t = self.backend.diffusion();
         let flops = self.attn_kernels_per_step as f64 * self.attn_flops
             + self.other_kernels_per_step as f64 * self.other_flops;
         CpuWork {
-            flops: flops * self.cpu_flops_factor,
+            flops: flops * self.cpu_flops_factor * t.cpu_flops_mult,
             bytes: self.weights_bytes as f64,
             threads: 24,
         }
@@ -302,16 +355,25 @@ impl DiffusionProfile {
 // ---------------------------------------------------------------------
 
 /// An encoder-decoder speech model (whisper-online backend).
+///
+/// The `encoder_kernels` / `decoder_kernels_per_token` fields are the
+/// *logical* op counts (the tuned reference used to budget FLOPs/bytes);
+/// the backend table decides how many launches those ops become.
 #[derive(Debug, Clone)]
 pub struct WhisperProfile {
     pub name: &'static str,
     pub weights_bytes: u64,
     pub encoder_kernels: usize,
     pub encoder_flops_per_kernel: f64,
+    /// Per-encoder-op DRAM traffic (activations + weight slices).
+    pub encoder_bytes_per_kernel: f64,
     /// Tiny kernels per decoded token (the §4.1 low-SMOCC pathology).
     pub decoder_kernels_per_token: usize,
     pub decoder_flops_per_kernel: f64,
+    pub decoder_bytes_per_kernel: f64,
     pub cpu_flops_factor: f64,
+    /// Which kernel implementation cuts this model's work into launches.
+    pub backend: KernelBackend,
 }
 
 /// Whisper-Large-V3-Turbo (809 M params, 4 decoder layers).
@@ -321,55 +383,58 @@ pub fn whisper_large_v3_turbo() -> WhisperProfile {
         weights_bytes: 1_600 * mib(1),
         encoder_kernels: 16,
         encoder_flops_per_kernel: 4e10,
+        encoder_bytes_per_kernel: 48e6,
         decoder_kernels_per_token: 40,
         decoder_flops_per_kernel: 5e7,
+        decoder_bytes_per_kernel: 3e6,
         cpu_flops_factor: 6.0, // PyTorch CPU whisper-large: RTF > 1
+        backend: KernelBackend::TunedNative,
     }
 }
 
 impl WhisperProfile {
+    /// Re-cut this model's work with a different kernel implementation.
+    pub fn with_backend(mut self, backend: KernelBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
     /// Encode one audio segment: large parallel matmuls, healthy occupancy.
+    /// The logical FLOP/byte budget is spread over the backend's launch
+    /// count.
     pub fn encode_kernels(&self) -> Vec<KernelDesc> {
-        (0..self.encoder_kernels)
-            .map(|_| {
-                KernelDesc::new(
-                    "encode.matmul",
-                    1500,
-                    256,
-                    64,
-                    32 * 1024,
-                    self.encoder_flops_per_kernel,
-                    48e6,
-                )
-            })
+        let t = self.backend.whisper();
+        let total_flops = self.encoder_kernels as f64 * self.encoder_flops_per_kernel;
+        let total_bytes = self.encoder_kernels as f64 * self.encoder_bytes_per_kernel;
+        let n = t.encode_launches;
+        (0..n)
+            .map(|_| t.encode.kernel(total_flops / n as f64, total_bytes / n as f64))
             .collect()
     }
 
-    /// Decode one transcript token: many tiny kernels with ~200 registers
-    /// and heavy shared memory → 1 block/SM, 2 warps → SMOCC ≈ 0.06, and
-    /// the grid still spans the device (SMACT stays high, Fig. 4c).
+    /// Decode one transcript token. Under the tuned backend: many tiny
+    /// kernels with ~200 registers and heavy shared memory → 1 block/SM,
+    /// 2 warps → SMOCC ≈ 0.06, and the grid still spans the device (SMACT
+    /// stays high, Fig. 4c). Eager execution doubles the launch count;
+    /// the fused backend collapses the burst to a quarter of it.
     pub fn decode_token_kernels(&self) -> Vec<KernelDesc> {
-        (0..self.decoder_kernels_per_token)
-            .map(|_| {
-                KernelDesc::new(
-                    "decode.small",
-                    72,
-                    64,
-                    200,
-                    40 * 1024,
-                    self.decoder_flops_per_kernel,
-                    3e6,
-                )
-            })
+        let t = self.backend.whisper();
+        let total_flops = self.decoder_kernels_per_token as f64 * self.decoder_flops_per_kernel;
+        let total_bytes = self.decoder_kernels_per_token as f64 * self.decoder_bytes_per_kernel;
+        let n = t.decode_launches;
+        (0..n)
+            .map(|_| t.decode.kernel(total_flops / n as f64, total_bytes / n as f64))
             .collect()
     }
 
     /// Encode a segment on the CPU backend.
     pub fn encode_cpu(&self) -> CpuWork {
+        let t = self.backend.whisper();
         CpuWork {
             flops: self.encoder_kernels as f64
                 * self.encoder_flops_per_kernel
-                * self.cpu_flops_factor,
+                * self.cpu_flops_factor
+                * t.cpu_flops_mult,
             bytes: self.weights_bytes as f64,
             threads: 24,
         }
@@ -377,10 +442,12 @@ impl WhisperProfile {
 
     /// Decode one token on the CPU backend.
     pub fn decode_token_cpu(&self) -> CpuWork {
+        let t = self.backend.whisper();
         CpuWork {
             flops: self.decoder_kernels_per_token as f64
                 * self.decoder_flops_per_kernel
                 * self.cpu_flops_factor
+                * t.cpu_flops_mult
                 * 5.0, // tiny-op dispatch overhead dominates on CPU
             bytes: 0.3e9,
             threads: 8,
@@ -499,5 +566,68 @@ mod tests {
         assert!(cpu_work.bytes > 5e9);
         let sd = sd35_medium_turbo().denoise_step_cpu();
         assert!(sd.flops > 1e13); // ~10s-scale on the Xeon
+    }
+
+    #[test]
+    fn backend_recuts_launch_counts_but_preserves_work() {
+        use crate::gpusim::backend::KernelBackend;
+        let total = |ks: &[crate::gpusim::kernel::KernelDesc]| -> (f64, f64) {
+            (ks.iter().map(|k| k.flops).sum(), ks.iter().map(|k| k.bytes).sum())
+        };
+        let tuned = llama_3_2_3b();
+        let (tf, _) = total(&tuned.decode_kernels(512));
+        for b in KernelBackend::ALL {
+            let m = llama_3_2_3b().with_backend(b);
+            let ks = m.decode_kernels(512);
+            assert_eq!(ks.len(), m.decode_launches(), "{b}");
+            let (f, _) = total(&ks);
+            // Same logical FLOPs per token regardless of how they're cut.
+            assert!((f - tf).abs() / tf < 1e-9, "{b}: flops {f} vs {tf}");
+        }
+        assert_eq!(tuned.decode_launches(), 30);
+        assert_eq!(llama_3_2_3b().with_backend(KernelBackend::GenericTorch).decode_launches(), 120);
+        // Whisper and diffusion recut too.
+        let w = whisper_large_v3_turbo().with_backend(KernelBackend::GenericTorch);
+        assert_eq!(w.decode_token_kernels().len(), 80);
+        assert_eq!(w.encode_kernels().len(), 32);
+        let sd = sd35_medium_turbo().with_backend(KernelBackend::GenericTorch);
+        assert_eq!(sd.denoise_step_kernels().len(), 48 * 3 + 72);
+        let fused = sd35_medium_turbo().with_backend(KernelBackend::FusedCustom);
+        assert_eq!(fused.denoise_step_kernels().len(), 48 + 72);
+    }
+
+    #[test]
+    fn no_attn_variant_is_the_matmul_prefix_of_decode() {
+        use crate::gpusim::backend::KernelBackend;
+        // The §4.2.1 `--no-kv-offload` variant must share the decode
+        // table's matmul launches exactly — the shape-drift the backend
+        // tables were introduced to prevent.
+        for b in KernelBackend::ALL {
+            let m = llama_3_2_3b().with_backend(b);
+            let full = m.decode_kernels(2048);
+            let no_attn = m.decode_kernels_no_attn();
+            assert_eq!(&full[..no_attn.len()], &no_attn[..], "{b}");
+            // The remainder is exactly the attention launches, which carry
+            // the KV traffic (scaled by the backend's intermediates factor).
+            let t = b.llama();
+            assert_eq!(full.len() - no_attn.len(), t.decode_attn_launches, "{b}");
+            let kv: f64 = full[no_attn.len()..].iter().map(|k| k.bytes).sum();
+            let expected = (m.kv_bytes_per_token * 2048) as f64 * t.attn_bytes_factor;
+            assert!((kv - expected).abs() / expected < 1e-9, "{b}: {kv} vs {expected}");
+        }
+    }
+
+    #[test]
+    fn cpu_multipliers_scale_with_backend() {
+        use crate::gpusim::backend::KernelBackend;
+        let tuned = llama_3_2_3b().decode_cpu(512);
+        let generic = llama_3_2_3b()
+            .with_backend(KernelBackend::GenericTorch)
+            .decode_cpu(512);
+        let fused = llama_3_2_3b()
+            .with_backend(KernelBackend::FusedCustom)
+            .decode_cpu(512);
+        assert!(generic.flops > tuned.flops && generic.bytes > tuned.bytes);
+        assert!(fused.flops < tuned.flops && fused.bytes < tuned.bytes);
     }
 }

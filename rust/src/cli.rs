@@ -5,8 +5,8 @@
 //! ```text
 //! consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--json FILE] [--no-pjrt]
 //! consumerbench validate <config.yaml>
-//! consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--out FILE] [--full]
-//!                        [--list] [--dump DIR]
+//! consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--backend KEY]
+//!                        [--out FILE] [--full] [--list] [--dump DIR]
 //! consumerbench apps
 //! consumerbench help
 //! ```
@@ -15,8 +15,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::apps::{Application, Chatbot, DeepResearch, ImageGen, LiveCaptions};
 use crate::coordinator::{generate, to_csv, to_json_summary, BenchConfig, Dag, ScenarioRunner};
+use crate::gpusim::backend::KernelBackend;
 use crate::runtime::Runtime;
-use crate::scenario::{run_specs_jobs, MatrixAxes, ScenarioSpec};
+use crate::scenario::{backend_key, run_specs_jobs, MatrixAxes, ScenarioSpec};
 
 const USAGE: &str = "\
 ConsumerBench — benchmarking generative AI applications on end-user devices
@@ -24,8 +25,8 @@ ConsumerBench — benchmarking generative AI applications on end-user devices
 USAGE:
     consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--json FILE] [--no-pjrt]
     consumerbench validate <config.yaml>
-    consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--out FILE] [--full]
-                           [--list] [--dump DIR]
+    consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--backend KEY]
+                           [--out FILE] [--full] [--list] [--dump DIR]
     consumerbench apps
     consumerbench help
 
@@ -33,9 +34,10 @@ COMMANDS:
     run        Execute a workflow configuration and print the benchmark report
     validate   Parse the configuration and check the workflow DAG
     scenario   Expand and execute the scenario matrix (app mix × policy ×
-               testbed × arrival process × server mode, plus generated
-               workflow DAG shapes with end-to-end latency and critical-path
-               attribution), emitting an aggregate JSON report
+               testbed × arrival process × server mode × kernel backend,
+               plus generated workflow DAG shapes with end-to-end latency
+               and critical-path attribution), emitting an aggregate JSON
+               report
     apps       List the built-in applications (paper Table 1)
 
 OPTIONS (run):
@@ -51,11 +53,15 @@ OPTIONS (scenario):
                       any N — scenarios are deterministic and independent
     --filter SUBSTR   Only expand scenarios whose name contains SUBSTR
                       (e.g. --filter server=adaptive, --filter mix=chat/,
-                      --filter workflow=content_creation or just workflow)
+                      --filter workflow=content_creation, --filter backend=)
+    --backend KEY     Only expand scenarios running the given kernel backend
+                      (tuned_native | generic_torch | fused_custom; every
+                      scenario outside the ablation slice runs tuned_native)
     --out FILE        Write the JSON report to FILE (default: print to stdout)
     --full            Sweep the full axes (periodic + trace arrivals, Apple
-                      Silicon testbed, every policy on the workflow shapes)
-                      instead of the default 52 scenarios
+                      Silicon testbed, every policy on the workflow shapes
+                      and the backend ablation) instead of the default 58
+                      scenarios
     --list            Print scenario names without running anything
     --dump DIR        Write each expanded scenario config as YAML into DIR
 ";
@@ -143,8 +149,10 @@ struct ScenarioOpts {
     /// Worker threads for the sweep; `None` = available parallelism.
     jobs: Option<usize>,
     /// Substring filter over scenario names (for iterating on a slice of
-    /// the 42/168-scenario matrix).
+    /// the 58/256-scenario matrix).
     filter: Option<String>,
+    /// Kernel-backend filter (`--backend KEY`); composes with `--filter`.
+    backend: Option<KernelBackend>,
     out: Option<String>,
     full: bool,
     list: bool,
@@ -187,6 +195,15 @@ fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
                 opts.filter = Some(f.clone());
                 i += 2;
             }
+            "--backend" => {
+                let b = args.get(i + 1).context("--backend requires a value")?;
+                opts.backend = Some(KernelBackend::parse(b).with_context(|| {
+                    format!(
+                        "--backend: unknown backend `{b}` (tuned_native | generic_torch | fused_custom)"
+                    )
+                })?);
+                i += 2;
+            }
             "--out" => {
                 opts.out = Some(args.get(i + 1).context("--out requires a value")?.clone());
                 i += 2;
@@ -220,6 +237,15 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
         specs.retain(|s| s.name.contains(filter.as_str()));
         if specs.is_empty() {
             bail!("--filter `{filter}` matches no scenario (try `scenario --list`)");
+        }
+    }
+    if let Some(backend) = opts.backend {
+        specs.retain(|s| s.backend == backend);
+        if specs.is_empty() {
+            bail!(
+                "--backend `{}` matches no scenario after filtering (try `scenario --list`)",
+                backend_key(backend)
+            );
         }
     }
     if opts.list {
@@ -408,7 +434,7 @@ mod tests {
     fn scenario_list_names_matrix() {
         let (r, out) = run(&["scenario", "--list"]);
         assert!(r.is_ok(), "{out}");
-        assert!(out.contains("52 scenarios"), "{out}");
+        assert!(out.contains("58 scenarios"), "{out}");
         assert!(out.contains("mix=chat/policy=greedy/arrival=closed/testbed=intel_server"));
         assert!(out.contains("policy=fair_share"));
         assert!(out.contains("arrival=poisson"));
@@ -416,6 +442,52 @@ mod tests {
         // The workflow axis: every shape, including the slo_aware slice.
         assert!(out.contains("workflow=pipeline/policy=greedy"), "{out}");
         assert!(out.contains("workflow=content_creation/policy=slo_aware"), "{out}");
+        // The backend-ablation slice: every kernel implementation.
+        assert!(out.contains("backend=tuned_native/mix=chat+imagegen"), "{out}");
+        assert!(out.contains("backend=generic_torch/mix=captions+imagegen"), "{out}");
+        assert!(out.contains("backend=fused_custom/"), "{out}");
+    }
+
+    #[test]
+    fn scenario_backend_flag_filters_the_slice() {
+        // `--backend generic_torch` keeps exactly the generic ablation
+        // scenarios (everything else runs tuned_native).
+        let (r, out) = run(&["scenario", "--list", "--backend", "generic_torch"]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("2 scenarios"), "{out}");
+        assert!(!out.contains("tuned_native"), "{out}");
+        assert!(!out.contains("mix=chat/"), "{out}");
+        // `--backend tuned_native` keeps the whole tuned matrix (flat +
+        // workflow + the tuned member of the ablation trio).
+        let (r, out) = run(&["scenario", "--list", "--backend", "tuned_native"]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("54 scenarios"), "{out}");
+        // Composes with --filter.
+        let (r, out) = run(&[
+            "scenario",
+            "--list",
+            "--filter",
+            "backend=",
+            "--backend",
+            "fused_custom",
+        ]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("2 scenarios"), "{out}");
+        // Unknown backend is rejected; a backend that filters to nothing is
+        // an error, not an empty sweep.
+        let (r, _) = run(&["scenario", "--list", "--backend", "npu"]);
+        assert!(r.is_err());
+        let (r, _) = run(&[
+            "scenario",
+            "--list",
+            "--filter",
+            "mix=chat/",
+            "--backend",
+            "generic_torch",
+        ]);
+        assert!(r.is_err(), "flat chat scenarios are all tuned");
+        let (r, _) = run(&["scenario", "--backend"]);
+        assert!(r.is_err(), "--backend without a value must be rejected");
     }
 
     #[test]
@@ -446,7 +518,9 @@ mod tests {
             "mix=captions+imagegen/policy=greedy/",
         ]);
         assert!(r.is_ok(), "{out}");
-        assert!(out.contains("2 scenarios"), "{out}");
+        // 2 flat (closed/poisson) + the 3 backend-ablation runs of the mix
+        // (their names embed the same mix/policy segment).
+        assert!(out.contains("5 scenarios"), "{out}");
 
         // A filter that matches nothing is an error, not an empty sweep.
         let (r, _) = run(&["scenario", "--list", "--filter", "mix=nonexistent"]);
@@ -480,7 +554,7 @@ mod tests {
         let (r, out) = run(&["scenario", "--dump", dir.to_str().unwrap()]);
         assert!(r.is_ok(), "{out}");
         let n = std::fs::read_dir(&dir).unwrap().count();
-        assert_eq!(n, 52, "expected 52 dumped configs");
+        assert_eq!(n, 58, "expected 58 dumped configs");
     }
 
     #[test]
@@ -505,7 +579,7 @@ mod tests {
             "{out}"
         );
         let json = std::fs::read_to_string(&json_path).unwrap();
-        assert!(json.contains("\"num_scenarios\": 52"));
+        assert!(json.contains("\"num_scenarios\": 58"));
         assert!(json.contains("\"arrival\": \"poisson\""));
         assert!(json.contains("\"mix\": \"full-stack\""));
         assert!(json.contains("\"server_mode\": \"adaptive\""));
@@ -516,6 +590,10 @@ mod tests {
         assert!(json.contains("\"critical_path\""));
         assert!(json.contains("\"e2e_latency_s\""));
         assert!(json.contains("\"workflows\": ["));
+        // The backend-ablation slice lands with its column and summary.
+        assert!(json.contains("\"backend\": \"generic_torch\""));
+        assert!(json.contains("\"backends\": ["));
+        assert!(json.contains("\"mean_throughput_rps\""));
     }
 
     #[test]

@@ -20,6 +20,7 @@ use std::collections::BTreeSet;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::controller::ControllerConfig;
+use crate::gpusim::backend::KernelBackend;
 use crate::gpusim::kernel::Device;
 use crate::server::KvPlacement;
 use crate::util::yaml::{self, Value};
@@ -102,6 +103,12 @@ pub struct TaskConfig {
     pub server: Option<String>,
     /// Arrival-process override (None → the application's built-in model).
     pub arrival: Option<ArrivalSpec>,
+    /// Kernel implementation serving this task's model (`backend:` key).
+    /// Configs that name none run `TunedNative` — the pre-backend-axis
+    /// behaviour, now explicit. Server-routed tasks execute their GPU work
+    /// under the *server's* backend; this field then only shapes the
+    /// task-local (non-server) jobs.
+    pub backend: KernelBackend,
 }
 
 /// One workflow DAG node.
@@ -124,6 +131,9 @@ pub struct ServerDef {
     /// Max tokens per unified batch (runtime-tunable, like `n_slots` and
     /// `kv_placement` — see `server::ServerTuning`).
     pub batch_size: usize,
+    /// Kernel implementation for the server's batched iterations
+    /// (`backend:` key; default `TunedNative` = llama.cpp).
+    pub backend: KernelBackend,
 }
 
 /// GPU sharing strategy (§3.2 resource orchestrator).
@@ -364,7 +374,24 @@ fn parse_task(name: &str, v: &Value) -> Result<TaskConfig> {
         mps,
         server: v.get("server").and_then(|s| s.as_str()).map(String::from),
         arrival: parse_arrival(name, v)?,
+        backend: parse_backend(name, v)?,
     })
+}
+
+/// Parse an optional `backend:` key (tasks and server definitions share the
+/// spelling). Absent → `TunedNative`, the semantics every pre-backend
+/// config implicitly had.
+fn parse_backend(owner: &str, v: &Value) -> Result<KernelBackend> {
+    match v.get("backend") {
+        None => Ok(KernelBackend::TunedNative),
+        Some(b) => {
+            let s = b
+                .as_str()
+                .with_context(|| format!("`{owner}`: backend must be a string"))?;
+            KernelBackend::parse(s)
+                .with_context(|| format!("`{owner}`: unknown backend `{s}` (tuned_native | generic_torch | fused_custom)"))
+        }
+    }
 }
 
 fn parse_arrival(task: &str, v: &Value) -> Result<Option<ArrivalSpec>> {
@@ -506,6 +533,7 @@ fn parse_servers(v: &Value) -> Result<Vec<ServerDef>> {
             kv_placement,
             n_slots,
             batch_size,
+            backend: parse_backend(name, body)?,
         });
     }
     Ok(servers)
@@ -917,6 +945,52 @@ servers:
                 "should reject {bad}"
             );
         }
+    }
+
+    #[test]
+    fn backend_key_parses_on_tasks_and_servers() {
+        // Default: absent key means the tuned (llama.cpp-native) backend —
+        // the semantics every pre-backend config implicitly had.
+        let cfg = BenchConfig::parse("A (chatbot):\n  num_requests: 1\n").unwrap();
+        assert_eq!(cfg.tasks[0].backend, KernelBackend::TunedNative);
+
+        let cfg = BenchConfig::parse(
+            "A (chatbot):\n  num_requests: 1\n  backend: generic_torch\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.tasks[0].backend, KernelBackend::GenericTorch);
+        // Alias spellings work.
+        let cfg =
+            BenchConfig::parse("A (imagegen):\n  num_requests: 1\n  backend: fused\n").unwrap();
+        assert_eq!(cfg.tasks[0].backend, KernelBackend::FusedCustom);
+
+        let text = "\
+A (chatbot):
+  num_requests: 1
+  server: s
+servers:
+  s:
+    model: Llama-3.2-3B
+    backend: generic_torch
+";
+        let cfg = BenchConfig::parse(text).unwrap();
+        assert_eq!(cfg.server("s").unwrap().backend, KernelBackend::GenericTorch);
+        let tuned = BenchConfig::parse(&text.replace("    backend: generic_torch\n", "")).unwrap();
+        assert_eq!(tuned.server("s").unwrap().backend, KernelBackend::TunedNative);
+
+        // Unknown or non-string backends are rejected.
+        for bad in [
+            "A (chatbot):\n  num_requests: 1\n  backend: npu\n",
+            "A (chatbot):\n  num_requests: 1\n  backend: 3\n",
+        ] {
+            let err = BenchConfig::parse(bad).unwrap_err();
+            assert!(err.to_string().contains("backend"), "{err}");
+        }
+        let err = BenchConfig::parse(
+            "A (chatbot):\n  num_requests: 1\n  server: s\nservers:\n  s:\n    backend: cuda9\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown backend"), "{err}");
     }
 
     #[test]

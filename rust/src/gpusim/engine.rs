@@ -1115,6 +1115,44 @@ mod tests {
     }
 
     #[test]
+    fn oversized_smem_kernel_fails_job_not_engine() {
+        // `KernelDesc::new` validates registers/threads but deliberately not
+        // `smem_per_block` against any profile — the fit check is the
+        // occupancy model's job. A kernel whose shared-memory footprint
+        // exceeds the SM must surface as a typed launch error on the
+        // JobResult, not a panic deep in the engine.
+        let mut e = engine();
+        let c = e.register_client("bad-backend");
+        let hog = KernelDesc::new("smem-hog", 64, 64, 32, 128 * 1024, 1e6, 1e3);
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "doesnt-fit".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![hog])],
+            },
+            0.0,
+        );
+        e.run_all();
+        let done = e.take_completed();
+        assert_eq!(done.len(), 1);
+        let err = done[0].error.as_deref().expect("job must fail, not hang");
+        assert!(err.contains("shared memory"), "{err}");
+        // The engine stays consistent and can keep serving other clients.
+        e.check_invariants();
+        let ok = e.register_client("good");
+        e.submit(
+            JobSpec {
+                client: ok,
+                label: "fits".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 72, 1e6)])],
+            },
+            e.now(),
+        );
+        e.run_all();
+        assert!(e.take_completed()[0].error.is_none());
+    }
+
+    #[test]
     fn oom_fails_job_with_error() {
         let mut e = engine();
         let c = e.register_client("big-model");

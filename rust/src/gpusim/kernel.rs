@@ -19,11 +19,78 @@ pub enum Device {
     Cpu,
 }
 
+/// Interned kernel tag.
+///
+/// Kernel names used to be bare `&'static str`, which meant every tag had
+/// to be a compile-time literal; the pluggable kernel backends
+/// ([`crate::gpusim::backend`]) synthesize names like `decode.attn@torch`
+/// at table-construction time, so tags are now interned: [`Tag::intern`]
+/// deduplicates through a global pool (each distinct name is leaked exactly
+/// once) and the hot path stays a `Copy` of a `&'static str`. Equality is
+/// by content, so two tags with the same text compare equal regardless of
+/// how they were created — interning is an allocation strategy, not an
+/// identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Tag(&'static str);
+
+impl Tag {
+    /// Wrap a compile-time literal (no pool access; content equality makes
+    /// this indistinguishable from the interned path).
+    pub const fn from_static(s: &'static str) -> Tag {
+        Tag(s)
+    }
+
+    /// Intern a runtime-synthesized name. Repeated calls with the same text
+    /// return the same leaked allocation, so the pool growth is bounded by
+    /// the number of distinct tags (a few dozen across all backends).
+    pub fn intern(s: &str) -> Tag {
+        use std::collections::BTreeSet;
+        use std::sync::{Mutex, OnceLock};
+        static POOL: OnceLock<Mutex<BTreeSet<&'static str>>> = OnceLock::new();
+        let pool = POOL.get_or_init(|| Mutex::new(BTreeSet::new()));
+        let mut pool = pool.lock().expect("tag pool poisoned");
+        if let Some(&hit) = pool.get(s) {
+            return Tag(hit);
+        }
+        let leaked: &'static str = Box::leak(s.to_owned().into_boxed_str());
+        pool.insert(leaked);
+        Tag(leaked)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        self.0
+    }
+}
+
+impl From<&'static str> for Tag {
+    fn from(s: &'static str) -> Tag {
+        Tag(s)
+    }
+}
+
+impl<'a> PartialEq<&'a str> for Tag {
+    fn eq(&self, other: &&'a str) -> bool {
+        self.0 == *other
+    }
+}
+
+impl PartialEq<str> for Tag {
+    fn eq(&self, other: &str) -> bool {
+        self.0 == other
+    }
+}
+
+impl std::fmt::Display for Tag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
 /// Descriptor for one GPU kernel launch.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelDesc {
     /// Human-readable tag, e.g. "decode.attn" — used in per-request traces.
-    pub tag: &'static str,
+    pub tag: Tag,
     /// Number of thread blocks in the grid.
     pub blocks: usize,
     /// Threads per block.
@@ -40,9 +107,16 @@ pub struct KernelDesc {
 
 impl KernelDesc {
     /// Convenience constructor with footprint validation.
+    ///
+    /// Only profile-independent footprints are asserted here (block count,
+    /// thread range, register encoding range). Whether the kernel *fits* a
+    /// particular GPU — registers per block, shared memory per block,
+    /// threads per SM — depends on the profile and is surfaced as a typed
+    /// [`LaunchError`] by [`occupancy`] at launch time, never as a panic
+    /// deep in the engine.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
-        tag: &'static str,
+        tag: impl Into<Tag>,
         blocks: usize,
         threads_per_block: usize,
         regs_per_thread: usize,
@@ -50,6 +124,7 @@ impl KernelDesc {
         flops: f64,
         bytes: f64,
     ) -> Self {
+        let tag = tag.into();
         assert!(blocks > 0, "{tag}: kernel must have at least one block");
         assert!(
             (1..=1024).contains(&threads_per_block),
@@ -108,12 +183,19 @@ impl std::fmt::Display for Limiter {
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 pub enum LaunchError {
     #[error("kernel `{0}` needs {1} registers/block, SM has {2}")]
-    TooManyRegisters(&'static str, usize, usize),
+    TooManyRegisters(Tag, usize, usize),
     #[error("kernel `{0}` needs {1} B shared memory/block, SM has {2}")]
-    TooMuchSharedMemory(&'static str, usize, usize),
+    TooMuchSharedMemory(Tag, usize, usize),
+    #[error("kernel `{0}` needs {1} threads/block, SM runs at most {2}")]
+    TooManyThreads(Tag, usize, usize),
 }
 
 /// Compute CUDA-style occupancy of `k` on `gpu`.
+///
+/// Every kernel-doesn't-fit condition — register file, shared memory, or a
+/// block wider than the SM's thread capacity — is a typed [`LaunchError`]
+/// here, which the engine turns into a failed job (never a panic or a
+/// division by a zero block limit).
 pub fn occupancy(k: &KernelDesc, gpu: &GpuProfile) -> Result<Occupancy, LaunchError> {
     let regs_per_block = k.regs_per_thread * k.threads_per_block;
     if regs_per_block > gpu.regs_per_sm {
@@ -121,6 +203,15 @@ pub fn occupancy(k: &KernelDesc, gpu: &GpuProfile) -> Result<Occupancy, LaunchEr
     }
     if k.smem_per_block > gpu.smem_per_sm {
         return Err(LaunchError::TooMuchSharedMemory(k.tag, k.smem_per_block, gpu.smem_per_sm));
+    }
+    if k.threads_per_block > gpu.max_threads_per_sm {
+        // Without this check `limit_threads` would truncate to zero and the
+        // grid math below (and `sms_wanted`'s div_ceil) would divide by it.
+        return Err(LaunchError::TooManyThreads(
+            k.tag,
+            k.threads_per_block,
+            gpu.max_threads_per_sm,
+        ));
     }
 
     let limit_regs = gpu.regs_per_sm / regs_per_block;
@@ -306,5 +397,101 @@ mod tests {
         // One block resident → 8 warps of 32 → low SMOCC even though the
         // limiter would allow more.
         assert_eq!(occ.warps_per_sm, 8);
+    }
+
+    // ------------------------------------------------------------------
+    // Occupancy-model boundaries: one test per limiter, pinned explicitly.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn register_file_bound_kernel() {
+        let gpu = rtx6000();
+        // 128 regs × 256 threads = 32768 regs/block → 2 blocks by registers;
+        // threads would allow 4, smem ∞, slots 16.
+        let k = KernelDesc::new("regbound", 1000, 256, 128, 0, 1e9, 1e6);
+        let occ = occupancy(&k, &gpu).unwrap();
+        assert_eq!(occ.limiter, Limiter::Registers);
+        assert_eq!(occ.blocks_per_sm, 2);
+        assert!((occ.occupancy - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smem_bound_kernel() {
+        let gpu = rtx6000();
+        // 24 KiB smem → 2 blocks by shared memory; registers would allow 8,
+        // threads 8, slots 16.
+        let k = KernelDesc::new("smembound", 1000, 128, 32, 24 * 1024, 1e9, 1e6);
+        let occ = occupancy(&k, &gpu).unwrap();
+        assert_eq!(occ.limiter, Limiter::SharedMemory);
+        assert_eq!(occ.blocks_per_sm, 2);
+    }
+
+    #[test]
+    fn block_slot_bound_kernel() {
+        let gpu = rtx6000();
+        // Tiny blocks: registers allow 128, threads 32, smem ∞ — the
+        // hardware block-slot limit (16) binds first.
+        let k = KernelDesc::new("slotbound", 1000, 32, 16, 0, 1e9, 1e6);
+        let occ = occupancy(&k, &gpu).unwrap();
+        assert_eq!(occ.limiter, Limiter::BlockSlots);
+        assert_eq!(occ.blocks_per_sm, gpu.max_blocks_per_sm);
+        // 16 blocks × 1 warp = 16 of 32 warp slots.
+        assert!((occ.occupancy - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occ_saturation_curve_flat_above_knee_proportional_below() {
+        let gpu = rtx6000(); // occ_saturation = 0.40
+        let time_at = |k: &KernelDesc| duration(k, &gpu, gpu.num_sms).unwrap();
+        // Compute-bound so the saturation term dominates; launch overhead is
+        // ~5 µs against ~60 ms of compute.
+        let occ100 = KernelDesc::new("sat100", 10_000, 256, 64, 0, 1e12, 1.0);
+        let occ75 = KernelDesc::new("sat75", 10_000, 256, 80, 0, 1e12, 1.0);
+        let occ25 = KernelDesc::new("sat25", 10_000, 256, 168, 0, 1e12, 1.0);
+        assert!((occupancy(&occ100, &gpu).unwrap().occupancy - 1.0).abs() < 1e-12);
+        assert!((occupancy(&occ25, &gpu).unwrap().occupancy - 0.25).abs() < 1e-12);
+        // Above the knee latency hiding is complete: 100% and 75% occupancy
+        // run at identical speed.
+        assert!((time_at(&occ100) - time_at(&occ75)).abs() < 1e-12);
+        // Below the knee throughput degrades by occ / occ_saturation:
+        // 0.25 / 0.40 → 1.6× slower.
+        let ratio = time_at(&occ25) / time_at(&occ100);
+        assert!((ratio - 1.6).abs() < 0.01, "ratio {ratio}");
+        // Far below the knee (1 block of 2 warps per SM = 0.0625) the
+        // degradation stays proportional: 0.0625 / 0.40 = 6.4×.
+        let occ6 = KernelDesc::new("sat6", 10_000, 64, 64, 64 * 1024, 1e12, 1.0);
+        assert!((occupancy(&occ6, &gpu).unwrap().occupancy - 0.0625).abs() < 1e-12);
+        let deep = time_at(&occ6) / time_at(&occ100);
+        assert!((deep - 6.4).abs() < 0.05, "deep ratio {deep}");
+    }
+
+    #[test]
+    fn oversized_threads_are_a_typed_launch_error() {
+        // A profile whose SM runs fewer threads than one block asks for
+        // must yield `TooManyThreads`, not a zero block limit (which would
+        // panic in `sms_wanted`'s div_ceil).
+        let mut gpu = rtx6000();
+        gpu.max_threads_per_sm = 512;
+        let k = KernelDesc::new("wide", 16, 1024, 32, 0, 1e6, 1e3);
+        assert!(matches!(
+            occupancy(&k, &gpu),
+            Err(LaunchError::TooManyThreads(..))
+        ));
+        assert!(sms_wanted(&k, &gpu).is_err());
+        assert!(duration(&k, &gpu, gpu.num_sms).is_err());
+    }
+
+    #[test]
+    fn tags_intern_by_content() {
+        let a = Tag::intern("synth.decode@torch");
+        let b = Tag::intern(&format!("synth.decode@{}", "torch"));
+        assert_eq!(a, b);
+        // Interned and static tags with the same text are equal, and the
+        // interned pointer is stable (content-keyed pool).
+        assert_eq!(a, Tag::from_static("synth.decode@torch"));
+        assert!(std::ptr::eq(a.as_str(), b.as_str()));
+        assert_eq!(a, "synth.decode@torch");
+        assert_ne!(a, Tag::intern("synth.decode@tuned"));
+        assert_eq!(format!("{a}"), "synth.decode@torch");
     }
 }

@@ -11,12 +11,14 @@
 //! Layout:
 //! * [`profiles`] — calibrated architectural constants per device.
 //! * [`kernel`]   — kernel descriptors + CUDA-style occupancy model.
+//! * [`backend`]  — pluggable kernel implementations (launch-shape tables).
 //! * [`policy`]   — greedy / partition / fair-share SM arbitration.
 //! * [`engine`]   — the event-driven executor.
 //! * [`trace`]    — columnar monitor-trace storage + canonical encoding.
 //! * [`vram`]     — capacity-enforcing device-memory allocator.
 //! * [`power`]    — board/package power models.
 
+pub mod backend;
 pub mod engine;
 pub mod kernel;
 pub mod policy;
@@ -25,8 +27,9 @@ pub mod profiles;
 pub mod trace;
 pub mod vram;
 
+pub use backend::KernelBackend;
 pub use engine::{ClientId, CpuWork, Engine, JobId, JobResult, JobSpec, MemOp, Phase};
 pub use trace::{Trace, TraceRow, TraceSample, TraceView};
-pub use kernel::{Device, KernelDesc};
+pub use kernel::{Device, KernelDesc, Tag};
 pub use policy::Policy;
 pub use profiles::Testbed;

@@ -16,6 +16,13 @@
 //!   under the adaptive feedback controller (`adaptive`, the §5.2 loop
 //!   made live). Mixes without a text app carry no server and only appear
 //!   as `static`.
+//! * **Kernel backend** — which kernel implementation serves every model
+//!   (`tuned_native` llama.cpp-class shapes, `generic_torch` eager
+//!   PyTorch, `fused_custom` idealized hand-tuned). Swept as a curated
+//!   ablation slice reproducing the paper's §6 tuned-vs-generic claim:
+//!   backend scenarios run their apps *directly* (no shared server) so the
+//!   comparison isolates the kernel implementation, exactly like the
+//!   paper's runtime-vs-runtime measurements.
 //!
 //! [`MatrixAxes::expand`] enumerates the cross-product in a fixed order and
 //! renders each point as a YAML workflow configuration understood by
@@ -24,8 +31,12 @@
 //! writes them out).
 
 use crate::coordinator::config::{AppType, Strategy, TestbedKind};
+use crate::gpusim::backend::KernelBackend;
 use crate::gpusim::kernel::Device;
 use crate::util::rng::Rng;
+
+// `backend_key` lives next to the other axis-key helpers it is used with.
+pub use crate::gpusim::backend::backend_key;
 
 /// One application instance inside a mix.
 #[derive(Debug, Clone)]
@@ -374,18 +385,36 @@ pub struct MatrixAxes {
     /// the flat cross-product, while the full matrix takes the whole
     /// cross-product.
     pub workflow_strategies: Vec<Strategy>,
+    /// Kernel backends swept by the ablation slice (the §6 tuned-vs-generic
+    /// comparison). Empty → no backend scenarios. Like the workflow slice,
+    /// the default matrix keeps this curated (greedy only) while the full
+    /// matrix crosses it with `backend_strategies` × `testbeds`.
+    pub backends: Vec<KernelBackend>,
+    /// Strategies the backend-ablation slice crosses with.
+    pub backend_strategies: Vec<Strategy>,
     pub seed: u64,
+}
+
+/// The curated app mixes of the backend-ablation slice: `chat+imagegen`
+/// covers the llama + diffusion families under contention, and
+/// `captions+imagegen` covers the whisper + diffusion starvation pair.
+/// Both run their apps directly (no shared server) so the tuned-vs-generic
+/// comparison measures kernel implementations, not the serving layer.
+fn backend_ablation_mixes() -> Vec<AppMix> {
+    vec![AppMix::chat_imagegen(), AppMix::captions_imagegen()]
 }
 
 impl MatrixAxes {
     /// The default matrix: 4 mixes × 3 policies × {closed, poisson} ×
     /// {static, adaptive} on the Intel testbed — 42 flat scenarios (the
     /// adaptive mode only applies to the 3 mixes with text apps) — plus a
-    /// curated workflow slice: 4 DAG shapes × {greedy, slo_aware} ×
-    /// {static, adaptive where a server exists} = 10 workflow scenarios,
-    /// 52 total. Covers every policy, every Table 1 application, open-loop
-    /// heavy traffic, the serving ablation, and the paper's end-to-end
-    /// workflow comparison.
+    /// curated workflow slice (4 DAG shapes × {greedy, slo_aware} ×
+    /// {static, adaptive where a server exists} = 10 scenarios) plus the
+    /// curated backend-ablation slice (3 kernel backends × 2 mixes ×
+    /// greedy = 6 scenarios): 58 total. Covers every policy, every Table 1
+    /// application, open-loop heavy traffic, the serving ablation, the
+    /// end-to-end workflow comparison, and the §6 tuned-vs-generic kernel
+    /// ablation.
     pub fn default_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             mixes: vec![
@@ -405,14 +434,18 @@ impl MatrixAxes {
                 WorkflowShape::ContentCreation,
             ],
             workflow_strategies: vec![Strategy::Greedy, Strategy::SloAware],
+            backends: KernelBackend::ALL.to_vec(),
+            backend_strategies: vec![Strategy::Greedy],
             seed,
         }
     }
 
     /// The full sweep: adds periodic + trace-replay arrivals and the Apple
-    /// Silicon testbed to the flat part (96 static + 72 adaptive), and
-    /// crosses the workflow shapes with every strategy and testbed
-    /// (32 static + 8 adaptive) — 208 scenarios.
+    /// Silicon testbed to the flat part (96 static + 72 adaptive), crosses
+    /// the workflow shapes with every strategy and testbed (32 static + 8
+    /// adaptive), and takes the backend slice to its full cross-product
+    /// (3 backends × 2 mixes × 4 strategies × 2 testbeds = 48) —
+    /// 256 scenarios.
     pub fn full_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             testbeds: vec![TestbedKind::IntelServer, TestbedKind::MacbookM1Pro],
@@ -428,19 +461,28 @@ impl MatrixAxes {
                 Strategy::FairShare,
                 Strategy::SloAware,
             ],
+            backend_strategies: vec![
+                Strategy::Greedy,
+                Strategy::Partition,
+                Strategy::FairShare,
+                Strategy::SloAware,
+            ],
             ..Self::default_matrix(seed)
         }
     }
 
     /// Enumerate the cross-product in a fixed order: first the flat
     /// (mix, strategy, arrival, testbed, server-mode) scenarios, then the
-    /// workflow (shape, strategy, testbed, server-mode) slice. The order is
-    /// part of the report format: re-running with the same seed must
+    /// workflow (shape, strategy, testbed, server-mode) slice, then the
+    /// backend-ablation (backend, mix, strategy, testbed) slice. The order
+    /// is part of the report format: re-running with the same seed must
     /// reproduce the report byte-for-byte. The adaptive server mode is
     /// skipped where there is no server to adapt (flat mixes with no text
     /// app; workflow shapes without a shared server). Workflow stages keep
     /// their applications' built-in client models, so the arrival axis does
-    /// not cross the workflow slice.
+    /// not cross the workflow slice; backend scenarios run closed-loop and
+    /// static for the same reason — the ablation isolates the kernel
+    /// implementation.
     pub fn expand(&self) -> Vec<ScenarioSpec> {
         let mut specs = Vec::new();
         for mix in &self.mixes {
@@ -466,6 +508,8 @@ impl MatrixAxes {
                                 testbed,
                                 arrival,
                                 server_mode,
+                                backend: KernelBackend::TunedNative,
+                                backend_ablation: false,
                                 seed: self.seed,
                             });
                         }
@@ -497,6 +541,34 @@ impl MatrixAxes {
                             testbed,
                             arrival: ArrivalKind::Closed,
                             server_mode,
+                            backend: KernelBackend::TunedNative,
+                            backend_ablation: false,
+                            seed: self.seed,
+                        });
+                    }
+                }
+            }
+        }
+        for &backend in &self.backends {
+            for mix in backend_ablation_mixes() {
+                for &strategy in &self.backend_strategies {
+                    for &testbed in &self.testbeds {
+                        specs.push(ScenarioSpec {
+                            name: format!(
+                                "backend={}/mix={}/policy={}/testbed={}",
+                                backend_key(backend),
+                                mix.name,
+                                strategy_key(strategy),
+                                testbed_key(testbed)
+                            ),
+                            mix: mix.clone(),
+                            workflow: WorkflowShape::Flat,
+                            strategy,
+                            testbed,
+                            arrival: ArrivalKind::Closed,
+                            server_mode: ServerMode::Static,
+                            backend,
+                            backend_ablation: true,
                             seed: self.seed,
                         });
                     }
@@ -518,6 +590,14 @@ pub struct ScenarioSpec {
     pub testbed: TestbedKind,
     pub arrival: ArrivalKind,
     pub server_mode: ServerMode,
+    /// Kernel implementation serving every task (`TunedNative` everywhere
+    /// except the backend-ablation slice).
+    pub backend: KernelBackend,
+    /// Whether this scenario belongs to the backend-ablation slice: tasks
+    /// then carry an explicit `backend:` key and run *directly* (no shared
+    /// server), so the tuned/generic/fused trio differs in exactly one
+    /// thing — the kernel implementation.
+    pub backend_ablation: bool,
     pub seed: u64,
 }
 
@@ -596,12 +676,14 @@ impl ScenarioSpec {
     /// serving configuration may change at runtime. Workflow-shaped
     /// scenarios additionally emit the `workflows:` DAG (with `depend_on`
     /// edges and `background:` flags), per-node `slo:` bounds, and the
-    /// shape's end-to-end `workflow_slo:`.
+    /// shape's end-to-end `workflow_slo:`. Backend-ablation scenarios
+    /// instead emit an explicit `backend:` key on every task and skip the
+    /// shared server (the ablation isolates kernel implementations).
     pub fn to_yaml(&self) -> String {
         if self.workflow != WorkflowShape::Flat {
             return self.workflow_yaml();
         }
-        let shared_server = self.mix.has_text_app();
+        let shared_server = self.mix.has_text_app() && !self.backend_ablation;
         let mut out = String::new();
         out.push_str(&format!("# scenario: {}\n", self.name));
         for (i, e) in self.mix.entries.iter().enumerate() {
@@ -615,6 +697,11 @@ impl ScenarioSpec {
                     Device::Cpu => "cpu",
                 }
             ));
+            if self.backend_ablation || self.backend != KernelBackend::TunedNative {
+                // Always explicit in the ablation slice (dumped configs are
+                // self-describing, including the tuned run of the trio).
+                out.push_str(&format!("  backend: {}\n", backend_key(self.backend)));
+            }
             if shared_server && matches!(e.app, AppType::Chatbot | AppType::DeepResearch) {
                 out.push_str("  server: llama\n");
             }
@@ -762,8 +849,8 @@ mod tests {
         let specs = axes.expand();
         assert_eq!(
             specs.len(),
-            52,
-            "24 static + 18 adaptive flat + 10 workflow scenarios"
+            58,
+            "24 static + 18 adaptive flat + 10 workflow + 6 backend-ablation scenarios"
         );
         let strategies: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| strategy_key(s.strategy)).collect();
@@ -793,6 +880,28 @@ mod tests {
                 );
             }
         }
+        // The backend-ablation slice: every backend, both curated mixes.
+        let backends: std::collections::BTreeSet<&str> = specs
+            .iter()
+            .filter(|s| s.backend_ablation)
+            .map(|s| backend_key(s.backend))
+            .collect();
+        assert_eq!(
+            backends.into_iter().collect::<Vec<_>>(),
+            vec!["fused_custom", "generic_torch", "tuned_native"]
+        );
+        for backend in ["tuned_native", "generic_torch"] {
+            for mix in ["chat+imagegen", "captions+imagegen"] {
+                assert!(
+                    specs
+                        .iter()
+                        .any(|s| s.name == format!(
+                            "backend={backend}/mix={mix}/policy=greedy/testbed=intel_server"
+                        )),
+                    "missing backend={backend}/mix={mix}"
+                );
+            }
+        }
         // Names are unique (they key the report).
         let names: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| s.name.as_str()).collect();
@@ -804,8 +913,8 @@ mod tests {
         let specs = MatrixAxes::full_matrix(1).expand();
         assert_eq!(
             specs.len(),
-            96 + 72 + 32 + 8,
-            "flat 96 static + 72 adaptive, workflow 32 static + 8 adaptive"
+            96 + 72 + 32 + 8 + 48,
+            "flat 96 static + 72 adaptive, workflow 32 static + 8 adaptive, 48 backend-ablation"
         );
         for spec in &specs {
             let yaml = spec.to_yaml();
@@ -823,8 +932,12 @@ mod tests {
                     assert!(!yaml.contains("controller:"), "{}", spec.name);
                     // Flat text mixes still share the server — the static/
                     // adaptive pair differs only in the controller. Workflow
-                    // shapes only share one when the shape declares it.
-                    let expect_server = if flat {
+                    // shapes only share one when the shape declares it, and
+                    // the backend-ablation slice never does (it isolates the
+                    // kernel implementation from the serving layer).
+                    let expect_server = if spec.backend_ablation {
+                        false
+                    } else if flat {
                         spec.mix.has_text_app()
                     } else {
                         spec.workflow.has_server()
@@ -838,6 +951,48 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn backend_ablation_trio_differs_only_in_the_backend_key() {
+        let specs = MatrixAxes::default_matrix(9).expand();
+        let slice: Vec<&ScenarioSpec> = specs.iter().filter(|s| s.backend_ablation).collect();
+        assert_eq!(slice.len(), 6, "3 backends × 2 curated mixes");
+        for spec in &slice {
+            let yaml = spec.to_yaml();
+            // Every task names its backend explicitly — dumped configs are
+            // self-describing, including the tuned member of the trio.
+            assert_eq!(
+                yaml.matches("  backend: ").count(),
+                spec.mix.entries.len(),
+                "{}:\n{yaml}",
+                spec.name
+            );
+            assert!(
+                yaml.contains(&format!("backend: {}", backend_key(spec.backend))),
+                "{}",
+                spec.name
+            );
+            assert!(!yaml.contains("server: llama"), "{}: ablation runs direct", spec.name);
+            assert_eq!(spec.server_mode, ServerMode::Static);
+            assert_eq!(spec.arrival, ArrivalKind::Closed);
+        }
+        // Same-mix members differ from each other only in the backend line.
+        let trio: Vec<&&ScenarioSpec> = slice
+            .iter()
+            .filter(|s| s.mix.name == "chat+imagegen")
+            .collect();
+        assert_eq!(trio.len(), 3);
+        let strip = |s: &ScenarioSpec| -> Vec<String> {
+            s.to_yaml()
+                .lines()
+                .skip(1) // name comment
+                .filter(|l| !l.starts_with("  backend: "))
+                .map(String::from)
+                .collect()
+        };
+        assert_eq!(strip(trio[0]), strip(trio[1]));
+        assert_eq!(strip(trio[1]), strip(trio[2]));
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //! mix × scheduling policy × device profile × arrival process × server
 //! mode, plus a workflow axis of generated DAG shapes (pipeline, fanout,
 //! diamond, and the paper's content-creation graph) reported with
-//! end-to-end latency and critical-path attribution — and executes the
-//! expanded cross-product through the regular coordinator pipeline on the
-//! deterministic simulator:
+//! end-to-end latency and critical-path attribution, plus a kernel-backend
+//! axis (tuned_native / generic_torch / fused_custom — the §6
+//! tuned-vs-generic ablation) — and executes the expanded cross-product
+//! through the regular coordinator pipeline on the deterministic
+//! simulator:
 //!
 //! ```text
 //! MatrixAxes ──expand──▶ [ScenarioSpec] ──to_yaml──▶ BenchConfig
@@ -31,10 +33,10 @@ pub mod matrix;
 pub mod runner;
 
 pub use matrix::{
-    server_mode_key, strategy_key, testbed_key, workflow_key, AppMix, ArrivalKind, MatrixAxes,
-    MixEntry, ScenarioSpec, ServerMode, WorkflowShape,
+    backend_key, server_mode_key, strategy_key, testbed_key, workflow_key, AppMix, ArrivalKind,
+    MatrixAxes, MixEntry, ScenarioSpec, ServerMode, WorkflowShape,
 };
 pub use runner::{
-    run_matrix, run_matrix_jobs, run_scenario, run_specs_jobs, AppOutcome, MatrixReport,
-    ScenarioOutcome, WorkflowRow,
+    run_matrix, run_matrix_jobs, run_scenario, run_specs_jobs, AppOutcome, BackendRow,
+    MatrixReport, ScenarioOutcome, WorkflowRow,
 };

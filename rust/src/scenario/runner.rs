@@ -29,7 +29,8 @@ use crate::apps::Slo;
 use crate::coordinator::{run_config_text, ScenarioResult};
 use crate::gpusim::engine::trace_digest;
 use crate::scenario::matrix::{
-    server_mode_key, strategy_key, testbed_key, workflow_key, MatrixAxes, ScenarioSpec,
+    backend_key, server_mode_key, strategy_key, testbed_key, workflow_key, MatrixAxes,
+    ScenarioSpec,
 };
 use crate::util::json::{json_num, json_opt_bool, json_opt_num, json_str};
 use crate::util::stats::Summary;
@@ -64,6 +65,12 @@ pub struct ScenarioOutcome {
     /// generated DAG shape (`pipeline`, `fanout`, `diamond`,
     /// `content_creation`).
     pub workflow: String,
+    /// Kernel-backend axis: `tuned_native` | `generic_torch` |
+    /// `fused_custom` (everything outside the ablation slice runs tuned).
+    pub backend: String,
+    /// Whether the scenario belongs to the backend-ablation slice (the
+    /// population `summary.backends` aggregates over).
+    pub backend_ablation: bool,
     pub seed: u64,
     pub makespan: f64,
     /// End-to-end workflow latency (latest foreground-node completion).
@@ -236,6 +243,8 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
         testbed: testbed_key(spec.testbed).to_string(),
         server_mode: server_mode_key(spec.server_mode).to_string(),
         workflow: workflow_key(spec.workflow).to_string(),
+        backend: backend_key(spec.backend).to_string(),
+        backend_ablation: spec.backend_ablation,
         seed: spec.seed,
         makespan: result.makespan,
         e2e_latency: result.workflow.e2e_latency,
@@ -262,6 +271,22 @@ pub struct AdaptiveDelta {
     pub delta: f64,
     /// Reconfigurations the adaptive run applied.
     pub reconfigurations: usize,
+}
+
+/// Aggregate of one kernel backend over the ablation slice — the
+/// `summary.backends` comparison of request throughput and SLO attainment
+/// per kernel implementation (the §6 tuned-vs-generic claim as a report
+/// section).
+#[derive(Debug, Clone)]
+pub struct BackendRow {
+    /// Backend key (`tuned_native`, `generic_torch`, `fused_custom`).
+    pub backend: String,
+    /// Ablation scenarios aggregated into this row.
+    pub scenarios: usize,
+    /// Mean of per-scenario completed-requests / makespan (requests/s).
+    pub mean_throughput_rps: f64,
+    /// Mean per-scenario min attainment across SLO-bearing apps.
+    pub mean_min_attainment: f64,
 }
 
 /// Aggregate of one (workflow shape, strategy) cell — the `summary.workflows`
@@ -329,6 +354,44 @@ impl MatrixReport {
             .collect()
     }
 
+    /// Per-backend throughput/attainment aggregates over the
+    /// backend-ablation slice, in first-seen (canonical) order. Empty when
+    /// the matrix carries no ablation scenarios. Restricted to the slice —
+    /// the rest of the matrix runs tuned by construction and would swamp
+    /// the comparison.
+    pub fn backend_rows(&self) -> Vec<BackendRow> {
+        let mut keys: Vec<&str> = Vec::new();
+        for s in &self.scenarios {
+            if s.backend_ablation && !keys.contains(&s.backend.as_str()) {
+                keys.push(&s.backend);
+            }
+        }
+        keys.into_iter()
+            .map(|key| {
+                let rows: Vec<&ScenarioOutcome> = self
+                    .scenarios
+                    .iter()
+                    .filter(|s| s.backend_ablation && s.backend == key)
+                    .collect();
+                let n = rows.len().max(1) as f64;
+                let throughput = |r: &ScenarioOutcome| -> f64 {
+                    let requests: usize = r.apps.iter().map(|a| a.requests).sum();
+                    if r.makespan > 0.0 {
+                        requests as f64 / r.makespan
+                    } else {
+                        0.0
+                    }
+                };
+                BackendRow {
+                    backend: key.to_string(),
+                    scenarios: rows.len(),
+                    mean_throughput_rps: rows.iter().map(|r| throughput(r)).sum::<f64>() / n,
+                    mean_min_attainment: rows.iter().map(|r| r.min_attainment).sum::<f64>() / n,
+                }
+            })
+            .collect()
+    }
+
     /// Pair every adaptive scenario with its static twin (same axes, only
     /// the server mode differs), in canonical order.
     pub fn adaptive_deltas(&self) -> Vec<AdaptiveDelta> {
@@ -382,6 +445,10 @@ impl MatrixReport {
             out.push_str(&format!(
                 "      \"workflow\": {},\n",
                 json_str(&s.workflow)
+            ));
+            out.push_str(&format!(
+                "      \"backend\": {},\n",
+                json_str(&s.backend)
             ));
             out.push_str(&format!(
                 "      \"reconfigurations\": {},\n",
@@ -493,6 +560,19 @@ impl MatrixReport {
             out.push_str(if i + 1 < wf_rows.len() { ",\n" } else { "\n" });
         }
         out.push_str("    ],\n");
+        out.push_str("    \"backends\": [\n");
+        let b_rows = self.backend_rows();
+        for (i, b) in b_rows.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"backend\": {}, \"scenarios\": {}, \"mean_throughput_rps\": {}, \"mean_min_attainment\": {}}}",
+                json_str(&b.backend),
+                b.scenarios,
+                json_num(b.mean_throughput_rps),
+                json_num(b.mean_min_attainment),
+            ));
+            out.push_str(if i + 1 < b_rows.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("    ],\n");
         out.push_str("    \"adaptive_vs_static\": [\n");
         let deltas = self.adaptive_deltas();
         for (i, d) in deltas.iter().enumerate() {
@@ -557,6 +637,8 @@ mod tests {
             server_modes: vec![ServerMode::Static, ServerMode::Adaptive],
             workflows: vec![],
             workflow_strategies: vec![],
+            backends: vec![],
+            backend_strategies: vec![],
             seed,
         }
     }
@@ -665,6 +747,69 @@ mod tests {
         assert!(json.contains("\"critical_path\": \"script -> storyboard -> captions\""));
         assert!(json.contains("\"e2e_latency_s\""));
         assert!(json.contains("\"workflows\": ["));
+    }
+
+    #[test]
+    fn backend_rows_aggregate_only_the_ablation_slice() {
+        // Synthetic outcomes: two ablation scenarios per backend plus one
+        // flat (tuned, non-ablation) scenario that must stay out of the
+        // aggregate.
+        let outcome = |name: &str, backend: &str, ablation: bool, makespan: f64, att: f64| {
+            ScenarioOutcome {
+                name: name.into(),
+                mix: "chat+imagegen".into(),
+                strategy: "greedy".into(),
+                arrival: "closed".into(),
+                testbed: "intel_server".into(),
+                server_mode: "static".into(),
+                workflow: "flat".into(),
+                backend: backend.into(),
+                backend_ablation: ablation,
+                seed: 1,
+                makespan,
+                e2e_latency: makespan,
+                e2e_slo_met: None,
+                critical_path: String::new(),
+                trace_digest: 0,
+                min_attainment: att,
+                max_attainment: att,
+                fairness_spread: 0.0,
+                reconfigurations: 0,
+                apps: vec![AppOutcome {
+                    node: "Chat (chatbot)".into(),
+                    app: "Chatbot".into(),
+                    requests: 10,
+                    has_slo: true,
+                    attainment: Some(att),
+                    mean_normalized: 0.5,
+                    p50_latency: 1.0,
+                    p99_latency: 2.0,
+                    failed: None,
+                }],
+            }
+        };
+        let report = MatrixReport {
+            seed: 1,
+            scenarios: vec![
+                outcome("mix=chat+imagegen/...", "tuned_native", false, 10.0, 0.5),
+                outcome("backend=tuned_native/a", "tuned_native", true, 10.0, 1.0),
+                outcome("backend=tuned_native/b", "tuned_native", true, 20.0, 0.8),
+                outcome("backend=generic_torch/a", "generic_torch", true, 40.0, 0.4),
+            ],
+        };
+        let rows = report.backend_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].backend, "tuned_native");
+        assert_eq!(rows[0].scenarios, 2, "the flat scenario must not count");
+        // mean of 10/10 and 10/20 rps.
+        assert!((rows[0].mean_throughput_rps - 0.75).abs() < 1e-12);
+        assert!((rows[0].mean_min_attainment - 0.9).abs() < 1e-12);
+        assert_eq!(rows[1].backend, "generic_torch");
+        assert!((rows[1].mean_throughput_rps - 0.25).abs() < 1e-12);
+        let json = report.to_json();
+        assert!(json.contains("\"backends\": ["), "{json}");
+        assert!(json.contains("\"mean_throughput_rps\""), "{json}");
+        assert!(json.contains("\"backend\": \"generic_torch\""), "{json}");
     }
 
     #[test]

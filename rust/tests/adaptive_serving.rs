@@ -124,6 +124,7 @@ fn adaptive_axes(seed: u64) -> MatrixAxes {
     axes.strategies.truncate(2);
     axes.arrivals.truncate(1);
     axes.workflows.clear();
+    axes.backends.clear();
     axes
 }
 

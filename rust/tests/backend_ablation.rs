@@ -1,0 +1,217 @@
+//! Golden tests for the kernel-backend axis (PR 5 tentpole acceptance).
+//!
+//! Pins the paper's §6 claim as executable assertions on the RTX 6000
+//! profile:
+//!
+//! 1. **Decode throughput**: the tuned (llama.cpp-class) backend strictly
+//!    beats generic PyTorch eager execution at every context length, and
+//!    the idealized fused backend is at least as fast as tuned.
+//! 2. **Chat SLO attainment under contention**: with a device-filling
+//!    diffusion stream resident (the §4.2 greedy regime), tuned chat keeps
+//!    full TPOT attainment while the generic backend's 4× launch count
+//!    pushes every contended token past the 250 ms bound — tuned strictly
+//!    beats generic.
+//! 3. **Determinism**: the backend-ablation matrix slice renders
+//!    byte-identical JSON across `--jobs 1` / `--jobs 4` and repeated runs,
+//!    and diverges for a different seed.
+
+use consumerbench::apps::models::llama_3_2_3b;
+use consumerbench::apps::{slo_attainment, AppContext, Application, Chatbot, RequestMetrics};
+use consumerbench::gpusim::backend::KernelBackend;
+use consumerbench::gpusim::engine::{Engine, JobSpec, Phase};
+use consumerbench::gpusim::kernel::{duration, Device, KernelDesc};
+use consumerbench::gpusim::policy::Policy;
+use consumerbench::gpusim::profiles::{rtx6000, Testbed};
+use consumerbench::scenario::{run_specs_jobs, MatrixAxes, ScenarioSpec};
+
+/// Exclusive-GPU seconds to decode one token at the given context.
+fn decode_token_seconds(backend: KernelBackend, context: usize) -> f64 {
+    let gpu = rtx6000();
+    llama_3_2_3b()
+        .with_backend(backend)
+        .decode_kernels(context)
+        .iter()
+        .map(|k| duration(k, &gpu, gpu.num_sms).unwrap())
+        .sum()
+}
+
+#[test]
+fn tuned_strictly_beats_generic_decode_throughput() {
+    for context in [512, 4096, 32_768] {
+        let tuned = decode_token_seconds(KernelBackend::TunedNative, context);
+        let generic = decode_token_seconds(KernelBackend::GenericTorch, context);
+        assert!(
+            tuned < generic,
+            "ctx {context}: tuned {tuned} must beat generic {generic}"
+        );
+        // tokens/s, the §6 framing. The gap widens with context (the
+        // generic backend's materialized attention intermediates scale
+        // with the KV it reads).
+        let speedup = generic / tuned;
+        assert!(speedup > 1.05, "ctx {context}: speedup {speedup}");
+    }
+    let short = decode_token_seconds(KernelBackend::GenericTorch, 512)
+        / decode_token_seconds(KernelBackend::TunedNative, 512);
+    let long = decode_token_seconds(KernelBackend::GenericTorch, 32_768)
+        / decode_token_seconds(KernelBackend::TunedNative, 32_768);
+    assert!(long > short, "generic must degrade with context: {short} vs {long}");
+    // The idealized hand-fused backend is at least as fast as llama.cpp.
+    for context in [512, 4096] {
+        assert!(
+            decode_token_seconds(KernelBackend::FusedCustom, context)
+                <= decode_token_seconds(KernelBackend::TunedNative, context),
+            "ctx {context}: fused must not lose to tuned"
+        );
+    }
+}
+
+/// Drive a Chatbot closed-loop on an engine whose GPU is saturated by a
+/// device-filling diffusion-style stream (168 regs/thread, grid spans the
+/// device — the §4.2 greedy-contention regime), and evaluate every request
+/// against the chat SLO.
+fn contended_chat_metrics(backend: KernelBackend) -> Vec<RequestMetrics> {
+    let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+    let chat_client = e.register_client("chatbot");
+    let hog_client = e.register_client("render");
+    // ~100 s of back-to-back denoise-class kernels (~3.4 ms each at full
+    // device): long enough to cover the whole tuned run.
+    let hog = KernelDesc::new("denoise.attn", 2048, 256, 168, 16 * 1024, 3.5e10, 64e6);
+    e.submit(
+        JobSpec {
+            client: hog_client,
+            label: "render".into(),
+            phases: vec![Phase::gpu("denoise", 0.0, vec![hog; 30_000])],
+        },
+        0.0,
+    );
+    let ctx = AppContext {
+        client: chat_client,
+        device: Device::Gpu,
+    };
+    let app = Chatbot::new(1, 3).with_backend(backend);
+    e.submit(app.setup_job(&ctx), 0.0);
+    let mut metrics = Vec::new();
+    let mut next_submit = 2.0; // after the model load
+    for i in 0..app.num_requests() {
+        e.submit(app.request_job(&ctx, i), next_submit.max(e.now()));
+        let label = format!("chatbot.req{}", app.requests()[i].id);
+        'wait: loop {
+            let t = e
+                .next_event_time()
+                .expect("request must complete before the event heap drains");
+            e.run_until(t);
+            for r in e.take_completed() {
+                if r.label == label {
+                    metrics.push(app.evaluate(&r));
+                    break 'wait;
+                }
+            }
+        }
+        next_submit = e.now() + 0.1;
+    }
+    metrics
+}
+
+#[test]
+fn tuned_strictly_beats_generic_chat_attainment_under_contention() {
+    let tuned = contended_chat_metrics(KernelBackend::TunedNative);
+    let generic = contended_chat_metrics(KernelBackend::GenericTorch);
+    let att = |m: &[RequestMetrics]| slo_attainment(m).expect("requests ran");
+
+    // llama.cpp-class kernels keep every contended token inside the 250 ms
+    // TPOT bound (one ~3.4 ms queue wait per launch × 30 launches) …
+    assert!(
+        (att(&tuned) - 1.0).abs() < 1e-12,
+        "tuned must keep full attainment: {:?}",
+        tuned.iter().map(|m| m.normalized).collect::<Vec<_>>()
+    );
+    // … while the generic backend's 120 launches/token blow it: strictly
+    // worse attainment, the §6 claim.
+    assert!(
+        att(&generic) < att(&tuned),
+        "generic {} must lose to tuned {}",
+        att(&generic),
+        att(&tuned)
+    );
+    // The first request runs fully inside the contention window under both
+    // backends (later requests may outlive it — the generic run takes 4×
+    // longer): there the gap is a strict per-request fact, with the
+    // generic TPOT past the SLO bound outright.
+    assert!(
+        generic[0].normalized > tuned[0].normalized,
+        "generic normalized {} vs tuned {}",
+        generic[0].normalized,
+        tuned[0].normalized
+    );
+    assert!(!generic[0].slo_met, "contended generic chat must miss TPOT");
+    assert!(tuned[0].slo_met);
+}
+
+/// The backend-ablation slice of the default matrix (6 scenarios:
+/// 3 backends × {chat+imagegen, captions+imagegen}).
+fn backend_slice(seed: u64) -> Vec<ScenarioSpec> {
+    let mut specs = MatrixAxes::default_matrix(seed).expand();
+    specs.retain(|s| s.name.starts_with("backend="));
+    assert_eq!(specs.len(), 6);
+    specs
+}
+
+#[test]
+fn backend_slice_byte_identical_across_jobs_and_repeats() {
+    let j1 = run_specs_jobs(&backend_slice(42), 42, 1).unwrap().to_json();
+    let j4 = run_specs_jobs(&backend_slice(42), 42, 4).unwrap().to_json();
+    assert_eq!(
+        j1, j4,
+        "backend-ablation JSON (incl. summary.backends) must be identical across jobs"
+    );
+    let again = run_specs_jobs(&backend_slice(42), 42, 4).unwrap().to_json();
+    assert_eq!(j1, again, "same seed must reproduce exactly");
+    // The backend column and summary rows are part of the pinned bytes.
+    assert!(j1.contains("\"backend\": \"tuned_native\""), "{j1}");
+    assert!(j1.contains("\"backend\": \"generic_torch\""));
+    assert!(j1.contains("\"backend\": \"fused_custom\""));
+    assert!(j1.contains("\"backends\": ["));
+    assert!(j1.contains("\"mean_throughput_rps\""));
+    // Seed divergence holds on the slice too.
+    let other = run_specs_jobs(&backend_slice(43), 43, 4).unwrap().to_json();
+    assert_ne!(j1, other);
+}
+
+#[test]
+fn matrix_slice_reports_the_ablation_per_backend() {
+    let report = run_specs_jobs(&backend_slice(42), 42, 4).unwrap();
+    // One summary row per backend, each over both curated mixes.
+    let rows = report.backend_rows();
+    assert_eq!(rows.len(), 3);
+    for r in &rows {
+        assert_eq!(r.scenarios, 2, "{}", r.backend);
+        assert!(r.mean_throughput_rps > 0.0, "{}", r.backend);
+        assert!((0.0..=1.0).contains(&r.mean_min_attainment), "{}", r.backend);
+    }
+    let row = |key: &str| rows.iter().find(|r| r.backend == key).unwrap();
+    // Same request counts everywhere, longer makespans under generic →
+    // scenario-level throughput cannot favor the generic backend.
+    assert!(
+        row("tuned_native").mean_throughput_rps >= row("generic_torch").mean_throughput_rps,
+        "tuned {} vs generic {}",
+        row("tuned_native").mean_throughput_rps,
+        row("generic_torch").mean_throughput_rps
+    );
+    // Scenario-level chat attainment under contention: tuned at least
+    // matches generic in the same mix (the strict engine-level comparison
+    // lives above, free of scheduler noise).
+    let chat_att = |backend: &str| {
+        report
+            .scenarios
+            .iter()
+            .find(|s| s.backend == backend && s.mix == "chat+imagegen")
+            .unwrap()
+            .apps
+            .iter()
+            .find(|a| a.app == "Chatbot")
+            .unwrap()
+            .attainment
+            .expect("chat requests ran")
+    };
+    assert!(chat_att("tuned_native") >= chat_att("generic_torch"));
+}

@@ -6,11 +6,12 @@
 //! trace digest inside it) is **byte-identical** across `--jobs 1`,
 //! `--jobs 4`, and repeated runs with the same seed — and diverges for a
 //! different seed. The workflow axis gets its own identity checks (its
-//! critical-path and e2e columns are part of the report bytes). The last
-//! test pins the acceptance path end-to-end through the CLI on the full
-//! 208-scenario sweep (96 static + 72 adaptive flat, 32 static + 8
-//! adaptive workflow — reconfiguration events are part of the pinned
-//! digests).
+//! critical-path and e2e columns are part of the report bytes); the
+//! backend-ablation slice has its own suite in `tests/backend_ablation.rs`.
+//! The last test pins the acceptance path end-to-end through the CLI on
+//! the full 256-scenario sweep (96 static + 72 adaptive flat, 32 static +
+//! 8 adaptive workflow, 48 backend-ablation — reconfiguration events are
+//! part of the pinned digests).
 
 use consumerbench::cli::run_cli;
 use consumerbench::scenario::{run_matrix_jobs, run_specs_jobs, MatrixAxes};
@@ -23,6 +24,7 @@ fn small_axes(seed: u64) -> MatrixAxes {
     let mut axes = MatrixAxes::default_matrix(seed);
     axes.mixes.truncate(2);
     axes.workflows.clear();
+    axes.backends.clear();
     axes
 }
 
@@ -131,11 +133,13 @@ fn cli_full_sweep_byte_identical_across_jobs() {
     );
     let text = String::from_utf8(reports[0].clone()).unwrap();
     assert!(
-        text.contains("\"num_scenarios\": 208"),
-        "full sweep is 168 flat + 40 workflow scenarios"
+        text.contains("\"num_scenarios\": 256"),
+        "full sweep is 168 flat + 40 workflow + 48 backend-ablation scenarios"
     );
     assert!(text.contains("\"testbed\": \"macbook_m1_pro\""));
     assert!(text.contains("\"server_mode\": \"adaptive\""));
     assert!(text.contains("\"workflow\": \"diamond\""));
     assert!(text.contains("workflow=content_creation/policy=partition"));
+    assert!(text.contains("backend=generic_torch/mix=chat+imagegen/policy=slo_aware"));
+    assert!(text.contains("\"backends\": ["));
 }
