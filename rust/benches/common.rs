@@ -27,6 +27,8 @@ pub fn monitor(result: &ScenarioResult) -> MonitorReport {
         &result.trace,
         &result.client_names,
         consumerbench::monitor::DEFAULT_INTERVAL,
+        result.gpu_idle_w,
+        result.cpu_idle_w,
     )
 }
 

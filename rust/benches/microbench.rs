@@ -209,7 +209,8 @@ fn main() {
     if fast {
         axes.mixes.truncate(1); // static + adaptive chat only …
         axes.workflows.clear(); // … no workflow slice …
-        axes.backends.clear(); // … no backend-ablation slice: 12 scenarios, not 58
+        axes.backends.clear(); // … no backend-ablation slice …
+        axes.chaos.clear(); // … no chaos slice: 12 scenarios, not 68
     }
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())

@@ -6,7 +6,7 @@
 //! consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--json FILE] [--no-pjrt]
 //! consumerbench validate <config.yaml>
 //! consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--backend KEY]
-//!                        [--out FILE] [--full] [--list] [--dump DIR]
+//!                        [--chaos KEY] [--out FILE] [--full] [--list] [--dump DIR]
 //! consumerbench apps
 //! consumerbench help
 //! ```
@@ -16,8 +16,9 @@ use anyhow::{bail, Context, Result};
 use crate::apps::{Application, Chatbot, DeepResearch, ImageGen, LiveCaptions};
 use crate::coordinator::{generate, to_csv, to_json_summary, BenchConfig, Dag, ScenarioRunner};
 use crate::gpusim::backend::KernelBackend;
+use crate::gpusim::chaos::ChaosKind;
 use crate::runtime::Runtime;
-use crate::scenario::{backend_key, run_specs_jobs, MatrixAxes, ScenarioSpec};
+use crate::scenario::{backend_key, chaos_key, run_specs_jobs, MatrixAxes, ScenarioSpec};
 
 const USAGE: &str = "\
 ConsumerBench — benchmarking generative AI applications on end-user devices
@@ -26,7 +27,7 @@ USAGE:
     consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--json FILE] [--no-pjrt]
     consumerbench validate <config.yaml>
     consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--backend KEY]
-                           [--out FILE] [--full] [--list] [--dump DIR]
+                           [--chaos KEY] [--out FILE] [--full] [--list] [--dump DIR]
     consumerbench apps
     consumerbench help
 
@@ -34,10 +35,10 @@ COMMANDS:
     run        Execute a workflow configuration and print the benchmark report
     validate   Parse the configuration and check the workflow DAG
     scenario   Expand and execute the scenario matrix (app mix × policy ×
-               testbed × arrival process × server mode × kernel backend,
-               plus generated workflow DAG shapes with end-to-end latency
-               and critical-path attribution), emitting an aggregate JSON
-               report
+               testbed × arrival process × server mode × kernel backend ×
+               chaos fault class, plus generated workflow DAG shapes with
+               end-to-end latency and critical-path attribution), emitting
+               an aggregate JSON report
     apps       List the built-in applications (paper Table 1)
 
 OPTIONS (run):
@@ -57,10 +58,13 @@ OPTIONS (scenario):
     --backend KEY     Only expand scenarios running the given kernel backend
                       (tuned_native | generic_torch | fused_custom; every
                       scenario outside the ablation slice runs tuned_native)
+    --chaos KEY       Only expand scenarios injecting the given fault class
+                      (thermal_throttle | vram_ballast | suspend |
+                      server_crash | pcie_degrade)
     --out FILE        Write the JSON report to FILE (default: print to stdout)
     --full            Sweep the full axes (periodic + trace arrivals, Apple
                       Silicon testbed, every policy on the workflow shapes
-                      and the backend ablation) instead of the default 58
+                      and the backend ablation) instead of the default 68
                       scenarios
     --list            Print scenario names without running anything
     --dump DIR        Write each expanded scenario config as YAML into DIR
@@ -149,10 +153,12 @@ struct ScenarioOpts {
     /// Worker threads for the sweep; `None` = available parallelism.
     jobs: Option<usize>,
     /// Substring filter over scenario names (for iterating on a slice of
-    /// the 58/256-scenario matrix).
+    /// the 68/276-scenario matrix).
     filter: Option<String>,
     /// Kernel-backend filter (`--backend KEY`); composes with `--filter`.
     backend: Option<KernelBackend>,
+    /// Chaos fault-class filter (`--chaos KEY`); composes with the others.
+    chaos: Option<ChaosKind>,
     out: Option<String>,
     full: bool,
     list: bool,
@@ -204,6 +210,15 @@ fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
                 })?);
                 i += 2;
             }
+            "--chaos" => {
+                let c = args.get(i + 1).context("--chaos requires a value")?;
+                opts.chaos = Some(ChaosKind::parse(c).with_context(|| {
+                    format!(
+                        "--chaos: unknown fault class `{c}` (thermal_throttle | vram_ballast | suspend | server_crash | pcie_degrade)"
+                    )
+                })?);
+                i += 2;
+            }
             "--out" => {
                 opts.out = Some(args.get(i + 1).context("--out requires a value")?.clone());
                 i += 2;
@@ -245,6 +260,15 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
             bail!(
                 "--backend `{}` matches no scenario after filtering (try `scenario --list`)",
                 backend_key(backend)
+            );
+        }
+    }
+    if let Some(kind) = opts.chaos {
+        specs.retain(|s| s.chaos == Some(kind));
+        if specs.is_empty() {
+            bail!(
+                "--chaos `{}` matches no scenario after filtering (try `scenario --list`)",
+                chaos_key(kind)
             );
         }
     }
@@ -434,7 +458,7 @@ mod tests {
     fn scenario_list_names_matrix() {
         let (r, out) = run(&["scenario", "--list"]);
         assert!(r.is_ok(), "{out}");
-        assert!(out.contains("58 scenarios"), "{out}");
+        assert!(out.contains("68 scenarios"), "{out}");
         assert!(out.contains("mix=chat/policy=greedy/arrival=closed/testbed=intel_server"));
         assert!(out.contains("policy=fair_share"));
         assert!(out.contains("arrival=poisson"));
@@ -446,6 +470,46 @@ mod tests {
         assert!(out.contains("backend=tuned_native/mix=chat+imagegen"), "{out}");
         assert!(out.contains("backend=generic_torch/mix=captions+imagegen"), "{out}");
         assert!(out.contains("backend=fused_custom/"), "{out}");
+        // The chaos slice: every fault class, in static/adaptive pairs.
+        assert!(out.contains("chaos=thermal_throttle/mix=chat+imagegen/policy=slo_aware"), "{out}");
+        assert!(out.contains("chaos=server_crash/"), "{out}");
+        assert!(out.contains("chaos=pcie_degrade/"), "{out}");
+    }
+
+    #[test]
+    fn scenario_chaos_flag_filters_the_slice() {
+        // `--chaos thermal_throttle` keeps exactly its static/adaptive pair.
+        let (r, out) = run(&["scenario", "--list", "--chaos", "thermal_throttle"]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("2 scenarios"), "{out}");
+        assert!(!out.contains("chaos=server_crash"), "{out}");
+        assert!(!out.contains("mix=chat/"), "{out}");
+        // Composes with --filter.
+        let (r, out) = run(&[
+            "scenario",
+            "--list",
+            "--filter",
+            "server=adaptive",
+            "--chaos",
+            "suspend",
+        ]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("1 scenarios"), "{out}");
+        // Unknown fault class is rejected; a chaos filter that matches
+        // nothing is an error, not an empty sweep.
+        let (r, _) = run(&["scenario", "--list", "--chaos", "gamma_rays"]);
+        assert!(r.is_err());
+        let (r, _) = run(&[
+            "scenario",
+            "--list",
+            "--filter",
+            "mix=chat/",
+            "--chaos",
+            "suspend",
+        ]);
+        assert!(r.is_err(), "flat chat scenarios are fault-free");
+        let (r, _) = run(&["scenario", "--chaos"]);
+        assert!(r.is_err(), "--chaos without a value must be rejected");
     }
 
     #[test]
@@ -461,7 +525,7 @@ mod tests {
         // workflow + the tuned member of the ablation trio).
         let (r, out) = run(&["scenario", "--list", "--backend", "tuned_native"]);
         assert!(r.is_ok(), "{out}");
-        assert!(out.contains("54 scenarios"), "{out}");
+        assert!(out.contains("64 scenarios"), "{out}");
         // Composes with --filter.
         let (r, out) = run(&[
             "scenario",
@@ -506,8 +570,8 @@ mod tests {
         let (r, out) = run(&["scenario", "--list", "--filter", "server=adaptive"]);
         assert!(r.is_ok(), "{out}");
         assert!(
-            out.contains("20 scenarios"),
-            "18 flat + 2 content_creation: {out}"
+            out.contains("25 scenarios"),
+            "18 flat + 2 content_creation + 5 chaos: {out}"
         );
         assert!(!out.contains("server=static"), "{out}");
 
@@ -554,7 +618,7 @@ mod tests {
         let (r, out) = run(&["scenario", "--dump", dir.to_str().unwrap()]);
         assert!(r.is_ok(), "{out}");
         let n = std::fs::read_dir(&dir).unwrap().count();
-        assert_eq!(n, 58, "expected 58 dumped configs");
+        assert_eq!(n, 68, "expected 68 dumped configs");
     }
 
     #[test]
@@ -579,7 +643,7 @@ mod tests {
             "{out}"
         );
         let json = std::fs::read_to_string(&json_path).unwrap();
-        assert!(json.contains("\"num_scenarios\": 58"));
+        assert!(json.contains("\"num_scenarios\": 68"));
         assert!(json.contains("\"arrival\": \"poisson\""));
         assert!(json.contains("\"mix\": \"full-stack\""));
         assert!(json.contains("\"server_mode\": \"adaptive\""));
@@ -594,6 +658,9 @@ mod tests {
         assert!(json.contains("\"backend\": \"generic_torch\""));
         assert!(json.contains("\"backends\": ["));
         assert!(json.contains("\"mean_throughput_rps\""));
+        // The chaos slice lands with its column and summary section.
+        assert!(json.contains("\"chaos\": \"server_crash\""));
+        assert!(json.contains("\"chaos\": ["));
     }
 
     #[test]

@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::controller::ControllerConfig;
 use crate::gpusim::backend::KernelBackend;
+use crate::gpusim::chaos::{ChaosConfig, ChaosKind};
 use crate::gpusim::kernel::Device;
 use crate::server::KvPlacement;
 use crate::util::yaml::{self, Value};
@@ -182,6 +183,9 @@ pub struct BenchConfig {
     /// the latest completion of any foreground workflow node, evaluated
     /// alongside the per-node `slo:` bounds. `None` = no workflow-level SLO.
     pub workflow_slo: Option<f64>,
+    /// Deterministic fault injection (`chaos:` block). `None` = no faults,
+    /// the pre-chaos behaviour of every existing config.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl BenchConfig {
@@ -196,6 +200,7 @@ impl BenchConfig {
         let mut seed = 42u64;
         let mut controller = None;
         let mut workflow_slo = None;
+        let mut chaos = None;
 
         for key in root.keys() {
             let value = root.get(key).unwrap();
@@ -203,6 +208,7 @@ impl BenchConfig {
                 "workflows" => workflow = parse_workflows(value)?,
                 "servers" => servers = parse_servers(value)?,
                 "controller" => controller = parse_controller(value)?,
+                "chaos" => chaos = parse_chaos(value)?,
                 "workflow_slo" => {
                     let bound = parse_duration_value("workflow_slo", value)?;
                     if bound <= 0.0 {
@@ -254,6 +260,7 @@ impl BenchConfig {
             seed,
             controller,
             workflow_slo,
+            chaos,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -620,6 +627,68 @@ fn parse_controller(v: &Value) -> Result<Option<ControllerConfig>> {
     Ok(Some(cfg))
 }
 
+/// Parse the `chaos:` block into a deterministic fault-injection config.
+/// `kind:` is required; every other key overrides the kind's
+/// [`ChaosConfig::curated`] default. `enabled: false` turns the block off
+/// without deleting it:
+///
+/// ```yaml
+/// chaos:
+///   kind: thermal_throttle  # vram_ballast | suspend | server_crash | pcie_degrade
+///   start: 1s               # nominal first episode
+///   period: 6s              # nominal spacing
+///   count: 4                # episodes
+///   duration: 5s            # window length (windowed kinds)
+///   intensity: 0.35         # clock cap / VRAM fraction / DMA scale
+///   jitter: 0.25            # uniform start jitter, fraction of period
+/// ```
+fn parse_chaos(v: &Value) -> Result<Option<ChaosConfig>> {
+    if v.as_map().is_none() {
+        bail!("`chaos` must be a mapping");
+    }
+    if let Some(e) = v.get("enabled") {
+        let enabled = e.as_bool().context("chaos: enabled must be a boolean")?;
+        if !enabled {
+            return Ok(None);
+        }
+    }
+    let kind = v
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .context("chaos: `kind` is required and must be a string")?;
+    let kind = ChaosKind::parse(kind).with_context(|| {
+        format!(
+            "chaos: unknown kind `{kind}` (thermal_throttle | vram_ballast | suspend | \
+             server_crash | pcie_degrade)"
+        )
+    })?;
+    let mut cfg = ChaosConfig::curated(kind);
+    if let Some(s) = v.get("start") {
+        cfg.start = parse_duration_value("chaos", s)?;
+    }
+    if let Some(p) = v.get("period") {
+        cfg.period = parse_duration_value("chaos", p)?;
+    }
+    if let Some(d) = v.get("duration") {
+        cfg.duration = parse_duration_value("chaos", d)?;
+    }
+    if let Some(n) = v.get("count") {
+        let n = n.as_i64().context("chaos: count must be an integer")?;
+        if n < 1 {
+            bail!("chaos: count must be >= 1");
+        }
+        cfg.count = n as usize;
+    }
+    if let Some(i) = v.get("intensity") {
+        cfg.intensity = i.as_f64().context("chaos: intensity must be numeric")?;
+    }
+    if let Some(j) = v.get("jitter") {
+        cfg.jitter = j.as_f64().context("chaos: jitter must be numeric")?;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!("chaos: {e}"))?;
+    Ok(Some(cfg))
+}
+
 fn parse_slo(task: &str, v: &Value) -> Result<SloSpec> {
     match v {
         Value::Seq(items) if items.len() == 2 => {
@@ -897,6 +966,66 @@ workflows:
             // A zero step would wedge the escalation ladder on no-op
             // reserve updates.
             "controller:\n  reserve_step: 0\n",
+        ] {
+            let text = format!("{base}{bad}");
+            assert!(BenchConfig::parse(&text).is_err(), "should reject:\n{text}");
+        }
+    }
+
+    #[test]
+    fn chaos_block_parses_with_defaults_and_overrides() {
+        let base = "A (chatbot):\n  num_requests: 1\n";
+        let cfg = BenchConfig::parse(base).unwrap();
+        assert!(cfg.chaos.is_none(), "no block => no faults");
+
+        let cfg =
+            BenchConfig::parse(&format!("{base}chaos:\n  kind: thermal_throttle\n")).unwrap();
+        let c = cfg.chaos.expect("chaos enabled");
+        assert_eq!(c.kind, ChaosKind::ThermalThrottle);
+        assert_eq!(c, ChaosConfig::curated(ChaosKind::ThermalThrottle));
+
+        let text = format!(
+            "{base}chaos:\n  kind: pcie_degrade\n  start: 500ms\n  period: 3s\n  count: 2\n  \
+             duration: 1s\n  intensity: 0.5\n  jitter: 0.1\n"
+        );
+        let c = BenchConfig::parse(&text).unwrap().chaos.unwrap();
+        assert_eq!(c.kind, ChaosKind::PcieDegrade);
+        assert_eq!(c.start, 0.5);
+        assert_eq!(c.period, 3.0);
+        assert_eq!(c.count, 2);
+        assert_eq!(c.duration, 1.0);
+        assert_eq!(c.intensity, 0.5);
+        assert_eq!(c.jitter, 0.1);
+
+        let cfg = BenchConfig::parse(&format!(
+            "{base}chaos:\n  enabled: false\n  kind: server_crash\n"
+        ))
+        .unwrap();
+        assert!(cfg.chaos.is_none(), "enabled: false => no faults");
+
+        // The generated YAML round-trips through the parser.
+        for kind in ChaosKind::ALL {
+            let block = ChaosConfig::curated(kind).to_yaml();
+            let cfg = BenchConfig::parse(&format!("{base}{block}")).unwrap();
+            assert_eq!(cfg.chaos, Some(ChaosConfig::curated(kind)), "{block}");
+        }
+    }
+
+    #[test]
+    fn chaos_block_validated() {
+        let base = "A (chatbot):\n  num_requests: 1\n";
+        for bad in [
+            "chaos: thermal_throttle\n",                       // not a mapping
+            "chaos:\n  start: 1\n",                            // kind missing
+            "chaos:\n  kind: gamma_rays\n",                    // unknown kind
+            "chaos:\n  kind: suspend\n  count: 0\n",           // no episodes
+            "chaos:\n  kind: suspend\n  period: 0\n",          // zero spacing
+            "chaos:\n  kind: suspend\n  jitter: 1.0\n",        // jitter out of range
+            "chaos:\n  kind: suspend\n  duration: 0\n",        // windowed needs > 0
+            "chaos:\n  kind: suspend\n  duration: 10\n",       // window >= period
+            "chaos:\n  kind: thermal_throttle\n  intensity: 0\n",
+            "chaos:\n  kind: thermal_throttle\n  intensity: 1.5\n",
+            "chaos:\n  enabled: 0\n  kind: suspend\n",         // malformed enabled
         ] {
             let text = format!("{base}{bad}");
             assert!(BenchConfig::parse(&text).is_err(), "should reject:\n{text}");

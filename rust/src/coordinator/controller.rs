@@ -160,6 +160,17 @@ impl Controller {
         &self.log
     }
 
+    /// A fault transition landed (chaos injection). The regime just
+    /// changed underneath the controller, so whatever it believed about
+    /// the recent past is stale: drop the action cooldown and the healthy
+    /// streak so the next epoch can react immediately instead of waiting
+    /// out a gate earned under the old regime.
+    pub fn observe_fault(&mut self, now: f64) {
+        self.cooldown = 0;
+        self.healthy_epochs = 0;
+        self.log.push((now, "observed-fault".into()));
+    }
+
     /// Tight-SLO attainment over the window ending at `now`, with the
     /// sample count. When fewer than `min_observations` completions fall
     /// inside the time window — the slow regime where a single contended

@@ -22,7 +22,8 @@ use crate::apps::models::{llama_3_1_8b, llama_3_2_3b};
 use crate::coordinator::config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
 use crate::coordinator::controller::{Controller, ControllerAction, Observation, ServerView};
 use crate::coordinator::dag::{Dag, NodeId};
-use crate::gpusim::engine::{Engine, JobId, JobResult, JobSpec, Phase, Trace};
+use crate::gpusim::chaos::{FaultAction, FaultEvent, FaultSchedule};
+use crate::gpusim::engine::{Engine, JobId, JobResult, JobSpec, MemOp, Phase, Trace};
 use crate::gpusim::kernel::Device;
 use crate::gpusim::policy::Policy;
 use crate::gpusim::profiles::Testbed;
@@ -42,6 +43,8 @@ enum JobKind {
     Timer(usize),
     /// Adaptive-serving controller epoch boundary (node id is unused).
     ControllerTick,
+    /// Fault transition `i` of the chaos schedule (node id is unused).
+    Chaos(usize),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -89,6 +92,14 @@ struct ServerRuntime {
 /// stops scheduling ticks (so a genuinely stalled workflow still trips the
 /// executor's deadlock detection instead of ticking forever).
 const CONTROLLER_MAX_IDLE_EPOCHS: u32 = 10_000;
+
+/// Runtime state of deterministic fault injection: the pre-generated
+/// schedule, plus the engine client its transition jobs (and ballast
+/// allocations) run under — faults are ordinary trace-visible events.
+struct ChaosRuntime {
+    client: crate::gpusim::engine::ClientId,
+    events: Vec<FaultEvent>,
+}
 
 /// Runtime state of the adaptive-serving feedback loop.
 struct ControllerRuntime {
@@ -315,6 +326,10 @@ pub struct ScenarioResult {
     /// (`"t=12.3 migrate-kv(…)"`); actions the executor's feasibility
     /// checks rejected carry a `skipped ` prefix.
     pub controller_actions: Vec<String>,
+    /// Idle-floor draws of the testbed the scenario ran on. The monitor
+    /// needs them to price grid points that precede the first trace sample.
+    pub gpu_idle_w: f64,
+    pub cpu_idle_w: f64,
 }
 
 impl ScenarioResult {
@@ -335,6 +350,7 @@ pub struct ScenarioRunner {
     nodes: Vec<NodeRuntime>,
     servers: Vec<ServerRuntime>,
     controller: Option<ControllerRuntime>,
+    chaos: Option<ChaosRuntime>,
     job_map: HashMap<JobId, (NodeId, JobKind)>,
     completed: BTreeSet<NodeId>,
     runtime: Option<Runtime>,
@@ -475,12 +491,20 @@ impl ScenarioRunner {
             reserve_updates: 0,
         });
 
+        // Deterministic fault injection (registered after the controller so
+        // fault-free runs keep their client numbering).
+        let chaos = cfg.chaos.as_ref().map(|spec| ChaosRuntime {
+            client: engine.register_client("chaos"),
+            events: FaultSchedule::generate(spec, cfg.seed).events,
+        });
+
         Ok(ScenarioRunner {
             engine,
             dag,
             nodes,
             servers,
             controller,
+            chaos,
             job_map: HashMap::new(),
             completed: BTreeSet::new(),
             runtime,
@@ -502,6 +526,10 @@ impl ScenarioRunner {
         if self.controller.is_some() {
             self.submit_tick(0.0);
         }
+        // The whole fault schedule is known up-front (seed-derived), so every
+        // transition is submitted now at its virtual-time deadline. Episodes
+        // scheduled past workflow completion simply never execute.
+        self.submit_chaos_jobs();
 
         // Main loop: advance virtual time event by event.
         let mut guard = 0u64;
@@ -542,6 +570,8 @@ impl ScenarioRunner {
         let client_names: Vec<String> = (0..self.engine.num_clients())
             .map(|i| self.engine.client_name(crate::gpusim::engine::ClientId(i)).to_string())
             .collect();
+        let gpu_idle_w = self.engine.testbed().gpu.idle_power;
+        let cpu_idle_w = self.engine.testbed().cpu.idle_power;
         let trace = self.engine.take_trace();
         let nodes: Vec<NodeResult> = self
             .nodes
@@ -586,6 +616,8 @@ impl ScenarioRunner {
             pjrt_calls: self.pjrt_calls,
             reconfigurations: server_reconfigs + policy_reconfigs,
             controller_actions,
+            gpu_idle_w,
+            cpu_idle_w,
         })
     }
 
@@ -636,8 +668,77 @@ impl ScenarioRunner {
             JobKind::Timer(idx) => self.on_timer_done(n, idx, r),
             JobKind::Cleanup => self.on_cleanup_done(n, r),
             JobKind::ControllerTick => self.on_tick(r.end),
+            JobKind::Chaos(i) => self.on_chaos(i, r.end),
         }
         Ok(())
+    }
+
+    /// Submit every fault transition of the chaos schedule as a zero-length
+    /// host job at its virtual-time deadline. Ballast is expressed purely as
+    /// the job's mem-ops: an allocation that does not fit fails the job and
+    /// the engine's rollback keeps VRAM accounting exact, which is exactly
+    /// the memory pressure the fault models.
+    fn submit_chaos_jobs(&mut self) {
+        let Some(ch) = &self.chaos else { return };
+        let client = ch.client;
+        let capacity = self.engine.vram().capacity();
+        let events = ch.events.clone();
+        for (i, ev) in events.iter().enumerate() {
+            let mut phase = Phase::host(ev.action.tag(), 0.0);
+            phase = match ev.action {
+                FaultAction::BallastStart { frac } => phase.with_mem_ops(vec![MemOp::Alloc {
+                    label: format!("ballast{}", ev.episode),
+                    bytes: (frac * capacity as f64) as u64,
+                }]),
+                // `free_labeled` returns 0 on a miss, so releasing a ballast
+                // whose allocation failed is a safe no-op.
+                FaultAction::BallastEnd => phase.with_mem_ops(vec![MemOp::Free {
+                    label: format!("ballast{}", ev.episode),
+                }]),
+                _ => phase,
+            };
+            let spec = JobSpec {
+                client,
+                label: format!("{}.{}", ev.action.tag(), ev.episode),
+                phases: vec![phase],
+            };
+            let id = self.engine.submit(spec, ev.at);
+            self.job_map.insert(id, (0, JobKind::Chaos(i)));
+        }
+    }
+
+    /// Apply the side effect of fault transition `i`. Every transition also
+    /// wakes the adaptive controller: a fault epoch resets its cooldown so
+    /// recovery actions are not gated behind a stale healthy streak.
+    fn on_chaos(&mut self, i: usize, now: f64) {
+        let Some(ch) = &self.chaos else { return };
+        let action = ch.events[i].action;
+        match action {
+            FaultAction::ThrottleStart { factor } => self.engine.set_gpu_clock_scale(factor),
+            FaultAction::ThrottleEnd => self.engine.set_gpu_clock_scale(1.0),
+            FaultAction::SuspendStart => self.engine.set_gpu_suspended(true),
+            FaultAction::SuspendEnd => self.engine.set_gpu_suspended(false),
+            FaultAction::ServerCrash => {
+                if let Some(s) = self.servers.iter_mut().find(|s| s.server.is_started()) {
+                    s.server.crash(&mut self.engine, now);
+                }
+            }
+            FaultAction::PcieDegradeStart { scale } => {
+                for s in &mut self.servers {
+                    s.server.set_dma_bw_scale(scale);
+                }
+            }
+            FaultAction::PcieDegradeEnd => {
+                for s in &mut self.servers {
+                    s.server.set_dma_bw_scale(1.0);
+                }
+            }
+            // Ballast already happened as the job's own mem-ops.
+            FaultAction::BallastStart { .. } | FaultAction::BallastEnd => {}
+        }
+        if let Some(ctl) = self.controller.as_mut() {
+            ctl.controller.observe_fault(now);
+        }
     }
 
     /// Schedule the next controller epoch boundary as an ordinary host job

@@ -24,6 +24,8 @@ pub fn generate(result: &ScenarioResult) -> BenchmarkReport {
         &result.trace,
         &result.client_names,
         crate::monitor::DEFAULT_INTERVAL,
+        result.gpu_idle_w,
+        result.cpu_idle_w,
     );
     let mut out = String::new();
     out.push_str("==============================================================\n");

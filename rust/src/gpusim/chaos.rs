@@ -1,0 +1,412 @@
+//! Deterministic chaos injection: seed-derived fault schedules in virtual
+//! time (the ROADMAP's "deterministic chaos" item).
+//!
+//! The paper observes its findings under *clean* conditions; real end-user
+//! devices additionally throttle, suspend, spike VRAM, and crash their
+//! model servers. The engine is a deterministic discrete-event simulator,
+//! so faults can be injected FoundationDB-style: a [`FaultSchedule`] is a
+//! pure function of `(ChaosConfig, seed)` — xorshift64* off the scenario
+//! seed, every timestamp in virtual time — and each fault is applied
+//! through a host job under a dedicated `chaos` client, so faults are
+//! engine events like any other: they land in the trace and therefore in
+//! the golden digest, and the same seed replays byte-identically across
+//! `--jobs 1/N` and repeats.
+//!
+//! Fault vocabulary ([`ChaosKind`]):
+//! * `thermal_throttle` — a clock-cap factor applied to newly launched GPU
+//!   kernels for a window (resident kernels keep their completion times,
+//!   like a real DVFS step that doesn't retro-time in-flight work).
+//! * `vram_ballast` — a transient allocation pinning a fraction of VRAM,
+//!   forcing OOM pressure on `VramAllocator` for a window.
+//! * `suspend` — a virtual-time freeze of new GPU launches (device
+//!   suspend/resume); CPU work keeps running, as on a discrete GPU that
+//!   drops off the bus.
+//! * `server_crash` — the shared inference server drops its in-flight
+//!   unified batch, re-enqueues occupied slots' requests, frees its VRAM,
+//!   and re-runs `start()` (weights reload on restart).
+//! * `pcie_degrade` — scales the KV-migration DMA bandwidth for a window
+//!   (link retraining / contention).
+
+use crate::util::rng::Rng;
+
+/// Minimum virtual-time gap enforced between consecutive fault episodes so
+/// jittered windows can never overlap (overlap would tear start/end pairing).
+const MIN_GAP: f64 = 1e-6;
+
+/// Which fault class a chaos schedule injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChaosKind {
+    /// Clock-cap windows: new GPU launches run at `intensity`× clock.
+    ThermalThrottle,
+    /// Transient VRAM pin of `intensity` × capacity for a window.
+    VramBallast,
+    /// Device suspend/resume: no new GPU launches inside the window.
+    Suspend,
+    /// Shared-server crash + restart mid-batch (point event).
+    ServerCrash,
+    /// KV-migration DMA bandwidth scaled by `intensity` for a window.
+    PcieDegrade,
+}
+
+/// Stable key for a chaos kind in YAML configs, scenario names, and reports.
+pub fn chaos_key(k: ChaosKind) -> &'static str {
+    k.key()
+}
+
+impl ChaosKind {
+    pub const ALL: [ChaosKind; 5] = [
+        ChaosKind::ThermalThrottle,
+        ChaosKind::VramBallast,
+        ChaosKind::Suspend,
+        ChaosKind::ServerCrash,
+        ChaosKind::PcieDegrade,
+    ];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            ChaosKind::ThermalThrottle => "thermal_throttle",
+            ChaosKind::VramBallast => "vram_ballast",
+            ChaosKind::Suspend => "suspend",
+            ChaosKind::ServerCrash => "server_crash",
+            ChaosKind::PcieDegrade => "pcie_degrade",
+        }
+    }
+
+    /// Parse a YAML / CLI spelling.
+    pub fn parse(s: &str) -> Option<ChaosKind> {
+        match s.to_ascii_lowercase().replace(['-', ' ', '.'], "_").as_str() {
+            "thermal_throttle" | "throttle" | "thermal" => Some(ChaosKind::ThermalThrottle),
+            "vram_ballast" | "ballast" | "vram" => Some(ChaosKind::VramBallast),
+            "suspend" | "suspend_resume" | "sleep" => Some(ChaosKind::Suspend),
+            "server_crash" | "crash" => Some(ChaosKind::ServerCrash),
+            "pcie_degrade" | "pcie" => Some(ChaosKind::PcieDegrade),
+            _ => None,
+        }
+    }
+
+    /// Windowed faults emit start/end pairs; `server_crash` is a point event.
+    pub fn windowed(self) -> bool {
+        !matches!(self, ChaosKind::ServerCrash)
+    }
+
+    /// Whether `intensity` means anything for this kind.
+    pub fn uses_intensity(self) -> bool {
+        matches!(
+            self,
+            ChaosKind::ThermalThrottle | ChaosKind::VramBallast | ChaosKind::PcieDegrade
+        )
+    }
+}
+
+impl std::fmt::Display for ChaosKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// Parameters of a chaos schedule. All times are virtual seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    pub kind: ChaosKind,
+    /// Nominal time of the first episode.
+    pub start: f64,
+    /// Nominal spacing between episodes.
+    pub period: f64,
+    /// Number of episodes.
+    pub count: usize,
+    /// Window length of each episode (windowed kinds only).
+    pub duration: f64,
+    /// Kind-specific strength: clock-cap factor (throttle), fraction of
+    /// VRAM capacity (ballast), DMA bandwidth scale (pcie). In (0, 1].
+    pub intensity: f64,
+    /// Uniform jitter on each episode's start, as a fraction of `period`
+    /// (an episode lands in `base ± jitter·period`). In [0, 1).
+    pub jitter: f64,
+}
+
+impl ChaosConfig {
+    /// The curated per-kind defaults used by the scenario matrix: episodes
+    /// land inside the first ~25 virtual seconds, where every default-mix
+    /// scenario still has work in flight.
+    pub fn curated(kind: ChaosKind) -> ChaosConfig {
+        let (start, period, count, duration, intensity) = match kind {
+            ChaosKind::ThermalThrottle => (1.0, 6.0, 4, 5.0, 0.35),
+            ChaosKind::VramBallast => (1.0, 5.0, 4, 3.0, 0.35),
+            ChaosKind::Suspend => (1.5, 6.0, 3, 1.0, 0.0),
+            ChaosKind::ServerCrash => (2.0, 8.0, 3, 0.0, 0.0),
+            ChaosKind::PcieDegrade => (1.0, 6.0, 3, 4.0, 0.1),
+        };
+        ChaosConfig {
+            kind,
+            start,
+            period,
+            count,
+            duration,
+            intensity,
+            jitter: 0.25,
+        }
+    }
+
+    /// Validate parameter ranges; returns a human-readable complaint.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.start.is_finite() || self.start < 0.0 {
+            return Err(format!("chaos start must be >= 0, got {}", self.start));
+        }
+        if self.count == 0 {
+            return Err("chaos count must be >= 1".into());
+        }
+        if !self.period.is_finite() || self.period <= 0.0 {
+            return Err(format!("chaos period must be > 0, got {}", self.period));
+        }
+        if !(0.0..1.0).contains(&self.jitter) {
+            return Err(format!("chaos jitter must be in [0, 1), got {}", self.jitter));
+        }
+        if self.kind.windowed() {
+            if !self.duration.is_finite() || self.duration <= 0.0 {
+                return Err(format!(
+                    "chaos duration must be > 0 for {}, got {}",
+                    self.kind, self.duration
+                ));
+            }
+            if self.count > 1 && self.duration >= self.period {
+                return Err(format!(
+                    "chaos duration ({}) must be < period ({}) for repeated {} windows",
+                    self.duration, self.period, self.kind
+                ));
+            }
+        }
+        if self.kind.uses_intensity() && !(self.intensity > 0.0 && self.intensity <= 1.0) {
+            return Err(format!(
+                "chaos intensity must be in (0, 1] for {}, got {}",
+                self.kind, self.intensity
+            ));
+        }
+        Ok(())
+    }
+
+    /// Render the YAML `chaos:` block this config corresponds to, so dumped
+    /// scenario configs are self-describing and re-runnable.
+    pub fn to_yaml(&self) -> String {
+        let mut out = String::new();
+        out.push_str("chaos:\n");
+        out.push_str(&format!("  kind: {}\n", self.kind.key()));
+        out.push_str(&format!("  start: {}\n", self.start));
+        out.push_str(&format!("  period: {}\n", self.period));
+        out.push_str(&format!("  count: {}\n", self.count));
+        if self.kind.windowed() {
+            out.push_str(&format!("  duration: {}\n", self.duration));
+        }
+        if self.kind.uses_intensity() {
+            out.push_str(&format!("  intensity: {}\n", self.intensity));
+        }
+        out.push_str(&format!("  jitter: {}\n", self.jitter));
+        out
+    }
+}
+
+/// One fault transition to apply at a virtual timestamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Cap the GPU clock: new launches run at `factor`× speed.
+    ThrottleStart { factor: f64 },
+    ThrottleEnd,
+    /// Pin `frac` of VRAM capacity under the chaos client.
+    BallastStart { frac: f64 },
+    BallastEnd,
+    SuspendStart,
+    SuspendEnd,
+    ServerCrash,
+    /// Scale KV-migration DMA bandwidth by `scale`.
+    PcieDegradeStart { scale: f64 },
+    PcieDegradeEnd,
+}
+
+impl FaultAction {
+    /// Trace-visible phase tag for the fault's host job.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultAction::ThrottleStart { .. } => "chaos.throttle.start",
+            FaultAction::ThrottleEnd => "chaos.throttle.end",
+            FaultAction::BallastStart { .. } => "chaos.ballast.start",
+            FaultAction::BallastEnd => "chaos.ballast.end",
+            FaultAction::SuspendStart => "chaos.suspend",
+            FaultAction::SuspendEnd => "chaos.resume",
+            FaultAction::ServerCrash => "chaos.server_crash",
+            FaultAction::PcieDegradeStart { .. } => "chaos.pcie.start",
+            FaultAction::PcieDegradeEnd => "chaos.pcie.end",
+        }
+    }
+}
+
+/// A fault transition at a virtual time; `episode` indexes the originating
+/// episode (ballast allocations are labelled per-episode with it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub episode: usize,
+    pub action: FaultAction,
+}
+
+/// The expanded, time-ordered fault schedule for one scenario run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// Expand a config into concrete fault events. Pure function of
+    /// `(cfg, seed)`: the jitter stream is a dedicated xorshift64*
+    /// generator keyed off the scenario seed and the fault kind, so the
+    /// schedule never perturbs (or is perturbed by) workload synthesis.
+    /// Episodes are clamped to be non-overlapping and strictly ordered, so
+    /// windowed start/end pairs can never interleave.
+    pub fn generate(cfg: &ChaosConfig, seed: u64) -> FaultSchedule {
+        let mix = (cfg.kind as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed ^ 0xC7A0_5EED_D15E_A5E5 ^ mix);
+        let mut events = Vec::with_capacity(cfg.count * 2);
+        let mut cursor = 0.0_f64;
+        for episode in 0..cfg.count {
+            let base = cfg.start + episode as f64 * cfg.period;
+            let offset = (rng.next_f64() * 2.0 - 1.0) * cfg.jitter * cfg.period;
+            let at = (base + offset).max(0.0).max(cursor);
+            match cfg.kind {
+                ChaosKind::ServerCrash => {
+                    events.push(FaultEvent {
+                        at,
+                        episode,
+                        action: FaultAction::ServerCrash,
+                    });
+                    cursor = at + MIN_GAP;
+                }
+                kind => {
+                    let (start, end) = match kind {
+                        ChaosKind::ThermalThrottle => (
+                            FaultAction::ThrottleStart {
+                                factor: cfg.intensity,
+                            },
+                            FaultAction::ThrottleEnd,
+                        ),
+                        ChaosKind::VramBallast => (
+                            FaultAction::BallastStart {
+                                frac: cfg.intensity,
+                            },
+                            FaultAction::BallastEnd,
+                        ),
+                        ChaosKind::Suspend => (FaultAction::SuspendStart, FaultAction::SuspendEnd),
+                        ChaosKind::PcieDegrade => (
+                            FaultAction::PcieDegradeStart {
+                                scale: cfg.intensity,
+                            },
+                            FaultAction::PcieDegradeEnd,
+                        ),
+                        ChaosKind::ServerCrash => unreachable!(),
+                    };
+                    events.push(FaultEvent {
+                        at,
+                        episode,
+                        action: start,
+                    });
+                    events.push(FaultEvent {
+                        at: at + cfg.duration,
+                        episode,
+                        action: end,
+                    });
+                    cursor = at + cfg.duration + MIN_GAP;
+                }
+            }
+        }
+        debug_assert!(events.windows(2).all(|w| w[0].at <= w[1].at));
+        FaultSchedule { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_parse_roundtrip() {
+        for &k in &ChaosKind::ALL {
+            assert_eq!(ChaosKind::parse(k.key()), Some(k));
+            assert_eq!(format!("{k}"), k.key());
+        }
+        assert_eq!(ChaosKind::parse("Thermal-Throttle"), Some(ChaosKind::ThermalThrottle));
+        assert_eq!(ChaosKind::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn curated_configs_validate() {
+        for &k in &ChaosKind::ALL {
+            let cfg = ChaosConfig::curated(k);
+            cfg.validate().unwrap();
+            assert!(!cfg.to_yaml().is_empty());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        let base = ChaosConfig::curated(ChaosKind::ThermalThrottle);
+        for bad in [
+            ChaosConfig { start: -1.0, ..base.clone() },
+            ChaosConfig { count: 0, ..base.clone() },
+            ChaosConfig { period: 0.0, ..base.clone() },
+            ChaosConfig { jitter: 1.0, ..base.clone() },
+            ChaosConfig { duration: 0.0, ..base.clone() },
+            ChaosConfig { duration: base.period, ..base.clone() },
+            ChaosConfig { intensity: 0.0, ..base.clone() },
+            ChaosConfig { intensity: 1.5, ..base.clone() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_config_and_seed() {
+        for &k in &ChaosKind::ALL {
+            let cfg = ChaosConfig::curated(k);
+            let a = FaultSchedule::generate(&cfg, 42);
+            let b = FaultSchedule::generate(&cfg, 42);
+            assert_eq!(a, b, "{k}: same seed must reproduce the schedule");
+            let c = FaultSchedule::generate(&cfg, 43);
+            assert_ne!(a, c, "{k}: a different seed must move the jittered episodes");
+        }
+    }
+
+    #[test]
+    fn windowed_schedules_pair_and_never_overlap() {
+        for &k in &ChaosKind::ALL {
+            let cfg = ChaosConfig::curated(k);
+            let s = FaultSchedule::generate(&cfg, 7);
+            assert!(s.events.windows(2).all(|w| w[0].at <= w[1].at), "{k}: unordered");
+            if k.windowed() {
+                assert_eq!(s.events.len(), cfg.count * 2);
+                for pair in s.events.chunks(2) {
+                    assert_eq!(pair[0].episode, pair[1].episode);
+                    assert!(
+                        (pair[1].at - pair[0].at - cfg.duration).abs() < 1e-9,
+                        "{k}: window length"
+                    );
+                }
+                // Strict ordering between episodes: end_i < start_{i+1}.
+                for w in s.events.chunks(2).collect::<Vec<_>>().windows(2) {
+                    assert!(w[0][1].at < w[1][0].at, "{k}: windows overlap");
+                }
+            } else {
+                assert_eq!(s.events.len(), cfg.count);
+            }
+            assert!(s.events.iter().all(|e| e.at >= 0.0));
+        }
+    }
+
+    #[test]
+    fn jitter_zero_lands_on_the_nominal_grid() {
+        let cfg = ChaosConfig {
+            jitter: 0.0,
+            ..ChaosConfig::curated(ChaosKind::ServerCrash)
+        };
+        let s = FaultSchedule::generate(&cfg, 99);
+        for (i, e) in s.events.iter().enumerate() {
+            assert!((e.at - (cfg.start + i as f64 * cfg.period)).abs() < 1e-9);
+        }
+    }
+}

@@ -22,7 +22,7 @@ use crate::gpusim::kernel::{duration, occupancy, sms_wanted, Device, KernelDesc}
 use crate::gpusim::policy::{Policy, ReadyKernel};
 use crate::gpusim::power::{cpu_power, gpu_power};
 use crate::gpusim::profiles::Testbed;
-use crate::gpusim::vram::VramAllocator;
+use crate::gpusim::vram::{AllocId, VramAllocator};
 
 // The trace lives in its own module; re-exported here so existing
 // `gpusim::engine::{TraceSample, trace_digest, …}` imports keep working.
@@ -280,6 +280,12 @@ pub struct Engine {
     gpu_resident: Vec<GpuResident>,
     /// SMs held per client, dense by ClientId (clients are interned 0..n).
     gpu_held: Vec<usize>,
+    /// Thermal clock-cap factor in (0, 1]: new launches run at this fraction
+    /// of full clock (chaos `thermal_throttle`; 1.0 = no throttle).
+    gpu_clock_scale: f64,
+    /// While true, no new GPU kernels launch (chaos `suspend`); resident
+    /// kernels drain normally.
+    gpu_suspended: bool,
     vram: VramAllocator,
     // CPU state
     cpu_free_cores: usize,
@@ -315,6 +321,8 @@ impl Engine {
             gpu_launch_scratch: Vec::new(),
             gpu_resident: Vec::with_capacity(64),
             gpu_held: Vec::new(),
+            gpu_clock_scale: 1.0,
+            gpu_suspended: false,
             vram,
             cpu_free_cores: cpu_cores,
             cpu_ready: VecDeque::with_capacity(16),
@@ -351,6 +359,44 @@ impl Engine {
         self.schedule_cpu();
         self.record();
         r
+    }
+
+    /// Current thermal clock-cap factor (1.0 = full clock).
+    pub fn gpu_clock_scale(&self) -> f64 {
+        self.gpu_clock_scale
+    }
+
+    /// Cap the GPU clock at `scale`× full speed (chaos `thermal_throttle`).
+    /// Applies to kernels launched from now on; resident kernels keep their
+    /// completion times — like a real DVFS step, which cannot retro-time
+    /// in-flight work. Same contract as [`Engine::update_policy`]: a
+    /// scheduling pass runs immediately and a trace row is recorded, so the
+    /// fault transition is part of the golden digest.
+    pub fn set_gpu_clock_scale(&mut self, scale: f64) {
+        assert!(
+            scale > 0.0 && scale <= 1.0,
+            "clock scale must be in (0, 1]: {scale}"
+        );
+        self.gpu_clock_scale = scale;
+        self.schedule_gpu();
+        self.schedule_cpu();
+        self.record();
+    }
+
+    /// Whether new GPU launches are currently frozen.
+    pub fn gpu_suspended(&self) -> bool {
+        self.gpu_suspended
+    }
+
+    /// Suspend/resume the GPU (chaos `suspend`): while suspended no new
+    /// kernels launch; resident kernels drain and CPU work keeps running.
+    /// Resume runs a scheduling pass immediately so queued launches go out
+    /// at the resume timestamp. Trace-visible like `update_policy`.
+    pub fn set_gpu_suspended(&mut self, suspended: bool) {
+        self.gpu_suspended = suspended;
+        self.schedule_gpu();
+        self.schedule_cpu();
+        self.record();
     }
 
     /// Disable trace recording (benchmarking the engine itself).
@@ -508,15 +554,24 @@ impl Engine {
             )
         };
         // Apply memory ops in place (no clone of the op list or the client
-        // name); OOM fails the job.
+        // name); OOM fails the job, rolling back the Allocs this phase
+        // already applied so a partially applied op list can never leak
+        // VRAM for the rest of the run (Free/FreeAll are not undone — they
+        // model releases that already happened).
+        let mut applied: Vec<AllocId> = Vec::new();
         for i in 0..num_mem_ops {
             let js = &self.jobs[&job];
             let op = &js.spec.phases[js.cur_phase].mem_ops[i];
             let oom = match op {
-                MemOp::Alloc { label, bytes } => self
-                    .vram
-                    .alloc(&self.clients[client.0], label, *bytes)
-                    .err(),
+                MemOp::Alloc { label, bytes } => {
+                    match self.vram.alloc(&self.clients[client.0], label, *bytes) {
+                        Ok(id) => {
+                            applied.push(id);
+                            None
+                        }
+                        Err(e) => Some(e),
+                    }
+                }
                 MemOp::Free { label } => {
                     self.vram.free_labeled(&self.clients[client.0], label);
                     None
@@ -527,6 +582,9 @@ impl Engine {
                 }
             };
             if let Some(e) = oom {
+                for id in applied.drain(..).rev() {
+                    self.vram.free(id);
+                }
                 self.fail_job(job, format!("{e}"));
                 return;
             }
@@ -664,7 +722,7 @@ impl Engine {
     }
 
     fn schedule_gpu(&mut self) {
-        if self.gpu_ready.is_empty() || self.gpu_free_sms == 0 {
+        if self.gpu_suspended || self.gpu_ready.is_empty() || self.gpu_free_sms == 0 {
             return;
         }
         // Greedy fast path: grants are always a prefix of the FIFO ready
@@ -727,8 +785,11 @@ impl Engine {
                     js.spec.client,
                 )
             };
+            // A thermal clock cap stretches everything downstream of the
+            // clock — compute and memory alike — so the whole duration
+            // scales by 1/gpu_clock_scale.
             let dur = match duration(&kernel, &gpu, sms) {
-                Ok(d) => d,
+                Ok(d) => d / self.gpu_clock_scale,
                 Err(e) => {
                     self.fail_job(entry.job, format!("launch failure: {e}"));
                     continue;
@@ -1170,6 +1231,113 @@ mod tests {
         e.run_all();
         let r = &e.take_completed()[0];
         assert!(r.error.as_deref().unwrap().contains("OOM"));
+    }
+
+    #[test]
+    fn partial_mem_op_failure_rolls_back_applied_allocs() {
+        // An op list that partially applies before OOMing must not leak the
+        // already-applied allocations (the chaos VRAM-ballast fault hits
+        // this path whenever a ballast window overlaps a model load).
+        let mut e = engine();
+        let c = e.register_client("server");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "setup".into(),
+                phases: vec![Phase::host("load", 0.0).with_mem_ops(vec![MemOp::Alloc {
+                    label: "weights".into(),
+                    bytes: 2 << 30,
+                }])],
+            },
+            0.0,
+        );
+        e.run_all();
+        let before = e.vram().used();
+        assert_eq!(before, 2 << 30);
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "grow".into(),
+                phases: vec![Phase::host("grow", 0.0).with_mem_ops(vec![
+                    MemOp::Alloc { label: "kv-a".into(), bytes: 1 << 30 },
+                    MemOp::Alloc { label: "kv-b".into(), bytes: 2u64 << 30 },
+                    MemOp::Alloc { label: "huge".into(), bytes: 40 * (1u64 << 30) },
+                ])],
+            },
+            e.now(),
+        );
+        e.run_all();
+        let done = e.take_completed();
+        let grow = done.iter().find(|r| r.label == "grow").unwrap();
+        assert!(grow.error.as_deref().unwrap().contains("OOM"));
+        assert_eq!(
+            e.vram().used(),
+            before,
+            "partially applied allocs must roll back on failure"
+        );
+        assert_eq!(e.vram().used_by("server"), before);
+    }
+
+    #[test]
+    fn thermal_throttle_slows_new_launches_and_lands_in_the_trace() {
+        let solo = |scale: f64| {
+            let mut e = engine();
+            let c = e.register_client("x");
+            if scale < 1.0 {
+                e.set_gpu_clock_scale(scale);
+            }
+            e.submit(
+                JobSpec {
+                    client: c,
+                    label: "r".into(),
+                    phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 288, 1e9)])],
+                },
+                0.0,
+            );
+            e.run_all();
+            e.take_completed()[0].latency()
+        };
+        let full = solo(1.0);
+        let capped = solo(0.5);
+        assert!(
+            (capped - 2.0 * full).abs() < 0.05 * full,
+            "half clock must double the kernel: {capped} vs {full}"
+        );
+        // The transition itself records a trace row (golden-digest visible).
+        let mut e = engine();
+        e.register_client("x");
+        let rows = e.trace().len();
+        e.set_gpu_clock_scale(0.35);
+        assert!(e.trace().len() > rows);
+        assert_eq!(e.gpu_clock_scale(), 0.35);
+    }
+
+    #[test]
+    fn suspend_freezes_gpu_launches_until_resume() {
+        let mut e = engine();
+        let c = e.register_client("x");
+        e.set_gpu_suspended(true);
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "r".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 288, 1e9)])],
+            },
+            0.0,
+        );
+        e.run_until(1.0);
+        assert_eq!(
+            e.take_completed().len(),
+            0,
+            "no kernel may launch while suspended"
+        );
+        assert!(e.gpu_suspended());
+        e.set_gpu_suspended(false);
+        e.run_all();
+        let r = &e.take_completed()[0];
+        assert!(r.error.is_none());
+        assert!(r.end >= 1.0, "work completes only after resume: {}", r.end);
+        e.check_invariants();
     }
 
     #[test]

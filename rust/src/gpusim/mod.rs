@@ -17,8 +17,10 @@
 //! * [`trace`]    — columnar monitor-trace storage + canonical encoding.
 //! * [`vram`]     — capacity-enforcing device-memory allocator.
 //! * [`power`]    — board/package power models.
+//! * [`chaos`]    — seed-derived fault schedules (deterministic chaos).
 
 pub mod backend;
+pub mod chaos;
 pub mod engine;
 pub mod kernel;
 pub mod policy;
@@ -28,6 +30,7 @@ pub mod trace;
 pub mod vram;
 
 pub use backend::KernelBackend;
+pub use chaos::{chaos_key, ChaosConfig, ChaosKind, FaultAction, FaultEvent, FaultSchedule};
 pub use engine::{ClientId, CpuWork, Engine, JobId, JobResult, JobSpec, MemOp, Phase};
 pub use trace::{Trace, TraceRow, TraceSample, TraceView};
 pub use kernel::{Device, KernelDesc, Tag};

@@ -80,7 +80,9 @@ impl VramAllocator {
     /// Allocate `bytes` on behalf of `client`. `label` names the buffer
     /// ("weights", "kv-cache", "activations") for reports and errors.
     pub fn alloc(&mut self, client: &str, label: &str, bytes: u64) -> Result<AllocId, OomError> {
-        if self.used + bytes > self.capacity {
+        // checked_add: an absurd request (chaos ballast, corrupt config)
+        // must OOM, not wrap around u64 and falsely fit.
+        if !self.used.checked_add(bytes).is_some_and(|t| t <= self.capacity) {
             return Err(OomError {
                 client: client.to_string(),
                 label: label.to_string(),
@@ -107,8 +109,9 @@ impl VramAllocator {
     }
 
     /// Check whether an allocation would fit without performing it.
+    /// Overflowing `used + bytes` counts as not fitting.
     pub fn would_fit(&self, bytes: u64) -> bool {
-        self.used + bytes <= self.capacity
+        self.used.checked_add(bytes).is_some_and(|t| t <= self.capacity)
     }
 
     /// Free an allocation; panics on double-free (a framework bug).
@@ -267,6 +270,18 @@ mod tests {
         assert_eq!(freed, gib(3));
         assert_eq!(v.used(), gib(5));
         assert_eq!(v.used_by("chat"), 0);
+    }
+
+    #[test]
+    fn absurd_request_ooms_instead_of_wrapping() {
+        // u64::MAX + anything used to wrap and "fit"; it must OOM.
+        let mut v = VramAllocator::new(gib(24));
+        v.alloc("server", "weights", gib(2)).unwrap();
+        assert!(!v.would_fit(u64::MAX));
+        let err = v.alloc("chaos", "ballast", u64::MAX).unwrap_err();
+        assert_eq!(err.requested, u64::MAX);
+        assert_eq!(v.used(), gib(2), "failed alloc must not change accounting");
+        assert!(v.would_fit(gib(22)));
     }
 
     #[test]

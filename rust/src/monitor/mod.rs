@@ -41,7 +41,17 @@ impl MonitorReport {
     /// `sample.t <= t`. Operates on the columnar [`Trace`] directly — the
     /// scalar sweep walks the dense row array and only the per-client loop
     /// touches the per-client column.
-    pub fn from_trace(trace: &Trace, client_names: &[String], interval: f64) -> Self {
+    ///
+    /// `gpu_idle_w`/`cpu_idle_w` are the testbed's floor draws: grid points
+    /// before the first trace sample are idle, not powered off, so they
+    /// carry the idle watts (NVML/RAPL never read 0 W on a live board).
+    pub fn from_trace(
+        trace: &Trace,
+        client_names: &[String],
+        interval: f64,
+        gpu_idle_w: f64,
+        cpu_idle_w: f64,
+    ) -> Self {
         assert!(interval > 0.0);
         let mut r = MonitorReport {
             gpu_smact: TimeSeries::new("SMACT", "frac"),
@@ -101,7 +111,7 @@ impl MonitorReport {
             let s = &rows[idx];
             if s.t > t {
                 // Before the first sample: idle.
-                r.push_idle(t, client_names.len());
+                r.push_idle(t, client_names.len(), gpu_idle_w, cpu_idle_w);
                 continue;
             }
             r.gpu_smact.push(t, s.gpu_smact as f64);
@@ -122,15 +132,17 @@ impl MonitorReport {
         r
     }
 
-    fn push_idle(&mut self, t: f64, n_clients: usize) {
+    fn push_idle(&mut self, t: f64, n_clients: usize, gpu_idle_w: f64, cpu_idle_w: f64) {
         self.gpu_smact.push(t, 0.0);
         self.gpu_smocc.push(t, 0.0);
         self.gpu_bw.push(t, 0.0);
-        self.gpu_power.push(t, 0.0);
+        // An idle device still draws its floor watts; recording 0 W here
+        // deflated the energy trapezoid for runs with a pre-trace warmup.
+        self.gpu_power.push(t, gpu_idle_w);
         self.vram_gib.push(t, 0.0);
         self.cpu_util.push(t, 0.0);
         self.dram_bw.push(t, 0.0);
-        self.cpu_power.push(t, 0.0);
+        self.cpu_power.push(t, cpu_idle_w);
         for c in 0..n_clients {
             self.per_client[c].0.push(t, 0.0);
             self.per_client[c].1.push(t, 0.0);
@@ -193,7 +205,7 @@ mod tests {
             sample(1.0, 0.0, 0.0, 1),
         ]);
         let names = vec!["app".to_string()];
-        let r = MonitorReport::from_trace(&trace, &names, 0.1);
+        let r = MonitorReport::from_trace(&trace, &names, 0.1, 0.0, 0.0);
         // At t=0.0..0.3 → first sample; t=0.4..0.9 → second.
         assert_eq!(r.gpu_smact.values()[0], 1.0);
         assert_eq!(r.gpu_smact.values()[3], 1.0); // t=0.3 < 0.35
@@ -205,7 +217,7 @@ mod tests {
 
     #[test]
     fn empty_trace_is_empty_report() {
-        let r = MonitorReport::from_trace(&Trace::new(), &[], 0.1);
+        let r = MonitorReport::from_trace(&Trace::new(), &[], 0.1, 0.0, 0.0);
         assert!(r.gpu_smact.is_empty());
         assert_eq!(r.gpu_energy(), 0.0);
     }
@@ -217,7 +229,7 @@ mod tests {
             sample(1.0, 0.8, 0.4, 0),
             sample(2.0, 0.0, 0.0, 0),
         ]);
-        let r = MonitorReport::from_trace(&trace, &[], 0.5);
+        let r = MonitorReport::from_trace(&trace, &[], 0.5, 0.0, 0.0);
         // f32 storage in the trace → ~1e-8 rounding.
         assert!((r.mean_busy_smact() - 0.8).abs() < 1e-6);
         assert!((r.mean_busy_smocc() - 0.4).abs() < 1e-6);
@@ -226,7 +238,7 @@ mod tests {
     #[test]
     fn energy_integrates_power() {
         let trace = Trace::from_samples(&[sample(0.0, 1.0, 0.5, 0), sample(10.0, 1.0, 0.5, 0)]);
-        let r = MonitorReport::from_trace(&trace, &[], 1.0);
+        let r = MonitorReport::from_trace(&trace, &[], 1.0, 0.0, 0.0);
         // 150 W for 10 s = 1500 J.
         assert!((r.gpu_energy() - 1500.0).abs() < 1.0);
     }
@@ -238,7 +250,7 @@ mod tests {
         // integral from 52.5 J (150 W × 0.35 s) to 60 J.
         let trace = Trace::from_samples(&[sample(0.0, 1.0, 0.5, 1), sample(0.35, 1.0, 0.5, 1)]);
         let names = vec!["app".to_string()];
-        let r = MonitorReport::from_trace(&trace, &names, 0.1);
+        let r = MonitorReport::from_trace(&trace, &names, 0.1, 0.0, 0.0);
         let times = r.gpu_power.times();
         assert_eq!(
             *times.last().unwrap(),
@@ -254,14 +266,38 @@ mod tests {
         assert_eq!(*r.per_client[0].0.times().last().unwrap(), 0.35);
         // Aligned traces are untouched (no duplicated end point).
         let aligned = Trace::from_samples(&[sample(0.0, 1.0, 0.5, 0), sample(0.4, 1.0, 0.5, 0)]);
-        let ra = MonitorReport::from_trace(&aligned, &[], 0.1);
+        let ra = MonitorReport::from_trace(&aligned, &[], 0.1, 0.0, 0.0);
         assert_eq!(ra.gpu_power.times(), &[0.0, 0.1, 0.2, 0.3, 0.4]);
     }
 
     #[test]
     fn peak_vram() {
         let trace = Trace::from_samples(&[sample(0.0, 0.1, 0.1, 0)]);
-        let r = MonitorReport::from_trace(&trace, &[], 0.1);
+        let r = MonitorReport::from_trace(&trace, &[], 0.1, 0.0, 0.0);
         assert!((r.peak_vram_gib() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pre_trace_grid_points_carry_idle_power() {
+        // Regression: a trace starting at 1.0 s on a 0.5 s grid used to
+        // record 0 W at t = 0.0 and 0.5 — as if the board were unplugged —
+        // undercounting energy by the idle draw of the warmup window.
+        let trace = Trace::from_samples(&[sample(1.0, 1.0, 0.5, 1), sample(2.0, 1.0, 0.5, 1)]);
+        let names = vec!["app".to_string()];
+        let r = MonitorReport::from_trace(&trace, &names, 0.5, 55.0, 25.0);
+        assert_eq!(r.gpu_power.values()[0], 55.0);
+        assert_eq!(r.gpu_power.values()[1], 55.0);
+        assert_eq!(r.gpu_power.values()[2], 150.0, "on-trace points unchanged");
+        assert_eq!(r.cpu_power.values()[0], 25.0);
+        // Activity series still read 0 before the run.
+        assert_eq!(r.gpu_smact.values()[0], 0.0);
+        assert_eq!(r.per_client[0].0.values()[0], 0.0);
+        // Energy = idle ramp trapezoid + busy second. Pre-trace segment:
+        // 55 W → 55 W over [0, 0.5] then 55 → 150 over [0.5, 1.0].
+        let expect = 55.0 * 0.5 + (55.0 + 150.0) / 2.0 * 0.5 + 150.0;
+        assert!((r.gpu_energy() - expect).abs() < 1e-9, "{}", r.gpu_energy());
+        // With zero idle watts the old behaviour is preserved.
+        let z = MonitorReport::from_trace(&trace, &names, 0.5, 0.0, 0.0);
+        assert_eq!(z.gpu_power.values()[0], 0.0);
     }
 }

@@ -23,6 +23,12 @@
 //!   backend scenarios run their apps *directly* (no shared server) so the
 //!   comparison isolates the kernel implementation, exactly like the
 //!   paper's runtime-vs-runtime measurements.
+//! * **Chaos** — deterministic fault injection (thermal throttling, VRAM
+//!   ballast, device suspend/resume, server crash + restart, PCIe
+//!   degradation). Swept as a curated slice of static-vs-adaptive pairs
+//!   under each fault class, so the report answers "which faults does the
+//!   adaptive serving layer actually absorb?". Fault schedules derive from
+//!   the scenario seed — the same seed replays byte-identically.
 //!
 //! [`MatrixAxes::expand`] enumerates the cross-product in a fixed order and
 //! renders each point as a YAML workflow configuration understood by
@@ -32,11 +38,14 @@
 
 use crate::coordinator::config::{AppType, Strategy, TestbedKind};
 use crate::gpusim::backend::KernelBackend;
+use crate::gpusim::chaos::{ChaosConfig, ChaosKind};
 use crate::gpusim::kernel::Device;
 use crate::util::rng::Rng;
 
-// `backend_key` lives next to the other axis-key helpers it is used with.
+// `backend_key`/`chaos_key` live next to the other axis-key helpers they
+// are used with.
 pub use crate::gpusim::backend::backend_key;
+pub use crate::gpusim::chaos::chaos_key;
 
 /// One application instance inside a mix.
 #[derive(Debug, Clone)]
@@ -392,6 +401,12 @@ pub struct MatrixAxes {
     pub backends: Vec<KernelBackend>,
     /// Strategies the backend-ablation slice crosses with.
     pub backend_strategies: Vec<Strategy>,
+    /// Fault classes swept by the chaos slice. Empty → no chaos scenarios.
+    /// Each kind contributes a static/adaptive pair (per testbed) of the
+    /// `chat+imagegen` mix under `slo_aware`, with the kind's curated
+    /// schedule — the slice measures fault absorption by the adaptive
+    /// serving layer, one fault class at a time.
+    pub chaos: Vec<ChaosKind>,
     pub seed: u64,
 }
 
@@ -411,10 +426,11 @@ impl MatrixAxes {
     /// curated workflow slice (4 DAG shapes × {greedy, slo_aware} ×
     /// {static, adaptive where a server exists} = 10 scenarios) plus the
     /// curated backend-ablation slice (3 kernel backends × 2 mixes ×
-    /// greedy = 6 scenarios): 58 total. Covers every policy, every Table 1
-    /// application, open-loop heavy traffic, the serving ablation, the
-    /// end-to-end workflow comparison, and the §6 tuned-vs-generic kernel
-    /// ablation.
+    /// greedy = 6 scenarios) plus the curated chaos slice (5 fault classes
+    /// × {static, adaptive} = 10 scenarios): 68 total. Covers every
+    /// policy, every Table 1 application, open-loop heavy traffic, the
+    /// serving ablation, the end-to-end workflow comparison, the §6
+    /// tuned-vs-generic kernel ablation, and fault injection.
     pub fn default_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             mixes: vec![
@@ -436,6 +452,7 @@ impl MatrixAxes {
             workflow_strategies: vec![Strategy::Greedy, Strategy::SloAware],
             backends: KernelBackend::ALL.to_vec(),
             backend_strategies: vec![Strategy::Greedy],
+            chaos: ChaosKind::ALL.to_vec(),
             seed,
         }
     }
@@ -443,9 +460,10 @@ impl MatrixAxes {
     /// The full sweep: adds periodic + trace-replay arrivals and the Apple
     /// Silicon testbed to the flat part (96 static + 72 adaptive), crosses
     /// the workflow shapes with every strategy and testbed (32 static + 8
-    /// adaptive), and takes the backend slice to its full cross-product
-    /// (3 backends × 2 mixes × 4 strategies × 2 testbeds = 48) —
-    /// 256 scenarios.
+    /// adaptive), takes the backend slice to its full cross-product
+    /// (3 backends × 2 mixes × 4 strategies × 2 testbeds = 48), and runs
+    /// the chaos slice on both testbeds (5 kinds × 2 testbeds ×
+    /// {static, adaptive} = 20) — 276 scenarios.
     pub fn full_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             testbeds: vec![TestbedKind::IntelServer, TestbedKind::MacbookM1Pro],
@@ -474,15 +492,18 @@ impl MatrixAxes {
     /// Enumerate the cross-product in a fixed order: first the flat
     /// (mix, strategy, arrival, testbed, server-mode) scenarios, then the
     /// workflow (shape, strategy, testbed, server-mode) slice, then the
-    /// backend-ablation (backend, mix, strategy, testbed) slice. The order
-    /// is part of the report format: re-running with the same seed must
-    /// reproduce the report byte-for-byte. The adaptive server mode is
-    /// skipped where there is no server to adapt (flat mixes with no text
-    /// app; workflow shapes without a shared server). Workflow stages keep
-    /// their applications' built-in client models, so the arrival axis does
-    /// not cross the workflow slice; backend scenarios run closed-loop and
+    /// backend-ablation (backend, mix, strategy, testbed) slice, then the
+    /// chaos (kind, testbed, server-mode) slice. The order is part of the
+    /// report format: re-running with the same seed must reproduce the
+    /// report byte-for-byte. The adaptive server mode is skipped where
+    /// there is no server to adapt (flat mixes with no text app; workflow
+    /// shapes without a shared server). Workflow stages keep their
+    /// applications' built-in client models, so the arrival axis does not
+    /// cross the workflow slice; backend scenarios run closed-loop and
     /// static for the same reason — the ablation isolates the kernel
-    /// implementation.
+    /// implementation. Chaos scenarios pin everything except the fault
+    /// class and the server mode, so each pair isolates adaptation under
+    /// exactly one fault class.
     pub fn expand(&self) -> Vec<ScenarioSpec> {
         let mut specs = Vec::new();
         for mix in &self.mixes {
@@ -510,6 +531,7 @@ impl MatrixAxes {
                                 server_mode,
                                 backend: KernelBackend::TunedNative,
                                 backend_ablation: false,
+                                chaos: None,
                                 seed: self.seed,
                             });
                         }
@@ -543,6 +565,7 @@ impl MatrixAxes {
                             server_mode,
                             backend: KernelBackend::TunedNative,
                             backend_ablation: false,
+                            chaos: None,
                             seed: self.seed,
                         });
                     }
@@ -569,9 +592,36 @@ impl MatrixAxes {
                             server_mode: ServerMode::Static,
                             backend,
                             backend_ablation: true,
+                            chaos: None,
                             seed: self.seed,
                         });
                     }
+                }
+            }
+        }
+        for &kind in &self.chaos {
+            for &testbed in &self.testbeds {
+                for server_mode in [ServerMode::Static, ServerMode::Adaptive] {
+                    let mix = AppMix::chat_imagegen();
+                    specs.push(ScenarioSpec {
+                        name: format!(
+                            "chaos={}/mix={}/policy=slo_aware/testbed={}/server={}",
+                            chaos_key(kind),
+                            mix.name,
+                            testbed_key(testbed),
+                            server_mode_key(server_mode)
+                        ),
+                        mix,
+                        workflow: WorkflowShape::Flat,
+                        strategy: Strategy::SloAware,
+                        testbed,
+                        arrival: ArrivalKind::Closed,
+                        server_mode,
+                        backend: KernelBackend::TunedNative,
+                        backend_ablation: false,
+                        chaos: Some(kind),
+                        seed: self.seed,
+                    });
                 }
             }
         }
@@ -598,6 +648,9 @@ pub struct ScenarioSpec {
     /// server), so the tuned/generic/fused trio differs in exactly one
     /// thing — the kernel implementation.
     pub backend_ablation: bool,
+    /// Fault class injected during the run (`None` everywhere except the
+    /// chaos slice, which emits the kind's curated `chaos:` block).
+    pub chaos: Option<ChaosKind>,
     pub seed: u64,
 }
 
@@ -742,6 +795,11 @@ impl ScenarioSpec {
         if self.server_mode == ServerMode::Adaptive {
             out.push_str(CONTROLLER_YAML);
         }
+        // After the controller block: the static/adaptive pair of a chaos
+        // scenario must still differ only in the controller lines.
+        if let Some(kind) = self.chaos {
+            out.push_str(&ChaosConfig::curated(kind).to_yaml());
+        }
         out.push_str(&format!("strategy: {}\n", strategy_key(self.strategy)));
         out.push_str(&format!("testbed: {}\n", testbed_key(self.testbed)));
         out.push_str(&format!("seed: {}\n", self.seed));
@@ -849,8 +907,8 @@ mod tests {
         let specs = axes.expand();
         assert_eq!(
             specs.len(),
-            58,
-            "24 static + 18 adaptive flat + 10 workflow + 6 backend-ablation scenarios"
+            68,
+            "24 static + 18 adaptive flat + 10 workflow + 6 backend-ablation + 10 chaos scenarios"
         );
         let strategies: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| strategy_key(s.strategy)).collect();
@@ -902,6 +960,27 @@ mod tests {
                 );
             }
         }
+        // The chaos slice: every fault class, as a static/adaptive pair.
+        let kinds: std::collections::BTreeSet<&str> = specs
+            .iter()
+            .filter_map(|s| s.chaos.map(chaos_key))
+            .collect();
+        assert_eq!(
+            kinds.into_iter().collect::<Vec<_>>(),
+            vec!["pcie_degrade", "server_crash", "suspend", "thermal_throttle", "vram_ballast"]
+        );
+        for kind in ChaosKind::ALL {
+            for mode in ["static", "adaptive"] {
+                assert!(
+                    specs.iter().any(|s| s.name
+                        == format!(
+                            "chaos={}/mix=chat+imagegen/policy=slo_aware/testbed=intel_server/server={mode}",
+                            chaos_key(kind)
+                        )),
+                    "missing chaos={kind}/server={mode}"
+                );
+            }
+        }
         // Names are unique (they key the report).
         let names: std::collections::BTreeSet<&str> =
             specs.iter().map(|s| s.name.as_str()).collect();
@@ -913,8 +992,9 @@ mod tests {
         let specs = MatrixAxes::full_matrix(1).expand();
         assert_eq!(
             specs.len(),
-            96 + 72 + 32 + 8 + 48,
-            "flat 96 static + 72 adaptive, workflow 32 static + 8 adaptive, 48 backend-ablation"
+            96 + 72 + 32 + 8 + 48 + 20,
+            "flat 96 static + 72 adaptive, workflow 32 static + 8 adaptive, \
+             48 backend-ablation, 20 chaos"
         );
         for spec in &specs {
             let yaml = spec.to_yaml();
@@ -993,6 +1073,39 @@ mod tests {
         };
         assert_eq!(strip(trio[0]), strip(trio[1]));
         assert_eq!(strip(trio[1]), strip(trio[2]));
+    }
+
+    #[test]
+    fn chaos_slice_emits_the_curated_block_and_nothing_else_does() {
+        let specs = MatrixAxes::default_matrix(11).expand();
+        let slice: Vec<&ScenarioSpec> = specs.iter().filter(|s| s.chaos.is_some()).collect();
+        assert_eq!(slice.len(), 10, "5 fault classes × {{static, adaptive}}");
+        for spec in &slice {
+            let yaml = spec.to_yaml();
+            let kind = spec.chaos.unwrap();
+            assert!(yaml.contains("chaos:\n"), "{}", spec.name);
+            assert!(
+                yaml.contains(&format!("  kind: {}\n", chaos_key(kind))),
+                "{}:\n{yaml}",
+                spec.name
+            );
+            // Chaos pins the rest of the axis point: slo_aware, closed
+            // arrivals, the shared server, the tuned backend.
+            assert_eq!(spec.strategy, Strategy::SloAware);
+            assert_eq!(spec.arrival, ArrivalKind::Closed);
+            assert!(!spec.backend_ablation);
+            assert!(yaml.contains("server: llama"), "{}", spec.name);
+            // The parsed config carries the kind's curated schedule.
+            let cfg = BenchConfig::parse(&yaml).unwrap();
+            assert_eq!(cfg.chaos, Some(ChaosConfig::curated(kind)), "{}", spec.name);
+        }
+        for spec in specs.iter().filter(|s| s.chaos.is_none()) {
+            assert!(
+                !spec.to_yaml().contains("chaos:"),
+                "{}: fault-free scenarios must stay fault-free",
+                spec.name
+            );
+        }
     }
 
     #[test]

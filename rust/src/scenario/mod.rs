@@ -8,9 +8,11 @@
 //! diamond, and the paper's content-creation graph) reported with
 //! end-to-end latency and critical-path attribution, plus a kernel-backend
 //! axis (tuned_native / generic_torch / fused_custom — the §6
-//! tuned-vs-generic ablation) — and executes the expanded cross-product
-//! through the regular coordinator pipeline on the deterministic
-//! simulator:
+//! tuned-vs-generic ablation), plus a chaos axis of seed-derived fault
+//! schedules (thermal throttle, VRAM ballast, suspend/resume, server
+//! crash, PCIe degradation) reported as static-vs-adaptive attainment
+//! deltas — and executes the expanded cross-product through the regular
+//! coordinator pipeline on the deterministic simulator:
 //!
 //! ```text
 //! MatrixAxes ──expand──▶ [ScenarioSpec] ──to_yaml──▶ BenchConfig
@@ -33,10 +35,10 @@ pub mod matrix;
 pub mod runner;
 
 pub use matrix::{
-    backend_key, server_mode_key, strategy_key, testbed_key, workflow_key, AppMix, ArrivalKind,
-    MatrixAxes, MixEntry, ScenarioSpec, ServerMode, WorkflowShape,
+    backend_key, chaos_key, server_mode_key, strategy_key, testbed_key, workflow_key, AppMix,
+    ArrivalKind, MatrixAxes, MixEntry, ScenarioSpec, ServerMode, WorkflowShape,
 };
 pub use runner::{
-    run_matrix, run_matrix_jobs, run_scenario, run_specs_jobs, AppOutcome, BackendRow,
+    run_matrix, run_matrix_jobs, run_scenario, run_specs_jobs, AppOutcome, BackendRow, ChaosRow,
     MatrixReport, ScenarioOutcome, WorkflowRow,
 };

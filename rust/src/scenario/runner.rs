@@ -29,8 +29,8 @@ use crate::apps::Slo;
 use crate::coordinator::{run_config_text, ScenarioResult};
 use crate::gpusim::engine::trace_digest;
 use crate::scenario::matrix::{
-    backend_key, server_mode_key, strategy_key, testbed_key, workflow_key, MatrixAxes,
-    ScenarioSpec,
+    backend_key, chaos_key, server_mode_key, strategy_key, testbed_key, workflow_key,
+    MatrixAxes, ScenarioSpec,
 };
 use crate::util::json::{json_num, json_opt_bool, json_opt_num, json_str};
 use crate::util::stats::Summary;
@@ -71,6 +71,10 @@ pub struct ScenarioOutcome {
     /// Whether the scenario belongs to the backend-ablation slice (the
     /// population `summary.backends` aggregates over).
     pub backend_ablation: bool,
+    /// Chaos axis: `none` for fault-free scenarios, otherwise the injected
+    /// fault kind (`thermal_throttle`, `vram_ballast`, `suspend`,
+    /// `server_crash`, `pcie_degrade`).
+    pub chaos: String,
     pub seed: u64,
     pub makespan: f64,
     /// End-to-end workflow latency (latest foreground-node completion).
@@ -245,6 +249,10 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
         workflow: workflow_key(spec.workflow).to_string(),
         backend: backend_key(spec.backend).to_string(),
         backend_ablation: spec.backend_ablation,
+        chaos: spec
+            .chaos
+            .map(|k| chaos_key(k).to_string())
+            .unwrap_or_else(|| "none".to_string()),
         seed: spec.seed,
         makespan: result.makespan,
         e2e_latency: result.workflow.e2e_latency,
@@ -287,6 +295,24 @@ pub struct BackendRow {
     pub mean_throughput_rps: f64,
     /// Mean per-scenario min attainment across SLO-bearing apps.
     pub mean_min_attainment: f64,
+}
+
+/// One static/adaptive pair of the chaos slice and its attainment delta —
+/// the `summary.chaos` measurement of how much runtime adaptation buys back
+/// under each injected fault class (ISSUE 6 acceptance metric).
+#[derive(Debug, Clone)]
+pub struct ChaosRow {
+    /// Injected fault kind (`thermal_throttle`, `server_crash`, …).
+    pub chaos: String,
+    /// Scenario name without the `/server=…` suffix.
+    pub base: String,
+    pub static_min_attainment: f64,
+    pub adaptive_min_attainment: f64,
+    /// adaptive − static min-attainment under the fault (positive =
+    /// adaptation recovered attainment the static config lost).
+    pub delta: f64,
+    /// Reconfigurations the adaptive run applied while faults landed.
+    pub reconfigurations: usize,
 }
 
 /// Aggregate of one (workflow shape, strategy) cell — the `summary.workflows`
@@ -420,6 +446,37 @@ impl MatrixReport {
         out
     }
 
+    /// Pair every adaptive chaos scenario with its static twin, in canonical
+    /// order. Restricted to the chaos slice — fault-free pairs are already
+    /// covered by [`MatrixReport::adaptive_deltas`], and mixing regimes
+    /// would hide what adaptation buys back specifically under faults.
+    pub fn chaos_rows(&self) -> Vec<ChaosRow> {
+        let mut out = Vec::new();
+        for s in &self.scenarios {
+            if s.chaos == "none" || s.server_mode != "adaptive" {
+                continue;
+            }
+            let base = s
+                .name
+                .strip_suffix("/server=adaptive")
+                .unwrap_or(&s.name)
+                .to_string();
+            let twin_name = format!("{base}/server=static");
+            let Some(twin) = self.scenarios.iter().find(|t| t.name == twin_name) else {
+                continue;
+            };
+            out.push(ChaosRow {
+                chaos: s.chaos.clone(),
+                base,
+                static_min_attainment: twin.min_attainment,
+                adaptive_min_attainment: s.min_attainment,
+                delta: s.min_attainment - twin.min_attainment,
+                reconfigurations: s.reconfigurations,
+            });
+        }
+        out
+    }
+
     /// Deterministic JSON rendering of the whole report.
     pub fn to_json(&self) -> String {
         let mut out = String::with_capacity(4096);
@@ -450,6 +507,7 @@ impl MatrixReport {
                 "      \"backend\": {},\n",
                 json_str(&s.backend)
             ));
+            out.push_str(&format!("      \"chaos\": {},\n", json_str(&s.chaos)));
             out.push_str(&format!(
                 "      \"reconfigurations\": {},\n",
                 s.reconfigurations
@@ -586,6 +644,21 @@ impl MatrixReport {
             ));
             out.push_str(if i + 1 < deltas.len() { ",\n" } else { "\n" });
         }
+        out.push_str("    ],\n");
+        out.push_str("    \"chaos\": [\n");
+        let c_rows = self.chaos_rows();
+        for (i, c) in c_rows.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"chaos\": {}, \"scenario\": {}, \"static_min_attainment\": {}, \"adaptive_min_attainment\": {}, \"attainment_delta\": {}, \"reconfigurations\": {}}}",
+                json_str(&c.chaos),
+                json_str(&c.base),
+                json_num(c.static_min_attainment),
+                json_num(c.adaptive_min_attainment),
+                json_num(c.delta),
+                c.reconfigurations,
+            ));
+            out.push_str(if i + 1 < c_rows.len() { ",\n" } else { "\n" });
+        }
         out.push_str("    ]\n");
         out.push_str("  }\n");
         out.push_str("}\n");
@@ -639,6 +712,7 @@ mod tests {
             workflow_strategies: vec![],
             backends: vec![],
             backend_strategies: vec![],
+            chaos: vec![],
             seed,
         }
     }
@@ -708,6 +782,8 @@ mod tests {
             pjrt_calls: 0,
             reconfigurations: 0,
             controller_actions: vec![],
+            gpu_idle_w: 0.0,
+            cpu_idle_w: 0.0,
         };
         let outcome = outcome_from(&spec, &result);
         assert_eq!(outcome.min_attainment, 0.0);
@@ -765,6 +841,7 @@ mod tests {
                 workflow: "flat".into(),
                 backend: backend.into(),
                 backend_ablation: ablation,
+                chaos: "none".into(),
                 seed: 1,
                 makespan,
                 e2e_latency: makespan,
@@ -810,6 +887,62 @@ mod tests {
         assert!(json.contains("\"backends\": ["), "{json}");
         assert!(json.contains("\"mean_throughput_rps\""), "{json}");
         assert!(json.contains("\"backend\": \"generic_torch\""), "{json}");
+    }
+
+    #[test]
+    fn chaos_rows_pair_twins_and_skip_fault_free_scenarios() {
+        // Synthetic outcomes: one chaos static/adaptive pair, one fault-free
+        // adaptive pair (must stay out of the chaos table), and one orphan
+        // chaos adaptive scenario with no twin (skipped).
+        let outcome = |name: &str, chaos: &str, mode: &str, att: f64, reconfs: usize| {
+            ScenarioOutcome {
+                name: name.into(),
+                mix: "chat+imagegen".into(),
+                strategy: "slo_aware".into(),
+                arrival: "closed".into(),
+                testbed: "intel_server".into(),
+                server_mode: mode.into(),
+                workflow: "flat".into(),
+                backend: "tuned_native".into(),
+                backend_ablation: false,
+                chaos: chaos.into(),
+                seed: 1,
+                makespan: 10.0,
+                e2e_latency: 10.0,
+                e2e_slo_met: None,
+                critical_path: String::new(),
+                trace_digest: 0,
+                min_attainment: att,
+                max_attainment: att,
+                fairness_spread: 0.0,
+                reconfigurations: reconfs,
+                apps: vec![],
+            }
+        };
+        let report = MatrixReport {
+            seed: 1,
+            scenarios: vec![
+                outcome("chaos=thermal_throttle/x/server=static", "thermal_throttle", "static", 0.4, 0),
+                outcome("chaos=thermal_throttle/x/server=adaptive", "thermal_throttle", "adaptive", 0.9, 3),
+                outcome("mix=chat/y/server=static", "none", "static", 1.0, 0),
+                outcome("mix=chat/y/server=adaptive", "none", "adaptive", 1.0, 0),
+                outcome("chaos=suspend/z/server=adaptive", "suspend", "adaptive", 0.7, 1),
+            ],
+        };
+        let rows = report.chaos_rows();
+        assert_eq!(rows.len(), 1, "only the twinned chaos pair");
+        let r = &rows[0];
+        assert_eq!(r.chaos, "thermal_throttle");
+        assert_eq!(r.base, "chaos=thermal_throttle/x");
+        assert!((r.delta - 0.5).abs() < 1e-12);
+        assert_eq!(r.reconfigurations, 3);
+        let json = report.to_json();
+        assert!(json.contains("\"chaos\": [\n"), "{json}");
+        assert!(json.contains("\"chaos\": \"thermal_throttle\""), "{json}");
+        assert!(json.contains("\"chaos\": \"none\""), "{json}");
+        // Both twinned pairs (chaos and fault-free) still show up in
+        // adaptive_vs_static; the orphan is skipped there too.
+        assert_eq!(report.adaptive_deltas().len(), 2);
     }
 
     #[test]

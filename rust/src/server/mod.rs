@@ -181,6 +181,17 @@ pub struct InferenceServer {
     reconfigurations: u64,
     /// Migrations rolled back because the target placement did not fit.
     failed_migrations: u64,
+    /// Crash + restart cycles applied (chaos `server_crash`).
+    crashes: u64,
+    /// Migration jobs orphaned by a crash: their completion must not flip
+    /// the restarted generation's placement, and an orphaned onload's KV
+    /// allocation is released when it lands.
+    stale_migrations: Vec<(JobId, KvPlacement)>,
+    /// An orphaned onload landed: its KV region awaits release on the next
+    /// pump (which holds the `&mut Engine` needed to submit the free).
+    stale_onload_reap: bool,
+    /// Effective PCIe DMA bandwidth scale in (0, 1] (chaos `pcie_degrade`).
+    dma_bw_scale: f64,
 }
 
 impl InferenceServer {
@@ -199,6 +210,10 @@ impl InferenceServer {
             pending_tuning: None,
             reconfigurations: 0,
             failed_migrations: 0,
+            crashes: 0,
+            stale_migrations: Vec::new(),
+            stale_onload_reap: false,
+            dma_bw_scale: 1.0,
         }
     }
 
@@ -229,6 +244,27 @@ impl InferenceServer {
     /// KV migrations that were rolled back (target placement OOM).
     pub fn failed_migrations(&self) -> u64 {
         self.failed_migrations
+    }
+
+    /// Crash + restart cycles this server went through.
+    pub fn crashes(&self) -> u64 {
+        self.crashes
+    }
+
+    /// Whether the startup job has run (and no crash is pending restart).
+    pub fn is_started(&self) -> bool {
+        self.started
+    }
+
+    /// Scale the effective KV-migration DMA bandwidth (chaos
+    /// `pcie_degrade`); 1.0 restores full PCIe speed. Applies to
+    /// migrations submitted from now on.
+    pub fn set_dma_bw_scale(&mut self, scale: f64) {
+        assert!(
+            scale > 0.0 && scale <= 1.0,
+            "dma bandwidth scale must be in (0, 1]: {scale}"
+        );
+        self.dma_bw_scale = scale;
     }
 
     /// Whether a requested reconfiguration has not fully landed yet (still
@@ -278,6 +314,11 @@ impl InferenceServer {
     /// Chatbot-friendly (small-window) static configuration for
     /// DeepResearch.
     pub fn enqueue(&mut self, mut request: ServerRequest, now: f64) {
+        // The output budget is clamped to the window too: a request asking
+        // for more completion tokens than the KV region is provisioned for
+        // must not decode past it (previously only the prompt was clamped,
+        // so such a request overran the window from the decode side).
+        request.output_tokens = request.output_tokens.min(self.cfg.profile.context_window);
         let budget = self
             .cfg
             .profile
@@ -291,6 +332,24 @@ impl InferenceServer {
     /// Notify the server that one of its jobs completed. Returns true if the
     /// result belonged to this server.
     pub fn on_job_done(&mut self, result: &JobResult) -> bool {
+        // Jobs orphaned by a crash belong to a dead server generation: they
+        // must not advance the restarted server's state. An orphaned
+        // *onload* that lands successfully has just allocated a KV region
+        // for that dead generation — release it. (In practice it always
+        // lands before the restarted generation's own KV allocation: the
+        // migration's DMA is milliseconds while the restart's weight load
+        // is seconds, so the labelled free can only hit the orphan.)
+        if let Some(pos) = self
+            .stale_migrations
+            .iter()
+            .position(|(id, _)| *id == result.id)
+        {
+            let (_, target) = self.stale_migrations.swap_remove(pos);
+            if target == KvPlacement::Gpu && result.error.is_none() {
+                self.stale_onload_reap = true;
+            }
+            return true;
+        }
         match self.inflight {
             Some(Inflight::Iteration(id)) if id == result.id => {
                 self.inflight = None;
@@ -389,7 +448,7 @@ impl InferenceServer {
             .sum();
         let moved = (m.kv_bytes_per_token * live_tokens as u64).min(region);
         let dma = KV_DMA_LATENCY * m.backend.kv_migration_latency_mult()
-            + moved as f64 / KV_DMA_BW;
+            + moved as f64 / (KV_DMA_BW * self.dma_bw_scale);
         let (tag, ops) = match target {
             KvPlacement::Gpu => (
                 "server.kv_onload",
@@ -420,6 +479,23 @@ impl InferenceServer {
         if !self.started {
             return;
         }
+        if self.stale_onload_reap {
+            // Release the KV region an orphaned (pre-crash) onload just
+            // allocated. Submitted here because only pump holds the engine;
+            // it lands long before the restarted generation's own KV
+            // allocation (weight reload is seconds, this is immediate).
+            self.stale_onload_reap = false;
+            engine.submit(
+                JobSpec {
+                    client: self.client,
+                    label: "server.reap".into(),
+                    phases: vec![Phase::host("server.reap", 0.0).with_mem_ops(vec![MemOp::Free {
+                        label: "kv-cache".into(),
+                    }])],
+                },
+                now,
+            );
+        }
         self.try_apply_tuning(engine, now);
         if self.inflight.is_some() {
             return;
@@ -430,6 +506,48 @@ impl InferenceServer {
             self.inflight = Some(Inflight::Iteration(id));
             self.iteration_count += 1;
         }
+    }
+
+    /// Crash the server mid-batch and restart it (chaos `server_crash`).
+    /// The in-flight unified batch is dropped — its engine job becomes an
+    /// orphan whose completion is ignored — occupied slots' requests go
+    /// back to the *front* of the queue in slot order with their original
+    /// submit timestamps (all prefill/decode progress is lost while latency
+    /// keeps accruing), every VRAM region the server held is freed, and
+    /// `start()` runs again so the weights reload under the current tuning.
+    /// Returns the restart job, or `None` if the server never started.
+    pub fn crash(&mut self, engine: &mut Engine, at: f64) -> Option<JobId> {
+        if !self.started {
+            return None;
+        }
+        match self.inflight.take() {
+            Some(Inflight::Migration(id, target)) => {
+                self.stale_migrations.push((id, target));
+            }
+            // An orphaned iteration has no mem ops; its completion is
+            // simply not ours anymore (`on_job_done` returns false).
+            Some(Inflight::Iteration(_)) | None => {}
+        }
+        self.pending_advance = None;
+        self.pending_tuning = None;
+        let occupied: Vec<Slot> = self.slots.iter_mut().filter_map(|s| s.take()).collect();
+        for s in occupied.into_iter().rev() {
+            self.queue.push_front((s.request, s.submit));
+        }
+        self.slots = (0..self.cfg.tuning.n_slots).map(|_| None).collect();
+        self.crashes += 1;
+        // The release is submitted before the restart so it is processed
+        // first at the same timestamp (lower engine sequence number).
+        engine.submit(
+            JobSpec {
+                client: self.client,
+                label: "server.crash".into(),
+                phases: vec![Phase::host("server.crash", 0.0).with_mem_ops(vec![MemOp::FreeAll])],
+            },
+            at,
+        );
+        self.started = false;
+        Some(self.start(engine, at))
     }
 
     /// True when no queued work, no active slots, nothing in flight, and no
@@ -985,6 +1103,116 @@ mod tests {
         assert_eq!(ids, (0..8).collect::<Vec<u64>>());
         assert!(s.idle());
         assert_eq!(s.tuning().n_slots, 1);
+    }
+
+    #[test]
+    fn enqueue_clamps_output_tokens_to_the_context_window() {
+        let mut cfg = ServerConfig::kv_gpu(llama_3_2_3b());
+        cfg.profile.context_window = 64;
+        let (mut e, mut s) = setup(cfg);
+        s.enqueue(
+            ServerRequest { id: 0, app: "Chatbot", prompt_tokens: 128, output_tokens: 1000 },
+            e.now(),
+        );
+        run_server_to_idle(&mut e, &mut s);
+        let rs = s.take_responses();
+        assert_eq!(rs.len(), 1);
+        let r = &rs[0];
+        assert!(
+            r.output_tokens <= 64,
+            "decode must not exceed the provisioned window: {}",
+            r.output_tokens
+        );
+        assert_eq!(r.prompt_tokens, 16, "prompt squeezed to the floor");
+    }
+
+    #[test]
+    fn crash_mid_batch_requeues_slots_and_restarts() {
+        let (mut e, mut s) = setup(ServerConfig::kv_gpu(llama_3_2_3b()));
+        let vram_started = e.vram().used();
+        for i in 0..6 {
+            s.enqueue(
+                ServerRequest { id: i, app: "Chatbot", prompt_tokens: 700, output_tokens: 24 },
+                e.now(),
+            );
+        }
+        // A few iterations in flight, then the server process dies.
+        for _ in 0..3 {
+            s.pump(&mut e, e.now());
+            let t = e.next_event_time().unwrap();
+            e.run_until(t);
+            for r in e.take_completed() {
+                s.on_job_done(&r);
+            }
+        }
+        assert!(s.active_slots() > 0, "setup: slots mid-flight");
+        let restart = s.crash(&mut e, e.now());
+        assert!(restart.is_some());
+        assert_eq!(s.crashes(), 1);
+        assert_eq!(s.active_slots(), 0, "slots drained back to the queue");
+        run_server_to_idle(&mut e, &mut s);
+        let responses = s.take_responses();
+        assert_eq!(responses.len(), 6, "no request lost or duplicated");
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<u64>>());
+        assert_eq!(
+            e.vram().used(),
+            vram_started,
+            "crash freed everything; restart re-allocated exactly once"
+        );
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn crash_on_a_stopped_server_is_a_no_op() {
+        let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let c = e.register_client("llama-server");
+        let mut s = InferenceServer::new(ServerConfig::kv_gpu(llama_3_2_3b()), c);
+        assert!(s.crash(&mut e, 0.0).is_none());
+        assert_eq!(s.crashes(), 0);
+    }
+
+    #[test]
+    fn degraded_pcie_slows_kv_migration() {
+        let migrate_time = |scale: f64| {
+            let (mut e, mut s) = setup(ServerConfig::kv_gpu(llama_3_2_3b()));
+            s.set_dma_bw_scale(scale);
+            s.enqueue(
+                ServerRequest { id: 0, app: "Chatbot", prompt_tokens: 2000, output_tokens: 64 },
+                e.now(),
+            );
+            // A few iterations so live KV cells exist to move.
+            for _ in 0..4 {
+                s.pump(&mut e, e.now());
+                let t = e.next_event_time().unwrap();
+                e.run_until(t);
+                for r in e.take_completed() {
+                    s.on_job_done(&r);
+                }
+            }
+            let t0 = e.now();
+            s.reconfigure(
+                &mut e,
+                e.now(),
+                ServerTuning { kv_placement: KvPlacement::Cpu, ..s.tuning() },
+            );
+            while s.tuning().kv_placement != KvPlacement::Cpu {
+                s.pump(&mut e, e.now());
+                let t = e.next_event_time().expect("migration must land");
+                e.run_until(t);
+                for r in e.take_completed() {
+                    s.on_job_done(&r);
+                }
+            }
+            e.now() - t0
+        };
+        let full = migrate_time(1.0);
+        let degraded = migrate_time(0.1);
+        assert!(
+            degraded > full,
+            "a degraded link must slow the migration: {degraded} vs {full}"
+        );
     }
 
     #[test]

@@ -125,6 +125,7 @@ fn adaptive_axes(seed: u64) -> MatrixAxes {
     axes.arrivals.truncate(1);
     axes.workflows.clear();
     axes.backends.clear();
+    axes.chaos.clear();
     axes
 }
 

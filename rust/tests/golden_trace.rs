@@ -90,6 +90,7 @@ fn matrix_report_is_byte_identical_across_runs() {
         a.mixes.truncate(1);
         a.workflows.clear();
         a.backends.clear();
+        a.chaos.clear();
         a
     };
     let j1 = run_matrix(&axes()).unwrap().to_json();
@@ -210,6 +211,47 @@ fn content_creation_greedy_starves_text_branch_slo_aware_shortens_e2e() {
         "slo_aware must shorten e2e: {} vs {}",
         aware.e2e_latency,
         greedy.e2e_latency
+    );
+}
+
+/// ISSUE 6 golden chaos ablation: under an injected fault regime the static
+/// server configuration loses tight-SLO attainment that the adaptive
+/// controller wins back — for at least one of the disruptive fault classes
+/// (thermal throttle's clock-capped kernels, server crash's dropped
+/// batches), adaptive must strictly beat static on min attainment.
+#[test]
+fn chaos_ablation_adaptive_recovers_attainment_static_loses() {
+    let spec = |kind: &str, mode: &str| {
+        MatrixAxes::default_matrix(42)
+            .expand()
+            .into_iter()
+            .find(|s| {
+                s.name
+                    == format!(
+                        "chaos={kind}/mix=chat+imagegen/policy=slo_aware/testbed=intel_server/server={mode}"
+                    )
+            })
+            .expect("chaos spec in the default matrix")
+    };
+    let mut best_delta = f64::NEG_INFINITY;
+    for kind in ["thermal_throttle", "server_crash"] {
+        let stat = run_scenario(&spec(kind, "static")).unwrap();
+        let adap = run_scenario(&spec(kind, "adaptive")).unwrap();
+        // Faulted scenarios still run to completion: every request is
+        // served despite throttling windows or mid-batch crashes.
+        for r in [&stat, &adap] {
+            let total: usize = r.apps.iter().map(|a| a.requests).sum();
+            assert!(total > 0, "{}: no requests ran", r.name);
+            for a in &r.apps {
+                assert!(a.failed.is_none(), "{}: {} failed: {:?}", r.name, a.node, a.failed);
+            }
+        }
+        best_delta = best_delta.max(adap.min_attainment - stat.min_attainment);
+    }
+    assert!(
+        best_delta > 0.0,
+        "adaptive must strictly beat static under at least one fault class \
+         (best attainment delta: {best_delta})"
     );
 }
 

@@ -9,9 +9,9 @@
 //! critical-path and e2e columns are part of the report bytes); the
 //! backend-ablation slice has its own suite in `tests/backend_ablation.rs`.
 //! The last test pins the acceptance path end-to-end through the CLI on
-//! the full 256-scenario sweep (96 static + 72 adaptive flat, 32 static +
-//! 8 adaptive workflow, 48 backend-ablation — reconfiguration events are
-//! part of the pinned digests).
+//! the full 276-scenario sweep (96 static + 72 adaptive flat, 32 static +
+//! 8 adaptive workflow, 48 backend-ablation, 20 chaos — reconfiguration
+//! and fault events are part of the pinned digests).
 
 use consumerbench::cli::run_cli;
 use consumerbench::scenario::{run_matrix_jobs, run_specs_jobs, MatrixAxes};
@@ -25,6 +25,7 @@ fn small_axes(seed: u64) -> MatrixAxes {
     axes.mixes.truncate(2);
     axes.workflows.clear();
     axes.backends.clear();
+    axes.chaos.clear();
     axes
 }
 
@@ -133,8 +134,8 @@ fn cli_full_sweep_byte_identical_across_jobs() {
     );
     let text = String::from_utf8(reports[0].clone()).unwrap();
     assert!(
-        text.contains("\"num_scenarios\": 256"),
-        "full sweep is 168 flat + 40 workflow + 48 backend-ablation scenarios"
+        text.contains("\"num_scenarios\": 276"),
+        "full sweep is 168 flat + 40 workflow + 48 backend-ablation + 20 chaos scenarios"
     );
     assert!(text.contains("\"testbed\": \"macbook_m1_pro\""));
     assert!(text.contains("\"server_mode\": \"adaptive\""));
@@ -142,4 +143,6 @@ fn cli_full_sweep_byte_identical_across_jobs() {
     assert!(text.contains("workflow=content_creation/policy=partition"));
     assert!(text.contains("backend=generic_torch/mix=chat+imagegen/policy=slo_aware"));
     assert!(text.contains("\"backends\": ["));
+    assert!(text.contains("chaos=vram_ballast/mix=chat+imagegen/policy=slo_aware/testbed=macbook_m1_pro"));
+    assert!(text.contains("\"chaos\": ["));
 }

@@ -10,7 +10,7 @@
 use consumerbench::apps::models::llama_3_2_3b;
 use consumerbench::coordinator::config::WorkflowNodeConfig;
 use consumerbench::coordinator::Dag;
-use consumerbench::gpusim::engine::{CpuWork, Engine, JobSpec, Phase};
+use consumerbench::gpusim::engine::{CpuWork, Engine, JobSpec, MemOp, Phase};
 use consumerbench::gpusim::kernel::{occupancy, KernelDesc};
 use consumerbench::gpusim::policy::{Policy, ReadyKernel};
 use consumerbench::gpusim::profiles::{rtx6000, Testbed};
@@ -579,4 +579,141 @@ fn prop_reconfigure_never_loses_or_duplicates_requests() {
         );
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// Chaos injection: VRAM conservation under failures + replay determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_vram_conserved_after_randomized_mem_op_failures() {
+    // Jobs carry multi-op alloc phases sized so that some of them OOM
+    // mid-application: the engine's rollback must make every phase
+    // all-or-nothing, and the allocator's books must balance regardless of
+    // which jobs failed.
+    check("vram-conservation-chaos", 0x4A, 60, |g| {
+        let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
+        let a = e.register_client("a");
+        let b = e.register_client("b");
+        let cap = e.vram().capacity();
+        let n_jobs = g.usize(4, 13);
+        // Per job: (mem labels+bytes, whether a second phase frees them).
+        let mut plans: Vec<(Vec<(String, u64)>, bool)> = Vec::new();
+        for i in 0..n_jobs {
+            let n_ops = g.usize(1, 4);
+            let ops: Vec<(String, u64)> = (0..n_ops)
+                .map(|k| (format!("j{i}.{k}"), g.u64(cap / 16, cap / 3)))
+                .collect();
+            let frees = g.bool();
+            let mut phases = vec![Phase::host("prop.alloc", 0.0).with_mem_ops(
+                ops.iter()
+                    .map(|(label, bytes)| MemOp::Alloc {
+                        label: label.clone(),
+                        bytes: *bytes,
+                    })
+                    .collect(),
+            )];
+            if frees {
+                phases.push(Phase::host("prop.free", 0.001).with_mem_ops(
+                    ops.iter()
+                        .map(|(label, _)| MemOp::Free {
+                            label: label.clone(),
+                        })
+                        .collect(),
+                ));
+            }
+            e.submit(
+                JobSpec {
+                    client: if g.bool() { a } else { b },
+                    label: format!("j{i}"),
+                    phases,
+                },
+                g.f64(0.0, 0.5),
+            );
+            plans.push((ops, frees));
+        }
+        e.run_all();
+        let done = e.take_completed();
+        prop_assert!(done.len() == n_jobs, "{} of {n_jobs} jobs ran", done.len());
+        let inv = e.vram().inventory();
+        let inv_sum: u64 = inv.iter().map(|(_, _, bytes)| *bytes).sum();
+        prop_assert!(
+            inv_sum == e.vram().used(),
+            "inventory {} != used {}",
+            inv_sum,
+            e.vram().used()
+        );
+        let by_client = e.vram().used_by("a") + e.vram().used_by("b");
+        prop_assert!(
+            by_client == e.vram().used(),
+            "per-client sums {} != used {}",
+            by_client,
+            e.vram().used()
+        );
+        // Every job's allocations are all-or-nothing: a failed job leaves
+        // no partial allocation behind, a successful one that never freed
+        // keeps exactly what it asked for.
+        for r in &done {
+            let i: usize = r.label[1..].parse().unwrap();
+            let (ops, frees) = &plans[i];
+            let live: Vec<&(String, String, u64)> = inv
+                .iter()
+                .filter(|(_, label, _)| label.starts_with(&format!("j{i}.")))
+                .collect();
+            if r.error.is_some() || *frees {
+                prop_assert!(
+                    live.is_empty(),
+                    "job j{i} (failed={}, frees={frees}) leaked {live:?}",
+                    r.error.is_some()
+                );
+            } else {
+                let want: u64 = ops.iter().map(|(_, bytes)| *bytes).sum();
+                let got: u64 = live.iter().map(|(_, _, bytes)| *bytes).sum();
+                prop_assert!(
+                    live.len() == ops.len() && got == want,
+                    "job j{i} holds {got} of {want} bytes in {} of {} allocations",
+                    live.len(),
+                    ops.len()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chaos_slice_replays_byte_identically_and_diverges_with_seed() {
+    use consumerbench::scenario::{run_specs_jobs, MatrixAxes, MatrixReport, ScenarioSpec};
+    let chaos_specs = |seed: u64| -> Vec<ScenarioSpec> {
+        MatrixAxes::default_matrix(seed)
+            .expand()
+            .into_iter()
+            .filter(|s| s.name.starts_with("chaos="))
+            .collect()
+    };
+    let specs = chaos_specs(42);
+    assert_eq!(specs.len(), 10, "5 fault classes x static/adaptive");
+    let base = run_specs_jobs(&specs, 42, 1).unwrap();
+    let json = base.to_json();
+    // Same seed: byte-identical across a repeat and across worker counts.
+    assert_eq!(
+        json,
+        run_specs_jobs(&specs, 42, 1).unwrap().to_json(),
+        "chaos replay must be deterministic"
+    );
+    assert_eq!(
+        json,
+        run_specs_jobs(&specs, 42, 4).unwrap().to_json(),
+        "worker count must not change the fault schedule"
+    );
+    // Different seed: the fault schedule (and hence the traces) diverge.
+    let digests = |r: &MatrixReport| -> Vec<u64> {
+        r.scenarios.iter().map(|s| s.trace_digest).collect()
+    };
+    let other = run_specs_jobs(&chaos_specs(7), 7, 4).unwrap();
+    assert_ne!(
+        digests(&base),
+        digests(&other),
+        "a different seed must produce different fault timings"
+    );
 }

@@ -140,6 +140,8 @@ seed: 42
         &result.trace,
         &result.client_names,
         consumerbench::monitor::DEFAULT_INTERVAL,
+        result.gpu_idle_w,
+        result.cpu_idle_w,
     );
     assert!(mon.gpu_power.max() <= 31.0, "peak {}", mon.gpu_power.max());
 }
