@@ -7,6 +7,9 @@
 //! consumerbench validate <config.yaml>
 //! consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--backend KEY]
 //!                        [--chaos KEY] [--out FILE] [--full] [--list] [--dump DIR]
+//!                        [--fail-fast] [--journal FILE [--resume]]
+//!                        [--watchdog-secs N] [--inject-panic SUBSTR]
+//!                        [--inject-error SUBSTR]
 //! consumerbench apps
 //! consumerbench help
 //! ```
@@ -14,11 +17,14 @@
 use anyhow::{bail, Context, Result};
 
 use crate::apps::{Application, Chatbot, DeepResearch, ImageGen, LiveCaptions};
+use crate::coordinator::config::InjectFailure;
 use crate::coordinator::{generate, to_csv, to_json_summary, BenchConfig, Dag, ScenarioRunner};
 use crate::gpusim::backend::KernelBackend;
 use crate::gpusim::chaos::ChaosKind;
 use crate::runtime::Runtime;
-use crate::scenario::{backend_key, chaos_key, run_specs_jobs, MatrixAxes, ScenarioSpec};
+use crate::scenario::{
+    backend_key, chaos_key, run_specs_supervised, MatrixAxes, ScenarioSpec, SweepOptions,
+};
 
 const USAGE: &str = "\
 ConsumerBench — benchmarking generative AI applications on end-user devices
@@ -28,6 +34,9 @@ USAGE:
     consumerbench validate <config.yaml>
     consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--backend KEY]
                            [--chaos KEY] [--out FILE] [--full] [--list] [--dump DIR]
+                           [--fail-fast] [--journal FILE [--resume]]
+                           [--watchdog-secs N] [--inject-panic SUBSTR]
+                           [--inject-error SUBSTR]
     consumerbench apps
     consumerbench help
 
@@ -68,6 +77,21 @@ OPTIONS (scenario):
                       scenarios
     --list            Print scenario names without running anything
     --dump DIR        Write each expanded scenario config as YAML into DIR
+    --fail-fast       Abort the sweep on the first non-ok scenario (legacy
+                      semantics) instead of quarantining it and continuing;
+                      no report is written on abort
+    --journal FILE    Append every terminal outcome to FILE as a JSONL
+                      checkpoint, keyed by (scenario name, seed, spec digest)
+    --resume          Prefill completed scenarios from --journal and execute
+                      only the rest; the report is byte-identical to an
+                      uninterrupted run at any --jobs
+    --watchdog-secs N Wall-clock watchdog per scenario attempt (defense in
+                      depth only; timeout rows are host-dependent and never
+                      journaled or digested)
+    --inject-panic SUBSTR  Testing hook: panic at run start in scenarios
+                      whose name contains SUBSTR
+    --inject-error SUBSTR  Testing hook: fail at run start in scenarios
+                      whose name contains SUBSTR
 ";
 
 /// Entry point used by `main.rs`.
@@ -163,6 +187,18 @@ struct ScenarioOpts {
     full: bool,
     list: bool,
     dump: Option<String>,
+    /// Abort on the first non-`ok` scenario instead of quarantining it.
+    fail_fast: bool,
+    /// JSONL checkpoint path (`--journal`).
+    journal: Option<String>,
+    /// Prefill completed scenarios from the journal (`--resume`).
+    resume: bool,
+    /// Wall-clock watchdog per scenario attempt, in seconds.
+    watchdog_secs: Option<u64>,
+    /// Testing hook: panic inside name-matching scenarios.
+    inject_panic: Option<String>,
+    /// Testing hook: fail name-matching scenarios.
+    inject_error: Option<String>,
 }
 
 fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
@@ -235,8 +271,55 @@ fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
                 opts.list = true;
                 i += 1;
             }
+            "--fail-fast" => {
+                opts.fail_fast = true;
+                i += 1;
+            }
+            "--journal" => {
+                opts.journal = Some(
+                    args.get(i + 1)
+                        .context("--journal requires a value")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--resume" => {
+                opts.resume = true;
+                i += 1;
+            }
+            "--watchdog-secs" => {
+                let secs: u64 = args
+                    .get(i + 1)
+                    .context("--watchdog-secs requires a value")?
+                    .parse()
+                    .context("--watchdog-secs must be an integer")?;
+                if secs == 0 {
+                    bail!("--watchdog-secs must be >= 1");
+                }
+                opts.watchdog_secs = Some(secs);
+                i += 2;
+            }
+            "--inject-panic" => {
+                opts.inject_panic = Some(
+                    args.get(i + 1)
+                        .context("--inject-panic requires a value")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--inject-error" => {
+                opts.inject_error = Some(
+                    args.get(i + 1)
+                        .context("--inject-error requires a value")?
+                        .clone(),
+                );
+                i += 2;
+            }
             other => bail!("unknown option `{other}`"),
         }
+    }
+    if opts.resume && opts.journal.is_none() {
+        bail!("--resume requires --journal");
     }
     Ok(opts)
 }
@@ -272,6 +355,23 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
             );
         }
     }
+    for (flag, substr, mode) in [
+        ("--inject-panic", &opts.inject_panic, InjectFailure::Panic),
+        ("--inject-error", &opts.inject_error, InjectFailure::Error),
+    ] {
+        if let Some(substr) = substr {
+            let mut hits = 0;
+            for spec in specs.iter_mut() {
+                if spec.name.contains(substr.as_str()) {
+                    spec.inject_failure = Some(mode);
+                    hits += 1;
+                }
+            }
+            if hits == 0 {
+                bail!("{flag} `{substr}` matches no scenario (try `scenario --list`)");
+            }
+        }
+    }
     if opts.list {
         for spec in &specs {
             writeln!(out, "{}", spec.name)?;
@@ -301,7 +401,34 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
         opts.seed,
         jobs
     )?;
-    let report = run_specs_jobs(&specs, opts.seed, jobs)?;
+    let sweep = SweepOptions {
+        jobs,
+        fail_fast: opts.fail_fast,
+        watchdog: opts.watchdog_secs.map(std::time::Duration::from_secs),
+        journal: opts.journal.as_ref().map(std::path::PathBuf::from),
+        resume: opts.resume,
+    };
+    let report = run_specs_supervised(&specs, opts.seed, &sweep)?;
+    let quarantined = report
+        .scenarios
+        .iter()
+        .filter(|s| !s.status.is_ok())
+        .count();
+    if opts.fail_fast && quarantined > 0 {
+        // Legacy abort semantics: surface the lowest-index failure and
+        // write no report.
+        let first = report
+            .scenarios
+            .iter()
+            .find(|s| !s.status.is_ok())
+            .expect("counted a non-ok row");
+        bail!(
+            "scenario `{}` {}: {}",
+            first.name,
+            first.status.key(),
+            first.error.as_deref().unwrap_or("aborted")
+        );
+    }
     write!(out, "{}", report.summary_table())?;
     writeln!(
         out,
@@ -315,6 +442,14 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
             writeln!(out, "wrote JSON report to {path}")?;
         }
         None => write!(out, "{json}")?,
+    }
+    if quarantined > 0 {
+        // The report is complete and written; the sweep itself still did
+        // not fully succeed, so exit nonzero.
+        bail!(
+            "{quarantined} of {} scenarios did not complete (see summary.failures)",
+            report.scenarios.len()
+        );
     }
     Ok(())
 }
@@ -682,5 +817,67 @@ mod tests {
         // A valid jobs value parses (use --list so nothing executes).
         let (r, out) = run(&["scenario", "--jobs", "4", "--list"]);
         assert!(r.is_ok(), "{out}");
+    }
+
+    #[test]
+    fn scenario_supervision_flags_validated() {
+        let (r, _) = run(&["scenario", "--resume"]);
+        assert!(r.is_err(), "--resume without --journal must be rejected");
+        let (r, _) = run(&["scenario", "--journal"]);
+        assert!(r.is_err(), "--journal without a value must be rejected");
+        let (r, _) = run(&["scenario", "--watchdog-secs", "0"]);
+        assert!(r.is_err());
+        let (r, _) = run(&["scenario", "--watchdog-secs", "soon"]);
+        assert!(r.is_err());
+        let (r, _) = run(&["scenario", "--inject-panic"]);
+        assert!(r.is_err(), "--inject-panic without a value must be rejected");
+        // An injection substring that matches nothing is an error, not a
+        // silently fault-free sweep.
+        let (r, _) = run(&["scenario", "--list", "--inject-panic", "mix=nonexistent"]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn scenario_injected_failure_quarantines_and_exits_nonzero() {
+        let dir = std::env::temp_dir().join("cb_scenario_inject");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json_path = dir.join("report.json");
+        let (r, out) = run(&[
+            "scenario",
+            "--filter",
+            "mix=chat/policy=greedy/arrival=closed/testbed=intel_server",
+            "--inject-panic",
+            "server=static",
+            "--out",
+            json_path.to_str().unwrap(),
+        ]);
+        assert!(r.is_err(), "a quarantined row must exit nonzero: {out}");
+        // The report is still written, with the sibling completed and the
+        // failure taxonomized.
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        assert!(json.contains("\"status\": \"panicked\""), "{json}");
+        assert!(json.contains("\"status\": \"ok\""), "sibling completed: {json}");
+        assert!(json.contains("\"failures\": {"), "{json}");
+        assert!(json.contains("\"panicked\": 1"), "{json}");
+    }
+
+    #[test]
+    fn scenario_fail_fast_aborts_without_a_report() {
+        let dir = std::env::temp_dir().join("cb_scenario_failfast");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let json_path = dir.join("report.json");
+        let (r, _) = run(&[
+            "scenario",
+            "--filter",
+            "mix=chat/policy=greedy/arrival=closed/testbed=intel_server",
+            "--inject-error",
+            "server=static",
+            "--fail-fast",
+            "--out",
+            json_path.to_str().unwrap(),
+        ]);
+        assert!(r.is_err(), "fail-fast must abort with an error");
+        assert!(!json_path.exists(), "fail-fast must not write a report");
     }
 }

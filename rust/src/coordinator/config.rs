@@ -167,6 +167,18 @@ pub enum TestbedKind {
     MacbookM1Pro,
 }
 
+/// Supervision-test fault hook (`inject_failure:` key): make the executor
+/// fail *deterministically* at run start, before any virtual time elapses.
+/// Exists so sweep-resilience tests and CI can exercise panic isolation and
+/// quarantine without contriving a genuinely broken workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectFailure {
+    /// `panic!` inside the executor (exercises `catch_unwind` isolation).
+    Panic,
+    /// Return an ordinary `Err` from the executor.
+    Error,
+}
+
 /// The full parsed benchmark configuration.
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
@@ -186,6 +198,16 @@ pub struct BenchConfig {
     /// Deterministic fault injection (`chaos:` block). `None` = no faults,
     /// the pre-chaos behaviour of every existing config.
     pub chaos: Option<ChaosConfig>,
+    /// Deterministic event budget (`budget_events:` key): the executor
+    /// aborts with a typed `BudgetExhausted` error once the engine has
+    /// processed this many events. `None` → the built-in default. A pure
+    /// function of the config, so exhaustion is digest-stable.
+    pub budget_events: Option<u64>,
+    /// Deterministic virtual-time budget in seconds
+    /// (`budget_virtual_time:` key). `None` → the built-in default.
+    pub budget_virtual_time: Option<f64>,
+    /// Supervision-test fault hook (`inject_failure: panic|error`).
+    pub inject_failure: Option<InjectFailure>,
 }
 
 impl BenchConfig {
@@ -201,6 +223,9 @@ impl BenchConfig {
         let mut controller = None;
         let mut workflow_slo = None;
         let mut chaos = None;
+        let mut budget_events = None;
+        let mut budget_virtual_time = None;
+        let mut inject_failure = None;
 
         for key in root.keys() {
             let value = root.get(key).unwrap();
@@ -215,6 +240,28 @@ impl BenchConfig {
                         bail!("workflow_slo must be > 0");
                     }
                     workflow_slo = Some(bound);
+                }
+                "budget_events" => {
+                    let n = value.as_i64().context("budget_events must be an integer")?;
+                    if n <= 0 {
+                        bail!("budget_events must be > 0");
+                    }
+                    budget_events = Some(n as u64);
+                }
+                "budget_virtual_time" => {
+                    let t = parse_duration_value("budget_virtual_time", value)?;
+                    if t <= 0.0 {
+                        bail!("budget_virtual_time must be > 0");
+                    }
+                    budget_virtual_time = Some(t);
+                }
+                "inject_failure" => {
+                    let s = value.as_str().context("inject_failure must be a string")?;
+                    inject_failure = Some(match s {
+                        "panic" => InjectFailure::Panic,
+                        "error" => InjectFailure::Error,
+                        other => bail!("unknown inject_failure `{other}` (panic | error)"),
+                    });
                 }
                 "strategy" => {
                     let s = value.as_str().context("strategy must be a string")?;
@@ -261,6 +308,9 @@ impl BenchConfig {
             controller,
             workflow_slo,
             chaos,
+            budget_events,
+            budget_virtual_time,
+            inject_failure,
         };
         cfg.validate()?;
         Ok(cfg)

@@ -19,11 +19,13 @@ use crate::apps::{
     ImageGen, LiveCaptions, RequestMetrics, Slo,
 };
 use crate::apps::models::{llama_3_1_8b, llama_3_2_3b};
-use crate::coordinator::config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
+use crate::coordinator::config::{
+    AppType, ArrivalSpec, BenchConfig, InjectFailure, Strategy, TestbedKind,
+};
 use crate::coordinator::controller::{Controller, ControllerAction, Observation, ServerView};
 use crate::coordinator::dag::{Dag, NodeId};
 use crate::gpusim::chaos::{FaultAction, FaultEvent, FaultSchedule};
-use crate::gpusim::engine::{Engine, JobId, JobResult, JobSpec, MemOp, Phase, Trace};
+use crate::gpusim::engine::{BudgetExhausted, Engine, JobId, JobResult, JobSpec, MemOp, Phase, Trace};
 use crate::gpusim::kernel::Device;
 use crate::gpusim::policy::Policy;
 use crate::gpusim::profiles::Testbed;
@@ -92,6 +94,40 @@ struct ServerRuntime {
 /// stops scheduling ticks (so a genuinely stalled workflow still trips the
 /// executor's deadlock detection instead of ticking forever).
 const CONTROLLER_MAX_IDLE_EPOCHS: u32 = 10_000;
+
+/// Default deterministic event budget: the largest default-matrix scenario
+/// processes a few million engine events, so 50M is two orders of headroom
+/// while still converting an accidental livelock into a typed, digestable
+/// failure instead of a hang. Override per-config via `budget_events:`.
+pub const DEFAULT_EVENT_BUDGET: u64 = 50_000_000;
+
+/// Default virtual-time horizon (seconds): no curated scenario runs past a
+/// few virtual hours; ~11.6 virtual days means only a genuinely divergent
+/// timeline trips it. Override per-config via `budget_virtual_time:`.
+pub const DEFAULT_VIRTUAL_TIME_BUDGET: f64 = 1_000_000.0;
+
+/// Watchdog iteration stride: the wall clock is sampled once per this many
+/// main-loop iterations, keeping the (nondeterministic) `Instant::now` call
+/// off the per-event hot path.
+const WATCHDOG_STRIDE: u64 = 1024;
+
+/// Typed error for the wall-clock watchdog — defense-in-depth behind the
+/// deterministic budgets. Host-dependent, so supervision layers must mark
+/// these outcomes `timeout` and keep them out of golden digests; the
+/// message deliberately carries only the configured limit, never elapsed
+/// time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WallClockTimeout {
+    pub limit_secs: u64,
+}
+
+impl std::fmt::Display for WallClockTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wall-clock watchdog fired (limit {}s)", self.limit_secs)
+    }
+}
+
+impl std::error::Error for WallClockTimeout {}
 
 /// Runtime state of deterministic fault injection: the pre-generated
 /// schedule, plus the engine client its transition jobs (and ballast
@@ -357,6 +393,15 @@ pub struct ScenarioRunner {
     pjrt_calls: usize,
     seed: u64,
     workflow_slo: Option<f64>,
+    /// Deterministic virtual-time horizon (config or default); exceeding it
+    /// returns `BudgetExhausted::VirtualTime`.
+    virtual_time_budget: f64,
+    /// Wall-clock watchdog: `(deadline, configured limit)`. Never set from
+    /// the config — only supervision layers install it, and its outcomes
+    /// are excluded from golden digests.
+    deadline: Option<(std::time::Instant, u64)>,
+    /// Supervision-test fault hook (`inject_failure:` key).
+    inject: Option<InjectFailure>,
 }
 
 impl ScenarioRunner {
@@ -498,6 +543,10 @@ impl ScenarioRunner {
             events: FaultSchedule::generate(spec, cfg.seed).events,
         });
 
+        // Deterministic budgets: pure functions of the config, so a
+        // budget-exhausted scenario fails identically on every host.
+        engine.set_event_budget(Some(cfg.budget_events.unwrap_or(DEFAULT_EVENT_BUDGET)));
+
         Ok(ScenarioRunner {
             engine,
             dag,
@@ -511,11 +560,34 @@ impl ScenarioRunner {
             pjrt_calls: 0,
             seed: cfg.seed,
             workflow_slo: cfg.workflow_slo,
+            virtual_time_budget: cfg.budget_virtual_time.unwrap_or(DEFAULT_VIRTUAL_TIME_BUDGET),
+            deadline: None,
+            inject: cfg.inject_failure,
         })
+    }
+
+    /// Arm the wall-clock watchdog: `run` fails with [`WallClockTimeout`]
+    /// once this much host time elapses (checked every [`WATCHDOG_STRIDE`]
+    /// loop iterations — defense-in-depth, not a precise limit).
+    pub fn with_watchdog(mut self, timeout: std::time::Duration) -> Self {
+        self.deadline = Some((
+            std::time::Instant::now() + timeout,
+            timeout.as_secs().max(1),
+        ));
+        self
     }
 
     /// Run the workflow to completion and produce the scenario result.
     pub fn run(mut self) -> Result<ScenarioResult> {
+        // Supervision-test fault hook: fail before any virtual time elapses
+        // so the outcome is trivially deterministic.
+        match self.inject {
+            Some(InjectFailure::Panic) => panic!("injected failure (inject_failure: panic)"),
+            Some(InjectFailure::Error) => {
+                anyhow::bail!("injected failure (inject_failure: error)")
+            }
+            None => {}
+        }
         // Start servers and root nodes at t = 0.
         for s in &mut self.servers {
             s.server.start(&mut self.engine, 0.0);
@@ -531,12 +603,18 @@ impl ScenarioRunner {
         // scheduled past workflow completion simply never execute.
         self.submit_chaos_jobs();
 
-        // Main loop: advance virtual time event by event.
-        let mut guard = 0u64;
+        // Main loop: advance virtual time event by event. Runaway scenarios
+        // are cut off by the deterministic budgets (event count inside
+        // `run_until_budgeted`, virtual-time horizon below) so the failure
+        // is typed and digest-stable; the optional wall-clock watchdog is a
+        // host-dependent last resort behind both.
+        let mut iterations = 0u64;
         while self.completed.len() < self.dag.len() {
-            guard += 1;
-            if guard > 200_000_000 {
-                anyhow::bail!("scenario did not converge (scheduler livelock?)");
+            iterations += 1;
+            if let Some((deadline, limit_secs)) = self.deadline {
+                if iterations % WATCHDOG_STRIDE == 0 && std::time::Instant::now() >= deadline {
+                    return Err(anyhow::Error::new(WallClockTimeout { limit_secs }));
+                }
             }
             // Pump servers (may submit new iteration jobs).
             let now = self.engine.now();
@@ -554,7 +632,13 @@ impl ScenarioRunner {
                     self.dag.len()
                 );
             };
-            self.engine.run_until(t);
+            if t > self.virtual_time_budget {
+                return Err(anyhow::Error::new(BudgetExhausted::VirtualTime {
+                    limit: self.virtual_time_budget,
+                    at: self.engine.now(),
+                }));
+            }
+            self.engine.run_until_budgeted(t).map_err(anyhow::Error::new)?;
             let results = self.engine.take_completed();
             for r in results {
                 self.route(r)?;
@@ -1243,12 +1327,26 @@ fn build_policy(
 
 /// Convenience: parse + run a config text with an optional artifacts dir.
 pub fn run_config_text(text: &str, artifacts_dir: Option<&str>) -> Result<ScenarioResult> {
+    run_config_text_watchdog(text, artifacts_dir, None)
+}
+
+/// [`run_config_text`] with an optional wall-clock watchdog (supervision
+/// layers only; see [`WallClockTimeout`] for why configs can't set one).
+pub fn run_config_text_watchdog(
+    text: &str,
+    artifacts_dir: Option<&str>,
+    watchdog: Option<std::time::Duration>,
+) -> Result<ScenarioResult> {
     let cfg = BenchConfig::parse(text)?;
     let runtime = match artifacts_dir {
         Some(d) if Runtime::available(d) => Some(Runtime::load_dir(d)?),
         _ => None,
     };
-    ScenarioRunner::new(&cfg, runtime)?.run()
+    let mut runner = ScenarioRunner::new(&cfg, runtime)?;
+    if let Some(limit) = watchdog {
+        runner = runner.with_watchdog(limit);
+    }
+    runner.run()
 }
 
 #[cfg(test)]
@@ -1275,6 +1373,68 @@ Chat (chatbot):
         assert_eq!(result.workflow.critical_path, vec!["Chat (chatbot)"]);
         assert_eq!(result.workflow.e2e_latency, node.end);
         assert_eq!(result.workflow.e2e_slo_met, None, "no workflow_slo configured");
+    }
+
+    #[test]
+    fn event_budget_key_trips_typed_and_deterministic() {
+        let text = "\
+Chat (chatbot):
+  num_requests: 3
+  device: gpu
+budget_events: 5
+";
+        let run = || run_config_text(text, None).unwrap_err();
+        let e1 = run();
+        let b1 = e1
+            .downcast_ref::<BudgetExhausted>()
+            .expect("typed BudgetExhausted must survive the anyhow chain");
+        assert!(matches!(b1, BudgetExhausted::Events { budget: 5, .. }), "{b1:?}");
+        // Identical config → identical failure, message and all.
+        assert_eq!(e1.to_string(), run().to_string());
+    }
+
+    #[test]
+    fn virtual_time_budget_key_trips_typed() {
+        let text = "\
+Chat (chatbot):
+  num_requests: 3
+  device: gpu
+budget_virtual_time: 0.001
+";
+        let err = run_config_text(text, None).unwrap_err();
+        let b = err.downcast_ref::<BudgetExhausted>().expect("typed error");
+        assert!(
+            matches!(b, BudgetExhausted::VirtualTime { .. }),
+            "expected VirtualTime, got {b:?}"
+        );
+    }
+
+    #[test]
+    fn inject_error_fails_at_run_start() {
+        let text = "\
+Chat (chatbot):
+  num_requests: 1
+inject_failure: error
+";
+        let err = run_config_text(text, None).unwrap_err();
+        assert!(err.to_string().contains("injected failure"), "{err:#}");
+    }
+
+    #[test]
+    fn inject_panic_panics_and_is_catchable() {
+        let text = "\
+Chat (chatbot):
+  num_requests: 1
+inject_failure: panic
+";
+        let r = std::panic::catch_unwind(|| run_config_text(text, None));
+        let payload = r.expect_err("must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| payload.downcast_ref::<&str>().copied())
+            .unwrap_or("");
+        assert!(msg.contains("injected failure"), "payload: {msg}");
     }
 
     #[test]

@@ -13,10 +13,12 @@ pub mod dag;
 pub mod executor;
 pub mod report;
 
-pub use config::{AppType, ArrivalSpec, BenchConfig, Strategy, TestbedKind};
+pub use config::{AppType, ArrivalSpec, BenchConfig, InjectFailure, Strategy, TestbedKind};
 pub use controller::{Controller, ControllerAction, ControllerConfig, Observation, ServerView};
 pub use dag::Dag;
 pub use executor::{
-    run_config_text, NodeResult, ScenarioResult, ScenarioRunner, StageStat, WorkflowMetrics,
+    run_config_text, run_config_text_watchdog, NodeResult, ScenarioResult, ScenarioRunner,
+    StageStat, WallClockTimeout, WorkflowMetrics, DEFAULT_EVENT_BUDGET,
+    DEFAULT_VIRTUAL_TIME_BUDGET,
 };
 pub use report::{generate, to_csv, to_json_summary, BenchmarkReport};

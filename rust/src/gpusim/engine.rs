@@ -299,7 +299,42 @@ pub struct Engine {
     completed: Vec<JobResult>,
     trace: Trace,
     trace_enabled: bool,
+    /// Events processed since construction (monotone; a pure function of the
+    /// submitted workload, so it is deterministic across identical runs).
+    events_processed: u64,
+    /// Optional deterministic event budget enforced by
+    /// [`Engine::run_until_budgeted`]. `None` = unbounded.
+    event_budget: Option<u64>,
 }
+
+/// Typed error for a deterministic execution budget running dry.
+///
+/// Budgets are pure functions of the configuration (an event count or a
+/// virtual-time horizon), so a budget-exhausted run fails at the *same*
+/// virtual time with the *same* message on every host — the outcome can
+/// land in golden digests, unlike a wall-clock timeout.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BudgetExhausted {
+    /// The engine processed `budget` events without draining the workload.
+    Events { budget: u64, at: f64 },
+    /// Virtual time advanced past `limit` without the workload completing.
+    VirtualTime { limit: f64, at: f64 },
+}
+
+impl std::fmt::Display for BudgetExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BudgetExhausted::Events { budget, at } => {
+                write!(f, "event budget exhausted: {budget} events processed, t={at:.3}")
+            }
+            BudgetExhausted::VirtualTime { limit, at } => {
+                write!(f, "virtual-time budget exhausted: limit {limit:.3}s, t={at:.3}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BudgetExhausted {}
 
 impl Engine {
     pub fn new(testbed: Testbed, policy: Policy) -> Self {
@@ -330,6 +365,8 @@ impl Engine {
             completed: Vec::new(),
             trace: Trace::new(),
             trace_enabled: true,
+            events_processed: 0,
+            event_budget: None,
         }
     }
 
@@ -489,26 +526,61 @@ impl Engine {
         self.events.peek().map(|e| e.time)
     }
 
+    /// Install (or clear) the deterministic event budget enforced by
+    /// [`Engine::run_until_budgeted`]. The count is cumulative over the
+    /// engine's lifetime, so set the budget once at construction time.
+    pub fn set_event_budget(&mut self, budget: Option<u64>) {
+        self.event_budget = budget;
+    }
+
+    /// Events processed since construction.
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
     /// Process all events with time <= `t`; afterwards `now == max(now, t)`.
+    ///
+    /// Infallible wrapper for callers that never install an event budget;
+    /// panics if a budget is set and runs dry (budget-aware drivers must
+    /// use [`Engine::run_until_budgeted`]).
     pub fn run_until(&mut self, t: f64) {
+        self.run_until_budgeted(t)
+            .expect("event budget exhausted inside unbudgeted run_until");
+    }
+
+    /// Process all events with time <= `t`, charging each against the
+    /// event budget (if one is installed). On exhaustion the engine stops
+    /// at a deterministic virtual time — a pure function of workload and
+    /// budget — and returns [`BudgetExhausted::Events`]; `now` is left at
+    /// the last processed event, not advanced to `t`.
+    pub fn run_until_budgeted(&mut self, t: f64) -> Result<(), BudgetExhausted> {
         // Single peek-then-pop: the heap head is inspected once and popped
         // through the same `PeekMut` handle (no second sift/unwrap pass).
         while let Some(head) = self.events.peek_mut() {
             if head.time > t {
                 break;
             }
+            if let Some(budget) = self.event_budget {
+                if self.events_processed >= budget {
+                    return Err(BudgetExhausted::Events { budget, at: self.now });
+                }
+            }
             let ev = std::collections::binary_heap::PeekMut::pop(head);
             debug_assert!(ev.time >= self.now - 1e-9, "event heap went backwards");
             self.now = ev.time.max(self.now);
+            self.events_processed += 1;
             self.process(ev);
         }
         self.now = self.now.max(t);
+        Ok(())
     }
 
-    /// Run the heap dry.
+    /// Run the heap dry. Counts events but does not enforce the budget —
+    /// unit-scale helpers drain tiny workloads where a budget is noise.
     pub fn run_all(&mut self) {
         while let Some(ev) = self.events.pop() {
             self.now = ev.time.max(self.now);
+            self.events_processed += 1;
             self.process(ev);
         }
     }
@@ -1001,6 +1073,84 @@ mod tests {
         assert!(r.end > 0.0);
         assert_eq!(r.phases.len(), 1);
         e.check_invariants();
+    }
+
+    #[test]
+    fn event_budget_exhausts_deterministically() {
+        let run = || {
+            let mut e = engine();
+            let c = e.register_client("chat");
+            let k = kernel("k", 288, 1e9);
+            e.submit(
+                JobSpec {
+                    client: c,
+                    label: "many".into(),
+                    phases: vec![Phase::gpu("p", 0.0, vec![k.clone(), k.clone(), k.clone()])],
+                },
+                0.0,
+            );
+            let r = e.run_until_budgeted(f64::MAX);
+            (r, e.events_processed(), e.now())
+        };
+        let mut e = engine();
+        e.set_event_budget(Some(2));
+        let c = e.register_client("chat");
+        let k = kernel("k", 288, 1e9);
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "many".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![k.clone(), k.clone(), k.clone()])],
+            },
+            0.0,
+        );
+        let err = e.run_until_budgeted(f64::MAX).unwrap_err();
+        let BudgetExhausted::Events { budget, at } = err else {
+            panic!("expected Events variant, got {err:?}");
+        };
+        assert_eq!(budget, 2);
+        assert_eq!(e.events_processed(), 2);
+        // Identical workload + budget → identical stopping point (repeat).
+        let mut e2 = engine();
+        e2.set_event_budget(Some(2));
+        let c2 = e2.register_client("chat");
+        let k2 = kernel("k", 288, 1e9);
+        e2.submit(
+            JobSpec {
+                client: c2,
+                label: "many".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![k2.clone(), k2.clone(), k2])],
+            },
+            0.0,
+        );
+        let err2 = e2.run_until_budgeted(f64::MAX).unwrap_err();
+        assert_eq!(err.to_string(), err2.to_string());
+        let BudgetExhausted::Events { at: at2, .. } = err2 else {
+            unreachable!()
+        };
+        assert_eq!(at.to_bits(), at2.to_bits(), "stop time must be bit-identical");
+        // Without a budget the same workload drains fine.
+        let (ok, processed, _) = run();
+        assert!(ok.is_ok());
+        assert!(processed > 2);
+    }
+
+    #[test]
+    fn oversized_budget_is_inert() {
+        let mut e = engine();
+        e.set_event_budget(Some(1_000_000));
+        let c = e.register_client("chat");
+        e.submit(
+            JobSpec {
+                client: c,
+                label: "req0".into(),
+                phases: vec![Phase::gpu("work", 0.0, vec![kernel("k", 288, 1e9)])],
+            },
+            0.0,
+        );
+        e.run_until_budgeted(f64::MAX).unwrap();
+        assert_eq!(e.take_completed().len(), 1);
+        assert!(e.events_processed() > 0);
     }
 
     #[test]

@@ -31,7 +31,9 @@ pub mod vram;
 
 pub use backend::KernelBackend;
 pub use chaos::{chaos_key, ChaosConfig, ChaosKind, FaultAction, FaultEvent, FaultSchedule};
-pub use engine::{ClientId, CpuWork, Engine, JobId, JobResult, JobSpec, MemOp, Phase};
+pub use engine::{
+    BudgetExhausted, ClientId, CpuWork, Engine, JobId, JobResult, JobSpec, MemOp, Phase,
+};
 pub use trace::{Trace, TraceRow, TraceSample, TraceView};
 pub use kernel::{Device, KernelDesc, Tag};
 pub use policy::Policy;

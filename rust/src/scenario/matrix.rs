@@ -36,7 +36,7 @@
 //! is also a valid hand-runnable config (`consumerbench scenario --dump`
 //! writes them out).
 
-use crate::coordinator::config::{AppType, Strategy, TestbedKind};
+use crate::coordinator::config::{AppType, InjectFailure, Strategy, TestbedKind};
 use crate::gpusim::backend::KernelBackend;
 use crate::gpusim::chaos::{ChaosConfig, ChaosKind};
 use crate::gpusim::kernel::Device;
@@ -532,6 +532,8 @@ impl MatrixAxes {
                                 backend: KernelBackend::TunedNative,
                                 backend_ablation: false,
                                 chaos: None,
+                                budget_events: None,
+                                inject_failure: None,
                                 seed: self.seed,
                             });
                         }
@@ -566,6 +568,8 @@ impl MatrixAxes {
                             backend: KernelBackend::TunedNative,
                             backend_ablation: false,
                             chaos: None,
+                            budget_events: None,
+                            inject_failure: None,
                             seed: self.seed,
                         });
                     }
@@ -593,6 +597,8 @@ impl MatrixAxes {
                             backend,
                             backend_ablation: true,
                             chaos: None,
+                            budget_events: None,
+                            inject_failure: None,
                             seed: self.seed,
                         });
                     }
@@ -620,6 +626,8 @@ impl MatrixAxes {
                         backend: KernelBackend::TunedNative,
                         backend_ablation: false,
                         chaos: Some(kind),
+                        budget_events: None,
+                        inject_failure: None,
                         seed: self.seed,
                     });
                 }
@@ -651,6 +659,14 @@ pub struct ScenarioSpec {
     /// Fault class injected during the run (`None` everywhere except the
     /// chaos slice, which emits the kind's curated `chaos:` block).
     pub chaos: Option<ChaosKind>,
+    /// Deterministic event-budget override (`budget_events:` key in the
+    /// rendered YAML). `None` — the default for every generated scenario —
+    /// emits nothing, so pre-supervision YAML is byte-identical.
+    pub budget_events: Option<u64>,
+    /// Supervision-test fault hook (`inject_failure:` key). `None` emits
+    /// nothing; set by the sweep-resilience tests and the CLI's
+    /// `--inject-panic` / `--inject-error` flags.
+    pub inject_failure: Option<InjectFailure>,
     pub seed: u64,
 }
 
@@ -800,10 +816,29 @@ impl ScenarioSpec {
         if let Some(kind) = self.chaos {
             out.push_str(&ChaosConfig::curated(kind).to_yaml());
         }
+        self.push_supervision_yaml(&mut out);
         out.push_str(&format!("strategy: {}\n", strategy_key(self.strategy)));
         out.push_str(&format!("testbed: {}\n", testbed_key(self.testbed)));
         out.push_str(&format!("seed: {}\n", self.seed));
         out
+    }
+
+    /// Supervision keys (`budget_events:`, `inject_failure:`): emitted only
+    /// when set, so every generated scenario's YAML — and therefore its
+    /// spec digest — is unchanged unless a supervision override is applied.
+    fn push_supervision_yaml(&self, out: &mut String) {
+        if let Some(budget) = self.budget_events {
+            out.push_str(&format!("budget_events: {budget}\n"));
+        }
+        if let Some(mode) = self.inject_failure {
+            out.push_str(&format!(
+                "inject_failure: {}\n",
+                match mode {
+                    InjectFailure::Panic => "panic",
+                    InjectFailure::Error => "error",
+                }
+            ));
+        }
     }
 
     /// YAML for a workflow-shaped scenario: one task per DAG node, a
@@ -856,6 +891,7 @@ impl ScenarioSpec {
         if let Some(bound) = self.workflow.workflow_slo() {
             out.push_str(&format!("workflow_slo: {bound}\n"));
         }
+        self.push_supervision_yaml(&mut out);
         out.push_str(&format!("strategy: {}\n", strategy_key(self.strategy)));
         out.push_str(&format!("testbed: {}\n", testbed_key(self.testbed)));
         out.push_str(&format!("seed: {}\n", self.seed));
@@ -900,6 +936,22 @@ fn burst_trace(n: usize, seed: u64) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::coordinator::config::BenchConfig;
+
+    #[test]
+    fn supervision_overrides_render_and_parse() {
+        let mut spec = MatrixAxes::default_matrix(7).expand().into_iter().next().unwrap();
+        let before = spec.to_yaml();
+        assert!(!before.contains("budget_events:"));
+        assert!(!before.contains("inject_failure:"));
+        spec.budget_events = Some(9);
+        spec.inject_failure = Some(InjectFailure::Error);
+        let yaml = spec.to_yaml();
+        assert!(yaml.contains("budget_events: 9\n"));
+        assert!(yaml.contains("inject_failure: error\n"));
+        let cfg = BenchConfig::parse(&yaml).unwrap();
+        assert_eq!(cfg.budget_events, Some(9));
+        assert_eq!(cfg.inject_failure, Some(InjectFailure::Error));
+    }
 
     #[test]
     fn default_matrix_covers_acceptance_floor() {

@@ -29,6 +29,12 @@
 //! byte-for-byte — the golden-trace tests (`tests/golden_trace.rs`) turn
 //! that property into a regression harness for every engine refactor.
 //!
+//! Sweeps are fault-tolerant: [`runner::run_specs_supervised`] isolates
+//! panics, classifies deterministic budget exhaustion, retries failures
+//! once, quarantines them as report rows, and checkpoints terminal
+//! outcomes to a JSONL journal for kill-and-resume — all without breaking
+//! the byte-identity contract (`tests/sweep_resilience.rs`).
+//!
 //! Exposed on the command line as `consumerbench scenario`.
 
 pub mod matrix;
@@ -39,6 +45,7 @@ pub use matrix::{
     ArrivalKind, MatrixAxes, MixEntry, ScenarioSpec, ServerMode, WorkflowShape,
 };
 pub use runner::{
-    run_matrix, run_matrix_jobs, run_scenario, run_specs_jobs, AppOutcome, BackendRow, ChaosRow,
-    MatrixReport, ScenarioOutcome, WorkflowRow,
+    run_matrix, run_matrix_jobs, run_scenario, run_specs_jobs, run_specs_supervised, AdaptiveDelta,
+    AppOutcome, BackendRow, ChaosRow, MatrixReport, ScenarioOutcome, ScenarioStatus, SweepOptions,
+    WorkflowRow,
 };

@@ -1,4 +1,4 @@
-//! Matrix execution and the aggregate, machine-readable report.
+//! Matrix execution, sweep supervision, and the aggregate report.
 //!
 //! Each [`ScenarioSpec`] is rendered to YAML, parsed, and executed through
 //! the regular coordinator pipeline (`config → dag → executor`), so the
@@ -17,23 +17,118 @@
 //! cursor over the spec list — idle workers steal the next undone index).
 //! Workers may finish in any order; outcomes land in their canonical slot
 //! and the report is assembled in matrix-expansion order, so the JSON is
-//! **byte-identical for `--jobs 1` and `--jobs N`**. Errors are surfaced
-//! deterministically too: the failure at the lowest canonical index wins.
+//! **byte-identical for `--jobs 1` and `--jobs N`**.
+//!
+//! # Sweep supervision
+//!
+//! [`run_specs_supervised`] makes the sweep fault-tolerant end to end. A
+//! scenario that fails, panics, or exhausts its deterministic event/
+//! virtual-time budget becomes a structured [`ScenarioOutcome`] row
+//! (`status: failed | panicked | budget_exhausted | timeout`) instead of
+//! aborting the sweep: panics are caught with `catch_unwind` at the worker
+//! boundary, typed budget errors are classified by downcast, and a failed
+//! scenario is retried once with the identical seed before being
+//! quarantined as a report row. Because budgets are pure functions of the
+//! config, budget exhaustion is itself deterministic and digest-stable; the
+//! wall-clock watchdog is defense-in-depth only — `timeout` outcomes are
+//! host-dependent, so they are never checkpointed and never feed golden
+//! digests. With a `--journal`, every terminal outcome is appended to a
+//! JSONL checkpoint keyed by `(scenario name, sweep seed, spec digest)`;
+//! `--resume` replays the journal and re-executes only the missing rows,
+//! producing a byte-identical report whether the sweep ran straight through
+//! or was killed and resumed, at any `--jobs`.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::apps::Slo;
-use crate::coordinator::{run_config_text, ScenarioResult};
-use crate::gpusim::engine::trace_digest;
+use crate::coordinator::{
+    run_config_text, run_config_text_watchdog, ScenarioResult, WallClockTimeout,
+};
+use crate::gpusim::engine::{trace_digest, BudgetExhausted, Fnv1a};
 use crate::scenario::matrix::{
     backend_key, chaos_key, server_mode_key, strategy_key, testbed_key, workflow_key,
     MatrixAxes, ScenarioSpec,
 };
-use crate::util::json::{json_num, json_opt_bool, json_opt_num, json_str};
+use crate::util::json::{
+    json_num, json_opt_bool, json_opt_num, json_str, parse as json_parse, JsonValue,
+};
 use crate::util::stats::Summary;
+
+/// Terminal status of one scenario row under sweep supervision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioStatus {
+    /// The scenario ran to completion.
+    Ok,
+    /// The scenario returned an error (after the bounded retry).
+    Failed,
+    /// The scenario panicked; the payload was caught at the worker boundary.
+    Panicked,
+    /// The deterministic event/virtual-time budget tripped. Never retried —
+    /// budgets are pure functions of the config, so a retry would trip
+    /// identically.
+    BudgetExhausted,
+    /// The wall-clock watchdog fired. Host-dependent by construction: never
+    /// checkpointed to a journal and never part of a golden digest.
+    Timeout,
+    /// The scenario was never executed (a `--fail-fast` abort cancelled the
+    /// sweep before this row was claimed).
+    Skipped,
+}
+
+impl ScenarioStatus {
+    /// Stable serialization key (report JSON and journal lines).
+    pub fn key(&self) -> &'static str {
+        match self {
+            ScenarioStatus::Ok => "ok",
+            ScenarioStatus::Failed => "failed",
+            ScenarioStatus::Panicked => "panicked",
+            ScenarioStatus::BudgetExhausted => "budget_exhausted",
+            ScenarioStatus::Timeout => "timeout",
+            ScenarioStatus::Skipped => "skipped",
+        }
+    }
+
+    /// Inverse of [`ScenarioStatus::key`].
+    pub fn from_key(key: &str) -> Option<ScenarioStatus> {
+        Some(match key {
+            "ok" => ScenarioStatus::Ok,
+            "failed" => ScenarioStatus::Failed,
+            "panicked" => ScenarioStatus::Panicked,
+            "budget_exhausted" => ScenarioStatus::BudgetExhausted,
+            "timeout" => ScenarioStatus::Timeout,
+            "skipped" => ScenarioStatus::Skipped,
+            _ => return None,
+        })
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, ScenarioStatus::Ok)
+    }
+}
+
+/// Supervision knobs for one sweep (see [`run_specs_supervised`]).
+#[derive(Debug, Clone, Default)]
+pub struct SweepOptions {
+    /// Worker threads (clamped to `1..=len`); `0` behaves like `1`.
+    pub jobs: usize,
+    /// Abort the sweep on the first non-`ok` outcome (old fail-fast
+    /// semantics). In-flight scenarios finish; unclaimed rows become
+    /// `skipped`.
+    pub fail_fast: bool,
+    /// Wall-clock watchdog per scenario attempt. Defense-in-depth only —
+    /// `timeout` outcomes are host-dependent and never journaled.
+    pub watchdog: Option<Duration>,
+    /// Append-only JSONL checkpoint of terminal outcomes.
+    pub journal: Option<PathBuf>,
+    /// Prefill completed rows from the journal before executing the rest.
+    pub resume: bool,
+}
 
 /// Aggregated result of one application node inside a scenario.
 #[derive(Debug, Clone)]
@@ -46,8 +141,12 @@ pub struct AppOutcome {
     /// `None` when no requests completed (rendered `null`, never 100%).
     pub attainment: Option<f64>,
     pub mean_normalized: f64,
-    pub p50_latency: f64,
-    pub p99_latency: f64,
+    /// `None` when no requests completed (rendered `null`, never `0.0` —
+    /// a zero-request app has no latency distribution, not a zero-second
+    /// one).
+    pub p50_latency: Option<f64>,
+    /// `None` when no requests completed (rendered `null`, never `0.0`).
+    pub p99_latency: Option<f64>,
     pub failed: Option<String>,
 }
 
@@ -75,6 +174,14 @@ pub struct ScenarioOutcome {
     /// fault kind (`thermal_throttle`, `vram_ballast`, `suspend`,
     /// `server_crash`, `pcie_degrade`).
     pub chaos: String,
+    /// Supervision status. Run-derived fields below are only meaningful
+    /// (and only rendered) when this is [`ScenarioStatus::Ok`].
+    pub status: ScenarioStatus,
+    /// Error message for non-`ok` rows.
+    pub error: Option<String>,
+    /// Whether this outcome came from the bounded retry (second attempt
+    /// with the identical seed).
+    pub retried: bool,
     pub seed: u64,
     pub makespan: f64,
     /// End-to-end workflow latency (latest foreground-node completion).
@@ -103,7 +210,8 @@ pub struct MatrixReport {
     pub scenarios: Vec<ScenarioOutcome>,
 }
 
-/// Execute one scenario spec through the coordinator.
+/// Execute one scenario spec through the coordinator (fail-fast: an error
+/// propagates instead of becoming a structured row).
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioOutcome> {
     let yaml = spec.to_yaml();
     let result = run_config_text(&yaml, None)
@@ -128,67 +236,216 @@ pub fn run_matrix_jobs(axes: &MatrixAxes, jobs: usize) -> Result<MatrixReport> {
 }
 
 /// Execute an explicit spec list (e.g. a `--filter`ed subset of a matrix)
-/// on up to `jobs` workers, with the same canonical-order/byte-identity
-/// guarantees as [`run_matrix_jobs`].
+/// on up to `jobs` workers with the old fail-fast contract: the first
+/// (lowest canonical index) non-`ok` scenario aborts the sweep with an
+/// error. Internally a thin wrapper over [`run_specs_supervised`].
 pub fn run_specs_jobs(specs: &[ScenarioSpec], seed: u64, jobs: usize) -> Result<MatrixReport> {
+    let opts = SweepOptions {
+        jobs,
+        fail_fast: true,
+        ..SweepOptions::default()
+    };
+    let report = run_specs_supervised(specs, seed, &opts)?;
+    for s in &report.scenarios {
+        if !s.status.is_ok() {
+            anyhow::bail!(
+                "scenario `{}` {}: {}",
+                s.name,
+                s.status.key(),
+                s.error.as_deref().unwrap_or("aborted")
+            );
+        }
+    }
+    Ok(report)
+}
+
+/// Execute a spec list under full sweep supervision (see the module docs):
+/// panic isolation, deterministic budget classification, bounded retry,
+/// quarantine of failing rows, optional JSONL checkpoint/resume. `Err` is
+/// reserved for infrastructure problems (an unreadable or unwritable
+/// journal) — scenario failures are rows, not errors.
+pub fn run_specs_supervised(
+    specs: &[ScenarioSpec],
+    seed: u64,
+    opts: &SweepOptions,
+) -> Result<MatrixReport> {
     let n = specs.len();
-    let jobs = jobs.clamp(1, n.max(1));
-    let mut slots: Vec<Option<Result<ScenarioOutcome>>> = (0..n).map(|_| None).collect();
-    if jobs <= 1 {
-        // Sequential path keeps the old early-abort: the first failure stops
-        // the sweep (the assembly loop below surfaces it before reaching any
-        // unexecuted slot).
-        for (slot, spec) in slots.iter_mut().zip(specs) {
-            let outcome = run_scenario(spec);
-            let failed = outcome.is_err();
-            *slot = Some(outcome);
-            if failed {
-                break;
-            }
+    let jobs = opts.jobs.clamp(1, n.max(1));
+    let digests: Vec<String> = specs.iter().map(spec_digest_hex).collect();
+    let mut slots: Vec<Option<ScenarioOutcome>> = vec![None; n];
+    if opts.resume {
+        let path = opts
+            .journal
+            .as_ref()
+            .context("resume requires a journal path")?;
+        for (slot, loaded) in slots.iter_mut().zip(load_journal(path, specs, seed, &digests)?) {
+            *slot = loaded;
         }
-    } else {
-        // Work-stealing over the canonical spec order: a shared atomic
-        // cursor hands the next undone index to whichever worker is idle.
-        // A failure cancels further stealing (in-flight scenarios finish);
-        // because indices are claimed in order, every index below the first
-        // failure has still been executed, so the lowest-index-error rule
-        // of the assembly loop below is unaffected.
-        let cursor = AtomicUsize::new(0);
-        let cancel = AtomicBool::new(false);
-        let finished: Mutex<Vec<(usize, Result<ScenarioOutcome>)>> =
-            Mutex::new(Vec::with_capacity(n));
-        std::thread::scope(|scope| {
-            for _ in 0..jobs {
-                scope.spawn(|| {
-                    let mut local = Vec::new();
-                    loop {
-                        if cancel.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        let outcome = run_scenario(&specs[i]);
-                        if outcome.is_err() {
-                            cancel.store(true, Ordering::Relaxed);
-                        }
-                        local.push((i, outcome));
+    }
+    let journal = match &opts.journal {
+        Some(path) => Some(Journal::open(path, opts.resume)?),
+        None => None,
+    };
+    // Work-stealing over the canonical order of the *unfilled* slots. The
+    // same scoped pool serves every `jobs` value (a single worker degrades
+    // to the sequential order); indices are claimed in canonical order, so
+    // under `fail_fast` every index below the first failure has still been
+    // executed and the lowest-index-failure rule is scheduling-independent.
+    let todo: Vec<usize> = (0..n).filter(|&i| slots[i].is_none()).collect();
+    let cursor = AtomicUsize::new(0);
+    let cancel = AtomicBool::new(false);
+    let finished: Mutex<Vec<(usize, ScenarioOutcome)>> = Mutex::new(Vec::with_capacity(todo.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    if cancel.load(Ordering::Relaxed) {
+                        break;
                     }
-                    finished.lock().unwrap().extend(local);
-                });
-            }
-        });
-        for (i, outcome) in finished.into_inner().unwrap() {
-            slots[i] = Some(outcome);
+                    let t = cursor.fetch_add(1, Ordering::Relaxed);
+                    if t >= todo.len() {
+                        break;
+                    }
+                    let i = todo[t];
+                    let outcome = supervise_one(&specs[i], opts.watchdog);
+                    if opts.fail_fast && !outcome.status.is_ok() {
+                        cancel.store(true, Ordering::Relaxed);
+                    }
+                    if let Some(journal) = &journal {
+                        // Timeouts are wall-clock artifacts: checkpointing
+                        // one would resurrect a host hiccup on resume, so
+                        // they always re-execute.
+                        if outcome.status != ScenarioStatus::Timeout {
+                            journal.append_line(&journal_line(seed, &digests[i], &outcome));
+                        }
+                    }
+                    local.push((i, outcome));
+                }
+                // A sibling worker that panicked while holding the lock
+                // poisons it; the Vec inside is still intact (extend is the
+                // only operation), so recover rather than double-panic.
+                finished
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .extend(local);
+            });
+        }
+    });
+    if let Some(journal) = &journal {
+        if let Some(err) = journal.take_error() {
+            anyhow::bail!("writing journal: {err}");
         }
     }
-    let mut scenarios = Vec::with_capacity(n);
-    for (i, slot) in slots.into_iter().enumerate() {
-        let outcome = slot.unwrap_or_else(|| panic!("scenario {i} was never executed"));
-        scenarios.push(outcome?);
+    for (i, outcome) in finished.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        slots[i] = Some(outcome);
     }
+    let scenarios = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| slot.unwrap_or_else(|| skipped_outcome(&specs[i])))
+        .collect();
     Ok(MatrixReport { seed, scenarios })
+}
+
+/// One attempt of one scenario: panic isolation + typed-error
+/// classification. Never unwinds.
+fn attempt_one(spec: &ScenarioSpec, watchdog: Option<Duration>) -> ScenarioOutcome {
+    let yaml = spec.to_yaml();
+    match catch_unwind(AssertUnwindSafe(|| {
+        run_config_text_watchdog(&yaml, None, watchdog)
+    })) {
+        Ok(Ok(result)) => outcome_from(spec, &result),
+        Ok(Err(err)) => {
+            let status = if err.downcast_ref::<BudgetExhausted>().is_some() {
+                ScenarioStatus::BudgetExhausted
+            } else if err.downcast_ref::<WallClockTimeout>().is_some() {
+                ScenarioStatus::Timeout
+            } else {
+                ScenarioStatus::Failed
+            };
+            failed_outcome(spec, status, format!("{err:#}"))
+        }
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic with non-string payload".to_string());
+            failed_outcome(spec, ScenarioStatus::Panicked, msg)
+        }
+    }
+}
+
+/// One supervised scenario: attempt, then retry failures exactly once with
+/// the identical seed. Budget exhaustion is deterministic and not retried;
+/// everything else (error, panic, watchdog) gets the second chance. The
+/// second attempt's outcome wins and is marked `retried`.
+fn supervise_one(spec: &ScenarioSpec, watchdog: Option<Duration>) -> ScenarioOutcome {
+    let first = attempt_one(spec, watchdog);
+    match first.status {
+        ScenarioStatus::Failed | ScenarioStatus::Panicked | ScenarioStatus::Timeout => {
+            let mut second = attempt_one(spec, watchdog);
+            second.retried = true;
+            second
+        }
+        _ => first,
+    }
+}
+
+/// FNV-1a digest of the spec's canonical YAML — the journal key that makes
+/// stale checkpoint entries (same name, different spec) detectable.
+fn spec_digest_hex(spec: &ScenarioSpec) -> String {
+    let mut h = Fnv1a::new();
+    h.update(spec.to_yaml().as_bytes());
+    format!("{:016x}", h.finish())
+}
+
+/// Spec-derived outcome skeleton; run-derived fields at their non-`ok`
+/// placeholders.
+fn base_outcome(spec: &ScenarioSpec) -> ScenarioOutcome {
+    ScenarioOutcome {
+        name: spec.name.clone(),
+        mix: spec.mix.name.to_string(),
+        strategy: strategy_key(spec.strategy).to_string(),
+        arrival: spec.arrival.name().to_string(),
+        testbed: testbed_key(spec.testbed).to_string(),
+        server_mode: server_mode_key(spec.server_mode).to_string(),
+        workflow: workflow_key(spec.workflow).to_string(),
+        backend: backend_key(spec.backend).to_string(),
+        backend_ablation: spec.backend_ablation,
+        chaos: spec
+            .chaos
+            .map(|k| chaos_key(k).to_string())
+            .unwrap_or_else(|| "none".to_string()),
+        status: ScenarioStatus::Ok,
+        error: None,
+        retried: false,
+        seed: spec.seed,
+        makespan: 0.0,
+        e2e_latency: 0.0,
+        e2e_slo_met: None,
+        critical_path: String::new(),
+        trace_digest: 0,
+        min_attainment: 0.0,
+        max_attainment: 0.0,
+        fairness_spread: 0.0,
+        reconfigurations: 0,
+        apps: Vec::new(),
+    }
+}
+
+fn failed_outcome(spec: &ScenarioSpec, status: ScenarioStatus, error: String) -> ScenarioOutcome {
+    let mut out = base_outcome(spec);
+    out.status = status;
+    out.error = Some(error);
+    out
+}
+
+fn skipped_outcome(spec: &ScenarioSpec) -> ScenarioOutcome {
+    let mut out = base_outcome(spec);
+    out.status = ScenarioStatus::Skipped;
+    out
 }
 
 fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome {
@@ -197,9 +454,10 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
         .iter()
         .map(|n| {
             let lats: Vec<f64> = n.metrics.iter().map(|m| m.latency).collect();
-            let (p50, p99) = Summary::of(&lats)
-                .map(|s| (s.p50, s.p99))
-                .unwrap_or((0.0, 0.0));
+            let (p50, p99) = match Summary::of(&lats) {
+                Some(s) => (Some(s.p50), Some(s.p99)),
+                None => (None, None),
+            };
             AppOutcome {
                 node: n.id.clone(),
                 app: n.app.to_string(),
@@ -239,32 +497,273 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
             attainments.iter().copied().fold(f64::NEG_INFINITY, f64::max),
         )
     };
-    ScenarioOutcome {
-        name: spec.name.clone(),
-        mix: spec.mix.name.to_string(),
-        strategy: strategy_key(spec.strategy).to_string(),
-        arrival: spec.arrival.name().to_string(),
-        testbed: testbed_key(spec.testbed).to_string(),
-        server_mode: server_mode_key(spec.server_mode).to_string(),
-        workflow: workflow_key(spec.workflow).to_string(),
-        backend: backend_key(spec.backend).to_string(),
-        backend_ablation: spec.backend_ablation,
-        chaos: spec
-            .chaos
-            .map(|k| chaos_key(k).to_string())
-            .unwrap_or_else(|| "none".to_string()),
-        seed: spec.seed,
-        makespan: result.makespan,
-        e2e_latency: result.workflow.e2e_latency,
-        e2e_slo_met: result.workflow.e2e_slo_met,
-        critical_path: result.workflow.critical_path_str(),
-        trace_digest: trace_digest(&result.trace),
-        min_attainment,
-        max_attainment,
-        fairness_spread: max_attainment - min_attainment,
-        reconfigurations: result.reconfigurations,
-        apps,
+    let mut out = base_outcome(spec);
+    out.makespan = result.makespan;
+    out.e2e_latency = result.workflow.e2e_latency;
+    out.e2e_slo_met = result.workflow.e2e_slo_met;
+    out.critical_path = result.workflow.critical_path_str();
+    out.trace_digest = trace_digest(&result.trace);
+    out.min_attainment = min_attainment;
+    out.max_attainment = max_attainment;
+    out.fairness_spread = max_attainment - min_attainment;
+    out.reconfigurations = result.reconfigurations;
+    out.apps = apps;
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint journal
+// ---------------------------------------------------------------------------
+
+/// Append-only JSONL checkpoint shared by the worker pool. Write errors are
+/// recorded (first one wins) instead of panicking inside a worker; the
+/// supervisor surfaces them after the scope joins.
+struct Journal {
+    file: Mutex<std::fs::File>,
+    error: Mutex<Option<String>>,
+}
+
+impl Journal {
+    fn open(path: &Path, resume: bool) -> Result<Journal> {
+        use std::io::{Read, Seek, SeekFrom, Write};
+        let mut options = std::fs::OpenOptions::new();
+        if resume {
+            options.read(true).append(true).create(true);
+        } else {
+            options.write(true).truncate(true).create(true);
+        }
+        let mut file = options
+            .open(path)
+            .with_context(|| format!("opening journal `{}`", path.display()))?;
+        if resume {
+            // A kill mid-write can leave a partial final line. Start our
+            // appends on a fresh line so the corruption stays confined to
+            // that one (discarded) tail — otherwise the next entry would
+            // merge into it and be lost too.
+            let len = file
+                .metadata()
+                .with_context(|| format!("stat journal `{}`", path.display()))?
+                .len();
+            if len > 0 {
+                let mut last = [0u8; 1];
+                file.seek(SeekFrom::Start(len - 1))
+                    .and_then(|_| file.read_exact(&mut last))
+                    .with_context(|| format!("reading journal `{}`", path.display()))?;
+                if last[0] != b'\n' {
+                    file.write_all(b"\n")
+                        .with_context(|| format!("repairing journal `{}`", path.display()))?;
+                }
+            }
+        }
+        Ok(Journal {
+            file: Mutex::new(file),
+            error: Mutex::new(None),
+        })
     }
+
+    fn append_line(&self, line: &str) {
+        use std::io::Write as _;
+        let mut file = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        let result = file.write_all(line.as_bytes()).and_then(|()| file.flush());
+        if let Err(e) = result {
+            let mut slot = self.error.lock().unwrap_or_else(|e| e.into_inner());
+            if slot.is_none() {
+                *slot = Some(e.to_string());
+            }
+        }
+    }
+
+    fn take_error(&self) -> Option<String> {
+        self.error.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+}
+
+/// One journal line (including the trailing newline) for a terminal
+/// outcome. `row` carries the run-derived fields only for `ok` rows; the
+/// encoders are the same shortest-roundtrip emitters as the report, so a
+/// journal round-trip reproduces every float bit-exactly.
+fn journal_line(seed: u64, spec_digest: &str, s: &ScenarioOutcome) -> String {
+    let mut out = String::with_capacity(256);
+    out.push_str("{\"v\": 1");
+    out.push_str(&format!(", \"name\": {}", json_str(&s.name)));
+    out.push_str(&format!(", \"seed\": {seed}"));
+    out.push_str(&format!(", \"spec_digest\": {}", json_str(spec_digest)));
+    out.push_str(&format!(", \"status\": {}", json_str(s.status.key())));
+    match &s.error {
+        Some(e) => out.push_str(&format!(", \"error\": {}", json_str(e))),
+        None => out.push_str(", \"error\": null"),
+    }
+    out.push_str(&format!(", \"retried\": {}", s.retried));
+    if s.status.is_ok() {
+        out.push_str(", \"row\": {");
+        out.push_str(&format!("\"makespan_s\": {}", json_num(s.makespan)));
+        out.push_str(&format!(", \"e2e_latency_s\": {}", json_num(s.e2e_latency)));
+        out.push_str(&format!(", \"e2e_slo_met\": {}", json_opt_bool(s.e2e_slo_met)));
+        out.push_str(&format!(", \"critical_path\": {}", json_str(&s.critical_path)));
+        out.push_str(&format!(", \"trace_digest\": \"{:016x}\"", s.trace_digest));
+        out.push_str(&format!(", \"min_attainment\": {}", json_num(s.min_attainment)));
+        out.push_str(&format!(", \"max_attainment\": {}", json_num(s.max_attainment)));
+        out.push_str(&format!(", \"fairness_spread\": {}", json_num(s.fairness_spread)));
+        out.push_str(&format!(", \"reconfigurations\": {}", s.reconfigurations));
+        out.push_str(", \"apps\": [");
+        for (j, a) in s.apps.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push('{');
+            out.push_str(&format!("\"node\": {}", json_str(&a.node)));
+            out.push_str(&format!(", \"app\": {}", json_str(&a.app)));
+            out.push_str(&format!(", \"requests\": {}", a.requests));
+            out.push_str(&format!(", \"has_slo\": {}", a.has_slo));
+            out.push_str(&format!(", \"attainment\": {}", json_opt_num(a.attainment)));
+            out.push_str(&format!(
+                ", \"mean_normalized\": {}",
+                json_num(a.mean_normalized)
+            ));
+            out.push_str(&format!(", \"p50_latency_s\": {}", json_opt_num(a.p50_latency)));
+            out.push_str(&format!(", \"p99_latency_s\": {}", json_opt_num(a.p99_latency)));
+            match &a.failed {
+                Some(e) => out.push_str(&format!(", \"failed\": {}", json_str(e))),
+                None => out.push_str(", \"failed\": null"),
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+    } else {
+        out.push_str(", \"row\": null");
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Replay a journal into per-spec slots. Tolerant by construction: a
+/// missing file means nothing to resume; a line that fails to parse is
+/// discarded (a killed-mid-write tail — and after a resume repaired such a
+/// tail, one can sit mid-file); an entry whose version, sweep seed, name,
+/// or spec digest does not match is skipped as stale. The last valid entry
+/// per scenario wins.
+fn load_journal(
+    path: &Path,
+    specs: &[ScenarioSpec],
+    seed: u64,
+    digests: &[String],
+) -> Result<Vec<Option<ScenarioOutcome>>> {
+    let mut slots: Vec<Option<ScenarioOutcome>> = vec![None; specs.len()];
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(slots),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading journal `{}`", path.display()))
+        }
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = json_parse(line) else {
+            continue;
+        };
+        if v.get("v").and_then(JsonValue::as_u64) != Some(1) {
+            continue;
+        }
+        if v.get("seed").and_then(JsonValue::as_u64) != Some(seed) {
+            continue;
+        }
+        let Some(name) = v.get("name").and_then(JsonValue::as_str) else {
+            continue;
+        };
+        let Some(i) = specs.iter().position(|s| s.name == name) else {
+            continue;
+        };
+        if v.get("spec_digest").and_then(JsonValue::as_str) != Some(digests[i].as_str()) {
+            continue;
+        }
+        let Some(status) = v
+            .get("status")
+            .and_then(JsonValue::as_str)
+            .and_then(ScenarioStatus::from_key)
+        else {
+            continue;
+        };
+        if matches!(status, ScenarioStatus::Timeout | ScenarioStatus::Skipped) {
+            continue;
+        }
+        if let Some(outcome) = outcome_from_journal(&specs[i], status, &v) {
+            slots[i] = Some(outcome);
+        }
+    }
+    Ok(slots)
+}
+
+/// `Num` → the number; `null` → a non-finite stand-in. The emitters render
+/// every non-finite as `null`, so reconstructing `null` as `inf` makes the
+/// re-render byte-identical without remembering which non-finite it was.
+fn jnum(v: &JsonValue) -> Option<f64> {
+    match v {
+        JsonValue::Num(n) => Some(*n),
+        JsonValue::Null => Some(f64::INFINITY),
+        _ => None,
+    }
+}
+
+/// `Num` → `Some`, `null` → `None` (optional fields render `null` for
+/// `None` and for non-finite alike, so `None` re-renders identically).
+fn jopt(v: &JsonValue) -> Option<Option<f64>> {
+    match v {
+        JsonValue::Num(n) => Some(Some(*n)),
+        JsonValue::Null => Some(None),
+        _ => None,
+    }
+}
+
+/// Reconstruct an outcome from one validated journal entry; `None` on any
+/// shape mismatch (the caller then just re-executes the scenario).
+fn outcome_from_journal(
+    spec: &ScenarioSpec,
+    status: ScenarioStatus,
+    v: &JsonValue,
+) -> Option<ScenarioOutcome> {
+    let mut out = base_outcome(spec);
+    out.status = status;
+    out.error = match v.get("error")? {
+        JsonValue::Null => None,
+        e => Some(e.as_str()?.to_string()),
+    };
+    out.retried = v.get("retried")?.as_bool()?;
+    if !status.is_ok() {
+        return Some(out);
+    }
+    let row = v.get("row")?;
+    out.makespan = jnum(row.get("makespan_s")?)?;
+    out.e2e_latency = jnum(row.get("e2e_latency_s")?)?;
+    out.e2e_slo_met = match row.get("e2e_slo_met")? {
+        JsonValue::Null => None,
+        b => Some(b.as_bool()?),
+    };
+    out.critical_path = row.get("critical_path")?.as_str()?.to_string();
+    out.trace_digest = u64::from_str_radix(row.get("trace_digest")?.as_str()?, 16).ok()?;
+    out.min_attainment = jnum(row.get("min_attainment")?)?;
+    out.max_attainment = jnum(row.get("max_attainment")?)?;
+    out.fairness_spread = jnum(row.get("fairness_spread")?)?;
+    out.reconfigurations = row.get("reconfigurations")?.as_u64()? as usize;
+    for a in row.get("apps")?.as_arr()? {
+        out.apps.push(AppOutcome {
+            node: a.get("node")?.as_str()?.to_string(),
+            app: a.get("app")?.as_str()?.to_string(),
+            requests: a.get("requests")?.as_u64()? as usize,
+            has_slo: a.get("has_slo")?.as_bool()?,
+            attainment: jopt(a.get("attainment")?)?,
+            mean_normalized: jnum(a.get("mean_normalized")?)?,
+            p50_latency: jopt(a.get("p50_latency_s")?)?,
+            p99_latency: jopt(a.get("p99_latency_s")?)?,
+            failed: match a.get("failed")? {
+                JsonValue::Null => None,
+                e => Some(e.as_str()?.to_string()),
+            },
+        });
+    }
+    Some(out)
 }
 
 /// One static/adaptive scenario pair and its attainment delta — the
@@ -332,10 +831,16 @@ pub struct WorkflowRow {
 }
 
 impl MatrixReport {
-    /// Distinct strategies present, in first-seen order.
+    /// Rows that ran to completion — the population every summary aggregate
+    /// draws from (a quarantined row has no run-derived metrics to mix in).
+    fn ok_rows(&self) -> impl Iterator<Item = &ScenarioOutcome> {
+        self.scenarios.iter().filter(|s| s.status.is_ok())
+    }
+
+    /// Distinct strategies present among `ok` rows, in first-seen order.
     pub fn strategies(&self) -> Vec<&str> {
         let mut out: Vec<&str> = Vec::new();
-        for s in &self.scenarios {
+        for s in self.ok_rows() {
             if !out.contains(&s.strategy.as_str()) {
                 out.push(&s.strategy);
             }
@@ -345,10 +850,10 @@ impl MatrixReport {
 
     /// Per-(shape, strategy) end-to-end aggregates over the workflow slice,
     /// in first-seen (canonical) order. Empty when the matrix carries no
-    /// workflow scenarios.
+    /// workflow scenarios. Quarantined rows are excluded.
     pub fn workflow_rows(&self) -> Vec<WorkflowRow> {
         let mut keys: Vec<(&str, &str)> = Vec::new();
-        for s in &self.scenarios {
+        for s in self.ok_rows() {
             if s.workflow == "flat" {
                 continue;
             }
@@ -360,8 +865,7 @@ impl MatrixReport {
         keys.into_iter()
             .map(|(wf, strat)| {
                 let rows: Vec<&ScenarioOutcome> = self
-                    .scenarios
-                    .iter()
+                    .ok_rows()
                     .filter(|s| s.workflow == wf && s.strategy == strat)
                     .collect();
                 let n = rows.len().max(1) as f64;
@@ -384,10 +888,10 @@ impl MatrixReport {
     /// backend-ablation slice, in first-seen (canonical) order. Empty when
     /// the matrix carries no ablation scenarios. Restricted to the slice —
     /// the rest of the matrix runs tuned by construction and would swamp
-    /// the comparison.
+    /// the comparison. Quarantined rows are excluded.
     pub fn backend_rows(&self) -> Vec<BackendRow> {
         let mut keys: Vec<&str> = Vec::new();
-        for s in &self.scenarios {
+        for s in self.ok_rows() {
             if s.backend_ablation && !keys.contains(&s.backend.as_str()) {
                 keys.push(&s.backend);
             }
@@ -395,8 +899,7 @@ impl MatrixReport {
         keys.into_iter()
             .map(|key| {
                 let rows: Vec<&ScenarioOutcome> = self
-                    .scenarios
-                    .iter()
+                    .ok_rows()
                     .filter(|s| s.backend_ablation && s.backend == key)
                     .collect();
                 let n = rows.len().max(1) as f64;
@@ -419,10 +922,12 @@ impl MatrixReport {
     }
 
     /// Pair every adaptive scenario with its static twin (same axes, only
-    /// the server mode differs), in canonical order.
+    /// the server mode differs), in canonical order. A pair with a
+    /// quarantined half is dropped — a delta against a failed twin is
+    /// meaningless.
     pub fn adaptive_deltas(&self) -> Vec<AdaptiveDelta> {
         let mut out = Vec::new();
-        for s in &self.scenarios {
+        for s in self.ok_rows() {
             if s.server_mode != "adaptive" {
                 continue;
             }
@@ -432,7 +937,7 @@ impl MatrixReport {
                 .unwrap_or(&s.name)
                 .to_string();
             let twin_name = format!("{base}/server=static");
-            let Some(twin) = self.scenarios.iter().find(|t| t.name == twin_name) else {
+            let Some(twin) = self.ok_rows().find(|t| t.name == twin_name) else {
                 continue;
             };
             out.push(AdaptiveDelta {
@@ -450,9 +955,10 @@ impl MatrixReport {
     /// order. Restricted to the chaos slice — fault-free pairs are already
     /// covered by [`MatrixReport::adaptive_deltas`], and mixing regimes
     /// would hide what adaptation buys back specifically under faults.
+    /// Quarantined halves drop the pair.
     pub fn chaos_rows(&self) -> Vec<ChaosRow> {
         let mut out = Vec::new();
-        for s in &self.scenarios {
+        for s in self.ok_rows() {
             if s.chaos == "none" || s.server_mode != "adaptive" {
                 continue;
             }
@@ -462,7 +968,7 @@ impl MatrixReport {
                 .unwrap_or(&s.name)
                 .to_string();
             let twin_name = format!("{base}/server=static");
-            let Some(twin) = self.scenarios.iter().find(|t| t.name == twin_name) else {
+            let Some(twin) = self.ok_rows().find(|t| t.name == twin_name) else {
                 continue;
             };
             out.push(ChaosRow {
@@ -477,11 +983,24 @@ impl MatrixReport {
         out
     }
 
+    /// Per-status row counts over the whole report, in taxonomy order.
+    pub fn status_counts(&self) -> [(&'static str, usize); 6] {
+        let count = |st: ScenarioStatus| self.scenarios.iter().filter(|s| s.status == st).count();
+        [
+            ("ok", count(ScenarioStatus::Ok)),
+            ("failed", count(ScenarioStatus::Failed)),
+            ("panicked", count(ScenarioStatus::Panicked)),
+            ("budget_exhausted", count(ScenarioStatus::BudgetExhausted)),
+            ("timeout", count(ScenarioStatus::Timeout)),
+            ("skipped", count(ScenarioStatus::Skipped)),
+        ]
+    }
+
     /// Deterministic JSON rendering of the whole report.
     pub fn to_json(&self) -> String {
         let mut out = String::with_capacity(4096);
         out.push_str("{\n");
-        out.push_str("  \"consumerbench_scenario_matrix\": 1,\n");
+        out.push_str("  \"consumerbench_scenario_matrix\": 2,\n");
         out.push_str(&format!("  \"seed\": {},\n", self.seed));
         out.push_str(&format!(
             "  \"num_scenarios\": {},\n",
@@ -489,6 +1008,7 @@ impl MatrixReport {
         ));
         out.push_str("  \"scenarios\": [\n");
         for (i, s) in self.scenarios.iter().enumerate() {
+            let ok = s.status.is_ok();
             out.push_str("    {\n");
             out.push_str(&format!("      \"name\": {},\n", json_str(&s.name)));
             out.push_str(&format!("      \"mix\": {},\n", json_str(&s.mix)));
@@ -509,42 +1029,68 @@ impl MatrixReport {
             ));
             out.push_str(&format!("      \"chaos\": {},\n", json_str(&s.chaos)));
             out.push_str(&format!(
-                "      \"reconfigurations\": {},\n",
-                s.reconfigurations
+                "      \"status\": {},\n",
+                json_str(s.status.key())
             ));
+            match &s.error {
+                Some(e) => out.push_str(&format!("      \"error\": {},\n", json_str(e))),
+                None => out.push_str("      \"error\": null,\n"),
+            }
+            out.push_str(&format!("      \"retried\": {},\n", s.retried));
+            if ok {
+                out.push_str(&format!(
+                    "      \"reconfigurations\": {},\n",
+                    s.reconfigurations
+                ));
+            } else {
+                out.push_str("      \"reconfigurations\": null,\n");
+            }
             out.push_str(&format!("      \"seed\": {},\n", s.seed));
-            out.push_str(&format!(
-                "      \"makespan_s\": {},\n",
-                json_num(s.makespan)
-            ));
-            out.push_str(&format!(
-                "      \"e2e_latency_s\": {},\n",
-                json_num(s.e2e_latency)
-            ));
-            out.push_str(&format!(
-                "      \"e2e_slo_met\": {},\n",
-                json_opt_bool(s.e2e_slo_met)
-            ));
-            out.push_str(&format!(
-                "      \"critical_path\": {},\n",
-                json_str(&s.critical_path)
-            ));
-            out.push_str(&format!(
-                "      \"trace_digest\": \"{:016x}\",\n",
-                s.trace_digest
-            ));
-            out.push_str(&format!(
-                "      \"min_attainment\": {},\n",
-                json_num(s.min_attainment)
-            ));
-            out.push_str(&format!(
-                "      \"max_attainment\": {},\n",
-                json_num(s.max_attainment)
-            ));
-            out.push_str(&format!(
-                "      \"fairness_spread\": {},\n",
-                json_num(s.fairness_spread)
-            ));
+            if ok {
+                out.push_str(&format!(
+                    "      \"makespan_s\": {},\n",
+                    json_num(s.makespan)
+                ));
+                out.push_str(&format!(
+                    "      \"e2e_latency_s\": {},\n",
+                    json_num(s.e2e_latency)
+                ));
+                out.push_str(&format!(
+                    "      \"e2e_slo_met\": {},\n",
+                    json_opt_bool(s.e2e_slo_met)
+                ));
+                out.push_str(&format!(
+                    "      \"critical_path\": {},\n",
+                    json_str(&s.critical_path)
+                ));
+                out.push_str(&format!(
+                    "      \"trace_digest\": \"{:016x}\",\n",
+                    s.trace_digest
+                ));
+                out.push_str(&format!(
+                    "      \"min_attainment\": {},\n",
+                    json_num(s.min_attainment)
+                ));
+                out.push_str(&format!(
+                    "      \"max_attainment\": {},\n",
+                    json_num(s.max_attainment)
+                ));
+                out.push_str(&format!(
+                    "      \"fairness_spread\": {},\n",
+                    json_num(s.fairness_spread)
+                ));
+            } else {
+                // A quarantined row has no run: render explicit nulls so
+                // consumers never mistake placeholders for measurements.
+                out.push_str("      \"makespan_s\": null,\n");
+                out.push_str("      \"e2e_latency_s\": null,\n");
+                out.push_str("      \"e2e_slo_met\": null,\n");
+                out.push_str("      \"critical_path\": null,\n");
+                out.push_str("      \"trace_digest\": null,\n");
+                out.push_str("      \"min_attainment\": null,\n");
+                out.push_str("      \"max_attainment\": null,\n");
+                out.push_str("      \"fairness_spread\": null,\n");
+            }
             out.push_str("      \"apps\": [\n");
             for (j, a) in s.apps.iter().enumerate() {
                 out.push_str("        {");
@@ -560,8 +1106,14 @@ impl MatrixReport {
                     "\"mean_normalized\": {}, ",
                     json_num(a.mean_normalized)
                 ));
-                out.push_str(&format!("\"p50_latency_s\": {}, ", json_num(a.p50_latency)));
-                out.push_str(&format!("\"p99_latency_s\": {}, ", json_num(a.p99_latency)));
+                out.push_str(&format!(
+                    "\"p50_latency_s\": {}, ",
+                    json_opt_num(a.p50_latency)
+                ));
+                out.push_str(&format!(
+                    "\"p99_latency_s\": {}, ",
+                    json_opt_num(a.p99_latency)
+                ));
                 match &a.failed {
                     Some(e) => out.push_str(&format!("\"failed\": {}", json_str(e))),
                     None => out.push_str("\"failed\": null"),
@@ -578,11 +1130,8 @@ impl MatrixReport {
         out.push_str("    \"by_strategy\": [\n");
         let strategies = self.strategies();
         for (i, strat) in strategies.iter().enumerate() {
-            let rows: Vec<&ScenarioOutcome> = self
-                .scenarios
-                .iter()
-                .filter(|s| s.strategy == *strat)
-                .collect();
+            let rows: Vec<&ScenarioOutcome> =
+                self.ok_rows().filter(|s| s.strategy == *strat).collect();
             let avg = |vals: Vec<f64>| -> f64 {
                 if vals.is_empty() {
                     0.0
@@ -659,29 +1208,71 @@ impl MatrixReport {
             ));
             out.push_str(if i + 1 < c_rows.len() { ",\n" } else { "\n" });
         }
-        out.push_str("    ]\n");
+        out.push_str("    ],\n");
+        out.push_str("    \"failures\": {\n");
+        out.push_str("      \"counts\": {");
+        for (i, (key, count)) in self.status_counts().iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{key}\": {count}"));
+        }
+        out.push_str("},\n");
+        out.push_str("      \"rows\": [\n");
+        let quarantined: Vec<&ScenarioOutcome> =
+            self.scenarios.iter().filter(|s| !s.status.is_ok()).collect();
+        for (i, s) in quarantined.iter().enumerate() {
+            out.push_str(&format!(
+                "        {{\"scenario\": {}, \"status\": {}, \"error\": {}, \"retried\": {}}}",
+                json_str(&s.name),
+                json_str(s.status.key()),
+                match &s.error {
+                    Some(e) => json_str(e),
+                    None => "null".to_string(),
+                },
+                s.retried,
+            ));
+            out.push_str(if i + 1 < quarantined.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("      ]\n");
+        out.push_str("    }\n");
         out.push_str("  }\n");
         out.push_str("}\n");
         out
     }
 
-    /// Human-readable summary table (one row per scenario).
+    /// Human-readable summary table (one row per scenario). Quarantined
+    /// rows print their status and dashes for the run-derived columns.
     pub fn summary_table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<80} {:>9} {:>7} {:>7} {:>6} {:>7}\n",
-            "scenario", "makespan", "min-att", "spread", "reconf", "digest"
+            "{:<80} {:>16} {:>9} {:>7} {:>7} {:>6} {:>7}\n",
+            "scenario", "status", "makespan", "min-att", "spread", "reconf", "digest"
         ));
         for s in &self.scenarios {
-            out.push_str(&format!(
-                "{:<80} {:>8.1}s {:>6.0}% {:>7.2} {:>6} {:>7}\n",
-                s.name,
-                s.makespan,
-                s.min_attainment * 100.0,
-                s.fairness_spread,
-                s.reconfigurations,
-                &format!("{:016x}", s.trace_digest)[..7],
-            ));
+            if s.status.is_ok() {
+                out.push_str(&format!(
+                    "{:<80} {:>16} {:>8.1}s {:>6.0}% {:>7.2} {:>6} {:>7}\n",
+                    s.name,
+                    s.status.key(),
+                    s.makespan,
+                    s.min_attainment * 100.0,
+                    s.fairness_spread,
+                    s.reconfigurations,
+                    &format!("{:016x}", s.trace_digest)[..7],
+                ));
+            } else {
+                out.push_str(&format!(
+                    "{:<80} {:>16} {:>9} {:>7} {:>7} {:>6} {:>7}\n",
+                    s.name,
+                    s.status.key(),
+                    "-",
+                    "-",
+                    "-",
+                    "-",
+                    "-",
+                ));
+            }
         }
         out
     }
@@ -690,7 +1281,7 @@ impl MatrixReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::config::{AppType, Strategy, TestbedKind};
+    use crate::coordinator::config::{AppType, InjectFailure, Strategy, TestbedKind};
     use crate::gpusim::kernel::Device;
     use crate::scenario::matrix::{AppMix, ArrivalKind, MixEntry, ServerMode};
 
@@ -717,22 +1308,45 @@ mod tests {
         }
     }
 
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cb_runner_{}_{tag}.jsonl", std::process::id()))
+    }
+
     #[test]
     fn tiny_matrix_runs_and_reports() {
         let report = run_matrix(&tiny_axes(42)).unwrap();
         assert_eq!(report.scenarios.len(), 2);
         for s in &report.scenarios {
+            assert_eq!(s.status, ScenarioStatus::Ok);
             assert_eq!(s.apps.len(), 1);
             assert_eq!(s.apps[0].requests, 3);
             assert!(s.makespan > 0.0);
         }
         let json = report.to_json();
-        assert!(json.contains("\"consumerbench_scenario_matrix\": 1"));
+        assert!(json.contains("\"consumerbench_scenario_matrix\": 2"));
         assert!(json.contains("\"strategy\": \"greedy\""));
         assert!(json.contains("\"arrival\": \"poisson\""));
         assert!(json.contains("\"server_mode\": \"static\""));
+        assert!(json.contains("\"status\": \"ok\""));
         assert!(json.contains("\"adaptive_vs_static\""));
+        assert!(json.contains("\"failures\": {"));
+        assert!(json.contains("\"ok\": 2"));
         assert!(!json.contains("inf"), "non-finite leaked into JSON");
+    }
+
+    #[test]
+    fn status_keys_roundtrip() {
+        for st in [
+            ScenarioStatus::Ok,
+            ScenarioStatus::Failed,
+            ScenarioStatus::Panicked,
+            ScenarioStatus::BudgetExhausted,
+            ScenarioStatus::Timeout,
+            ScenarioStatus::Skipped,
+        ] {
+            assert_eq!(ScenarioStatus::from_key(st.key()), Some(st));
+        }
+        assert_eq!(ScenarioStatus::from_key("bogus"), None);
     }
 
     #[test]
@@ -792,6 +1406,18 @@ mod tests {
         // The failed app's own attainment is `null`/absent, not a number —
         // only the fairness aggregate folds it to zero.
         assert_eq!(outcome.apps[0].attainment, None);
+        // Zero completed requests means no latency distribution: `null`,
+        // never a fabricated 0.0 percentile.
+        assert_eq!(outcome.apps[0].p50_latency, None);
+        assert_eq!(outcome.apps[0].p99_latency, None);
+        let report = MatrixReport {
+            seed: 1,
+            scenarios: vec![outcome],
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"p50_latency_s\": null"), "{json}");
+        assert!(json.contains("\"p99_latency_s\": null"), "{json}");
+        assert!(!json.contains("\"p50_latency_s\": 0,"), "{json}");
     }
 
     #[test]
@@ -842,6 +1468,9 @@ mod tests {
                 backend: backend.into(),
                 backend_ablation: ablation,
                 chaos: "none".into(),
+                status: ScenarioStatus::Ok,
+                error: None,
+                retried: false,
                 seed: 1,
                 makespan,
                 e2e_latency: makespan,
@@ -859,8 +1488,8 @@ mod tests {
                     has_slo: true,
                     attainment: Some(att),
                     mean_normalized: 0.5,
-                    p50_latency: 1.0,
-                    p99_latency: 2.0,
+                    p50_latency: Some(1.0),
+                    p99_latency: Some(2.0),
                     failed: None,
                 }],
             }
@@ -906,6 +1535,9 @@ mod tests {
                 backend: "tuned_native".into(),
                 backend_ablation: false,
                 chaos: chaos.into(),
+                status: ScenarioStatus::Ok,
+                error: None,
+                retried: false,
                 seed: 1,
                 makespan: 10.0,
                 e2e_latency: 10.0,
@@ -961,5 +1593,162 @@ mod tests {
         // More workers than scenarios is fine (pool clamps to the matrix).
         let oversubscribed = run_matrix_jobs(&axes, 64).unwrap().to_json();
         assert_eq!(sequential, oversubscribed);
+    }
+
+    #[test]
+    fn panicking_scenario_is_quarantined_and_siblings_complete() {
+        let mut specs = tiny_axes(42).expand();
+        specs[0].inject_failure = Some(InjectFailure::Panic);
+        let opts = SweepOptions {
+            jobs: 1,
+            ..SweepOptions::default()
+        };
+        let report = run_specs_supervised(&specs, 42, &opts).unwrap();
+        assert_eq!(report.scenarios.len(), specs.len());
+        let bad = &report.scenarios[0];
+        assert_eq!(bad.status, ScenarioStatus::Panicked);
+        assert!(bad.retried, "a panic gets exactly one retry");
+        assert!(bad.error.as_deref().unwrap().contains("injected failure"));
+        for s in &report.scenarios[1..] {
+            assert_eq!(s.status, ScenarioStatus::Ok, "siblings must complete");
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"panicked\": 1"), "{json}");
+        assert!(json.contains("\"status\": \"panicked\""), "{json}");
+        // Quarantined rows render nulls, never placeholder measurements.
+        assert!(json.contains("\"trace_digest\": null"), "{json}");
+        // Byte-identity holds with a quarantined row in the sweep.
+        let wide = SweepOptions {
+            jobs: 4,
+            ..SweepOptions::default()
+        };
+        assert_eq!(json, run_specs_supervised(&specs, 42, &wide).unwrap().to_json());
+        assert_eq!(json, run_specs_supervised(&specs, 42, &opts).unwrap().to_json());
+    }
+
+    #[test]
+    fn budget_exhaustion_is_deterministic_and_not_retried() {
+        let mut specs = tiny_axes(42).expand();
+        specs[1].budget_events = Some(5);
+        let opts = SweepOptions::default();
+        let report = run_specs_supervised(&specs, 42, &opts).unwrap();
+        let bad = &report.scenarios[1];
+        assert_eq!(bad.status, ScenarioStatus::BudgetExhausted);
+        assert!(!bad.retried, "deterministic exhaustion is never retried");
+        assert!(bad.error.as_deref().unwrap().contains("budget exhausted"));
+        assert_eq!(report.scenarios[0].status, ScenarioStatus::Ok);
+        let again = run_specs_supervised(&specs, 42, &opts).unwrap();
+        assert_eq!(report.to_json(), again.to_json());
+    }
+
+    #[test]
+    fn fail_fast_aborts_and_skips_the_tail() {
+        let mut specs = tiny_axes(42).expand();
+        specs[0].inject_failure = Some(InjectFailure::Error);
+        let opts = SweepOptions {
+            jobs: 1,
+            fail_fast: true,
+            ..SweepOptions::default()
+        };
+        let report = run_specs_supervised(&specs, 42, &opts).unwrap();
+        assert_eq!(report.scenarios[0].status, ScenarioStatus::Failed);
+        assert_eq!(report.scenarios[1].status, ScenarioStatus::Skipped);
+        // The legacy wrapper surfaces the lowest-index failure as an error.
+        let err = run_specs_jobs(&specs, 42, 1).unwrap_err().to_string();
+        assert!(err.contains("scenario `"), "{err}");
+        assert!(err.contains("failed"), "{err}");
+    }
+
+    #[test]
+    fn journal_resume_reproduces_the_report_byte_for_byte() {
+        let specs = tiny_axes(42).expand();
+        let path = tmp_path("resume");
+        let _ = std::fs::remove_file(&path);
+        let straight = run_specs_supervised(
+            &specs,
+            42,
+            &SweepOptions {
+                jobs: 1,
+                journal: Some(path.clone()),
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap()
+        .to_json();
+        // Full journal: resume executes nothing and reproduces the report.
+        let resumed = run_specs_supervised(
+            &specs,
+            42,
+            &SweepOptions {
+                jobs: 2,
+                journal: Some(path.clone()),
+                resume: true,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap()
+        .to_json();
+        assert_eq!(straight, resumed);
+        // Killed mid-write: keep the first line plus a truncated tail of the
+        // second — the partial line is discarded, its scenario re-executed.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let first = lines.next().unwrap();
+        let second = lines.next().unwrap();
+        std::fs::write(&path, format!("{first}\n{}", &second[..second.len() / 2])).unwrap();
+        let recovered = run_specs_supervised(
+            &specs,
+            42,
+            &SweepOptions {
+                jobs: 1,
+                journal: Some(path.clone()),
+                resume: true,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap()
+        .to_json();
+        assert_eq!(straight, recovered);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_journal_entries_are_ignored() {
+        let specs = tiny_axes(42).expand();
+        let path = tmp_path("stale");
+        let _ = std::fs::remove_file(&path);
+        let straight = run_specs_supervised(
+            &specs,
+            42,
+            &SweepOptions {
+                journal: Some(path.clone()),
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap()
+        .to_json();
+        // Tamper the first scenario's spec digest: the entry no longer
+        // matches the spec that produced it and must be re-executed.
+        let marker = format!("\"spec_digest\": \"{}\"", spec_digest_hex(&specs[0]));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(&marker));
+        std::fs::write(
+            &path,
+            text.replacen(&marker, "\"spec_digest\": \"0000000000000000\"", 1),
+        )
+        .unwrap();
+        let resumed = run_specs_supervised(
+            &specs,
+            42,
+            &SweepOptions {
+                journal: Some(path.clone()),
+                resume: true,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap()
+        .to_json();
+        assert_eq!(straight, resumed);
+        let _ = std::fs::remove_file(&path);
     }
 }

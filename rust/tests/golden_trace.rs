@@ -197,7 +197,12 @@ fn content_creation_greedy_starves_text_branch_slo_aware_shortens_e2e() {
     // … and under greedy that branch is starved: the outline's chat
     // requests queue behind the b-roll diffusion kernels.
     let outline_p99 = |r: &consumerbench::scenario::ScenarioOutcome| {
-        r.apps.iter().find(|a| a.node == "outline").unwrap().p99_latency
+        r.apps
+            .iter()
+            .find(|a| a.node == "outline")
+            .unwrap()
+            .p99_latency
+            .expect("outline completed requests")
     };
     assert!(
         outline_p99(&greedy) > outline_p99(&aware),

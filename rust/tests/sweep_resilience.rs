@@ -1,0 +1,235 @@
+//! Sweep-supervision resilience suite.
+//!
+//! Pins the fault-tolerance contract of the scenario matrix: a panicking
+//! or budget-exhausted scenario becomes a quarantined report row while
+//! every sibling completes; the report stays **byte-identical** across
+//! `--jobs 1`, `--jobs 4`, and repeated runs even with quarantined rows in
+//! it; and a sweep that is killed mid-run (simulated by truncating the
+//! JSONL journal, including mid-line) resumes to a report byte-identical
+//! to an uninterrupted one. Stale journal entries — same scenario name,
+//! different spec digest — are ignored rather than replayed.
+
+use std::path::PathBuf;
+
+use consumerbench::cli::run_cli;
+use consumerbench::coordinator::InjectFailure;
+use consumerbench::scenario::{
+    run_specs_supervised, MatrixAxes, ScenarioSpec, ScenarioStatus, SweepOptions,
+};
+
+/// The flat `mix=chat` slice of the default matrix: a handful of fast
+/// scenarios (static + adaptive twins) — enough rows for supervision and
+/// resume to be meaningful without a long sweep.
+fn chat_slice(seed: u64) -> Vec<ScenarioSpec> {
+    let mut specs = MatrixAxes::default_matrix(seed).expand();
+    specs.retain(|s| s.name.starts_with("mix=chat/"));
+    assert!(specs.len() >= 4, "expected a non-trivial slice, got {}", specs.len());
+    specs
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "cb_sweep_resilience_{}_{tag}.jsonl",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn panicking_scenario_does_not_abort_siblings_and_report_is_byte_identical() {
+    let mut specs = chat_slice(42);
+    specs[1].inject_failure = Some(InjectFailure::Panic);
+    let opts = |jobs| SweepOptions {
+        jobs,
+        ..SweepOptions::default()
+    };
+    let report = run_specs_supervised(&specs, 42, &opts(1)).unwrap();
+    assert_eq!(report.scenarios.len(), specs.len());
+    assert_eq!(report.scenarios[1].status, ScenarioStatus::Panicked);
+    assert!(report.scenarios[1].retried, "a panic gets exactly one retry");
+    let ok = report.scenarios.iter().filter(|s| s.status.is_ok()).count();
+    assert_eq!(ok, specs.len() - 1, "every sibling must complete");
+    let j1 = report.to_json();
+    assert!(j1.contains("\"status\": \"panicked\""), "{j1}");
+    assert!(j1.contains("\"failures\": {"), "{j1}");
+    assert!(j1.contains("\"panicked\": 1"), "{j1}");
+    // Byte-identity holds with a quarantined row in the sweep — across
+    // worker counts and across repeats.
+    let j4 = run_specs_supervised(&specs, 42, &opts(4)).unwrap().to_json();
+    assert_eq!(j1, j4, "jobs must not change the report");
+    let again = run_specs_supervised(&specs, 42, &opts(4)).unwrap().to_json();
+    assert_eq!(j1, again, "same seed must reproduce exactly");
+}
+
+#[test]
+fn budget_exhausted_scenario_reports_deterministically() {
+    let mut specs = chat_slice(42);
+    specs[0].budget_events = Some(50);
+    let opts = SweepOptions::default();
+    let a = run_specs_supervised(&specs, 42, &opts).unwrap();
+    assert_eq!(a.scenarios[0].status, ScenarioStatus::BudgetExhausted);
+    assert!(
+        !a.scenarios[0].retried,
+        "deterministic exhaustion is never retried"
+    );
+    assert!(a.scenarios[0]
+        .error
+        .as_deref()
+        .unwrap()
+        .contains("budget exhausted"));
+    for s in &a.scenarios[1..] {
+        assert!(s.status.is_ok(), "siblings must complete: {}", s.name);
+    }
+    // Budgets are pure functions of the config: the exhaustion point (and
+    // therefore the whole report) is digest-stable across runs.
+    let b = run_specs_supervised(&specs, 42, &opts).unwrap();
+    assert_eq!(a.to_json(), b.to_json());
+    assert!(a.to_json().contains("\"budget_exhausted\": 1"));
+}
+
+#[test]
+fn resume_after_truncation_reproduces_the_uninterrupted_report() {
+    let specs = chat_slice(42);
+    let path = tmp("resume");
+    let _ = std::fs::remove_file(&path);
+    let straight = run_specs_supervised(
+        &specs,
+        42,
+        &SweepOptions {
+            jobs: 2,
+            journal: Some(path.clone()),
+            ..SweepOptions::default()
+        },
+    )
+    .unwrap()
+    .to_json();
+    // Simulate a kill mid-sweep: keep the first half of the journal bytes,
+    // cutting mid-line — the partial tail must be discarded, its scenario
+    // (and everything after it) re-executed.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.ends_with('\n'));
+    std::fs::write(&path, &text.as_bytes()[..text.len() / 2]).unwrap();
+    let resumed = run_specs_supervised(
+        &specs,
+        42,
+        &SweepOptions {
+            jobs: 4,
+            journal: Some(path.clone()),
+            resume: true,
+            ..SweepOptions::default()
+        },
+    )
+    .unwrap()
+    .to_json();
+    assert_eq!(
+        straight, resumed,
+        "killed-and-resumed must be byte-identical to uninterrupted"
+    );
+    // Resume again over the repaired journal (which now carries a partial
+    // line mid-file): nothing re-executes, the report is reproduced.
+    let replayed = run_specs_supervised(
+        &specs,
+        42,
+        &SweepOptions {
+            jobs: 1,
+            journal: Some(path.clone()),
+            resume: true,
+            ..SweepOptions::default()
+        },
+    )
+    .unwrap()
+    .to_json();
+    assert_eq!(straight, replayed);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn stale_journal_entries_for_a_changed_spec_are_ignored() {
+    let specs = chat_slice(42);
+    let path = tmp("stale");
+    let _ = std::fs::remove_file(&path);
+    run_specs_supervised(
+        &specs,
+        42,
+        &SweepOptions {
+            journal: Some(path.clone()),
+            ..SweepOptions::default()
+        },
+    )
+    .unwrap();
+    // Change one spec without changing its name: its spec digest changes,
+    // so the checkpointed entry is stale and must be re-executed — here the
+    // changed spec trips its (tiny) event budget, which the stale `ok`
+    // entry would have masked.
+    let mut changed = specs.clone();
+    changed[0].budget_events = Some(1);
+    let resumed = run_specs_supervised(
+        &changed,
+        42,
+        &SweepOptions {
+            journal: Some(path.clone()),
+            resume: true,
+            ..SweepOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        resumed.scenarios[0].status,
+        ScenarioStatus::BudgetExhausted,
+        "a stale journal entry must not mask the changed spec"
+    );
+    for s in &resumed.scenarios[1..] {
+        assert!(s.status.is_ok(), "unchanged specs replay from the journal");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The acceptance pin end-to-end through the CLI: journal a sweep, truncate
+/// it mid-line, `--resume`, and compare report files byte-for-byte.
+#[test]
+fn cli_journal_resume_is_byte_identical() {
+    let dir = std::env::temp_dir().join("cb_sweep_resilience_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("sweep.jsonl");
+    let _ = std::fs::remove_file(&journal);
+    let straight_path = dir.join("straight.json");
+    let resumed_path = dir.join("resumed.json");
+    let run = |args: &[&str]| {
+        let args: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        let mut buf = Vec::new();
+        run_cli(&args, &mut buf)
+            .map(|_| String::from_utf8(buf).unwrap())
+            .map_err(|e| format!("{e:#}"))
+    };
+    run(&[
+        "scenario",
+        "--filter",
+        "mix=chat/",
+        "--jobs",
+        "2",
+        "--journal",
+        journal.to_str().unwrap(),
+        "--out",
+        straight_path.to_str().unwrap(),
+    ])
+    .unwrap();
+    let text = std::fs::read_to_string(&journal).unwrap();
+    std::fs::write(&journal, &text.as_bytes()[..text.len() / 3]).unwrap();
+    run(&[
+        "scenario",
+        "--filter",
+        "mix=chat/",
+        "--jobs",
+        "4",
+        "--journal",
+        journal.to_str().unwrap(),
+        "--resume",
+        "--out",
+        resumed_path.to_str().unwrap(),
+    ])
+    .unwrap();
+    assert_eq!(
+        std::fs::read(&straight_path).unwrap(),
+        std::fs::read(&resumed_path).unwrap(),
+        "CLI resume must reproduce the report byte-for-byte"
+    );
+}
