@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Perf gate: compare a fresh microbench run against the committed baseline.
+
+Usage:
+    python3 python/perf_gate.py BASELINE.json FRESH.json [--threshold 0.20]
+
+Both files are `microbench` outputs (``consumerbench_bench: 1``). Each entry
+is matched by name; the direction of "worse" follows the unit:
+
+* ``s`` (wall-clock) — higher is worse;
+* everything else (``events/s``, ``jobs/s``, ``bytes/s``, ``batches/s``,
+  ``traces/s``, ``x``) — lower is worse.
+
+The gate fails (exit 1) when any comparable entry regressed by more than the
+threshold. It *skips* — exit 0 with a visible notice, never a silent pass —
+when the comparison would be meaningless:
+
+* the baseline file is missing (toolchain never produced one);
+* the baseline is the unmeasured schema placeholder;
+* baseline and fresh runs used different microbench modes (fast-mode
+  numbers are not comparable to full-mode numbers);
+* an individual entry is null on either side or absent from one file.
+
+GitHub Actions renders ``::notice::``/``::error::`` lines in the job UI, so
+the skip is visible in CI instead of masquerading as a green gate.
+"""
+
+import argparse
+import json
+import sys
+
+
+def notice(msg: str) -> None:
+    print(f"::notice::perf-gate: {msg}")
+
+
+def error(msg: str) -> None:
+    print(f"::error::perf-gate: {msg}")
+
+
+def load(path: str):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return None, f"{path} not found"
+    except json.JSONDecodeError as e:
+        return None, f"{path} is not valid JSON ({e})"
+    if doc.get("consumerbench_bench") != 1:
+        return None, f"{path} is not a microbench report (consumerbench_bench != 1)"
+    return doc, None
+
+
+def entries_by_name(doc) -> dict:
+    return {e["name"]: e for e in doc.get("entries", []) if "name" in e}
+
+
+def lower_is_better(unit: str) -> bool:
+    return unit == "s"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH.json")
+    ap.add_argument("fresh", help="freshly measured microbench output")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="max tolerated fractional regression (default 0.20 = 20%%)",
+    )
+    args = ap.parse_args()
+
+    baseline, err = load(args.baseline)
+    if baseline is None:
+        notice(f"skipping ({err}); commit a measured baseline to arm the gate")
+        return 0
+    fresh, err = load(args.fresh)
+    if fresh is None:
+        # A missing *fresh* run means the bench step itself broke — that is
+        # a failure, not a skip (the baseline exists and expects a compare).
+        error(f"fresh run unusable ({err})")
+        return 1
+
+    if baseline.get("mode") == "unmeasured":
+        notice(
+            "skipping (baseline is the unmeasured schema placeholder); "
+            "run `cargo bench --bench microbench` and commit BENCH.json to arm the gate"
+        )
+        return 0
+    if baseline.get("mode") != fresh.get("mode"):
+        notice(
+            f"skipping (baseline mode `{baseline.get('mode')}` != fresh mode "
+            f"`{fresh.get('mode')}`; numbers are not comparable across modes)"
+        )
+        return 0
+
+    base = entries_by_name(baseline)
+    new = entries_by_name(fresh)
+    regressions = []
+    compared = 0
+    for name, b in base.items():
+        f = new.get(name)
+        if f is None:
+            notice(f"entry `{name}` absent from fresh run; skipped")
+            continue
+        bv, fv = b.get("value"), f.get("value")
+        if bv is None or fv is None:
+            notice(f"entry `{name}` is null ({'baseline' if bv is None else 'fresh'}); skipped")
+            continue
+        if bv <= 0:
+            notice(f"entry `{name}` baseline is non-positive ({bv}); skipped")
+            continue
+        compared += 1
+        unit = b.get("unit", "")
+        if lower_is_better(unit):
+            change = (fv - bv) / bv  # positive = slower = worse
+        else:
+            change = (bv - fv) / bv  # positive = lower throughput = worse
+        if change > args.threshold:
+            regressions.append((name, bv, fv, unit, change))
+
+    if not compared:
+        notice("skipping (no comparable entries between baseline and fresh run)")
+        return 0
+    if regressions:
+        for name, bv, fv, unit, change in regressions:
+            error(
+                f"`{name}` regressed {change * 100.0:.1f}% "
+                f"(baseline {bv:g} {unit} -> fresh {fv:g} {unit}, "
+                f"threshold {args.threshold * 100.0:.0f}%)"
+            )
+        return 1
+    print(
+        f"perf-gate: OK — {compared} entries within "
+        f"{args.threshold * 100.0:.0f}% of baseline"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

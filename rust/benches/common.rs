@@ -9,7 +9,9 @@
 use std::time::Instant;
 
 use consumerbench::coordinator::{run_config_text, NodeResult, ScenarioResult};
-use consumerbench::gpusim::engine::{Engine, JobSpec, Phase, Trace};
+use consumerbench::gpusim::engine::{
+    Engine, EngineOptions, JobSpec, Phase, QueueBackend, Trace, TraceMode,
+};
 use consumerbench::gpusim::kernel::KernelDesc;
 use consumerbench::gpusim::policy::Policy;
 use consumerbench::gpusim::profiles::Testbed;
@@ -34,12 +36,27 @@ pub fn monitor(result: &ScenarioResult) -> MonitorReport {
 
 /// Shared engine-throughput workload (perf_engine + microbench): `jobs`
 /// jobs × `kernels_per_job` kernels with interleaved arrivals across four
-/// clients under Greedy. Returns (kernel-events per second, the recorded
-/// trace). One definition so the two bench targets stay comparable.
+/// clients under Greedy, on the given queue backend. `trace` is the
+/// recording mode (`None` disables tracing entirely). Returns
+/// (kernel-events per second, the recorded trace — the tail window under
+/// streaming). One definition so the bench targets stay comparable.
 #[allow(dead_code)]
-pub fn engine_events_per_sec(trace: bool, jobs: usize, kernels_per_job: usize) -> (f64, Trace) {
-    let mut e = Engine::new(Testbed::intel_server(), Policy::Greedy);
-    e.set_trace_enabled(trace);
+pub fn engine_events_per_sec(
+    queue: QueueBackend,
+    trace: Option<TraceMode>,
+    jobs: usize,
+    kernels_per_job: usize,
+) -> (f64, Trace) {
+    let mut e = Engine::with_options(
+        Testbed::intel_server(),
+        Policy::Greedy,
+        EngineOptions {
+            queue,
+            trace_mode: trace.unwrap_or_default(),
+            capacity_hint: jobs,
+        },
+    );
+    e.set_trace_enabled(trace.is_some());
     let clients: Vec<_> = (0..4).map(|i| e.register_client(format!("c{i}"))).collect();
     let kernel = KernelDesc::new("k", 288, 256, 80, 8 * 1024, 1e8, 5e6);
     for j in 0..jobs {

@@ -1,10 +1,14 @@
 //! Micro-benchmark suite → `BENCH.json`.
 //!
-//! Five hot paths, each reported as a machine-readable entry so every
+//! The hot paths, each reported as a machine-readable entry so every
 //! future PR has a perf trajectory to regress against:
 //!
 //! * **engine-throughput** — simulated kernel-events per second through the
-//!   discrete-event engine, with trace recording on and off;
+//!   discrete-event engine, with trace recording on and off, plus a
+//!   per-queue-backend pair (`_heap` / `_wheel`, both untraced so the
+//!   event-queue cost dominates) and a streaming-trace-mode run;
+//! * **job-slab** — job submissions per second through the slab allocator
+//!   (the `submit` hot path: slab insert + queue push);
 //! * **sweep-wall-clock** — scenario-matrix wall time at `--jobs 1` vs.
 //!   all available workers (the parallel-sweep speedup);
 //! * **digest-rate** — bytes per second through the streaming FNV-1a trace
@@ -32,7 +36,9 @@ use std::time::Instant;
 
 use consumerbench::apps::models::{llama_3_2_3b, sd35_medium_turbo, whisper_large_v3_turbo};
 use consumerbench::gpusim::backend::KernelBackend;
-use consumerbench::gpusim::engine::{trace_digest, Engine, Trace};
+use consumerbench::gpusim::engine::{
+    trace_digest, Engine, EngineOptions, JobSpec, Phase, QueueBackend, Trace, TraceMode,
+};
 use consumerbench::gpusim::policy::Policy;
 use consumerbench::gpusim::profiles::Testbed;
 use consumerbench::scenario::{run_matrix_jobs, MatrixAxes};
@@ -71,11 +77,43 @@ fn kernel_trace_gens_per_sec(backend: KernelBackend, reps: usize) -> f64 {
     (reps.max(1) * 4) as f64 / dt.max(1e-9)
 }
 
+/// Job submissions per second through the engine's slab allocator: the
+/// `submit` hot path is a slab insert plus an event-queue push. The jobs
+/// are tiny host phases so the subsequent `run_all` (correctness check
+/// only) stays cheap.
+fn job_slab_submit_per_sec(jobs: usize) -> f64 {
+    let mut e = Engine::with_options(
+        Testbed::intel_server(),
+        Policy::Greedy,
+        EngineOptions {
+            capacity_hint: jobs,
+            ..Default::default()
+        },
+    );
+    e.set_trace_enabled(false);
+    let c = e.register_client("slab");
+    let t0 = Instant::now();
+    for j in 0..jobs {
+        e.submit(
+            JobSpec {
+                client: c,
+                label: String::new(),
+                phases: vec![Phase::host("h", 1e-6)],
+            },
+            j as f64 * 1e-6,
+        );
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    e.run_all();
+    assert_eq!(e.take_completed().len(), jobs, "bench must complete all jobs");
+    jobs as f64 / dt.max(1e-9)
+}
+
 /// Streaming digest throughput over a recorded engine trace.
 fn digest_bytes_per_sec(trace: &Trace, reps: usize) -> f64 {
-    // Canonical size: an 8-byte trace-length prefix, then per row 44 bytes
-    // of scalar counters (t f64 + 7×f32 + vram u64) + an 8-byte per-client
-    // count + 8 bytes per client entry.
+    // Canonical size: per row 44 bytes of scalar counters (t f64 + 7×f32 +
+    // vram u64) + an 8-byte per-client count + 8 bytes per client entry,
+    // then the 8-byte trace-length suffix.
     let per_client_bytes: usize = (0..trace.len()).map(|i| trace.per_client(i).len() * 8).sum();
     let bytes = 8 + trace.len() * 52 + per_client_bytes;
     let t0 = Instant::now();
@@ -192,12 +230,26 @@ fn main() {
             }
         });
 
-    let (jobs, kernels, digest_reps, server_reqs, gen_reps) =
-        if fast { (200, 25, 20, 64, 500) } else { (2_000, 50, 100, 512, 5_000) };
+    let (jobs, kernels, digest_reps, server_reqs, gen_reps, slab_jobs) = if fast {
+        (200, 25, 20, 64, 500, 20_000)
+    } else {
+        (2_000, 50, 100, 512, 5_000, 200_000)
+    };
     let mode = if fast { "fast" } else { "full" };
 
-    let (eps_traced, trace) = engine_events_per_sec(true, jobs, kernels);
-    let (eps_untraced, _) = engine_events_per_sec(false, jobs, kernels);
+    let (eps_traced, trace) =
+        engine_events_per_sec(QueueBackend::Heap, Some(TraceMode::Full), jobs, kernels);
+    let (eps_untraced, _) = engine_events_per_sec(QueueBackend::Heap, None, jobs, kernels);
+    // Per-queue-backend pair, both untraced so the queue cost dominates.
+    let (eps_heap, _) = engine_events_per_sec(QueueBackend::Heap, None, jobs, kernels);
+    let (eps_wheel, _) = engine_events_per_sec(QueueBackend::Wheel, None, jobs, kernels);
+    let (eps_streaming, _) = engine_events_per_sec(
+        QueueBackend::Heap,
+        Some(TraceMode::Streaming { window: 512 }),
+        jobs,
+        kernels,
+    );
+    let slab_rate = job_slab_submit_per_sec(slab_jobs);
     let digest_rate = digest_bytes_per_sec(&trace, digest_reps);
     let server_static = server_batches_per_sec(false, server_reqs);
     let server_adaptive = server_batches_per_sec(true, server_reqs);
@@ -228,6 +280,26 @@ fn main() {
             name: "engine_events_per_sec_untraced",
             value: eps_untraced,
             unit: "events/s",
+        },
+        Entry {
+            name: "engine_events_per_sec_heap",
+            value: eps_heap,
+            unit: "events/s",
+        },
+        Entry {
+            name: "engine_events_per_sec_wheel",
+            value: eps_wheel,
+            unit: "events/s",
+        },
+        Entry {
+            name: "streaming_trace_events_per_sec",
+            value: eps_streaming,
+            unit: "events/s",
+        },
+        Entry {
+            name: "job_slab_submit_per_sec",
+            value: slab_rate,
+            unit: "jobs/s",
         },
         Entry {
             name: "trace_digest_rate",

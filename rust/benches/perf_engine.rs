@@ -35,8 +35,10 @@ seed: 42
 }
 
 fn main() {
-    let (eps_traced, _) = engine_events_per_sec(true, 2_000, 50);
-    let (eps_untraced, _) = engine_events_per_sec(false, 2_000, 50);
+    use consumerbench::gpusim::engine::{QueueBackend, TraceMode};
+    let (eps_traced, _) =
+        engine_events_per_sec(QueueBackend::Heap, Some(TraceMode::Full), 2_000, 50);
+    let (eps_untraced, _) = engine_events_per_sec(QueueBackend::Heap, None, 2_000, 50);
     let wall = fig5_wallclock();
     println!("=== §Perf: L3 engine hot path ===");
     println!("engine throughput (trace on):  {:>10.0} kernel-events/s", eps_traced);

@@ -6,8 +6,9 @@
 //! consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--json FILE] [--no-pjrt]
 //! consumerbench validate <config.yaml>
 //! consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--backend KEY]
-//!                        [--chaos KEY] [--out FILE] [--full] [--list] [--dump DIR]
-//!                        [--fail-fast] [--journal FILE [--resume]]
+//!                        [--chaos KEY] [--queue KEY] [--trace-mode KEY]
+//!                        [--trace-window N] [--out FILE] [--full] [--list]
+//!                        [--dump DIR] [--fail-fast] [--journal FILE [--resume]]
 //!                        [--watchdog-secs N] [--inject-panic SUBSTR]
 //!                        [--inject-error SUBSTR]
 //! consumerbench apps
@@ -21,6 +22,8 @@ use crate::coordinator::config::InjectFailure;
 use crate::coordinator::{generate, to_csv, to_json_summary, BenchConfig, Dag, ScenarioRunner};
 use crate::gpusim::backend::KernelBackend;
 use crate::gpusim::chaos::ChaosKind;
+use crate::gpusim::queue::QueueBackend;
+use crate::gpusim::trace::{TraceMode, DEFAULT_STREAM_WINDOW};
 use crate::runtime::Runtime;
 use crate::scenario::{
     backend_key, chaos_key, run_specs_supervised, MatrixAxes, ScenarioSpec, SweepOptions,
@@ -33,8 +36,9 @@ USAGE:
     consumerbench run <config.yaml> [--artifacts DIR] [--csv FILE] [--json FILE] [--no-pjrt]
     consumerbench validate <config.yaml>
     consumerbench scenario [--seed N] [--jobs N] [--filter SUBSTR] [--backend KEY]
-                           [--chaos KEY] [--out FILE] [--full] [--list] [--dump DIR]
-                           [--fail-fast] [--journal FILE [--resume]]
+                           [--chaos KEY] [--queue KEY] [--trace-mode KEY]
+                           [--trace-window N] [--out FILE] [--full] [--list]
+                           [--dump DIR] [--fail-fast] [--journal FILE [--resume]]
                            [--watchdog-secs N] [--inject-panic SUBSTR]
                            [--inject-error SUBSTR]
     consumerbench apps
@@ -70,6 +74,15 @@ OPTIONS (scenario):
     --chaos KEY       Only expand scenarios injecting the given fault class
                       (thermal_throttle | vram_ballast | suspend |
                       server_crash | pcie_degrade)
+    --queue KEY       Event-queue backend for every selected scenario
+                      (heap | wheel; default heap). Digest-neutral: the
+                      JSON report is byte-identical under either backend
+    --trace-mode KEY  Trace recording mode (full | streaming). Streaming
+                      folds rows into the golden digest and windowed
+                      aggregates with O(window) peak trace memory; digests
+                      match full mode exactly
+    --trace-window N  Materialized tail-row window for --trace-mode
+                      streaming (default 512)
     --out FILE        Write the JSON report to FILE (default: print to stdout)
     --full            Sweep the full axes (periodic + trace arrivals, Apple
                       Silicon testbed, every policy on the workflow shapes
@@ -183,6 +196,12 @@ struct ScenarioOpts {
     backend: Option<KernelBackend>,
     /// Chaos fault-class filter (`--chaos KEY`); composes with the others.
     chaos: Option<ChaosKind>,
+    /// Event-queue backend override applied to every selected scenario
+    /// (`--queue heap|wheel`). Digest-neutral.
+    queue: Option<QueueBackend>,
+    /// Trace-mode override (`--trace-mode full|streaming`, optionally
+    /// `--trace-window N`).
+    trace_mode: Option<TraceMode>,
     out: Option<String>,
     full: bool,
     list: bool,
@@ -206,6 +225,10 @@ fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
         seed: 42,
         ..Default::default()
     };
+    // `--trace-mode`/`--trace-window` are order-independent, so collect
+    // both raw and resolve after the loop.
+    let mut trace_mode_key: Option<String> = None;
+    let mut trace_window: Option<usize> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -253,6 +276,34 @@ fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
                         "--chaos: unknown fault class `{c}` (thermal_throttle | vram_ballast | suspend | server_crash | pcie_degrade)"
                     )
                 })?);
+                i += 2;
+            }
+            "--queue" => {
+                let q = args.get(i + 1).context("--queue requires a value")?;
+                opts.queue = Some(
+                    QueueBackend::parse(q)
+                        .with_context(|| format!("--queue: unknown backend `{q}` (heap | wheel)"))?,
+                );
+                i += 2;
+            }
+            "--trace-mode" => {
+                trace_mode_key = Some(
+                    args.get(i + 1)
+                        .context("--trace-mode requires a value")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--trace-window" => {
+                let w: usize = args
+                    .get(i + 1)
+                    .context("--trace-window requires a value")?
+                    .parse()
+                    .context("--trace-window must be an integer")?;
+                if w == 0 {
+                    bail!("--trace-window must be >= 1");
+                }
+                trace_window = Some(w);
                 i += 2;
             }
             "--out" => {
@@ -321,6 +372,24 @@ fn parse_scenario_opts(args: &[String]) -> Result<ScenarioOpts> {
     if opts.resume && opts.journal.is_none() {
         bail!("--resume requires --journal");
     }
+    opts.trace_mode = match trace_mode_key.as_deref() {
+        None => {
+            if let Some(w) = trace_window {
+                bail!("--trace-window ({w}) requires --trace-mode streaming");
+            }
+            None
+        }
+        Some("full") => {
+            if let Some(w) = trace_window {
+                bail!("--trace-window ({w}) requires --trace-mode streaming");
+            }
+            Some(TraceMode::Full)
+        }
+        Some("streaming") => Some(TraceMode::Streaming {
+            window: trace_window.unwrap_or(DEFAULT_STREAM_WINDOW),
+        }),
+        Some(other) => bail!("--trace-mode: unknown mode `{other}` (full | streaming)"),
+    };
     Ok(opts)
 }
 
@@ -353,6 +422,18 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
                 "--chaos `{}` matches no scenario after filtering (try `scenario --list`)",
                 chaos_key(kind)
             );
+        }
+    }
+    // Execution knobs, not filters: applied to every selected scenario
+    // (and therefore visible in `--dump` output).
+    if let Some(queue) = opts.queue {
+        for spec in specs.iter_mut() {
+            spec.event_queue = Some(queue);
+        }
+    }
+    if let Some(mode) = opts.trace_mode {
+        for spec in specs.iter_mut() {
+            spec.trace_mode = Some(mode);
         }
     }
     for (flag, substr, mode) in [
@@ -817,6 +898,53 @@ mod tests {
         // A valid jobs value parses (use --list so nothing executes).
         let (r, out) = run(&["scenario", "--jobs", "4", "--list"]);
         assert!(r.is_ok(), "{out}");
+    }
+
+    #[test]
+    fn scenario_queue_and_trace_mode_flags_validated() {
+        // Unknown values and orphan --trace-window are rejected.
+        let (r, _) = run(&["scenario", "--list", "--queue", "splay_tree"]);
+        assert!(r.is_err());
+        let (r, _) = run(&["scenario", "--queue"]);
+        assert!(r.is_err(), "--queue without a value must be rejected");
+        let (r, _) = run(&["scenario", "--list", "--trace-mode", "ring"]);
+        assert!(r.is_err());
+        let (r, _) = run(&["scenario", "--list", "--trace-window", "64"]);
+        assert!(r.is_err(), "--trace-window without streaming must be rejected");
+        let (r, _) = run(&[
+            "scenario", "--list", "--trace-mode", "full", "--trace-window", "64",
+        ]);
+        assert!(r.is_err(), "--trace-window under full mode must be rejected");
+        let (r, _) = run(&[
+            "scenario", "--list", "--trace-mode", "streaming", "--trace-window", "0",
+        ]);
+        assert!(r.is_err(), "zero window must be rejected");
+        // Valid combinations parse; the overrides land in dumped configs
+        // (flag order does not matter for --trace-window).
+        let dir = std::env::temp_dir().join("cb_scenario_queue_dump");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (r, out) = run(&[
+            "scenario",
+            "--filter",
+            "mix=chat/policy=greedy/arrival=closed/testbed=intel_server",
+            "--queue",
+            "wheel",
+            "--trace-window",
+            "64",
+            "--trace-mode",
+            "streaming",
+            "--dump",
+            dir.to_str().unwrap(),
+        ]);
+        assert!(r.is_ok(), "{out}");
+        let mut dumped = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let text = std::fs::read_to_string(entry.unwrap().path()).unwrap();
+            assert!(text.contains("event_queue: wheel\n"), "{text}");
+            assert!(text.contains("trace_mode: streaming\ntrace_window: 64\n"), "{text}");
+            dumped += 1;
+        }
+        assert!(dumped > 0);
     }
 
     #[test]

@@ -23,6 +23,8 @@ use crate::coordinator::controller::ControllerConfig;
 use crate::gpusim::backend::KernelBackend;
 use crate::gpusim::chaos::{ChaosConfig, ChaosKind};
 use crate::gpusim::kernel::Device;
+use crate::gpusim::queue::QueueBackend;
+use crate::gpusim::trace::{TraceMode, DEFAULT_STREAM_WINDOW};
 use crate::server::KvPlacement;
 use crate::util::yaml::{self, Value};
 
@@ -208,6 +210,15 @@ pub struct BenchConfig {
     pub budget_virtual_time: Option<f64>,
     /// Supervision-test fault hook (`inject_failure: panic|error`).
     pub inject_failure: Option<InjectFailure>,
+    /// Event-queue backend for the engine (`event_queue: heap|wheel`).
+    /// Both produce byte-identical traces; `wheel` trades the heap's
+    /// O(log n) pops for amortized O(1) bucket operations.
+    pub event_queue: QueueBackend,
+    /// Trace recording mode (`trace_mode: full|streaming` plus optional
+    /// `trace_window: N`). Streaming folds rows into the digest and running
+    /// aggregates, keeping only the last N rows materialized — peak trace
+    /// memory O(N) instead of O(events).
+    pub trace_mode: TraceMode,
 }
 
 impl BenchConfig {
@@ -226,6 +237,9 @@ impl BenchConfig {
         let mut budget_events = None;
         let mut budget_virtual_time = None;
         let mut inject_failure = None;
+        let mut event_queue = QueueBackend::default();
+        let mut trace_mode_key: Option<String> = None;
+        let mut trace_window: Option<usize> = None;
 
         for key in root.keys() {
             let value = root.get(key).unwrap();
@@ -279,6 +293,22 @@ impl BenchConfig {
                 "seed" => {
                     seed = value.as_i64().context("seed must be an integer")? as u64;
                 }
+                "event_queue" => {
+                    let s = value.as_str().context("event_queue must be a string")?;
+                    event_queue = QueueBackend::parse(s)
+                        .with_context(|| format!("unknown event_queue `{s}` (heap | wheel)"))?;
+                }
+                "trace_mode" => {
+                    let s = value.as_str().context("trace_mode must be a string")?;
+                    trace_mode_key = Some(s.to_string());
+                }
+                "trace_window" => {
+                    let n = value.as_i64().context("trace_window must be an integer")?;
+                    if n < 1 {
+                        bail!("trace_window must be >= 1");
+                    }
+                    trace_window = Some(n as usize);
+                }
                 _ => tasks.push(parse_task(key, value)?),
             }
         }
@@ -286,6 +316,20 @@ impl BenchConfig {
         if tasks.is_empty() {
             bail!("configuration defines no tasks");
         }
+        // `trace_window` only means something under streaming: a window on
+        // a config that materializes everything would silently do nothing.
+        let trace_mode = match trace_mode_key.as_deref() {
+            None | Some("full") => {
+                if let Some(w) = trace_window {
+                    bail!("trace_window ({w}) requires `trace_mode: streaming`");
+                }
+                TraceMode::Full
+            }
+            Some("streaming") => TraceMode::Streaming {
+                window: trace_window.unwrap_or(DEFAULT_STREAM_WINDOW),
+            },
+            Some(other) => bail!("unknown trace_mode `{other}` (full | streaming)"),
+        };
         // Implicit workflow: every task is a root node.
         if workflow.is_empty() {
             workflow = tasks
@@ -311,6 +355,8 @@ impl BenchConfig {
             budget_events,
             budget_virtual_time,
             inject_failure,
+            event_queue,
+            trace_mode,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1170,6 +1216,46 @@ servers:
         )
         .unwrap_err();
         assert!(err.to_string().contains("unknown backend"), "{err}");
+    }
+
+    #[test]
+    fn event_queue_and_trace_mode_parse_and_validate() {
+        let base = "A (chatbot):\n  num_requests: 1\n";
+        // Defaults: heap queue, full trace — the pre-campaign semantics.
+        let cfg = BenchConfig::parse(base).unwrap();
+        assert_eq!(cfg.event_queue, QueueBackend::Heap);
+        assert_eq!(cfg.trace_mode, TraceMode::Full);
+
+        let cfg = BenchConfig::parse(&format!("{base}event_queue: wheel\n")).unwrap();
+        assert_eq!(cfg.event_queue, QueueBackend::Wheel);
+        let cfg = BenchConfig::parse(&format!("{base}event_queue: timer_wheel\n")).unwrap();
+        assert_eq!(cfg.event_queue, QueueBackend::Wheel);
+
+        let cfg = BenchConfig::parse(&format!("{base}trace_mode: streaming\n")).unwrap();
+        assert_eq!(
+            cfg.trace_mode,
+            TraceMode::Streaming { window: DEFAULT_STREAM_WINDOW }
+        );
+        let cfg = BenchConfig::parse(&format!(
+            "{base}trace_mode: streaming\ntrace_window: 64\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.trace_mode, TraceMode::Streaming { window: 64 });
+        let cfg = BenchConfig::parse(&format!("{base}trace_mode: full\n")).unwrap();
+        assert_eq!(cfg.trace_mode, TraceMode::Full);
+
+        for bad in [
+            "event_queue: splay_tree\n",
+            "event_queue: 3\n",
+            "trace_mode: ring\n",
+            "trace_window: 64\n",                      // window without streaming
+            "trace_mode: full\ntrace_window: 64\n",    // ditto, explicit full
+            "trace_mode: streaming\ntrace_window: 0\n",
+            "trace_mode: streaming\ntrace_window: -4\n",
+        ] {
+            let text = format!("{base}{bad}");
+            assert!(BenchConfig::parse(&text).is_err(), "should reject:\n{text}");
+        }
     }
 
     #[test]

@@ -25,7 +25,10 @@ use crate::coordinator::config::{
 use crate::coordinator::controller::{Controller, ControllerAction, Observation, ServerView};
 use crate::coordinator::dag::{Dag, NodeId};
 use crate::gpusim::chaos::{FaultAction, FaultEvent, FaultSchedule};
-use crate::gpusim::engine::{BudgetExhausted, Engine, JobId, JobResult, JobSpec, MemOp, Phase, Trace};
+use crate::gpusim::engine::{
+    BudgetExhausted, Engine, EngineError, EngineOptions, JobId, JobResult, JobSpec, MemOp, Phase,
+    Trace, TraceAggregates,
+};
 use crate::gpusim::kernel::Device;
 use crate::gpusim::policy::Policy;
 use crate::gpusim::profiles::Testbed;
@@ -348,7 +351,16 @@ pub struct ScenarioResult {
     /// weighted critical path with per-stage slack.
     pub workflow: WorkflowMetrics,
     /// Columnar monitor trace (right-sized when drained from the engine).
+    /// Under `TraceMode::Streaming` this is only the configured tail
+    /// window; `trace_digest`/`trace_aggregates` still cover every row.
     pub trace: Trace,
+    /// Canonical FNV-1a digest of the *complete* recorded trace, read from
+    /// the engine before the trace was drained. Identical across queue
+    /// backends and trace modes for the same run.
+    pub trace_digest: u64,
+    /// Streaming-mode running aggregates over the complete trace (`None`
+    /// for full-mode runs — fold them from `trace` instead).
+    pub trace_aggregates: Option<TraceAggregates>,
     pub client_names: Vec<String>,
     pub makespan: f64,
     pub policy: String,
@@ -412,7 +424,21 @@ impl ScenarioRunner {
             TestbedKind::IntelServer => Testbed::intel_server(),
             TestbedKind::MacbookM1Pro => Testbed::macbook_m1_pro(),
         };
-        let mut engine = Engine::new(testbed, Policy::Greedy);
+        // Pre-size the engine for this config's expected load: roughly one
+        // burst of pending events per request plus workflow bookkeeping.
+        // Purely a capacity hint — behaviour is identical at any value.
+        let capacity_hint = cfg.tasks.iter().map(|t| t.num_requests).sum::<usize>()
+            + cfg.workflow.len() * 2
+            + 16;
+        let mut engine = Engine::with_options(
+            testbed,
+            Policy::Greedy,
+            EngineOptions {
+                queue: cfg.event_queue,
+                trace_mode: cfg.trace_mode,
+                capacity_hint,
+            },
+        );
         let dag = Dag::build(&cfg.workflow)?;
 
         // Shared servers first (stable client ids).
@@ -638,7 +664,13 @@ impl ScenarioRunner {
                     at: self.engine.now(),
                 }));
             }
-            self.engine.run_until_budgeted(t).map_err(anyhow::Error::new)?;
+            // Budget exhaustion is unwrapped to the bare `BudgetExhausted`
+            // so supervision layers can keep classifying it by downcast;
+            // other engine failures surface as the typed `EngineError`.
+            self.engine.run_until_budgeted(t).map_err(|e| match e {
+                EngineError::Budget(b) => anyhow::Error::new(b),
+                other => anyhow::Error::new(other),
+            })?;
             let results = self.engine.take_completed();
             for r in results {
                 self.route(r)?;
@@ -656,6 +688,11 @@ impl ScenarioRunner {
             .collect();
         let gpu_idle_w = self.engine.testbed().gpu.idle_power;
         let cpu_idle_w = self.engine.testbed().cpu.idle_power;
+        // Digest and aggregates must be read *before* draining the trace:
+        // in streaming mode the recorder (and its fold) is consumed by
+        // `take_trace`, and in full mode the digest covers every row.
+        let trace_digest = self.engine.current_trace_digest();
+        let trace_aggregates = self.engine.trace_aggregates();
         let trace = self.engine.take_trace();
         let nodes: Vec<NodeResult> = self
             .nodes
@@ -694,6 +731,8 @@ impl ScenarioRunner {
             nodes,
             workflow,
             trace,
+            trace_digest,
+            trace_aggregates,
             client_names,
             makespan,
             policy,

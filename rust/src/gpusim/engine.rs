@@ -15,19 +15,22 @@
 //! dependencies and inference-server batching decisions are made at virtual
 //! time without the engine knowing about them.
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::gpusim::kernel::{duration, occupancy, sms_wanted, Device, KernelDesc};
 use crate::gpusim::policy::{Policy, ReadyKernel};
 use crate::gpusim::power::{cpu_power, gpu_power};
 use crate::gpusim::profiles::Testbed;
+use crate::gpusim::queue::{Event, EventKind, EventQueue};
 use crate::gpusim::vram::{AllocId, VramAllocator};
 
-// The trace lives in its own module; re-exported here so existing
-// `gpusim::engine::{TraceSample, trace_digest, …}` imports keep working.
+// The trace and queue live in their own modules; re-exported here so
+// existing `gpusim::engine::{TraceSample, trace_digest, …}` imports keep
+// working.
+pub use crate::gpusim::queue::QueueBackend;
 pub use crate::gpusim::trace::{
-    trace_canonical_bytes, trace_digest, Fnv1a, Trace, TraceRow, TraceSample, TraceView,
+    trace_canonical_bytes, trace_digest, Fnv1a, StreamingTrace, Trace, TraceAggregates, TraceMode,
+    TraceRow, TraceSample, TraceView,
 };
 
 /// Identifies a registered application/client.
@@ -169,43 +172,6 @@ impl JobResult {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum EventKind {
-    PhaseBegin,
-    KernelDone,
-    CpuDone,
-}
-
-#[derive(Debug, Clone, Copy)]
-struct Event {
-    time: f64,
-    seq: u64,
-    kind: EventKind,
-    job: JobId,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap via reverse: earlier time first, then insertion order.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .expect("NaN event time")
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
 #[derive(Debug)]
 struct JobState {
     spec: JobSpec,
@@ -216,6 +182,88 @@ struct JobState {
     exec_time: f64,
     queue_wait: f64,
     stats: Vec<PhaseStat>,
+}
+
+/// Dense slab for in-flight jobs: `JobId = generation << 32 | slot`.
+///
+/// The hot loop indexes jobs on every event; a `HashMap` paid a hash +
+/// probe per access. The slab is a direct `Vec` index. Freed slots are
+/// recycled through a free list (bounded memory over long sweeps), and the
+/// generation tag keeps every issued id unique, so external maps keyed by
+/// `JobId` (the executor's routing table) can never alias a recycled slot.
+/// First-generation ids equal the old sequential counter, and live ids are
+/// always distinct, so JobId-sorted resident sets keep a fixed iteration
+/// order — the property the trace's float sums depend on.
+#[derive(Debug, Default)]
+struct JobSlab {
+    slots: Vec<Option<JobState>>,
+    gens: Vec<u32>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl JobSlab {
+    fn with_capacity(n: usize) -> JobSlab {
+        JobSlab {
+            slots: Vec::with_capacity(n),
+            gens: Vec::with_capacity(n),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    fn insert(&mut self, state: JobState) -> JobId {
+        self.live += 1;
+        match self.free.pop() {
+            Some(idx) => {
+                let i = idx as usize;
+                debug_assert!(self.slots[i].is_none());
+                self.slots[i] = Some(state);
+                JobId(((self.gens[i] as u64) << 32) | idx as u64)
+            }
+            None => {
+                let idx = self.slots.len() as u64;
+                self.slots.push(Some(state));
+                self.gens.push(0);
+                JobId(idx)
+            }
+        }
+    }
+
+    #[inline]
+    fn idx(&self, id: JobId) -> usize {
+        let i = (id.0 & 0xffff_ffff) as usize;
+        assert!(
+            i < self.slots.len() && self.gens[i] as u64 == id.0 >> 32,
+            "unknown job {id:?}"
+        );
+        i
+    }
+
+    #[inline]
+    fn get(&self, id: JobId) -> &JobState {
+        let i = self.idx(id);
+        self.slots[i].as_ref().expect("unknown job")
+    }
+
+    #[inline]
+    fn get_mut(&mut self, id: JobId) -> &mut JobState {
+        let i = self.idx(id);
+        self.slots[i].as_mut().expect("unknown job")
+    }
+
+    fn remove(&mut self, id: JobId) -> JobState {
+        let i = self.idx(id);
+        let state = self.slots[i].take().expect("unknown job");
+        self.gens[i] = self.gens[i].wrapping_add(1);
+        self.free.push(i as u32);
+        self.live -= 1;
+        state
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -251,16 +299,17 @@ struct CpuResident {
     bw_rate: f64,
 }
 
-/// The simulated testbed: one GPU + one CPU driven by an event heap.
+/// The simulated testbed: one GPU + one CPU driven by an event queue.
 pub struct Engine {
     testbed: Testbed,
     policy: Policy,
     now: f64,
     seq: u64,
-    next_job: u64,
-    events: BinaryHeap<Event>,
+    /// Pluggable event core ([`QueueBackend`]): binary heap or timer wheel,
+    /// pinned to identical pop order by `tests/queue_equivalence.rs`.
+    events: Box<dyn EventQueue + Send>,
     clients: Vec<String>,
-    jobs: HashMap<JobId, JobState>,
+    jobs: JobSlab,
     // GPU state
     gpu_free_sms: usize,
     /// Sorted by (enqueue_time, seq) by construction: event time is
@@ -299,6 +348,12 @@ pub struct Engine {
     completed: Vec<JobResult>,
     trace: Trace,
     trace_enabled: bool,
+    trace_mode: TraceMode,
+    /// Bounded-memory recorder (`TraceMode::Streaming`); `None` under
+    /// `Full`, where rows materialize into `trace` instead.
+    streaming: Option<StreamingTrace>,
+    /// Reused per-client sample buffer for the streaming record path.
+    pc_scratch: Vec<(f32, f32)>,
     /// Events processed since construction (monotone; a pure function of the
     /// submitted workload, so it is deterministic across identical runs).
     events_processed: u64,
@@ -336,25 +391,94 @@ impl std::fmt::Display for BudgetExhausted {
 
 impl std::error::Error for BudgetExhausted {}
 
+/// Typed failure from a budgeted run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// A deterministic execution budget ran dry.
+    Budget(BudgetExhausted),
+    /// The event queue popped an event earlier than the current clock — a
+    /// broken [`EventQueue`] backend. The check is exact (no epsilon): the
+    /// old `now - 1e-9` slack silently loosened at large virtual times,
+    /// where 1e-9 is below one ulp and the comparison degenerated.
+    ClockRegression { event_time: f64, now: f64 },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Budget(b) => b.fmt(f),
+            EngineError::ClockRegression { event_time, now } => write!(
+                f,
+                "event queue went backwards: popped t={event_time} with clock at t={now}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<BudgetExhausted> for EngineError {
+    fn from(b: BudgetExhausted) -> Self {
+        EngineError::Budget(b)
+    }
+}
+
+/// Construction-time knobs for [`Engine::with_options`].
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Event-queue implementation (digest-neutral; see [`QueueBackend`]).
+    pub queue: QueueBackend,
+    /// Full materialized trace, or bounded-memory streaming digest.
+    pub trace_mode: TraceMode,
+    /// Expected number of jobs the scenario will submit (the executor
+    /// derives it from the configured request counts). Sizes the event
+    /// queue, the job slab, and the resident sets — a reservation, not a
+    /// limit; any value is safe.
+    pub capacity_hint: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            queue: QueueBackend::Heap,
+            trace_mode: TraceMode::Full,
+            capacity_hint: 256,
+        }
+    }
+}
+
 impl Engine {
     pub fn new(testbed: Testbed, policy: Policy) -> Self {
+        Self::with_options(testbed, policy, EngineOptions::default())
+    }
+
+    pub fn with_options(testbed: Testbed, policy: Policy, opts: EngineOptions) -> Self {
         let gpu_sms = testbed.gpu.num_sms;
         let cpu_cores = testbed.cpu.num_cores;
         let vram = VramAllocator::new(testbed.gpu.vram_bytes);
+        let hint = opts.capacity_hint.max(16);
+        // A job in flight contributes at most a couple of pending events
+        // (its next phase/kernel boundary), so 2× the expected job count
+        // with sane bounds replaces the old hardcoded 1024.
+        let event_cap = (hint * 2).clamp(64, 1 << 16);
+        let resident_cap = hint.clamp(16, 64);
+        let streaming = match opts.trace_mode {
+            TraceMode::Streaming { window } => Some(StreamingTrace::new(window)),
+            TraceMode::Full => None,
+        };
         Engine {
             testbed,
             policy,
             now: 0.0,
             seq: 0,
-            next_job: 0,
-            events: BinaryHeap::with_capacity(1024),
+            events: opts.queue.make(event_cap),
             clients: Vec::new(),
-            jobs: HashMap::new(),
+            jobs: JobSlab::with_capacity(hint.min(1 << 14)),
             gpu_free_sms: gpu_sms,
-            gpu_ready: VecDeque::with_capacity(64),
+            gpu_ready: VecDeque::with_capacity(resident_cap),
             gpu_ready_scratch: Vec::new(),
             gpu_launch_scratch: Vec::new(),
-            gpu_resident: Vec::with_capacity(64),
+            gpu_resident: Vec::with_capacity(resident_cap),
             gpu_held: Vec::new(),
             gpu_clock_scale: 1.0,
             gpu_suspended: false,
@@ -365,6 +489,9 @@ impl Engine {
             completed: Vec::new(),
             trace: Trace::new(),
             trace_enabled: true,
+            trace_mode: opts.trace_mode,
+            streaming,
+            pc_scratch: Vec::new(),
             events_processed: 0,
             event_budget: None,
         }
@@ -469,11 +596,48 @@ impl Engine {
 
     /// Drain the recorded trace. The returned buffer is shrunk to its
     /// length so long sweeps that hold many drained traces don't pin the
-    /// engines' peak recording capacity.
+    /// engines' peak recording capacity. Under `TraceMode::Streaming` this
+    /// materializes only the bounded tail window (the digest and running
+    /// aggregates stay queryable afterwards).
     pub fn take_trace(&mut self) -> Trace {
+        if let Some(st) = &mut self.streaming {
+            return st.take_tail();
+        }
         let mut t = std::mem::take(&mut self.trace);
         t.shrink_to_fit();
         t
+    }
+
+    /// The trace recording mode this engine was constructed with.
+    pub fn trace_mode(&self) -> TraceMode {
+        self.trace_mode
+    }
+
+    /// The event-queue backend this engine was constructed with.
+    pub fn queue_backend(&self) -> QueueBackend {
+        self.events.backend()
+    }
+
+    /// Mode-aware digest of every row recorded so far: under `Full` it
+    /// hashes the materialized trace; under `Streaming` it is the
+    /// incrementally folded digest. Identical runs produce identical
+    /// values in either mode (pinned by `tests/queue_equivalence.rs`).
+    pub fn current_trace_digest(&self) -> u64 {
+        match &self.streaming {
+            Some(st) => st.digest(),
+            None => trace_digest(&self.trace),
+        }
+    }
+
+    /// Streaming recorder state, when running under `TraceMode::Streaming`.
+    pub fn streaming_trace(&self) -> Option<&StreamingTrace> {
+        self.streaming.as_ref()
+    }
+
+    /// Running piecewise-constant aggregates (`TraceMode::Streaming` only;
+    /// under `Full` compute them with [`TraceAggregates::from_trace`]).
+    pub fn trace_aggregates(&self) -> Option<TraceAggregates> {
+        self.streaming.as_ref().map(|s| *s.aggregates())
     }
 
     fn next_seq(&mut self) -> u64 {
@@ -495,22 +659,20 @@ impl Engine {
             "unregistered client {:?}",
             spec.client
         );
-        let id = JobId(self.next_job);
-        self.next_job += 1;
+        // Absorb the 1e-12 submit slack so the queue never sees an event
+        // earlier than the clock (the pop-side check is exact, no epsilon).
+        let at = at.max(self.now);
         let host_pre = spec.phases[0].host_pre;
-        self.jobs.insert(
-            id,
-            JobState {
-                spec,
-                submit: at,
-                cur_phase: 0,
-                cur_kernel: 0,
-                phase_start: 0.0,
-                exec_time: 0.0,
-                queue_wait: 0.0,
-                stats: Vec::new(),
-            },
-        );
+        let id = self.jobs.insert(JobState {
+            spec,
+            submit: at,
+            cur_phase: 0,
+            cur_kernel: 0,
+            phase_start: 0.0,
+            exec_time: 0.0,
+            queue_wait: 0.0,
+            stats: Vec::new(),
+        });
         let seq = self.next_seq();
         self.events.push(Event {
             time: at + host_pre,
@@ -523,7 +685,7 @@ impl Engine {
 
     /// Time of the next pending event, if any.
     pub fn next_event_time(&self) -> Option<f64> {
-        self.events.peek().map(|e| e.time)
+        self.events.peek_time()
     }
 
     /// Install (or clear) the deterministic event budget enforced by
@@ -541,11 +703,11 @@ impl Engine {
     /// Process all events with time <= `t`; afterwards `now == max(now, t)`.
     ///
     /// Infallible wrapper for callers that never install an event budget;
-    /// panics if a budget is set and runs dry (budget-aware drivers must
-    /// use [`Engine::run_until_budgeted`]).
+    /// panics on any [`EngineError`] (budget-aware drivers must use
+    /// [`Engine::run_until_budgeted`]).
     pub fn run_until(&mut self, t: f64) {
         self.run_until_budgeted(t)
-            .expect("event budget exhausted inside unbudgeted run_until");
+            .unwrap_or_else(|e| panic!("engine failure inside unbudgeted run_until: {e}"));
     }
 
     /// Process all events with time <= `t`, charging each against the
@@ -553,35 +715,74 @@ impl Engine {
     /// at a deterministic virtual time — a pure function of workload and
     /// budget — and returns [`BudgetExhausted::Events`]; `now` is left at
     /// the last processed event, not advanced to `t`.
-    pub fn run_until_budgeted(&mut self, t: f64) -> Result<(), BudgetExhausted> {
-        // Single peek-then-pop: the heap head is inspected once and popped
-        // through the same `PeekMut` handle (no second sift/unwrap pass).
-        while let Some(head) = self.events.peek_mut() {
-            if head.time > t {
+    ///
+    /// Same-timestamp events are applied as one batch: every event still
+    /// runs its state transition and scheduling pass individually (grant
+    /// outcomes depend on them), but the trace records a single row when
+    /// the batch ends. Zero-width intermediate states were invisible to
+    /// the monitor's piecewise-constant resampling anyway (`dt > 0` guard),
+    /// and a burst of N same-time events now costs one row instead of N.
+    pub fn run_until_budgeted(&mut self, t: f64) -> Result<(), EngineError> {
+        let mut dirty = false;
+        while let Some(head_t) = self.events.peek_time() {
+            if head_t > t {
                 break;
             }
             if let Some(budget) = self.event_budget {
                 if self.events_processed >= budget {
-                    return Err(BudgetExhausted::Events { budget, at: self.now });
+                    if dirty {
+                        self.record();
+                    }
+                    return Err(BudgetExhausted::Events { budget, at: self.now }.into());
                 }
             }
-            let ev = std::collections::binary_heap::PeekMut::pop(head);
-            debug_assert!(ev.time >= self.now - 1e-9, "event heap went backwards");
-            self.now = ev.time.max(self.now);
+            let ev = self.events.pop().expect("peeked event vanished");
+            if ev.time < self.now {
+                debug_assert!(
+                    false,
+                    "event queue went backwards: {} < {}",
+                    ev.time, self.now
+                );
+                if dirty {
+                    self.record();
+                }
+                return Err(EngineError::ClockRegression {
+                    event_time: ev.time,
+                    now: self.now,
+                });
+            }
+            self.now = ev.time;
             self.events_processed += 1;
             self.process(ev);
+            dirty = true;
+            // Batch boundary: flush the trace row unless the next pending
+            // event shares this exact timestamp.
+            if self.events.peek_time() != Some(self.now) {
+                self.record();
+                dirty = false;
+            }
         }
+        debug_assert!(!dirty, "batch left unflushed at loop exit");
         self.now = self.now.max(t);
         Ok(())
     }
 
-    /// Run the heap dry. Counts events but does not enforce the budget —
+    /// Run the queue dry. Counts events but does not enforce the budget —
     /// unit-scale helpers drain tiny workloads where a budget is noise.
     pub fn run_all(&mut self) {
         while let Some(ev) = self.events.pop() {
-            self.now = ev.time.max(self.now);
+            assert!(
+                ev.time >= self.now,
+                "event queue went backwards: {} < {}",
+                ev.time,
+                self.now
+            );
+            self.now = ev.time;
             self.events_processed += 1;
             self.process(ev);
+            if self.events.peek_time() != Some(self.now) {
+                self.record();
+            }
         }
     }
 
@@ -606,12 +807,13 @@ impl Engine {
         }
         self.schedule_gpu();
         self.schedule_cpu();
-        self.record();
+        // Trace recording happens at batch boundaries in the run loops, not
+        // here — one row per distinct timestamp.
     }
 
     fn on_phase_begin(&mut self, job: JobId) {
         let (num_mem_ops, device, has_kernels, has_cpu, client) = {
-            let js = self.jobs.get_mut(&job).expect("unknown job");
+            let js = self.jobs.get_mut(job);
             js.phase_start = self.now;
             js.cur_kernel = 0;
             js.exec_time = 0.0;
@@ -632,7 +834,7 @@ impl Engine {
         // model releases that already happened).
         let mut applied: Vec<AllocId> = Vec::new();
         for i in 0..num_mem_ops {
-            let js = &self.jobs[&job];
+            let js = self.jobs.get(job);
             let op = &js.spec.phases[js.cur_phase].mem_ops[i];
             let oom = match op {
                 MemOp::Alloc { label, bytes } => {
@@ -688,7 +890,7 @@ impl Engine {
         self.gpu_held[res.client.0] -= res.sms;
 
         let more_kernels = {
-            let js = self.jobs.get_mut(&job).expect("unknown job");
+            let js = self.jobs.get_mut(job);
             js.cur_kernel += 1;
             let ph = &js.spec.phases[js.cur_phase];
             js.cur_kernel < ph.kernels.len()
@@ -717,7 +919,7 @@ impl Engine {
 
     fn finish_phase(&mut self, job: JobId) {
         let (done, next_host_pre) = {
-            let js = self.jobs.get_mut(&job).expect("unknown job");
+            let js = self.jobs.get_mut(job);
             let ph = &js.spec.phases[js.cur_phase];
             js.stats.push(PhaseStat {
                 tag: ph.tag,
@@ -751,7 +953,7 @@ impl Engine {
     }
 
     fn complete_job(&mut self, job: JobId, error: Option<String>) {
-        let js = self.jobs.remove(&job).expect("unknown job");
+        let js = self.jobs.remove(job);
         self.completed.push(JobResult {
             id: job,
             client: js.spec.client,
@@ -772,7 +974,7 @@ impl Engine {
     fn push_gpu_ready(&mut self, job: JobId) {
         let seq = self.next_seq();
         let (client, wanted) = {
-            let js = &self.jobs[&job];
+            let js = self.jobs.get(job);
             let k = &js.spec.phases[js.cur_phase].kernels[js.cur_kernel];
             (js.spec.client, sms_wanted(k, &self.testbed.gpu).unwrap_or(1))
         };
@@ -851,7 +1053,7 @@ impl Engine {
         let gpu = self.testbed.gpu.clone();
         for (entry, sms) in launches.drain(..) {
             let (kernel, client) = {
-                let js = &self.jobs[&entry.job];
+                let js = self.jobs.get(entry.job);
                 (
                     js.spec.phases[js.cur_phase].kernels[js.cur_kernel].clone(),
                     js.spec.client,
@@ -869,7 +1071,7 @@ impl Engine {
             };
             let occ = occupancy(&kernel, &gpu).expect("occupancy checked in duration");
             {
-                let js = self.jobs.get_mut(&entry.job).expect("unknown job");
+                let js = self.jobs.get_mut(entry.job);
                 js.queue_wait += self.now - entry.ready_since;
                 js.exec_time += dur;
             }
@@ -921,7 +1123,7 @@ impl Engine {
                 break;
             };
             let work = {
-                let js = &self.jobs[&entry.job];
+                let js = self.jobs.get(entry.job);
                 js.spec.phases[js.cur_phase].cpu.clone().expect("cpu phase without work")
             };
             let cores = work.threads.min(self.cpu_free_cores).max(1);
@@ -932,7 +1134,7 @@ impl Engine {
             let memory = work.bytes / (cpu.mem_bw * bw_factor);
             let dur = cpu.dispatch_overhead + compute.max(memory);
             {
-                let js = self.jobs.get_mut(&entry.job).expect("unknown job");
+                let js = self.jobs.get_mut(entry.job);
                 js.queue_wait += self.now - entry.ready_since;
                 js.exec_time += dur;
             }
@@ -990,26 +1192,29 @@ impl Engine {
             .sum::<f64>()
             / cpu.mem_bw)
             .min(1.0);
-        // Columnar append: the per-client slice is written in place — no
-        // per-sample heap allocation.
-        let per_client = self.trace.push_row(
-            TraceRow {
-                t: self.now,
-                gpu_smact: smact as f32,
-                gpu_smocc: smocc as f32,
-                gpu_bw_frac: bw_frac as f32,
-                gpu_power: gpu_power(gpu, smact, smocc, bw_frac) as f32,
-                vram_used: self.vram.used(),
-                cpu_util: cpu_util as f32,
-                dram_bw_frac: dram_frac as f32,
-                cpu_power: cpu_power(cpu, cpu_util, dram_frac) as f32,
-            },
-            self.clients.len(),
-        );
-        for r in &self.gpu_resident {
-            let e = &mut per_client[r.client.0];
-            e.0 += (r.sms as f64 / total_sms) as f32;
-            e.1 += (r.sms as f64 * r.occupancy / total_sms) as f32;
+        let row = TraceRow {
+            t: self.now,
+            gpu_smact: smact as f32,
+            gpu_smocc: smocc as f32,
+            gpu_bw_frac: bw_frac as f32,
+            gpu_power: gpu_power(gpu, smact, smocc, bw_frac) as f32,
+            vram_used: self.vram.used(),
+            cpu_util: cpu_util as f32,
+            dram_bw_frac: dram_frac as f32,
+            cpu_power: cpu_power(cpu, cpu_util, dram_frac) as f32,
+        };
+        if let Some(st) = &mut self.streaming {
+            // Bounded-memory path: fill the reused scratch slice, fold the
+            // row into the digest/aggregates, keep only the ring window.
+            self.pc_scratch.clear();
+            self.pc_scratch.resize(self.clients.len(), (0.0, 0.0));
+            fill_per_client(&self.gpu_resident, total_sms, &mut self.pc_scratch);
+            st.record(&row, &self.pc_scratch);
+        } else {
+            // Columnar append: the per-client slice is written in place —
+            // no per-sample heap allocation.
+            let per_client = self.trace.push_row(row, self.clients.len());
+            fill_per_client(&self.gpu_resident, total_sms, per_client);
         }
     }
 
@@ -1037,6 +1242,17 @@ impl Engine {
             self.cpu_resident.windows(2).all(|w| w[0].job < w[1].job),
             "cpu resident set not sorted by JobId"
         );
+    }
+}
+
+/// Per-client (smact, smocc) contributions, summed in the fixed
+/// JobId-sorted resident order (float addition is order-sensitive; this is
+/// the golden-trace determinism contract).
+fn fill_per_client(resident: &[GpuResident], total_sms: f64, out: &mut [(f32, f32)]) {
+    for r in resident {
+        let e = &mut out[r.client.0];
+        e.0 += (r.sms as f64 / total_sms) as f32;
+        e.1 += (r.sms as f64 * r.occupancy / total_sms) as f32;
     }
 }
 
@@ -1105,7 +1321,7 @@ mod tests {
             0.0,
         );
         let err = e.run_until_budgeted(f64::MAX).unwrap_err();
-        let BudgetExhausted::Events { budget, at } = err else {
+        let EngineError::Budget(BudgetExhausted::Events { budget, at }) = err.clone() else {
             panic!("expected Events variant, got {err:?}");
         };
         assert_eq!(budget, 2);
@@ -1125,7 +1341,7 @@ mod tests {
         );
         let err2 = e2.run_until_budgeted(f64::MAX).unwrap_err();
         assert_eq!(err.to_string(), err2.to_string());
-        let BudgetExhausted::Events { at: at2, .. } = err2 else {
+        let EngineError::Budget(BudgetExhausted::Events { at: at2, .. }) = err2 else {
             unreachable!()
         };
         assert_eq!(at.to_bits(), at2.to_bits(), "stop time must be bit-identical");
@@ -1721,5 +1937,122 @@ mod tests {
             ends
         };
         assert_eq!(run(), run());
+    }
+
+    fn mixed_workload(e: &mut Engine) {
+        let a = e.register_client("a");
+        let b = e.register_client("b");
+        for i in 0..20 {
+            let cl = if i % 2 == 0 { a } else { b };
+            e.submit(
+                JobSpec {
+                    client: cl,
+                    label: format!("r{i}"),
+                    phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 400 + i, 1e8)])],
+                },
+                // Duplicate arrival times on purpose: same-timestamp
+                // batches must behave identically on both queue backends.
+                (i / 2) as f64 * 0.002,
+            );
+        }
+    }
+
+    #[test]
+    fn wheel_backend_is_digest_identical_to_heap() {
+        let run = |queue: QueueBackend| {
+            let mut e = Engine::with_options(
+                Testbed::intel_server(),
+                Policy::Greedy,
+                EngineOptions { queue, ..EngineOptions::default() },
+            );
+            assert_eq!(e.queue_backend(), queue);
+            mixed_workload(&mut e);
+            e.run_all();
+            let ends: Vec<u64> = e.take_completed().iter().map(|r| r.end.to_bits()).collect();
+            (trace_digest(e.trace()), ends)
+        };
+        assert_eq!(run(QueueBackend::Heap), run(QueueBackend::Wheel));
+    }
+
+    #[test]
+    fn streaming_mode_matches_full_trace_digest() {
+        let full = {
+            let mut e = engine();
+            mixed_workload(&mut e);
+            e.run_all();
+            e
+        };
+        let mut st = Engine::with_options(
+            Testbed::intel_server(),
+            Policy::Greedy,
+            EngineOptions {
+                trace_mode: TraceMode::Streaming { window: 8 },
+                ..EngineOptions::default()
+            },
+        );
+        mixed_workload(&mut st);
+        st.run_all();
+        assert_eq!(full.current_trace_digest(), st.current_trace_digest());
+        let rec = st.streaming_trace().unwrap();
+        assert_eq!(rec.rows_recorded(), full.trace().len() as u64);
+        assert!(rec.tail_len() <= 8, "ring exceeded window: {}", rec.tail_len());
+        // The running aggregates equal a post-hoc pass over the full trace.
+        let agg = st.trace_aggregates().unwrap();
+        assert_eq!(agg, TraceAggregates::from_trace(full.trace()));
+        // take_trace under streaming yields the bounded tail.
+        let tail = st.take_trace();
+        assert!(tail.len() <= 8);
+        assert_eq!(
+            tail.rows().last().map(|r| r.t.to_bits()),
+            full.trace().rows().last().map(|r| r.t.to_bits())
+        );
+    }
+
+    #[test]
+    fn job_slab_recycles_slots_with_fresh_generations() {
+        let mut e = engine();
+        let c = e.register_client("chat");
+        let first = e.submit(
+            JobSpec {
+                client: c,
+                label: "one".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 72, 1e6)])],
+            },
+            0.0,
+        );
+        assert_eq!(first, JobId(0), "first-generation ids stay sequential");
+        e.run_all();
+        assert_eq!(e.pending_jobs(), 0);
+        let second = e.submit(
+            JobSpec {
+                client: c,
+                label: "two".into(),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel("k", 72, 1e6)])],
+            },
+            e.now(),
+        );
+        // The slot is reused but the id is globally fresh.
+        assert_ne!(second, first);
+        assert_eq!(second.0 & 0xffff_ffff, 0, "slot 0 must be recycled");
+        assert_eq!(second.0 >> 32, 1, "generation must bump on reuse");
+        e.run_all();
+        let done = e.take_completed();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|r| r.error.is_none()));
+    }
+
+    #[test]
+    fn capacity_hint_is_behavior_neutral() {
+        let run = |hint: usize| {
+            let mut e = Engine::with_options(
+                Testbed::intel_server(),
+                Policy::Greedy,
+                EngineOptions { capacity_hint: hint, ..EngineOptions::default() },
+            );
+            mixed_workload(&mut e);
+            e.run_all();
+            trace_digest(e.trace())
+        };
+        assert_eq!(run(1), run(100_000));
     }
 }

@@ -14,6 +14,7 @@
 //! * [`backend`]  — pluggable kernel implementations (launch-shape tables).
 //! * [`policy`]   — greedy / partition / fair-share SM arbitration.
 //! * [`engine`]   — the event-driven executor.
+//! * [`queue`]    — pluggable event-queue backends (heap / timer wheel).
 //! * [`trace`]    — columnar monitor-trace storage + canonical encoding.
 //! * [`vram`]     — capacity-enforcing device-memory allocator.
 //! * [`power`]    — board/package power models.
@@ -26,15 +27,20 @@ pub mod kernel;
 pub mod policy;
 pub mod power;
 pub mod profiles;
+pub mod queue;
 pub mod trace;
 pub mod vram;
 
 pub use backend::KernelBackend;
 pub use chaos::{chaos_key, ChaosConfig, ChaosKind, FaultAction, FaultEvent, FaultSchedule};
 pub use engine::{
-    BudgetExhausted, ClientId, CpuWork, Engine, JobId, JobResult, JobSpec, MemOp, Phase,
+    BudgetExhausted, ClientId, CpuWork, Engine, EngineError, EngineOptions, JobId, JobResult,
+    JobSpec, MemOp, Phase,
 };
-pub use trace::{Trace, TraceRow, TraceSample, TraceView};
 pub use kernel::{Device, KernelDesc, Tag};
 pub use policy::Policy;
 pub use profiles::Testbed;
+pub use queue::{EventQueue, QueueBackend};
+pub use trace::{
+    StreamingTrace, Trace, TraceAggregates, TraceMode, TraceRow, TraceSample, TraceView,
+};

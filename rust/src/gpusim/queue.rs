@@ -1,0 +1,566 @@
+//! Event-queue backends for the engine's hot loop.
+//!
+//! The engine drains one [`Event`] at a time in (time, insertion-seq)
+//! order. That order *is* the determinism contract: every trace row, every
+//! golden digest, and every budget-exhaustion stopping point is a pure
+//! function of it. This module makes the queue pluggable behind
+//! [`EventQueue`] so the classic binary heap ([`HeapQueue`]) and a
+//! hierarchical timer wheel ([`TimerWheelQueue`]) are interchangeable at
+//! construction time — and pins them byte-identical to each other with the
+//! property tests in `tests/queue_equivalence.rs`.
+//!
+//! Why a wheel: the heap pays `O(log n)` pointer-chasing sifts per push and
+//! pop. The wheel buckets events by a fixed time quantum into a hierarchy
+//! of 64-slot levels (a calendar queue with power-of-two cascading), so
+//! push and pop are `O(1)` amortized, with an unbounded `overflow` list as
+//! the calendar-queue fallback for events beyond the wheel horizon
+//! (~`2^48` ticks ≈ 3×10⁷ virtual seconds — far past the engine's default
+//! virtual-time budget).
+//!
+//! The wheel keeps an **eager-advance invariant**: whenever the queue is
+//! non-empty, the earliest batch of events has already been cascaded down
+//! into a sorted `current` buffer. That makes `peek_time` a shared-borrow
+//! `O(1)` accessor (the engine's `next_event_time(&self)` signature never
+//! changed), and it concentrates all cascade work at batch boundaries.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::gpusim::engine::JobId;
+
+/// What a pending event does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    PhaseBegin,
+    KernelDone,
+    CpuDone,
+}
+
+/// One pending engine event. Ordered by `(time, seq)`: earlier virtual time
+/// first, ties broken by insertion order — the tie-break every backend must
+/// reproduce exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+    pub job: JobId,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reverse: earlier time first, then insertion order.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// `a` strictly precedes `b` in pop order.
+#[inline]
+fn precedes(a: &Event, b: &Event) -> bool {
+    match a.time.partial_cmp(&b.time).expect("NaN event time") {
+        Ordering::Less => true,
+        Ordering::Greater => false,
+        Ordering::Equal => a.seq < b.seq,
+    }
+}
+
+/// Selects the [`EventQueue`] implementation at engine construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueBackend {
+    /// `BinaryHeap<Event>` — the reference implementation.
+    #[default]
+    Heap,
+    /// Hierarchical timer wheel with calendar-queue overflow.
+    Wheel,
+}
+
+impl QueueBackend {
+    pub const ALL: [QueueBackend; 2] = [QueueBackend::Heap, QueueBackend::Wheel];
+
+    /// Canonical config/CLI key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            QueueBackend::Heap => "heap",
+            QueueBackend::Wheel => "wheel",
+        }
+    }
+
+    /// Parse a config/CLI key (`heap` | `wheel`).
+    pub fn parse(s: &str) -> Option<QueueBackend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "heap" | "binary_heap" => Some(QueueBackend::Heap),
+            "wheel" | "timer_wheel" => Some(QueueBackend::Wheel),
+            _ => None,
+        }
+    }
+
+    /// Construct the backend, pre-sized for roughly `capacity` pending
+    /// events.
+    pub fn make(self, capacity: usize) -> Box<dyn EventQueue + Send> {
+        match self {
+            QueueBackend::Heap => Box::new(HeapQueue::with_capacity(capacity)),
+            QueueBackend::Wheel => Box::new(TimerWheelQueue::with_capacity(capacity)),
+        }
+    }
+}
+
+/// A priority queue of engine events, popped in exact `(time, seq)` order.
+///
+/// Contract (checked by `tests/queue_equivalence.rs`): for any interleaving
+/// of pushes and pops, the pop sequence is identical across all backends —
+/// including same-timestamp ties, which must come out in insertion order.
+pub trait EventQueue {
+    fn push(&mut self, ev: Event);
+    fn pop(&mut self) -> Option<Event>;
+    /// Time of the earliest pending event. `O(1)` on every backend.
+    fn peek_time(&self) -> Option<f64>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn backend(&self) -> QueueBackend;
+}
+
+/// Reference backend: `BinaryHeap` with the reversed [`Ord`] above.
+#[derive(Debug, Default)]
+pub struct HeapQueue {
+    heap: BinaryHeap<Event>,
+}
+
+impl HeapQueue {
+    pub fn with_capacity(capacity: usize) -> HeapQueue {
+        HeapQueue {
+            heap: BinaryHeap::with_capacity(capacity),
+        }
+    }
+}
+
+impl EventQueue for HeapQueue {
+    fn push(&mut self, ev: Event) {
+        debug_assert!(!ev.time.is_nan(), "NaN event time");
+        self.heap.push(ev);
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn backend(&self) -> QueueBackend {
+        QueueBackend::Heap
+    }
+}
+
+/// Wheel geometry: 8 levels × 64 slots covers `2^48` ticks of horizon.
+const LEVELS: usize = 8;
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS;
+const SLOT_MASK: u64 = (SLOTS as u64) - 1;
+
+/// Tick quantum in virtual seconds. 100 ns resolves every distinct kernel
+/// boundary the cost models produce while keeping a 1 M-second horizon
+/// inside the wheel; sub-quantum time differences still order correctly
+/// because same-tick events are sorted by exact `(time, seq)`.
+const TICK_SECONDS: f64 = 1e-7;
+
+/// Hierarchical timer wheel with a calendar-queue overflow list.
+///
+/// Determinism argument, in three parts:
+/// 1. `tick(t) = floor(t / quantum)` is weakly monotone, so
+///    `tick(a) < tick(b)` implies `a < b`, and equal times share a tick.
+///    Ordering whole ticks first therefore never reorders distinct times.
+/// 2. `advance` always moves the cursor to the *smallest* occupied tick
+///    (bottom-up level scan over occupancy bitmaps, strictly-above-cursor
+///    masks), so `current` holds exactly the globally earliest events.
+/// 3. Within `current`, events sort by exact `(time, seq)` — the heap's
+///    tie-break, reproduced bit-for-bit.
+#[derive(Debug)]
+pub struct TimerWheelQueue {
+    /// The earliest pending events, sorted by `(time, seq)`; `head..` are
+    /// live. Non-empty whenever the queue is non-empty (eager advance).
+    current: Vec<Event>,
+    head: usize,
+    /// Tick of the last batch cascaded into `current`. All events still in
+    /// the wheel have a strictly greater tick.
+    cursor: u64,
+    /// `LEVELS × SLOTS` buckets, flattened.
+    slots: Vec<Vec<Event>>,
+    /// Per-level occupancy bitmap (bit = slot non-empty).
+    occ: [u64; LEVELS],
+    /// Calendar-queue fallback for events beyond the wheel horizon.
+    overflow: Vec<Event>,
+    len: usize,
+}
+
+impl TimerWheelQueue {
+    pub fn with_capacity(capacity: usize) -> TimerWheelQueue {
+        TimerWheelQueue {
+            current: Vec::with_capacity(capacity.min(1 << 12)),
+            head: 0,
+            cursor: 0,
+            slots: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occ: [0; LEVELS],
+            overflow: Vec::new(),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn tick(time: f64) -> u64 {
+        debug_assert!(!time.is_nan(), "NaN event time");
+        // `as u64` saturates: negatives clamp to tick 0 (still ordered by
+        // exact time inside `current`), +inf clamps to u64::MAX (overflow
+        // list).
+        (time / TICK_SECONDS) as u64
+    }
+
+    /// Sorted insert into the live tail of `current`.
+    fn insert_current(&mut self, ev: Event) {
+        let pos = self.current[self.head..].partition_point(|e| precedes(e, &ev));
+        self.current.insert(self.head + pos, ev);
+    }
+
+    /// Route an event to `current`, a wheel slot, or the overflow list,
+    /// relative to the current cursor. Does not touch `len`.
+    fn push_inner(&mut self, ev: Event) {
+        let tick = Self::tick(ev.time);
+        if tick <= self.cursor {
+            // The cursor already advanced to (or past) this tick, so the
+            // event belongs to the batch being drained. `current` stays
+            // sorted by exact (time, seq), which is the true global order
+            // here: everything still in the wheel has a greater tick.
+            self.insert_current(ev);
+            return;
+        }
+        let diff = tick ^ self.cursor;
+        let level = ((63 - diff.leading_zeros()) / SLOT_BITS) as usize;
+        if level >= LEVELS {
+            self.overflow.push(ev);
+            return;
+        }
+        let slot = ((tick >> (SLOT_BITS * level as u32)) & SLOT_MASK) as usize;
+        self.slots[level * SLOTS + slot].push(ev);
+        self.occ[level] |= 1u64 << slot;
+    }
+
+    /// Refill `current` with the globally earliest pending events. No-op
+    /// when `current` still has live entries; returns with `current`
+    /// non-empty and sorted unless the whole queue is empty.
+    fn advance(&mut self) {
+        if self.head < self.current.len() {
+            return;
+        }
+        self.current.clear();
+        self.head = 0;
+        loop {
+            if !self.current.is_empty() {
+                self.current.sort_unstable_by(|a, b| {
+                    a.time
+                        .partial_cmp(&b.time)
+                        .expect("NaN event time")
+                        .then(a.seq.cmp(&b.seq))
+                });
+                return;
+            }
+            // Bottom-up scan for the lowest occupied slot strictly above
+            // the cursor's own slot at each level. Every occupied slot
+            // satisfies that (events always land above the cursor), so the
+            // first hit is the minimal pending tick group.
+            let mut progressed = false;
+            for level in 0..LEVELS {
+                let shift = SLOT_BITS * level as u32;
+                let group = ((self.cursor >> shift) & SLOT_MASK) as u32;
+                // Guard the shift: group == 63 would need `<< 64` (UB).
+                let candidates = if group >= 63 {
+                    0
+                } else {
+                    self.occ[level] & (!0u64 << (group + 1))
+                };
+                if candidates == 0 {
+                    continue;
+                }
+                let slot = candidates.trailing_zeros() as u64;
+                let idx = level * SLOTS + slot as usize;
+                self.occ[level] &= !(1u64 << slot);
+                if level == 0 {
+                    // A level-0 slot holds exactly one tick's events (the
+                    // cursor's upper bits can only change once level 0 is
+                    // fully drained, so the slot never mixes windows).
+                    self.cursor = (self.cursor & !SLOT_MASK) | slot;
+                    std::mem::swap(&mut self.current, &mut self.slots[idx]);
+                } else {
+                    // Cascade: jump the cursor to the start of this slot's
+                    // window and redistribute. Events on the window's first
+                    // tick land in `current` (they are provably minimal);
+                    // the rest fall to strictly lower levels.
+                    let window = SLOT_BITS * level as u32;
+                    self.cursor = ((self.cursor >> (window + SLOT_BITS)) << (window + SLOT_BITS))
+                        | (slot << window);
+                    let mut events = std::mem::take(&mut self.slots[idx]);
+                    for ev in events.drain(..) {
+                        self.push_inner(ev);
+                    }
+                    // Hand the (now empty) buffer back to recycle capacity;
+                    // redistribution can never target the slot it came from.
+                    self.slots[idx] = events;
+                }
+                progressed = true;
+                break;
+            }
+            if progressed {
+                continue;
+            }
+            // Wheel fully empty: reseed from the overflow list, if any.
+            if self.overflow.is_empty() {
+                return; // queue truly empty
+            }
+            let min_tick = self
+                .overflow
+                .iter()
+                .map(|e| Self::tick(e.time))
+                .min()
+                .expect("non-empty overflow");
+            self.cursor = min_tick;
+            let events = std::mem::take(&mut self.overflow);
+            for ev in events {
+                // Min-tick events go straight to `current`; later ones
+                // re-bucket against the new cursor (possibly back into a
+                // fresh overflow list if still beyond the horizon).
+                self.push_inner(ev);
+            }
+        }
+    }
+}
+
+impl EventQueue for TimerWheelQueue {
+    fn push(&mut self, ev: Event) {
+        self.push_inner(ev);
+        self.len += 1;
+        // Eager advance: only needed when the queue was empty and the new
+        // event landed in the wheel rather than `current`.
+        if self.head == self.current.len() {
+            self.advance();
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        if self.head == self.current.len() {
+            debug_assert_eq!(self.len, 0, "eager-advance invariant violated");
+            return None;
+        }
+        let ev = self.current[self.head];
+        self.head += 1;
+        self.len -= 1;
+        if self.head == self.current.len() {
+            self.current.clear();
+            self.head = 0;
+            self.advance();
+        }
+        Some(ev)
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.current.get(self.head).map(|e| e.time)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn backend(&self) -> QueueBackend {
+        QueueBackend::Wheel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: f64, seq: u64) -> Event {
+        Event {
+            time,
+            seq,
+            kind: EventKind::PhaseBegin,
+            job: JobId(seq),
+        }
+    }
+
+    fn drain(q: &mut dyn EventQueue) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push((e.time.to_bits(), e.seq));
+        }
+        out
+    }
+
+    #[test]
+    fn backend_keys_roundtrip() {
+        for b in QueueBackend::ALL {
+            assert_eq!(QueueBackend::parse(b.key()), Some(b));
+        }
+        assert_eq!(QueueBackend::parse("Wheel"), Some(QueueBackend::Wheel));
+        assert_eq!(QueueBackend::parse("fifo"), None);
+    }
+
+    #[test]
+    fn both_backends_order_a_static_schedule() {
+        // Times chosen to hit same-tick ties (sub-quantum deltas), exact
+        // duplicates, cross-level spreads, and a far-future overflow event.
+        let times = [
+            0.0,
+            0.0,
+            3.2e-8, // same tick as 0.0 (quantum 1e-7), later exact time
+            1e-7,
+            5e-4,
+            5e-4,
+            0.013,
+            0.013 + 1e-9,
+            2.5,
+            2.5,
+            7_200.0,
+            4.0e7, // beyond the 2^48-tick horizon → overflow list
+        ];
+        for backend in QueueBackend::ALL {
+            let mut q = backend.make(16);
+            for (seq, &t) in times.iter().enumerate() {
+                q.push(ev(t, seq as u64));
+            }
+            assert_eq!(q.len(), times.len());
+            let got = drain(q.as_mut());
+            let mut want: Vec<(u64, u64)> = times
+                .iter()
+                .enumerate()
+                .map(|(s, &t)| (t.to_bits(), s as u64))
+                .collect();
+            want.sort_by(|a, b| {
+                f64::from_bits(a.0)
+                    .partial_cmp(&f64::from_bits(b.0))
+                    .unwrap()
+                    .then(a.1.cmp(&b.1))
+            });
+            assert_eq!(got, want, "backend {:?}", backend);
+        }
+    }
+
+    #[test]
+    fn wheel_matches_heap_under_interleaved_push_pop() {
+        // Deterministic LCG; times are generated non-decreasing relative to
+        // the last pop (the engine's usage pattern), with frequent exact
+        // ties and occasional far-future jumps.
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        let mut rng = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let mut heap = HeapQueue::with_capacity(64);
+        let mut wheel = TimerWheelQueue::with_capacity(64);
+        let mut seq = 0u64;
+        let mut now = 0.0f64;
+        for _ in 0..2_000 {
+            let op = rng() % 4;
+            if op == 0 {
+                let a = heap.pop();
+                let b = wheel.pop();
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.time.to_bits(), y.time.to_bits());
+                        assert_eq!(x.seq, y.seq);
+                        assert_eq!(x.kind, y.kind);
+                        assert_eq!(x.job, y.job);
+                        now = x.time;
+                    }
+                    other => panic!("pop mismatch: {other:?}"),
+                }
+            } else {
+                let dt = match rng() % 5 {
+                    0 => 0.0, // exact tie with `now`
+                    1 => (rng() % 50) as f64 * 1e-9,
+                    2 => (rng() % 1_000) as f64 * 1e-6,
+                    3 => (rng() % 1_000) as f64 * 1e-2,
+                    _ => 1e6 + (rng() % 100) as f64 * 1e6, // deep future
+                };
+                let e = ev(now + dt, seq);
+                seq += 1;
+                heap.push(e);
+                wheel.push(e);
+            }
+            assert_eq!(heap.len(), wheel.len());
+            assert_eq!(
+                heap.peek_time().map(f64::to_bits),
+                wheel.peek_time().map(f64::to_bits)
+            );
+        }
+        assert_eq!(drain(&mut heap), drain(&mut wheel));
+    }
+
+    #[test]
+    fn wheel_handles_push_below_cursor() {
+        let mut q = TimerWheelQueue::with_capacity(8);
+        q.push(ev(1.0, 0));
+        q.push(ev(2.0, 1));
+        assert_eq!(q.pop().unwrap().seq, 0);
+        // The cursor has advanced past tick(1.5); the event must still come
+        // out before the 2.0 one, in exact time order.
+        q.push(ev(1.5, 2));
+        assert_eq!(q.pop().unwrap().seq, 2);
+        assert_eq!(q.pop().unwrap().seq, 1);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn wheel_overflow_reseeds_in_order() {
+        let horizon = (1u64 << 48) as f64 * TICK_SECONDS;
+        let mut q = TimerWheelQueue::with_capacity(8);
+        q.push(ev(horizon * 3.0, 0));
+        q.push(ev(horizon * 2.0, 1));
+        q.push(ev(0.5, 2));
+        q.push(ev(horizon * 2.0, 3)); // tie in the overflow list
+        assert_eq!(q.peek_time(), Some(0.5));
+        let got = drain(&mut q);
+        assert_eq!(
+            got,
+            vec![
+                (0.5f64.to_bits(), 2),
+                ((horizon * 2.0).to_bits(), 1),
+                ((horizon * 2.0).to_bits(), 3),
+                ((horizon * 3.0).to_bits(), 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn peek_is_stable_and_cheap() {
+        let mut q = TimerWheelQueue::with_capacity(8);
+        assert_eq!(q.peek_time(), None);
+        q.push(ev(0.25, 0));
+        q.push(ev(0.125, 1));
+        assert_eq!(q.peek_time(), Some(0.125));
+        assert_eq!(q.peek_time(), Some(0.125)); // idempotent, &self
+        assert_eq!(q.pop().unwrap().seq, 1);
+        assert_eq!(q.peek_time(), Some(0.25));
+    }
+}

@@ -7,14 +7,22 @@
 //! flat row array plus one shared per-client column buffer, so recording a
 //! sample is two amortized appends and no per-sample allocation.
 //!
-//! The canonical byte encoding (and its FNV-1a digest) is unchanged from
-//! the row-of-structs era: exact little-endian bit patterns per field, a
-//! `u64` per-client count per row, and a `u64` row-count prefix. Two traces
-//! are byte-identical iff every recorded float is bit-identical — the
-//! golden-trace determinism contract. [`trace_digest`] streams rows through
-//! the hasher and never materializes the canonical byte vector;
-//! [`trace_canonical_bytes`] still builds it for tests, and the two are
-//! pinned equivalent by a unit test below.
+//! The canonical byte encoding (and its FNV-1a digest): exact little-endian
+//! bit patterns per field, a `u64` per-client count per row, and a `u64`
+//! row-count suffix. (The count moved from prefix to suffix when streaming
+//! digesting landed — an incremental hasher cannot know the row count up
+//! front, and every digest consumer compares run-vs-run, never against
+//! bytes pinned across versions.) Two traces are byte-identical iff every
+//! recorded float is bit-identical — the golden-trace determinism contract.
+//! [`trace_digest`] streams rows through the hasher and never materializes
+//! the canonical byte vector; [`trace_canonical_bytes`] still builds it for
+//! tests, and the two are pinned equivalent by a unit test below.
+//!
+//! [`StreamingTrace`] is the bounded-memory recorder behind
+//! [`TraceMode::Streaming`]: rows fold into the digest and into running
+//! piecewise-constant aggregates ([`TraceAggregates`]) as they are
+//! recorded, and only a fixed tail window stays materialized — fleet-sized
+//! sweeps hold O(window) trace memory per scenario instead of O(events).
 
 use std::ops::Deref;
 
@@ -285,15 +293,15 @@ fn sink_row(row: &TraceRow, per_client: &[(f32, f32)], out: &mut impl ByteSink) 
     }
 }
 
-/// Canonical byte encoding of a whole trace. Kept for tests and external
-/// tooling; the digest below streams the same bytes without materializing
-/// this vector.
+/// Canonical byte encoding of a whole trace: every row, then the `u64`
+/// row-count suffix. Kept for tests and external tooling; the digest below
+/// streams the same bytes without materializing this vector.
 pub fn trace_canonical_bytes(trace: &Trace) -> Vec<u8> {
     let mut out = Vec::with_capacity(16 + trace.len() * 64);
-    out.put(&(trace.len() as u64).to_le_bytes());
     for i in 0..trace.len() {
         sink_row(&trace.rows[i], trace.per_client(i), &mut out);
     }
+    out.put(&(trace.len() as u64).to_le_bytes());
     out
 }
 
@@ -302,11 +310,214 @@ pub fn trace_canonical_bytes(trace: &Trace) -> Vec<u8> {
 /// canonical byte vector is never built.
 pub fn trace_digest(trace: &Trace) -> u64 {
     let mut h = Fnv1a::new();
-    h.update(&(trace.len() as u64).to_le_bytes());
     for i in 0..trace.len() {
         sink_row(&trace.rows[i], trace.per_client(i), &mut h);
     }
+    h.update(&(trace.len() as u64).to_le_bytes());
     h.finish()
+}
+
+/// Trace recording mode, selected at engine construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// Materialize every row (the classic mode; memory grows with events).
+    #[default]
+    Full,
+    /// Fold rows into the digest + running aggregates, keep only the last
+    /// `window` rows materialized. Peak trace memory is O(window).
+    Streaming { window: usize },
+}
+
+/// Default tail window for `trace_mode: streaming` when no explicit
+/// `trace_window:` is configured.
+pub const DEFAULT_STREAM_WINDOW: usize = 512;
+
+/// Running piecewise-constant aggregates over a trace, accumulated row by
+/// row in recording order. Folding order matches a sequential pass over a
+/// full trace exactly, so for identical runs the streaming aggregates are
+/// **bit-identical** to [`TraceAggregates::from_trace`] on the materialized
+/// trace (asserted by engine and equivalence tests).
+///
+/// Semantics: the trace is piecewise-constant — row `i`'s values hold from
+/// `t[i]` until `t[i+1]`. Energies are exact rectangle integrals of power
+/// over that step function; busy-weighted SM means use the same
+/// `gpu_smact > 1e-6 && dt > 0` gate as the monitor's busy statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TraceAggregates {
+    pub rows: u64,
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Total time with the GPU busy (`gpu_smact > 1e-6`).
+    pub busy_time: f64,
+    busy_smact_int: f64,
+    busy_smocc_int: f64,
+    /// ∫ gpu_power dt over the whole trace span (joules).
+    pub gpu_energy_j: f64,
+    /// ∫ cpu_power dt over the whole trace span (joules).
+    pub cpu_energy_j: f64,
+    pub peak_vram: u64,
+    pub peak_gpu_power: f32,
+    pub peak_cpu_power: f32,
+}
+
+impl TraceAggregates {
+    /// Fold one row, given the previously recorded row (None for the
+    /// first). The `prev` row's values held over `[prev.t, row.t)`.
+    pub fn observe(&mut self, prev: Option<&TraceRow>, row: &TraceRow) {
+        if self.rows == 0 {
+            self.t_start = row.t;
+        }
+        self.rows += 1;
+        self.t_end = row.t;
+        if let Some(p) = prev {
+            let dt = row.t - p.t;
+            if dt > 0.0 {
+                self.gpu_energy_j += p.gpu_power as f64 * dt;
+                self.cpu_energy_j += p.cpu_power as f64 * dt;
+                if p.gpu_smact > 1e-6 {
+                    self.busy_time += dt;
+                    self.busy_smact_int += p.gpu_smact as f64 * dt;
+                    self.busy_smocc_int += p.gpu_smocc as f64 * dt;
+                }
+            }
+        }
+        self.peak_vram = self.peak_vram.max(row.vram_used);
+        self.peak_gpu_power = self.peak_gpu_power.max(row.gpu_power);
+        self.peak_cpu_power = self.peak_cpu_power.max(row.cpu_power);
+    }
+
+    /// Aggregates of a fully materialized trace (one sequential pass, same
+    /// fold order as streaming recording).
+    pub fn from_trace(trace: &Trace) -> TraceAggregates {
+        let mut agg = TraceAggregates::default();
+        let rows = trace.rows();
+        for i in 0..rows.len() {
+            let prev = if i == 0 { None } else { Some(&rows[i - 1]) };
+            agg.observe(prev, &rows[i]);
+        }
+        agg
+    }
+
+    /// Recorded span in virtual seconds.
+    pub fn span(&self) -> f64 {
+        (self.t_end - self.t_start).max(0.0)
+    }
+
+    /// Time-weighted mean SMACT over busy time (0 if never busy).
+    pub fn mean_busy_smact(&self) -> f64 {
+        if self.busy_time > 0.0 {
+            self.busy_smact_int / self.busy_time
+        } else {
+            0.0
+        }
+    }
+
+    /// Time-weighted mean SMOCC over busy time (0 if never busy).
+    pub fn mean_busy_smocc(&self) -> f64 {
+        if self.busy_time > 0.0 {
+            self.busy_smocc_int / self.busy_time
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Bounded-memory trace recorder ([`TraceMode::Streaming`]).
+///
+/// Every recorded row is folded into the FNV digest (identical to
+/// [`trace_digest`] over the equivalent full trace) and into
+/// [`TraceAggregates`]; only the last `window` rows stay materialized, in
+/// a ring. Peak memory is O(window × clients), independent of run length —
+/// verified by the bounded-allocation test in `tests/queue_equivalence.rs`.
+#[derive(Debug, Clone)]
+pub struct StreamingTrace {
+    window: usize,
+    hasher: Fnv1a,
+    rows_recorded: u64,
+    agg: TraceAggregates,
+    prev: Option<TraceRow>,
+    // Tail ring: rows + per-client pairs, evicted front-first at `window`.
+    ring_rows: std::collections::VecDeque<TraceRow>,
+    ring_counts: std::collections::VecDeque<u32>,
+    ring_pc: std::collections::VecDeque<(f32, f32)>,
+}
+
+impl StreamingTrace {
+    pub fn new(window: usize) -> StreamingTrace {
+        assert!(window >= 1, "streaming window must be >= 1");
+        StreamingTrace {
+            window,
+            hasher: Fnv1a::new(),
+            rows_recorded: 0,
+            agg: TraceAggregates::default(),
+            prev: None,
+            ring_rows: std::collections::VecDeque::with_capacity(window),
+            ring_counts: std::collections::VecDeque::with_capacity(window),
+            ring_pc: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Fold one row: digest, aggregates, tail ring.
+    pub fn record(&mut self, row: &TraceRow, per_client: &[(f32, f32)]) {
+        sink_row(row, per_client, &mut self.hasher);
+        self.agg.observe(self.prev.as_ref(), row);
+        self.prev = Some(*row);
+        self.rows_recorded += 1;
+        if self.ring_rows.len() == self.window {
+            self.ring_rows.pop_front();
+            let n = self.ring_counts.pop_front().expect("ring count underflow");
+            self.ring_pc.drain(..n as usize);
+        }
+        self.ring_rows.push_back(*row);
+        self.ring_counts.push_back(per_client.len() as u32);
+        self.ring_pc.extend(per_client.iter().copied());
+    }
+
+    /// Digest of everything recorded so far — equal to [`trace_digest`] of
+    /// the full trace an identical `TraceMode::Full` run would have
+    /// materialized.
+    pub fn digest(&self) -> u64 {
+        let mut h = self.hasher.clone();
+        h.update(&self.rows_recorded.to_le_bytes());
+        h.finish()
+    }
+
+    pub fn rows_recorded(&self) -> u64 {
+        self.rows_recorded
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Rows currently materialized in the tail ring (≤ window).
+    pub fn tail_len(&self) -> usize {
+        self.ring_rows.len()
+    }
+
+    /// Reserved ring capacity in rows — bounded by O(window) regardless of
+    /// how many rows were recorded (the bounded-allocation test's probe).
+    pub fn ring_row_capacity(&self) -> usize {
+        self.ring_rows.capacity().max(self.ring_counts.capacity())
+    }
+
+    pub fn aggregates(&self) -> &TraceAggregates {
+        &self.agg
+    }
+
+    /// Materialize the tail window as a [`Trace`], draining the ring (the
+    /// digest, row count, and aggregates remain queryable). Cold path.
+    pub fn take_tail(&mut self) -> Trace {
+        let mut t = Trace::with_capacity(self.ring_rows.len(), 0);
+        for (row, n) in self.ring_rows.drain(..).zip(self.ring_counts.drain(..)) {
+            let slot = t.push_row(row, n as usize);
+            for e in slot.iter_mut() {
+                *e = self.ring_pc.pop_front().expect("ring pc underflow");
+            }
+        }
+        debug_assert!(self.ring_pc.is_empty());
+        t
+    }
 }
 
 #[cfg(test)]
@@ -398,11 +609,77 @@ mod tests {
     }
 
     #[test]
-    fn empty_trace_encodes_as_count_prefix() {
+    fn empty_trace_encodes_as_count_suffix() {
         let t = Trace::new();
         assert_eq!(trace_canonical_bytes(&t), 0u64.to_le_bytes().to_vec());
         let mut h = Fnv1a::new();
         h.update(&0u64.to_le_bytes());
         assert_eq!(trace_digest(&t), h.finish());
+    }
+
+    #[test]
+    fn streaming_recorder_matches_full_trace_digest_and_keeps_window() {
+        let samples: Vec<TraceSample> =
+            (0..50).map(|i| sample(i as f64 * 0.1, 2)).collect();
+        let full = Trace::from_samples(&samples);
+        let mut st = StreamingTrace::new(4);
+        for s in &samples {
+            st.record(&s.row(), &s.per_client);
+        }
+        assert_eq!(st.digest(), trace_digest(&full));
+        assert_eq!(st.rows_recorded(), 50);
+        assert_eq!(st.tail_len(), 4);
+        assert!(st.ring_row_capacity() <= 16, "ring must stay O(window)");
+        // Aggregates are bit-identical to a post-hoc pass.
+        assert_eq!(*st.aggregates(), TraceAggregates::from_trace(&full));
+        // The tail materializes the last `window` rows verbatim.
+        let tail = st.take_tail();
+        assert_eq!(tail.len(), 4);
+        assert_eq!(tail.rows()[0].t.to_bits(), full.rows()[46].t.to_bits());
+        assert_eq!(tail.per_client(3), full.per_client(49));
+        // Digest/aggregates survive draining the tail.
+        assert_eq!(st.digest(), trace_digest(&full));
+    }
+
+    #[test]
+    fn aggregates_integrate_piecewise_constant_power() {
+        // Two steps: 100 W for 1 s, then 50 W for 2 s, final row closes the
+        // span (its own values hold zero width).
+        let mk = |t: f64, gpu_w: f32, smact: f32| TraceSample {
+            t,
+            gpu_smact: smact,
+            gpu_smocc: smact * 0.5,
+            gpu_bw_frac: 0.0,
+            gpu_power: gpu_w,
+            vram_used: (t * 1e9) as u64,
+            cpu_util: 0.0,
+            dram_bw_frac: 0.0,
+            cpu_power: 10.0,
+            per_client: Vec::new(),
+        };
+        let trace = Trace::from_samples(&[
+            mk(0.0, 100.0, 0.8),
+            mk(1.0, 50.0, 0.4),
+            mk(3.0, 0.0, 0.0),
+        ]);
+        let a = TraceAggregates::from_trace(&trace);
+        assert_eq!(a.rows, 3);
+        assert!((a.span() - 3.0).abs() < 1e-12);
+        assert!((a.gpu_energy_j - (100.0 + 2.0 * 50.0)).abs() < 1e-9);
+        assert!((a.cpu_energy_j - 30.0).abs() < 1e-9);
+        assert!((a.busy_time - 3.0).abs() < 1e-12);
+        // Busy-weighted mean SMACT: (0.8·1 + 0.4·2) / 3.
+        assert!((a.mean_busy_smact() - 1.6 / 3.0).abs() < 1e-9);
+        assert_eq!(a.peak_vram, 3_000_000_000);
+        assert_eq!(a.peak_gpu_power, 100.0);
+        // Duplicate-timestamp rows are zero-width: they change nothing but
+        // peaks.
+        let mut dup = TraceAggregates::default();
+        let r0 = mk(0.0, 100.0, 0.8).row();
+        let r0b = mk(0.0, 500.0, 0.1).row();
+        dup.observe(None, &r0);
+        dup.observe(Some(&r0), &r0b);
+        assert_eq!(dup.gpu_energy_j, 0.0);
+        assert_eq!(dup.peak_gpu_power, 500.0);
     }
 }

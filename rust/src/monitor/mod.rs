@@ -7,7 +7,7 @@
 //! monitor's fixed grid and derives the aggregate statistics the paper's
 //! figures plot.
 
-use crate::gpusim::trace::Trace;
+use crate::gpusim::trace::{Trace, TraceAggregates};
 use crate::util::TimeSeries;
 
 /// Monitor sampling interval (the paper samples at sub-second resolution).
@@ -177,6 +177,65 @@ impl MonitorReport {
     }
 }
 
+/// Scalar monitor summary computable in *both* trace modes.
+///
+/// [`MonitorReport`] needs the full materialized trace to resample onto its
+/// grid; under `TraceMode::Streaming` only the tail window survives, so the
+/// report cannot be rebuilt. This summary is derived from the engine's
+/// [`TraceAggregates`] fold instead, which streams over every recorded row
+/// in O(1) memory.
+///
+/// The busy means use the *same* fold, in the same order, as
+/// [`MonitorReport::mean_busy_smact`] — they are bit-identical between the
+/// two paths. The energies differ by construction: here they are exact
+/// rectangle integrals over the raw piecewise-constant trace, whereas
+/// [`MonitorReport::gpu_energy`] trapezoids over the resampled grid (and
+/// includes the idle-floor warmup ramp). Prefer this summary for run-to-run
+/// comparisons; prefer the report for plotting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MonitorSummary {
+    /// Recorded span in virtual seconds (`t_end - t_start`).
+    pub span: f64,
+    /// Total time with the GPU busy (`gpu_smact > 1e-6`).
+    pub busy_time: f64,
+    /// Time-weighted mean SMACT over busy time (0 if never busy).
+    pub mean_busy_smact: f64,
+    /// Time-weighted mean SMOCC over busy time (0 if never busy).
+    pub mean_busy_smocc: f64,
+    /// ∫ gpu_power dt over the raw trace span (joules, rectangle rule).
+    pub gpu_energy_j: f64,
+    /// ∫ cpu_power dt over the raw trace span (joules, rectangle rule).
+    pub cpu_energy_j: f64,
+    pub peak_vram_gib: f64,
+    pub peak_gpu_power_w: f64,
+    pub peak_cpu_power_w: f64,
+}
+
+impl MonitorSummary {
+    /// Summarize a streamed fold — the only monitor view available when the
+    /// engine ran with `TraceMode::Streaming`.
+    pub fn from_aggregates(agg: &TraceAggregates) -> MonitorSummary {
+        MonitorSummary {
+            span: agg.span(),
+            busy_time: agg.busy_time,
+            mean_busy_smact: agg.mean_busy_smact(),
+            mean_busy_smocc: agg.mean_busy_smocc(),
+            gpu_energy_j: agg.gpu_energy_j,
+            cpu_energy_j: agg.cpu_energy_j,
+            peak_vram_gib: agg.peak_vram as f64 / (1u64 << 30) as f64,
+            peak_gpu_power_w: agg.peak_gpu_power as f64,
+            peak_cpu_power_w: agg.peak_cpu_power as f64,
+        }
+    }
+
+    /// Summarize a fully materialized trace. Folds through
+    /// [`TraceAggregates`] so full-mode and streaming-mode summaries of the
+    /// same run are bit-identical.
+    pub fn from_trace(trace: &Trace) -> MonitorSummary {
+        MonitorSummary::from_aggregates(&TraceAggregates::from_trace(trace))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,5 +358,41 @@ mod tests {
         // With zero idle watts the old behaviour is preserved.
         let z = MonitorReport::from_trace(&trace, &names, 0.5, 0.0, 0.0);
         assert_eq!(z.gpu_power.values()[0], 0.0);
+    }
+
+    #[test]
+    fn summary_busy_means_are_bit_identical_to_report() {
+        // Irregular trace with idle gaps — the busy-mean fold in
+        // MonitorSummary must reproduce MonitorReport's exactly (same ops,
+        // same order), not just approximately.
+        let trace = Trace::from_samples(&[
+            sample(0.0, 0.0, 0.0, 0),
+            sample(0.3, 0.8, 0.4, 0),
+            sample(0.7, 0.3, 0.2, 0),
+            sample(1.1, 0.0, 0.0, 0),
+            sample(2.0, 0.9, 0.7, 0),
+            sample(2.05, 0.0, 0.0, 0),
+        ]);
+        let r = MonitorReport::from_trace(&trace, &[], 0.1, 0.0, 0.0);
+        let s = MonitorSummary::from_trace(&trace);
+        assert_eq!(s.mean_busy_smact, r.mean_busy_smact());
+        assert_eq!(s.mean_busy_smocc, r.mean_busy_smocc());
+        assert!(s.busy_time > 0.0);
+    }
+
+    #[test]
+    fn summary_energy_is_rectangle_over_raw_trace() {
+        // Constant 150 W / 50 W over 10 s → 1500 J GPU, 500 J CPU exactly.
+        let trace = Trace::from_samples(&[sample(0.0, 1.0, 0.5, 0), sample(10.0, 1.0, 0.5, 0)]);
+        let s = MonitorSummary::from_trace(&trace);
+        assert_eq!(s.span, 10.0);
+        assert_eq!(s.gpu_energy_j, 150.0 * 10.0);
+        assert_eq!(s.cpu_energy_j, 50.0 * 10.0);
+        assert!((s.peak_vram_gib - 2.0).abs() < 1e-9);
+        assert_eq!(s.peak_gpu_power_w, 150.0);
+        assert_eq!(s.peak_cpu_power_w, 50.0);
+        // And the aggregates path is the same struct, not a re-derivation.
+        let agg = TraceAggregates::from_trace(&trace);
+        assert_eq!(MonitorSummary::from_aggregates(&agg), s);
     }
 }

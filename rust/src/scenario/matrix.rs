@@ -40,6 +40,8 @@ use crate::coordinator::config::{AppType, InjectFailure, Strategy, TestbedKind};
 use crate::gpusim::backend::KernelBackend;
 use crate::gpusim::chaos::{ChaosConfig, ChaosKind};
 use crate::gpusim::kernel::Device;
+use crate::gpusim::queue::QueueBackend;
+use crate::gpusim::trace::TraceMode;
 use crate::util::rng::Rng;
 
 // `backend_key`/`chaos_key` live next to the other axis-key helpers they
@@ -534,6 +536,8 @@ impl MatrixAxes {
                                 chaos: None,
                                 budget_events: None,
                                 inject_failure: None,
+                                event_queue: None,
+                                trace_mode: None,
                                 seed: self.seed,
                             });
                         }
@@ -570,6 +574,8 @@ impl MatrixAxes {
                             chaos: None,
                             budget_events: None,
                             inject_failure: None,
+                            event_queue: None,
+                            trace_mode: None,
                             seed: self.seed,
                         });
                     }
@@ -599,6 +605,8 @@ impl MatrixAxes {
                             chaos: None,
                             budget_events: None,
                             inject_failure: None,
+                            event_queue: None,
+                            trace_mode: None,
                             seed: self.seed,
                         });
                     }
@@ -628,6 +636,8 @@ impl MatrixAxes {
                         chaos: Some(kind),
                         budget_events: None,
                         inject_failure: None,
+                        event_queue: None,
+                        trace_mode: None,
                         seed: self.seed,
                     });
                 }
@@ -667,6 +677,15 @@ pub struct ScenarioSpec {
     /// nothing; set by the sweep-resilience tests and the CLI's
     /// `--inject-panic` / `--inject-error` flags.
     pub inject_failure: Option<InjectFailure>,
+    /// Event-queue backend override (`event_queue:` key). `None` — the
+    /// default for every generated scenario — emits nothing, keeping spec
+    /// digests byte-identical to pre-campaign runs. Digest-neutral by the
+    /// engine's determinism contract, so it is an execution knob, not a
+    /// matrix axis.
+    pub event_queue: Option<QueueBackend>,
+    /// Trace-mode override (`trace_mode:`/`trace_window:` keys). Same
+    /// emit-only-when-set rule as `event_queue`.
+    pub trace_mode: Option<TraceMode>,
     pub seed: u64,
 }
 
@@ -823,9 +842,10 @@ impl ScenarioSpec {
         out
     }
 
-    /// Supervision keys (`budget_events:`, `inject_failure:`): emitted only
-    /// when set, so every generated scenario's YAML — and therefore its
-    /// spec digest — is unchanged unless a supervision override is applied.
+    /// Override keys (`budget_events:`, `inject_failure:`, `event_queue:`,
+    /// `trace_mode:`): emitted only when set, so every generated scenario's
+    /// YAML — and therefore its spec digest — is unchanged unless an
+    /// override is applied.
     fn push_supervision_yaml(&self, out: &mut String) {
         if let Some(budget) = self.budget_events {
             out.push_str(&format!("budget_events: {budget}\n"));
@@ -838,6 +858,16 @@ impl ScenarioSpec {
                     InjectFailure::Error => "error",
                 }
             ));
+        }
+        if let Some(queue) = self.event_queue {
+            out.push_str(&format!("event_queue: {}\n", queue.key()));
+        }
+        match self.trace_mode {
+            None => {}
+            Some(TraceMode::Full) => out.push_str("trace_mode: full\n"),
+            Some(TraceMode::Streaming { window }) => {
+                out.push_str(&format!("trace_mode: streaming\ntrace_window: {window}\n"));
+            }
         }
     }
 
@@ -943,14 +973,29 @@ mod tests {
         let before = spec.to_yaml();
         assert!(!before.contains("budget_events:"));
         assert!(!before.contains("inject_failure:"));
+        assert!(!before.contains("event_queue:"));
+        assert!(!before.contains("trace_mode:"));
+        assert!(!before.contains("trace_window:"));
         spec.budget_events = Some(9);
         spec.inject_failure = Some(InjectFailure::Error);
+        spec.event_queue = Some(QueueBackend::Wheel);
+        spec.trace_mode = Some(TraceMode::Streaming { window: 128 });
         let yaml = spec.to_yaml();
         assert!(yaml.contains("budget_events: 9\n"));
         assert!(yaml.contains("inject_failure: error\n"));
+        assert!(yaml.contains("event_queue: wheel\n"));
+        assert!(yaml.contains("trace_mode: streaming\ntrace_window: 128\n"));
         let cfg = BenchConfig::parse(&yaml).unwrap();
         assert_eq!(cfg.budget_events, Some(9));
         assert_eq!(cfg.inject_failure, Some(InjectFailure::Error));
+        assert_eq!(cfg.event_queue, QueueBackend::Wheel);
+        assert_eq!(cfg.trace_mode, TraceMode::Streaming { window: 128 });
+        // Explicit full mode also round-trips (and differs from absent).
+        spec.trace_mode = Some(TraceMode::Full);
+        let yaml = spec.to_yaml();
+        assert!(yaml.contains("trace_mode: full\n"));
+        assert!(!yaml.contains("trace_window:"));
+        assert_eq!(BenchConfig::parse(&yaml).unwrap().trace_mode, TraceMode::Full);
     }
 
     #[test]

@@ -50,7 +50,7 @@ use crate::apps::Slo;
 use crate::coordinator::{
     run_config_text, run_config_text_watchdog, ScenarioResult, WallClockTimeout,
 };
-use crate::gpusim::engine::{trace_digest, BudgetExhausted, Fnv1a};
+use crate::gpusim::engine::{BudgetExhausted, Fnv1a};
 use crate::scenario::matrix::{
     backend_key, chaos_key, server_mode_key, strategy_key, testbed_key, workflow_key,
     MatrixAxes, ScenarioSpec,
@@ -502,7 +502,9 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
     out.e2e_latency = result.workflow.e2e_latency;
     out.e2e_slo_met = result.workflow.e2e_slo_met;
     out.critical_path = result.workflow.critical_path_str();
-    out.trace_digest = trace_digest(&result.trace);
+    // The engine-computed digest covers the complete recorded trace even in
+    // streaming mode, where `result.trace` is only the tail window.
+    out.trace_digest = result.trace_digest;
     out.min_attainment = min_attainment;
     out.max_attainment = max_attainment;
     out.fairness_spread = max_attainment - min_attainment;
@@ -1390,6 +1392,8 @@ mod tests {
             }],
             workflow: crate::coordinator::WorkflowMetrics::default(),
             trace: crate::gpusim::engine::Trace::new(),
+            trace_digest: 0,
+            trace_aggregates: None,
             client_names: vec![],
             makespan: 1.0,
             policy: "greedy".into(),

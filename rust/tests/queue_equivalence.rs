@@ -1,0 +1,345 @@
+//! Queue-backend and trace-mode equivalence suite (ISSUE 8).
+//!
+//! The determinism contract after the engine-speed campaign: the timer
+//! wheel is byte-identical to the binary heap, and streaming trace
+//! recording digests to the same golden fingerprint as a fully
+//! materialized trace — at the queue level (pop sequences), the engine
+//! level (digests, budget stopping points), and the scenario level (the
+//! matrix report's `trace_digest` column across `--jobs 1/4`, including
+//! the chaos and workflow slices). Plus the bounded-allocation proof that
+//! streaming peak trace memory is O(window), independent of run length.
+
+use consumerbench::gpusim::engine::{
+    BudgetExhausted, Engine, EngineError, EngineOptions, JobId, JobSpec, Phase, QueueBackend,
+    TraceMode,
+};
+use consumerbench::gpusim::kernel::KernelDesc;
+use consumerbench::gpusim::policy::Policy;
+use consumerbench::gpusim::profiles::Testbed;
+use consumerbench::gpusim::queue::{Event, EventKind, EventQueue, HeapQueue, TimerWheelQueue};
+use consumerbench::gpusim::trace::trace_digest;
+use consumerbench::scenario::{run_specs_jobs, MatrixAxes, ScenarioSpec};
+
+/// Deterministic LCG (no external rand crate): same stream every run.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+fn ev(time: f64, seq: u64) -> Event {
+    let kind = match seq % 3 {
+        0 => EventKind::PhaseBegin,
+        1 => EventKind::KernelDone,
+        _ => EventKind::CpuDone,
+    };
+    Event {
+        time,
+        seq,
+        kind,
+        job: JobId(seq),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Queue level: the pop sequence is a pure function of the push sequence,
+// identical across backends.
+// ---------------------------------------------------------------------
+
+/// Randomized schedules over several seeds: interleaved push/pop with
+/// heavy same-timestamp ties, sub-tick deltas, cross-level spreads, and
+/// beyond-horizon jumps that exercise the wheel's overflow list. The heap
+/// is the reference; the wheel must reproduce its pop order exactly —
+/// `(time-bits, seq, kind, job)` per event.
+#[test]
+fn randomized_schedules_pop_identically_on_both_backends() {
+    for seed in [1u64, 0xdead_beef, 0x2545_f491_4f6c_dd1d, 98765] {
+        let mut rng = Lcg(seed);
+        let mut heap = HeapQueue::with_capacity(32);
+        let mut wheel = TimerWheelQueue::with_capacity(32);
+        let mut seq = 0u64;
+        let mut now = 0.0f64;
+        for step in 0..5_000 {
+            if rng.next() % 3 == 0 {
+                let a = heap.pop();
+                let b = wheel.pop();
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.time.to_bits(), y.time.to_bits(), "seed {seed} step {step}");
+                        assert_eq!(x.seq, y.seq, "seed {seed} step {step}");
+                        assert_eq!(x.kind, y.kind);
+                        assert_eq!(x.job, y.job);
+                        now = x.time;
+                    }
+                    other => panic!("seed {seed} step {step}: pop mismatch {other:?}"),
+                }
+            } else {
+                // Non-decreasing relative to the last pop — the engine's
+                // usage pattern (events are never scheduled in the past).
+                let dt = match rng.next() % 6 {
+                    0 => 0.0,                                    // exact tie
+                    1 => (rng.next() % 90) as f64 * 1e-9,        // sub-tick
+                    2 => (rng.next() % 1_000) as f64 * 1e-7,     // level 0/1
+                    3 => (rng.next() % 1_000) as f64 * 1e-3,     // mid levels
+                    4 => (rng.next() % 50) as f64 * 1e3,         // high levels
+                    _ => 3.0e7 + (rng.next() % 8) as f64 * 1e7,  // overflow
+                };
+                let e = ev(now + dt, seq);
+                seq += 1;
+                heap.push(e);
+                wheel.push(e);
+            }
+            assert_eq!(heap.len(), wheel.len(), "seed {seed} step {step}");
+            assert_eq!(
+                heap.peek_time().map(f64::to_bits),
+                wheel.peek_time().map(f64::to_bits),
+                "seed {seed} step {step}"
+            );
+        }
+        // Drain the remainder in lockstep.
+        loop {
+            match (heap.pop(), wheel.pop()) {
+                (None, None) => break,
+                (Some(x), Some(y)) => {
+                    assert_eq!((x.time.to_bits(), x.seq), (y.time.to_bits(), y.seq));
+                }
+                other => panic!("seed {seed} drain mismatch: {other:?}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine level: golden digests across backend × trace mode, and
+// budget-exhaustion stopping points.
+// ---------------------------------------------------------------------
+
+/// A contended workload with deliberate same-timestamp batches: 48 jobs
+/// across 3 clients, arrival times quantized so several jobs share each
+/// arrival instant.
+fn build_workload(queue: QueueBackend, trace_mode: TraceMode) -> Engine {
+    let mut e = Engine::with_options(
+        Testbed::intel_server(),
+        Policy::FairShare,
+        EngineOptions {
+            queue,
+            trace_mode,
+            capacity_hint: 48,
+        },
+    );
+    let clients: Vec<_> = (0..3).map(|i| e.register_client(format!("c{i}"))).collect();
+    let kernel = KernelDesc::new("k", 288, 256, 80, 8 * 1024, 1e8, 5e6);
+    for j in 0..48usize {
+        e.submit(
+            JobSpec {
+                client: clients[j % clients.len()],
+                label: format!("j{j}"),
+                phases: vec![Phase::gpu("p", 0.0, vec![kernel.clone(); 5])],
+            },
+            (j / 4) as f64 * 2e-3, // 4 jobs share every arrival instant
+        );
+    }
+    e
+}
+
+#[test]
+fn engine_digest_identical_across_backends_and_trace_modes() {
+    let mut baseline = build_workload(QueueBackend::Heap, TraceMode::Full);
+    baseline.run_all();
+    let base_digest = baseline.current_trace_digest();
+    let base_rows = baseline.trace().len();
+    let base_now = baseline.now().to_bits();
+    assert!(base_rows > 0, "workload must record trace rows");
+    assert_eq!(base_digest, trace_digest(baseline.trace()));
+
+    for queue in QueueBackend::ALL {
+        for trace_mode in [TraceMode::Full, TraceMode::Streaming { window: 16 }] {
+            let mut e = build_workload(queue, trace_mode);
+            e.run_all();
+            assert_eq!(
+                e.current_trace_digest(),
+                base_digest,
+                "digest must match heap/full baseline ({queue:?}, {trace_mode:?})"
+            );
+            assert_eq!(e.now().to_bits(), base_now, "({queue:?}, {trace_mode:?})");
+            assert_eq!(e.take_completed().len(), 48, "({queue:?}, {trace_mode:?})");
+            if let Some(st) = e.streaming_trace() {
+                assert_eq!(
+                    st.rows_recorded(),
+                    base_rows as u64,
+                    "streaming must fold exactly the rows full mode materializes"
+                );
+            } else {
+                assert_eq!(e.trace().len(), base_rows);
+            }
+        }
+    }
+}
+
+/// Same-timestamp events are applied as one batch with a single trace row,
+/// so the trace is strictly shorter than the event count on this workload.
+#[test]
+fn batched_application_collapses_same_time_events() {
+    let mut e = build_workload(QueueBackend::Heap, TraceMode::Full);
+    e.run_all();
+    let events = e.events_processed();
+    let rows = e.trace().len() as u64;
+    assert!(rows > 0 && events > rows, "expected batching: {rows} rows for {events} events");
+}
+
+/// Budget exhaustion mid-run (including mid same-timestamp batch, which
+/// the quantized arrivals guarantee for small budgets) is a pure function
+/// of the pop order: both backends and both trace modes stop at the same
+/// event count, the same virtual-time bits, and the same partial digest.
+#[test]
+fn budget_exhaustion_stops_identically_across_backends() {
+    for budget in [7u64, 64, 301] {
+        let run = |queue: QueueBackend, trace_mode: TraceMode| {
+            let mut e = build_workload(queue, trace_mode);
+            e.set_event_budget(Some(budget));
+            let err = e
+                .run_until_budgeted(f64::INFINITY)
+                .expect_err("budget must exhaust");
+            assert_eq!(
+                err,
+                EngineError::Budget(BudgetExhausted::Events { budget, at: e.now() })
+            );
+            (e.events_processed(), e.now().to_bits(), e.current_trace_digest())
+        };
+        let baseline = run(QueueBackend::Heap, TraceMode::Full);
+        assert_eq!(baseline.0, budget);
+        for queue in QueueBackend::ALL {
+            for trace_mode in [TraceMode::Full, TraceMode::Streaming { window: 8 }] {
+                assert_eq!(
+                    run(queue, trace_mode),
+                    baseline,
+                    "budget {budget} stop point must match ({queue:?}, {trace_mode:?})"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming memory bound: peak materialized rows are O(window).
+// ---------------------------------------------------------------------
+
+#[test]
+fn streaming_trace_memory_is_bounded_by_window() {
+    const WINDOW: usize = 32;
+    let mut e = build_workload(QueueBackend::Wheel, TraceMode::Streaming { window: WINDOW });
+    e.run_all();
+    let st = e.streaming_trace().expect("streaming recorder");
+    let rows = st.rows_recorded();
+    assert!(
+        rows as usize > WINDOW * 4,
+        "workload too small to prove the bound: {rows} rows"
+    );
+    assert_eq!(st.tail_len(), WINDOW, "ring holds exactly the tail window");
+    // VecDeque may round its allocation up, but the reservation must stay
+    // O(window) — not O(rows_recorded).
+    assert!(
+        st.ring_row_capacity() <= WINDOW * 4,
+        "ring capacity {} grew past O(window={WINDOW}) after {rows} rows",
+        st.ring_row_capacity()
+    );
+    // The materialized tail is the last WINDOW rows of the equivalent full
+    // trace, byte-for-byte.
+    let mut full = build_workload(QueueBackend::Wheel, TraceMode::Full);
+    full.run_all();
+    assert_eq!(full.trace().len() as u64, rows);
+    let tail_start = full.trace().len() - WINDOW;
+    let tail = e.take_trace();
+    assert_eq!(tail.len(), WINDOW);
+    for i in 0..WINDOW {
+        let a = tail.get(i).to_sample();
+        let b = full.trace().get(tail_start + i).to_sample();
+        assert_eq!(a.t.to_bits(), b.t.to_bits(), "tail row {i}");
+        assert_eq!(a, b, "tail row {i}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario level: the matrix report's golden digests are invariant under
+// queue backend, trace mode, and `--jobs`, across the default/chaos/
+// workflow slices.
+// ---------------------------------------------------------------------
+
+#[test]
+fn scenario_digests_invariant_under_backend_trace_mode_and_jobs() {
+    let all = MatrixAxes::default_matrix(42).expand();
+    let pick = |pred: &dyn Fn(&str) -> bool| -> ScenarioSpec {
+        all.iter()
+            .find(|s| pred(&s.name))
+            .unwrap_or_else(|| panic!("no matching spec in the default matrix"))
+            .clone()
+    };
+    // One spec per slice: a flat app-mix row, a chaos row, a workflow row.
+    let specs = vec![
+        pick(&|n| n.starts_with("mix=")),
+        pick(&|n| n.starts_with("chaos=")),
+        pick(&|n| n.starts_with("workflow=")),
+    ];
+    let digests = |specs: &[ScenarioSpec], jobs: usize| -> Vec<(String, u64)> {
+        let report = run_specs_jobs(specs, 42, jobs).unwrap();
+        report
+            .scenarios
+            .iter()
+            .map(|s| {
+                assert!(s.error.is_none(), "{}: {:?}", s.name, s.error);
+                (s.name.clone(), s.trace_digest)
+            })
+            .collect()
+    };
+    let with = |queue: Option<QueueBackend>, mode: Option<TraceMode>| -> Vec<ScenarioSpec> {
+        specs
+            .iter()
+            .cloned()
+            .map(|mut s| {
+                s.event_queue = queue;
+                s.trace_mode = mode;
+                s
+            })
+            .collect()
+    };
+
+    let baseline = digests(&specs, 1);
+    assert_eq!(baseline.len(), 3);
+    for (name, d) in &baseline {
+        assert_ne!(*d, 0, "{name}: zero digest");
+    }
+
+    // Parallel execution does not perturb the digests.
+    assert_eq!(digests(&specs, 4), baseline, "--jobs 4 baseline");
+    // Timer wheel reproduces the heap's golden traces.
+    assert_eq!(
+        digests(&with(Some(QueueBackend::Wheel), None), 1),
+        baseline,
+        "wheel backend"
+    );
+    // Streaming folds to the same digest the full trace hashes to.
+    assert_eq!(
+        digests(&with(None, Some(TraceMode::Streaming { window: 64 })), 1),
+        baseline,
+        "streaming trace mode"
+    );
+    // Both knobs together, under parallel execution.
+    assert_eq!(
+        digests(
+            &with(
+                Some(QueueBackend::Wheel),
+                Some(TraceMode::Streaming { window: 64 })
+            ),
+            4
+        ),
+        baseline,
+        "wheel + streaming at --jobs 4"
+    );
+}
