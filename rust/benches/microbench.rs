@@ -257,6 +257,7 @@ fn main() {
     let gen_generic = kernel_trace_gens_per_sec(KernelBackend::GenericTorch, gen_reps);
     let gen_fused = kernel_trace_gens_per_sec(KernelBackend::FusedCustom, gen_reps);
 
+    // detlint: pin(default-matrix-count: 68)
     let mut axes = MatrixAxes::default_matrix(42);
     if fast {
         axes.mixes.truncate(1); // static + adaptive chat only …

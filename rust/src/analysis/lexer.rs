@@ -1,0 +1,477 @@
+//! Minimal Rust lexer for the determinism lint.
+//!
+//! The offline crate set has no `syn`/`proc-macro2`, and the lint does not
+//! need a parse tree — every rule is a token-level pattern. What it *does*
+//! need is to never confuse code with prose: a `HashMap` in a comment or a
+//! string literal is documentation, not a hazard. So the lexer produces a
+//! **masked** view of each source file: comments and literal bodies are
+//! replaced by spaces (newlines preserved, so byte offsets and line numbers
+//! stay aligned with the original), and the comments are captured on the
+//! side for directive parsing.
+//!
+//! Handled literal forms: line comments, nested block comments, string
+//! literals with escapes (including `\u{..}` and line continuations), char
+//! literals (escaped and `'\''`), lifetimes (`'a`, `'static`, loop labels —
+//! *not* blanked), raw strings `r"…"`/`r#"…"#` at any hash depth, byte
+//! strings `b"…"`, byte chars `b'…'`, and raw byte strings `br#"…"#`. Raw
+//! identifiers (`r#match`) fall through as plain code.
+
+/// One comment, with the 1-based line and byte offset where it starts.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub offset: usize,
+    pub text: String,
+}
+
+/// The masked view of one source file.
+#[derive(Debug)]
+pub struct Masked {
+    /// Source with comments and literal bodies blanked to spaces. Same byte
+    /// length and line structure as the input.
+    pub code: String,
+    pub comments: Vec<Comment>,
+}
+
+/// Byte-offset → 1-based line number lookup.
+#[derive(Debug)]
+pub struct LineIndex {
+    starts: Vec<usize>,
+}
+
+impl LineIndex {
+    pub fn new(text: &str) -> LineIndex {
+        let mut starts = vec![0];
+        for (i, b) in text.bytes().enumerate() {
+            if b == b'\n' {
+                starts.push(i + 1);
+            }
+        }
+        LineIndex { starts }
+    }
+
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.starts.partition_point(|&s| s <= offset)
+    }
+}
+
+pub fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Blank comments and literal bodies out of `source`.
+pub fn mask(source: &str) -> Masked {
+    let mut lx = Lexer {
+        src: source,
+        bytes: source.as_bytes(),
+        i: 0,
+        line: 1,
+        code: Vec::with_capacity(source.len()),
+        comments: Vec::new(),
+    };
+    while lx.i < lx.bytes.len() {
+        match lx.bytes[lx.i] {
+            b'/' if lx.peek(1) == Some(b'/') => lx.line_comment(),
+            b'/' if lx.peek(1) == Some(b'*') => lx.block_comment(),
+            b'"' => lx.string_body(),
+            b'\'' => lx.quote(),
+            b'r' | b'b' if !lx.prev_is_ident() => lx.prefixed_literal(),
+            _ => lx.keep(),
+        }
+    }
+    Masked {
+        code: String::from_utf8(lx.code).expect("blanking preserves UTF-8"),
+        comments: lx.comments,
+    }
+}
+
+/// Blank the bodies of `#[cfg(test)] mod … { … }` blocks in already-masked
+/// code, returning the re-masked code and the blanked byte ranges. Test
+/// modules exercise APIs under controlled conditions (literal seeds, panic
+/// probes), so the determinism rules do not apply inside them.
+pub fn mask_cfg_test(code: &str) -> (String, Vec<(usize, usize)>) {
+    let mut out = code.as_bytes().to_vec();
+    let mut regions = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find("#[cfg(test)]") {
+        let attr = from + rel;
+        from = attr + 1;
+        let mut j = attr + "#[cfg(test)]".len();
+        // Skip whitespace and any further attributes before the item.
+        loop {
+            while out.get(j).copied().is_some_and(|b| b.is_ascii_whitespace()) {
+                j += 1;
+            }
+            if out.get(j) == Some(&b'#') && out.get(j + 1) == Some(&b'[') {
+                let mut depth = 0usize;
+                while j < out.len() {
+                    match out[j] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        // Only `mod` items are masked; a `#[cfg(test)]` on anything else
+        // (a lone helper fn, an import) is left to the rules.
+        if !code[j..].starts_with("mod")
+            || !out
+                .get(j + 3)
+                .copied()
+                .is_some_and(|b| b.is_ascii_whitespace())
+        {
+            continue;
+        }
+        let Some(open_rel) = code[j..].find('{') else {
+            continue;
+        };
+        let open = j + open_rel;
+        let mut depth = 0usize;
+        let mut k = open;
+        let mut close = None;
+        while k < out.len() {
+            match out[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = Some(k);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let Some(close) = close else {
+            continue;
+        };
+        for b in &mut out[open + 1..close] {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+        regions.push((attr, close));
+        from = close;
+    }
+    (
+        String::from_utf8(out).expect("masking preserves UTF-8"),
+        regions,
+    )
+}
+
+struct Lexer<'a> {
+    src: &'a str,
+    bytes: &'a [u8],
+    i: usize,
+    line: usize,
+    code: Vec<u8>,
+    comments: Vec<Comment>,
+}
+
+impl Lexer<'_> {
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.bytes.get(self.i + ahead).copied()
+    }
+
+    fn prev_is_ident(&self) -> bool {
+        self.i > 0 && is_ident(self.bytes[self.i - 1])
+    }
+
+    /// Copy the current byte into the masked code verbatim.
+    fn keep(&mut self) {
+        let b = self.bytes[self.i];
+        if b == b'\n' {
+            self.line += 1;
+        }
+        self.code.push(b);
+        self.i += 1;
+    }
+
+    /// Blank the current byte (newlines survive to keep lines aligned).
+    fn blank(&mut self) {
+        let b = self.bytes[self.i];
+        if b == b'\n' {
+            self.line += 1;
+            self.code.push(b'\n');
+        } else {
+            self.code.push(b' ');
+        }
+        self.i += 1;
+    }
+
+    fn line_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        while self.i < self.bytes.len() && self.bytes[self.i] != b'\n' {
+            self.code.push(b' ');
+            self.i += 1;
+        }
+        self.comments.push(Comment {
+            line,
+            offset: start,
+            text: self.src[start..self.i].to_string(),
+        });
+    }
+
+    fn block_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        let mut depth = 0usize;
+        while self.i < self.bytes.len() {
+            if self.bytes[self.i] == b'/' && self.peek(1) == Some(b'*') {
+                depth += 1;
+                self.blank();
+                self.blank();
+            } else if self.bytes[self.i] == b'*' && self.peek(1) == Some(b'/') {
+                depth -= 1;
+                self.blank();
+                self.blank();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                self.blank();
+            }
+        }
+        self.comments.push(Comment {
+            line,
+            offset: start,
+            text: self.src[start..self.i].to_string(),
+        });
+    }
+
+    /// At an opening `"`: blank the body, honoring escapes.
+    fn string_body(&mut self) {
+        self.code.push(b'"');
+        self.i += 1;
+        while self.i < self.bytes.len() {
+            match self.bytes[self.i] {
+                b'\\' => {
+                    self.blank();
+                    if self.i < self.bytes.len() {
+                        self.blank();
+                    }
+                }
+                b'"' => {
+                    self.code.push(b'"');
+                    self.i += 1;
+                    return;
+                }
+                _ => self.blank(),
+            }
+        }
+    }
+
+    /// At an opening `'` of a char literal: blank the body.
+    fn char_body(&mut self) {
+        self.code.push(b'\'');
+        self.i += 1;
+        while self.i < self.bytes.len() {
+            match self.bytes[self.i] {
+                b'\\' => {
+                    self.blank();
+                    if self.i < self.bytes.len() {
+                        self.blank();
+                    }
+                }
+                b'\'' => {
+                    self.code.push(b'\'');
+                    self.i += 1;
+                    return;
+                }
+                _ => self.blank(),
+            }
+        }
+    }
+
+    /// At a `'` that may open a char literal or a lifetime.
+    fn quote(&mut self) {
+        match self.peek(1) {
+            Some(b'\\') => self.char_body(),
+            Some(c) if c == b'_' || c.is_ascii_alphabetic() => {
+                // `'a'` is a char; `'a`, `'static`, `'outer:` are lifetimes
+                // or labels — left in the code view.
+                let mut j = self.i + 2;
+                while self.bytes.get(j).copied().is_some_and(is_ident) {
+                    j += 1;
+                }
+                if self.bytes.get(j) == Some(&b'\'') {
+                    self.char_body();
+                } else {
+                    self.keep();
+                }
+            }
+            Some(_) => self.char_body(),
+            None => self.keep(),
+        }
+    }
+
+    /// At `r` or `b` on an identifier boundary: recognize raw/byte literal
+    /// prefixes; anything else falls through as a plain identifier.
+    fn prefixed_literal(&mut self) {
+        if self.bytes[self.i] == b'r' {
+            let mut j = self.i + 1;
+            let mut hashes = 0usize;
+            while self.bytes.get(j) == Some(&b'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if self.bytes.get(j) == Some(&b'"') {
+                self.keep(); // r
+                for _ in 0..hashes {
+                    self.keep();
+                }
+                self.raw_string_body(hashes);
+            } else {
+                self.keep();
+            }
+            return;
+        }
+        match self.peek(1) {
+            Some(b'"') => {
+                self.keep(); // b
+                self.string_body();
+            }
+            Some(b'\'') => {
+                self.keep(); // b
+                self.char_body();
+            }
+            Some(b'r') => {
+                let mut j = self.i + 2;
+                let mut hashes = 0usize;
+                while self.bytes.get(j) == Some(&b'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if self.bytes.get(j) == Some(&b'"') {
+                    self.keep(); // b
+                    self.keep(); // r
+                    for _ in 0..hashes {
+                        self.keep();
+                    }
+                    self.raw_string_body(hashes);
+                } else {
+                    self.keep();
+                }
+            }
+            _ => self.keep(),
+        }
+    }
+
+    /// At the opening `"` of a raw string with `hashes` trailing `#`s.
+    fn raw_string_body(&mut self, hashes: usize) {
+        self.code.push(b'"');
+        self.i += 1;
+        while self.i < self.bytes.len() {
+            if self.bytes[self.i] == b'"' && self.closing_hashes(hashes) {
+                self.code.push(b'"');
+                self.i += 1;
+                for _ in 0..hashes {
+                    self.keep(); // the delimiter #s
+                }
+                return;
+            }
+            self.blank();
+        }
+    }
+
+    fn closing_hashes(&self, hashes: usize) -> bool {
+        (1..=hashes).all(|k| self.bytes.get(self.i + k) == Some(&b'#'))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let a = 1; // HashMap here\nlet s = \"Instant::now\"; /* SystemTime */\n";
+        let m = mask(src);
+        assert!(!m.code.contains("HashMap"));
+        assert!(!m.code.contains("Instant"));
+        assert!(!m.code.contains("SystemTime"));
+        assert!(m.code.contains("let a = 1;"));
+        assert_eq!(m.code.len(), src.len());
+        assert_eq!(m.comments.len(), 2);
+        assert_eq!(m.comments[0].line, 1);
+        assert!(m.comments[0].text.contains("HashMap"));
+        assert_eq!(m.comments[1].line, 2);
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let src = "a /* x /* y */ z\nstill comment */ b\nc // tail";
+        let m = mask(src);
+        assert!(m.code.starts_with("a "));
+        assert!(m.code.contains(" b\nc "));
+        assert!(!m.code.contains("still"));
+        assert_eq!(m.comments[0].line, 1);
+        assert_eq!(mask("c // tail").comments[0].line, 1);
+        // Line structure survives the multi-line comment.
+        assert_eq!(m.code.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn raw_and_byte_literals() {
+        let src = r####"let a = r#"HashMap "quoted""#; let b = br##"SystemTime"##; let c = b"lock()";"####;
+        let m = mask(src);
+        assert!(!m.code.contains("HashMap"));
+        assert!(!m.code.contains("SystemTime"));
+        assert!(!m.code.contains("lock"));
+        assert!(m.code.contains("let a ="));
+        assert!(m.code.contains("let c ="));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_do_not() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'x'; let q = '\\''; let n = '\\n'; c }";
+        let m = mask(src);
+        assert!(m.code.contains("<'a>"));
+        assert!(m.code.contains("&'a str"));
+        assert!(!m.code.contains('x'), "char body blanked: {}", m.code);
+        assert_eq!(m.code.len(), src.len());
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_terminate() {
+        let src = r#"let s = "a\"b"; tail()"#;
+        let m = mask(src);
+        assert!(m.code.contains("tail()"));
+        assert!(!m.code.contains('b'));
+    }
+
+    #[test]
+    fn cfg_test_modules_are_masked() {
+        let code = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { hazard() }\n}\nfn after() {}\n";
+        let (masked, regions) = mask_cfg_test(code);
+        assert!(!masked.contains("hazard"));
+        assert!(masked.contains("fn live"));
+        assert!(masked.contains("fn after"));
+        assert_eq!(regions.len(), 1);
+        // Nested braces inside the module stay balanced.
+        let nested = "#[cfg(test)]\nmod t {\n    fn a() { if x { y() } }\n}\nkeep()\n";
+        let (masked, _) = mask_cfg_test(nested);
+        assert!(masked.contains("keep()"));
+        assert!(!masked.contains("if x"));
+    }
+
+    #[test]
+    fn line_index_maps_offsets() {
+        let text = "ab\ncd\nef";
+        let idx = LineIndex::new(text);
+        assert_eq!(idx.line_of(0), 1);
+        assert_eq!(idx.line_of(2), 1);
+        assert_eq!(idx.line_of(3), 2);
+        assert_eq!(idx.line_of(7), 3);
+    }
+}

@@ -1,0 +1,475 @@
+//! detlint — determinism & panic-safety static analysis over the crate's
+//! own sources.
+//!
+//! ConsumerBench's headline contract is byte-identical reports across
+//! `--jobs 1/N`, repeats, resume, and queue backends. The golden-trace
+//! tests enforce that *dynamically*, but only for hazards a seed happens
+//! to exercise. This module makes the contract statically checkable: a
+//! zero-dependency lint pass (hand-rolled lexer in [`lexer`], token-level
+//! rules in [`rules`], cross-file pin checks in [`pins`]) that walks the
+//! crate's own sources and reports every construct that could let host
+//! state — hash seeds, wall clocks, OS entropy, poisoned locks, drifting
+//! pinned literals — leak into report bytes.
+//!
+//! Scope model: files under `rust/src` get the full per-file rule set plus
+//! pin scanning; `rust/tests` and `rust/benches` are pin-scan only (tests
+//! and benches legitimately use wall clocks and literal seeds, but they
+//! do assert pinned literals); `BENCH.json` and `python/perf_gate.py`
+//! join the raw pin scan so schema markers and bench keys are compared
+//! across language boundaries. `#[cfg(test)] mod` bodies inside `src` are
+//! exempt from the per-file rules for the same reason. Fixture corpora
+//! (any directory named `lint_fixtures`) are never walked.
+//!
+//! Suppressions are comment directives — the exact syntax, with examples,
+//! is in the README ("Static analysis & the determinism contract"). A
+//! directive must carry a non-empty `--` justification; a bare allow is
+//! itself a diagnostic (`bad-suppression`) *and* leaves the underlying
+//! violation live. Pin directives (`pin(key: value)`) assert cross-file
+//! agreement of load-bearing literals and are validated against the file
+//! text so an annotation cannot outlive the literal it protects.
+
+mod lexer;
+mod pins;
+mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use lexer::LineIndex;
+use pins::{Pin, PinFile};
+
+/// Every rule id with a one-line description (`consumerbench lint
+/// --list-rules`).
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "no-unordered-iteration",
+        "HashMap/HashSet in digest-affecting modules (gpusim, scenario, coordinator, server, apps)",
+    ),
+    (
+        "no-wall-clock",
+        "Instant::now/SystemTime anywhere outside the watchdog's documented boundary",
+    ),
+    (
+        "no-poisonable-unwrap",
+        ".lock().unwrap()/.lock().expect(...): double-panic on a poisoned mutex",
+    ),
+    (
+        "no-float-order-hazard",
+        ".sum::<f32|f64>() over hash-backed sources (float addition is order-sensitive)",
+    ),
+    (
+        "no-ambient-entropy",
+        "RNG construction outside util/rng.rs, or streams seeded from bare literals",
+    ),
+    (
+        "pin-drift",
+        "cross-file drift of pinned literals, schema markers, or BENCH.json keys",
+    ),
+    (
+        "bad-suppression",
+        "malformed, unknown-rule, or justification-free allow directives",
+    ),
+];
+
+pub fn rule_exists(id: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == id)
+}
+
+/// One lint finding, anchored to `file:line`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The outcome of one lint run.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Surviving diagnostics, sorted by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    /// Violations silenced by a justified allow directive.
+    pub suppressions_honored: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// What a file is scanned for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scope {
+    /// Per-file rules + directives + pin scan (`rust/src`).
+    Code,
+    /// Pin/marker scan only (`rust/tests`, `rust/benches`, artifacts).
+    PinsOnly,
+}
+
+/// Find the repository root (the ancestor of `start` containing
+/// `rust/src`).
+pub fn find_root(start: &Path) -> Result<PathBuf> {
+    for dir in start.ancestors() {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir.to_path_buf());
+        }
+    }
+    bail!(
+        "no repository root (a directory containing rust/src) at or above {}",
+        start.display()
+    )
+}
+
+/// Lint the repository rooted at `root`.
+pub fn run_lint(root: &Path) -> Result<LintReport> {
+    let files = collect_files(root)?;
+    if files.is_empty() {
+        bail!(
+            "lint: no Rust sources found under {} (expected rust/src/**/*.rs)",
+            root.display()
+        );
+    }
+    let mut diagnostics = Vec::new();
+    let mut suppressions_honored = 0usize;
+    let mut pin_files = Vec::new();
+    for (rel, scope) in &files {
+        let raw = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("lint: read {rel}"))?;
+        let mut pin_annotations = Vec::new();
+        if rel.ends_with(".rs") {
+            scan_rust_file(
+                rel,
+                &raw,
+                *scope,
+                &mut diagnostics,
+                &mut suppressions_honored,
+                &mut pin_annotations,
+            );
+        }
+        pin_files.push(PinFile {
+            rel: rel.clone(),
+            raw,
+            pins: pin_annotations,
+        });
+    }
+    diagnostics.extend(pins::check(&pin_files));
+    diagnostics.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(LintReport {
+        diagnostics,
+        files_scanned: files.len(),
+        suppressions_honored,
+    })
+}
+
+fn scan_rust_file(
+    rel: &str,
+    raw: &str,
+    scope: Scope,
+    diagnostics: &mut Vec<Diagnostic>,
+    suppressions_honored: &mut usize,
+    pin_annotations: &mut Vec<Pin>,
+) {
+    let masked = lexer::mask(raw);
+    let (code, test_regions) = lexer::mask_cfg_test(&masked.code);
+    let lines = LineIndex::new(raw);
+    let mut allows: Vec<(String, usize)> = Vec::new();
+    for c in &masked.comments {
+        let Some(directive) = parse_directive(&c.text) else {
+            continue;
+        };
+        match directive {
+            Directive::Pin { key, value } => pin_annotations.push(Pin {
+                line: c.line,
+                key,
+                value,
+            }),
+            Directive::Allow {
+                rule,
+                justification,
+            } => {
+                if scope != Scope::Code || in_regions(&test_regions, c.offset) {
+                    continue;
+                }
+                if !rule_exists(&rule) {
+                    diagnostics.push(Diagnostic {
+                        rule: "bad-suppression",
+                        file: rel.to_string(),
+                        line: c.line,
+                        message: format!(
+                            "allow names unknown rule `{rule}` (see `consumerbench lint \
+                             --list-rules`)"
+                        ),
+                    });
+                } else if justification.is_empty() {
+                    diagnostics.push(Diagnostic {
+                        rule: "bad-suppression",
+                        file: rel.to_string(),
+                        line: c.line,
+                        message: format!(
+                            "allow for `{rule}` has no justification: a suppression \
+                             must explain why the invariant holds (`-- <reason>`)"
+                        ),
+                    });
+                } else {
+                    allows.push((rule, c.line));
+                }
+            }
+            Directive::Malformed(why) => diagnostics.push(Diagnostic {
+                rule: "bad-suppression",
+                file: rel.to_string(),
+                line: c.line,
+                message: format!("malformed detlint directive: {why}"),
+            }),
+        }
+    }
+    if scope == Scope::Code {
+        let code_lines: Vec<&str> = code.lines().collect();
+        for d in rules::run_rules(rel, &code, &lines) {
+            let allowed = allows
+                .iter()
+                .any(|(rule, line)| *rule == d.rule && allow_covers(&code_lines, *line, d.line));
+            if allowed {
+                *suppressions_honored += 1;
+            } else {
+                diagnostics.push(d);
+            }
+        }
+    }
+}
+
+/// Does an allow directive on `allow_line` cover a diagnostic on
+/// `diag_line`? It does when they share a line (trailing comment) or when
+/// every line between them is blank in the masked view — i.e. the
+/// directive, possibly with justification continuation lines, immediately
+/// precedes the flagged statement.
+fn allow_covers(masked_lines: &[&str], allow_line: usize, diag_line: usize) -> bool {
+    if diag_line == allow_line {
+        return true;
+    }
+    if diag_line < allow_line {
+        return false;
+    }
+    ((allow_line + 1)..diag_line)
+        .all(|l| masked_lines.get(l - 1).is_none_or(|s| s.trim().is_empty()))
+}
+
+enum Directive {
+    Allow { rule: String, justification: String },
+    Pin { key: String, value: String },
+    Malformed(String),
+}
+
+/// Parse a comment as a detlint directive. Only comments that *begin*
+/// with the marker count — a mid-sentence mention in prose is not a
+/// directive.
+fn parse_directive(text: &str) -> Option<Directive> {
+    let t = text
+        .trim_start_matches(['/', '*', '!'])
+        .trim_start()
+        .trim_end_matches("*/")
+        .trim_end();
+    let rest = t.strip_prefix("detlint:")?.trim_start();
+    if let Some(inner) = rest.strip_prefix("allow(") {
+        let Some(close) = inner.find(')') else {
+            return Some(Directive::Malformed("unclosed `allow(`".to_string()));
+        };
+        let rule = inner[..close].trim().to_string();
+        if rule.is_empty() {
+            return Some(Directive::Malformed("allow names no rule".to_string()));
+        }
+        let tail = inner[close + 1..].trim_start();
+        let justification = tail
+            .strip_prefix("--")
+            .map(|j| j.trim().to_string())
+            .unwrap_or_default();
+        Some(Directive::Allow {
+            rule,
+            justification,
+        })
+    } else if let Some(inner) = rest.strip_prefix("pin(") {
+        let Some(close) = inner.find(')') else {
+            return Some(Directive::Malformed("unclosed `pin(`".to_string()));
+        };
+        let body = &inner[..close];
+        let Some((k, v)) = body.split_once(':') else {
+            return Some(Directive::Malformed(
+                "pin takes `key: value`".to_string(),
+            ));
+        };
+        let (key, value) = (k.trim(), v.trim());
+        if key.is_empty() || value.is_empty() {
+            return Some(Directive::Malformed(
+                "pin takes `key: value`".to_string(),
+            ));
+        }
+        Some(Directive::Pin {
+            key: key.to_string(),
+            value: value.to_string(),
+        })
+    } else {
+        let head: String = rest.chars().take(24).collect();
+        Some(Directive::Malformed(format!(
+            "expected `allow(...)` or `pin(...)`, found `{head}`"
+        )))
+    }
+}
+
+fn in_regions(regions: &[(usize, usize)], offset: usize) -> bool {
+    regions
+        .iter()
+        .any(|&(start, end)| offset >= start && offset <= end)
+}
+
+fn collect_files(root: &Path) -> Result<Vec<(String, Scope)>> {
+    let mut files = Vec::new();
+    walk_rs(&root.join("rust").join("src"), root, Scope::Code, &mut files)?;
+    walk_rs(
+        &root.join("rust").join("tests"),
+        root,
+        Scope::PinsOnly,
+        &mut files,
+    )?;
+    walk_rs(
+        &root.join("rust").join("benches"),
+        root,
+        Scope::PinsOnly,
+        &mut files,
+    )?;
+    for artifact in ["BENCH.json", "python/perf_gate.py"] {
+        if root.join(artifact).is_file() {
+            files.push((artifact.to_string(), Scope::PinsOnly));
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn walk_rs(
+    dir: &Path,
+    root: &Path,
+    scope: Scope,
+    out: &mut Vec<(String, Scope)>,
+) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("lint: read dir {}", dir.display()))?
+    {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            let skip = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n == "lint_fixtures" || n == "target");
+            if !skip {
+                walk_rs(&path, root, scope, out)?;
+            }
+        } else if path.extension().and_then(|x| x.to_str()) == Some("rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, scope));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn allow_text(rule: &str, justification: &str) -> String {
+        // Built by concatenation so this source file never contains a
+        // literal directive-shaped comment of its own.
+        let mut s = String::from("// detlint");
+        s.push_str(": allow(");
+        s.push_str(rule);
+        s.push(')');
+        if !justification.is_empty() {
+            s.push_str(" -- ");
+            s.push_str(justification);
+        }
+        s
+    }
+
+    #[test]
+    fn directive_requires_leading_marker() {
+        assert!(parse_directive("// prose mentioning detlint: allow(x) syntax").is_none());
+        assert!(parse_directive("// nothing to see").is_none());
+        let d = parse_directive(&allow_text("no-wall-clock", "watchdog boundary"));
+        assert!(matches!(
+            d,
+            Some(Directive::Allow { rule, justification })
+                if rule == "no-wall-clock" && justification == "watchdog boundary"
+        ));
+    }
+
+    #[test]
+    fn bare_allow_has_empty_justification() {
+        let d = parse_directive(&allow_text("no-wall-clock", ""));
+        assert!(
+            matches!(d, Some(Directive::Allow { justification, .. }) if justification.is_empty())
+        );
+    }
+
+    #[test]
+    fn pin_directive_parses_key_value() {
+        let mut s = String::from("// detlint");
+        s.push_str(": pin(default-matrix-count: 68)");
+        let d = parse_directive(&s);
+        assert!(matches!(
+            d,
+            Some(Directive::Pin { key, value }) if key == "default-matrix-count" && value == "68"
+        ));
+    }
+
+    #[test]
+    fn unknown_directive_is_malformed() {
+        let mut s = String::from("// detlint");
+        s.push_str(": forbid(everything)");
+        assert!(matches!(parse_directive(&s), Some(Directive::Malformed(_))));
+    }
+
+    #[test]
+    fn block_comment_directive_sheds_closing_delimiter() {
+        let mut s = String::from("/* detlint");
+        s.push_str(": allow(no-wall-clock) -- boundary */");
+        let d = parse_directive(&s);
+        assert!(matches!(
+            d,
+            Some(Directive::Allow { justification, .. }) if justification == "boundary"
+        ));
+    }
+
+    #[test]
+    fn rules_registry_is_consistent() {
+        assert_eq!(RULES.len(), 7);
+        assert!(rule_exists("no-wall-clock"));
+        assert!(rule_exists("pin-drift"));
+        assert!(!rule_exists("no-such-rule"));
+        // Ids stay unique.
+        let mut ids: Vec<&str> = RULES.iter().map(|(r, _)| *r).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), RULES.len());
+    }
+}

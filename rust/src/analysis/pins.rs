@@ -1,0 +1,326 @@
+//! Cross-file pin consistency (`pin-drift`).
+//!
+//! Three independent checks, all over the **raw** file text (pins live in
+//! comments, string literals, and non-Rust artifacts, so masking would hide
+//! exactly what we need to see):
+//!
+//! 1. **Annotation pins** — every pin directive (see README for syntax)
+//!    names a `key: value` pair. All annotations sharing a key must agree
+//!    on the value, and each annotated file must actually contain the
+//!    pinned value outside the directive lines themselves (so the
+//!    annotation cannot outlive the literal it protects).
+//! 2. **Schema markers** — the report/bench schema-version keys
+//!    (`consumerbench_run`, `consumerbench_scenario_matrix`,
+//!    `consumerbench_bench`) are emitted, asserted, and consumed in
+//!    several files; the integer that follows each occurrence must agree
+//!    tree-wide.
+//! 3. **BENCH keys** — the entry names `microbench.rs` emits and the
+//!    `"name"` keys in the committed `BENCH.json` must be the same set,
+//!    or the perf gate silently compares nothing.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{is_ident, LineIndex};
+use super::rules::find_token;
+use super::Diagnostic;
+
+/// Report/bench schema-version markers pinned tree-wide. Formatted so no
+/// digit trails a marker here (the scan needs a digit within a few bytes).
+const MARKERS: &[&str] = &[
+    "consumerbench_run",
+    "consumerbench_scenario_matrix",
+    "consumerbench_bench",
+];
+
+/// How far past a marker occurrence the version integer may sit
+/// (covers `": 2`, `\": 2,`, `") != 2`).
+const MARKER_INT_WINDOW: usize = 8;
+
+/// One pin annotation, already parsed out of a comment directive.
+#[derive(Debug, Clone)]
+pub struct Pin {
+    pub line: usize,
+    pub key: String,
+    pub value: String,
+}
+
+/// One file as seen by the pin checks.
+#[derive(Debug)]
+pub struct PinFile {
+    pub rel: String,
+    pub raw: String,
+    pub pins: Vec<Pin>,
+}
+
+pub fn check(files: &[PinFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    annotation_pins(files, &mut diags);
+    marker_versions(files, &mut diags);
+    bench_keys(files, &mut diags);
+    diags
+}
+
+fn annotation_pins(files: &[PinFile], diags: &mut Vec<Diagnostic>) {
+    let mut groups: BTreeMap<&str, Vec<(&PinFile, &Pin)>> = BTreeMap::new();
+    for f in files {
+        for p in &f.pins {
+            groups.entry(p.key.as_str()).or_default().push((f, p));
+        }
+    }
+    for (key, sites) in &groups {
+        let values: BTreeSet<&str> = sites.iter().map(|(_, p)| p.value.as_str()).collect();
+        if values.len() > 1 {
+            let seen = values.iter().copied().collect::<Vec<_>>().join("`, `");
+            for (f, p) in sites {
+                diags.push(Diagnostic {
+                    rule: "pin-drift",
+                    file: f.rel.clone(),
+                    line: p.line,
+                    message: format!(
+                        "pin `{key}` drifted: this site pins `{}` but the tree pins \
+                         `{seen}` — update every site in the same commit",
+                        p.value
+                    ),
+                });
+            }
+        }
+        for (f, p) in sites {
+            if !anchored(&f.raw, &p.value) {
+                diags.push(Diagnostic {
+                    rule: "pin-drift",
+                    file: f.rel.clone(),
+                    line: p.line,
+                    message: format!(
+                        "pin `{key}` is unanchored: `{}` does not occur in this file \
+                         outside the directive itself — the literal it pinned is gone",
+                        p.value
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Does `value` occur in `raw`, boundary-aware, on a line that is not
+/// itself a pin directive?
+fn anchored(raw: &str, value: &str) -> bool {
+    for line in raw.lines() {
+        if line.contains("detlint:") {
+            continue;
+        }
+        if !find_token(line, value).is_empty() {
+            return true;
+        }
+    }
+    false
+}
+
+fn marker_versions(files: &[PinFile], diags: &mut Vec<Diagnostic>) {
+    for marker in MARKERS {
+        let mut sites: Vec<(&PinFile, usize, u64)> = Vec::new();
+        for f in files {
+            let lines = LineIndex::new(&f.raw);
+            for at in find_token(&f.raw, marker) {
+                if let Some(v) = int_after(&f.raw, at + marker.len()) {
+                    sites.push((f, lines.line_of(at), v));
+                }
+            }
+        }
+        let distinct: BTreeSet<u64> = sites.iter().map(|&(_, _, v)| v).collect();
+        if distinct.len() > 1 {
+            let seen = distinct
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join(", ");
+            for (f, line, v) in sites {
+                diags.push(Diagnostic {
+                    rule: "pin-drift",
+                    file: f.rel.clone(),
+                    line,
+                    message: format!(
+                        "schema marker `{marker}` disagrees across the tree: this site \
+                         says {v}, tree has {{{seen}}}"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// First integer within [`MARKER_INT_WINDOW`] bytes after `pos`, if any.
+/// Sites with no nearby integer (docs, key lists) are not version claims.
+fn int_after(raw: &str, pos: usize) -> Option<u64> {
+    let bytes = raw.as_bytes();
+    let mut j = pos;
+    let stop = (pos + MARKER_INT_WINDOW).min(bytes.len());
+    while j < stop && !bytes[j].is_ascii_digit() {
+        j += 1;
+    }
+    if j >= stop {
+        return None;
+    }
+    let start = j;
+    while j < bytes.len() && bytes[j].is_ascii_digit() {
+        j += 1;
+    }
+    raw[start..j].parse().ok()
+}
+
+fn bench_keys(files: &[PinFile], diags: &mut Vec<Diagnostic>) {
+    let Some(mb) = files
+        .iter()
+        .find(|f| f.rel.ends_with("benches/microbench.rs"))
+    else {
+        return;
+    };
+    let Some(bj) = files.iter().find(|f| f.rel.ends_with("BENCH.json")) else {
+        return;
+    };
+    let rust_keys = extract_keys(&mb.raw, "name: \"");
+    let json_keys = extract_keys(&bj.raw, "\"name\": \"");
+    for (key, line) in &rust_keys {
+        if !json_keys.contains_key(key.as_str()) {
+            diags.push(Diagnostic {
+                rule: "pin-drift",
+                file: mb.rel.clone(),
+                line: *line,
+                message: format!(
+                    "bench entry `{key}` is emitted by microbench.rs but missing from \
+                     the committed BENCH.json — the perf gate cannot see it"
+                ),
+            });
+        }
+    }
+    for (key, line) in &json_keys {
+        if !rust_keys.contains_key(key.as_str()) {
+            diags.push(Diagnostic {
+                rule: "pin-drift",
+                file: bj.rel.clone(),
+                line: *line,
+                message: format!(
+                    "bench entry `{key}` is in the committed BENCH.json but no longer \
+                     emitted by microbench.rs — a stale baseline row"
+                ),
+            });
+        }
+    }
+}
+
+/// `pattern` immediately precedes each key; the key runs to the closing
+/// quote. First-occurrence line is kept for the diagnostic.
+fn extract_keys(raw: &str, pattern: &str) -> BTreeMap<String, usize> {
+    let lines = LineIndex::new(raw);
+    let bytes = raw.as_bytes();
+    let mut out = BTreeMap::new();
+    let mut from = 0;
+    while let Some(rel) = raw[from..].find(pattern) {
+        let at = from + rel;
+        from = at + 1;
+        if at > 0 && is_ident(bytes[at - 1]) {
+            continue;
+        }
+        let start = at + pattern.len();
+        let Some(len) = raw[start..].find('"') else {
+            continue;
+        };
+        let key = raw[start..start + len].to_string();
+        out.entry(key).or_insert_with(|| lines.line_of(at));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pf(rel: &str, raw: &str, pins: Vec<Pin>) -> PinFile {
+        PinFile {
+            rel: rel.to_string(),
+            raw: raw.to_string(),
+            pins,
+        }
+    }
+
+    fn pin(line: usize, key: &str, value: &str) -> Pin {
+        Pin {
+            line,
+            key: key.to_string(),
+            value: value.to_string(),
+        }
+    }
+
+    #[test]
+    fn agreeing_anchored_pins_are_clean() {
+        let a = pf("a.rs", "const N: usize = 68;\n", vec![pin(1, "count", "68")]);
+        let b = pf("b.rs", "assert_eq!(n, 68);\n", vec![pin(1, "count", "68")]);
+        assert!(check(&[a, b]).is_empty());
+    }
+
+    #[test]
+    fn drifted_pins_flag_every_site() {
+        let a = pf("a.rs", "const N: usize = 68;\n", vec![pin(1, "count", "68")]);
+        let b = pf("b.rs", "assert_eq!(n, 70);\n", vec![pin(1, "count", "70")]);
+        let diags = check(&[a, b]);
+        assert_eq!(diags.len(), 2);
+        assert!(diags.iter().all(|d| d.rule == "pin-drift"));
+        assert!(diags[0].message.contains("drifted"));
+    }
+
+    #[test]
+    fn unanchored_pin_is_flagged_and_boundary_aware() {
+        // 168 must not anchor a pin of 68; the directive line itself must
+        // not anchor it either.
+        let a = pf(
+            "a.rs",
+            "const N: usize = 168; // detlint: not-an-anchor 68\n",
+            vec![pin(1, "count", "68")],
+        );
+        let diags = check(&[a]);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].message.contains("unanchored"));
+    }
+
+    #[test]
+    fn marker_versions_must_agree() {
+        // Assemble the marker name at runtime so this test file never
+        // contains a drifting marker+integer pair in its own raw text.
+        let emit = format!("out.push(\"\\\"consumerbench_{}\\\": 3\");\n", "run");
+        let assert_line = format!("assert!(s.contains(\"consumerbench_{}\\\": 4\"));\n", "run");
+        let a = pf("a.rs", &emit, vec![]);
+        let b = pf("b.rs", &assert_line, vec![]);
+        let diags = check(&[a, b]);
+        assert_eq!(diags.len(), 2);
+        assert!(diags[0].message.contains("disagrees"));
+        // Agreeing versions: clean.
+        let c = pf("c.rs", &emit, vec![]);
+        let d = pf("d.rs", &emit, vec![]);
+        assert!(check(&[c, d]).is_empty());
+    }
+
+    #[test]
+    fn marker_without_nearby_integer_is_not_a_claim() {
+        let doc = format!("// the consumerbench_{} marker is described here\n", "run");
+        let emit = format!("out.push(\"\\\"consumerbench_{}\\\": 3\");\n", "run");
+        assert!(check(&[pf("a.rs", &doc, vec![]), pf("b.rs", &emit, vec![])]).is_empty());
+    }
+
+    #[test]
+    fn bench_key_sets_must_match() {
+        let mb = pf(
+            "rust/benches/microbench.rs",
+            "Entry { name: \"alpha\" },\nEntry { name: \"beta\" },\n",
+            vec![],
+        );
+        let bj = pf(
+            "BENCH.json",
+            "{\"name\": \"alpha\"}\n{\"name\": \"gamma\"}\n",
+            vec![],
+        );
+        let diags = check(&[mb, bj]);
+        assert_eq!(diags.len(), 2);
+        assert!(diags.iter().any(|d| d.message.contains("`beta`")));
+        assert!(diags.iter().any(|d| d.message.contains("`gamma`")));
+        assert!(diags.iter().any(|d| d.file == "BENCH.json"));
+    }
+}

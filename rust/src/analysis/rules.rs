@@ -1,0 +1,477 @@
+//! The per-file determinism rules.
+//!
+//! Every rule here operates on the *masked* code view produced by
+//! [`super::lexer`]: comments, string bodies, and `#[cfg(test)] mod` bodies
+//! are already blanked, so a match is always real code on a real line.
+//! Offsets in the masked view are byte-identical to the original file, so
+//! diagnostics resolve to true `file:line` positions.
+
+use super::lexer::{is_ident, LineIndex};
+use super::Diagnostic;
+
+/// Modules whose output feeds the golden trace digest or the report bytes.
+/// Iteration order anywhere in these paths can leak into artifacts.
+const DIGEST_SCOPES: &[&str] = &[
+    "src/gpusim/",
+    "src/scenario/",
+    "src/coordinator/",
+    "src/server/",
+    "src/apps/",
+];
+
+/// Identifiers whose mere construction pulls in ambient (non-seed) entropy.
+const ENTROPY_TOKENS: &[(&str, &str)] = &[
+    ("thread_rng", "OS-seeded RNG"),
+    ("OsRng", "OS entropy source"),
+    ("from_entropy", "OS-seeded RNG constructor"),
+    ("getrandom", "raw OS entropy"),
+    ("RandomState", "randomly keyed hasher state"),
+    ("DefaultHasher", "randomly keyed hasher state"),
+];
+
+/// Run every per-file rule over one masked source file.
+pub fn run_rules(rel: &str, code: &str, lines: &LineIndex) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    unordered_iteration(rel, code, lines, &mut diags);
+    wall_clock(rel, code, lines, &mut diags);
+    poisonable_unwrap(rel, code, lines, &mut diags);
+    float_order(rel, code, lines, &mut diags);
+    ambient_entropy(rel, code, lines, &mut diags);
+    diags
+}
+
+/// Boundary-aware occurrences of `token` in `code`: the match may not be
+/// preceded or followed by an identifier character, so `HashMap` never
+/// matches inside `NoHashMapHere` and `68` never matches inside `168`.
+pub fn find_token(code: &str, token: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(token) {
+        let at = from + rel;
+        from = at + 1;
+        let end = at + token.len();
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+fn unordered_iteration(rel: &str, code: &str, lines: &LineIndex, diags: &mut Vec<Diagnostic>) {
+    if !DIGEST_SCOPES.iter().any(|scope| rel.contains(scope)) {
+        return;
+    }
+    for token in ["HashMap", "HashSet"] {
+        for at in find_token(code, token) {
+            diags.push(Diagnostic {
+                rule: "no-unordered-iteration",
+                file: rel.to_string(),
+                line: lines.line_of(at),
+                message: format!(
+                    "`{token}` in a digest-affecting module: std hash iteration order is \
+                     seeded per-process and can leak into report bytes; use \
+                     BTreeMap/BTreeSet or a sorted Vec"
+                ),
+            });
+        }
+    }
+}
+
+fn wall_clock(rel: &str, code: &str, lines: &LineIndex, diags: &mut Vec<Diagnostic>) {
+    for (token, what) in [
+        ("Instant::now", "`Instant::now()`"),
+        ("SystemTime", "`SystemTime`"),
+    ] {
+        for at in find_token(code, token) {
+            diags.push(Diagnostic {
+                rule: "no-wall-clock",
+                file: rel.to_string(),
+                line: lines.line_of(at),
+                message: format!(
+                    "{what} reads the host clock: results must be a pure function of the \
+                     scenario seed, so all timing flows from virtual engine time"
+                ),
+            });
+        }
+    }
+}
+
+fn poisonable_unwrap(rel: &str, code: &str, lines: &LineIndex, diags: &mut Vec<Diagnostic>) {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(rel_at) = code[from..].find(".lock") {
+        let at = from + rel_at;
+        from = at + 1;
+        let mut j = at + ".lock".len();
+        skip_ws(bytes, &mut j);
+        if bytes.get(j) != Some(&b'(') {
+            continue;
+        }
+        j += 1;
+        skip_ws(bytes, &mut j);
+        if bytes.get(j) != Some(&b')') {
+            continue;
+        }
+        j += 1;
+        skip_ws(bytes, &mut j);
+        if bytes.get(j) != Some(&b'.') {
+            continue;
+        }
+        j += 1;
+        skip_ws(bytes, &mut j);
+        let method_at = j;
+        let method = read_ident(code, &mut j);
+        if method == "unwrap" || method == "expect" {
+            diags.push(Diagnostic {
+                rule: "no-poisonable-unwrap",
+                file: rel.to_string(),
+                line: lines.line_of(method_at),
+                message: format!(
+                    "`.lock().{method}(…)` double-panics when a holder already panicked; \
+                     recover the guard with `.unwrap_or_else(|e| e.into_inner())` and \
+                     state why the protected data stays consistent"
+                ),
+            });
+        }
+    }
+}
+
+fn float_order(rel: &str, code: &str, lines: &LineIndex, diags: &mut Vec<Diagnostic>) {
+    for fty in ["f32", "f64"] {
+        let pat = format!(".sum::<{fty}>()");
+        let mut from = 0;
+        while let Some(rel_at) = code[from..].find(&pat) {
+            let at = from + rel_at;
+            from = at + 1;
+            let Some(root) = chain_root(code, at) else {
+                continue;
+            };
+            if hash_associated(code, &root) {
+                diags.push(Diagnostic {
+                    rule: "no-float-order-hazard",
+                    file: rel.to_string(),
+                    line: lines.line_of(at),
+                    message: format!(
+                        "`.sum::<{fty}>()` over hash-backed `{root}`: float addition is \
+                         order-sensitive and hash iteration order is not deterministic; \
+                         sum from a BTree/sorted source"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn ambient_entropy(rel: &str, code: &str, lines: &LineIndex, diags: &mut Vec<Diagnostic>) {
+    // util/rng.rs is the one sanctioned RNG implementation.
+    if rel.ends_with("util/rng.rs") {
+        return;
+    }
+    for (token, what) in ENTROPY_TOKENS {
+        for at in find_token(code, token) {
+            diags.push(Diagnostic {
+                rule: "no-ambient-entropy",
+                file: rel.to_string(),
+                line: lines.line_of(at),
+                message: format!(
+                    "`{token}` is {what}: all randomness must derive from the scenario \
+                     seed via util::rng"
+                ),
+            });
+        }
+    }
+    // A literal-seeded `Rng::new(…)` severs the stream from the scenario
+    // seed just as surely as OS entropy randomizes it.
+    let bytes = code.as_bytes();
+    for at in find_token(code, "Rng::new") {
+        let mut j = at + "Rng::new".len();
+        skip_ws(bytes, &mut j);
+        if bytes.get(j) != Some(&b'(') {
+            continue;
+        }
+        let open = j;
+        let mut depth = 0usize;
+        let mut close = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = Some(j);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(close) = close else {
+            continue;
+        };
+        if !contains_identifier(&code[open + 1..close]) {
+            diags.push(Diagnostic {
+                rule: "no-ambient-entropy",
+                file: rel.to_string(),
+                line: lines.line_of(at),
+                message: "`Rng::new(…)` seeded from a bare literal: derive every seed \
+                          from the scenario seed so streams stay reproducible and \
+                          decorrelated"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn skip_ws(bytes: &[u8], j: &mut usize) {
+    while bytes.get(*j).copied().is_some_and(|b| b.is_ascii_whitespace()) {
+        *j += 1;
+    }
+}
+
+fn read_ident<'a>(code: &'a str, j: &mut usize) -> &'a str {
+    let bytes = code.as_bytes();
+    let start = *j;
+    while bytes.get(*j).copied().is_some_and(is_ident) {
+        *j += 1;
+    }
+    &code[start..*j]
+}
+
+/// Walk a method chain backwards from the `.` at `dot` to its root
+/// identifier: over whitespace, `?`, balanced `(…)`/`[…]`, and `.method`
+/// segments. Returns the root local/field name, or `None` when the
+/// receiver is an expression we cannot name (conservatively not flagged).
+fn chain_root(code: &str, dot: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut j = dot;
+    loop {
+        let mut k = j;
+        while k > 0 && bytes[k - 1].is_ascii_whitespace() {
+            k -= 1;
+        }
+        if k == 0 {
+            return None;
+        }
+        match bytes[k - 1] {
+            b'?' => {
+                j = k - 1;
+            }
+            b')' | b']' => {
+                let close = bytes[k - 1];
+                let open = if close == b')' { b'(' } else { b'[' };
+                let mut depth = 0usize;
+                let mut m = k;
+                loop {
+                    if m == 0 {
+                        return None;
+                    }
+                    m -= 1;
+                    if bytes[m] == close {
+                        depth += 1;
+                    } else if bytes[m] == open {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                }
+                let mut k2 = m;
+                while k2 > 0 && bytes[k2 - 1].is_ascii_whitespace() {
+                    k2 -= 1;
+                }
+                if k2 > 0 && is_ident(bytes[k2 - 1]) {
+                    // `name(…)`: a method segment if a `.` precedes the
+                    // name, otherwise a free function call (unnamed root).
+                    let mut s = k2;
+                    while s > 0 && is_ident(bytes[s - 1]) {
+                        s -= 1;
+                    }
+                    let mut k3 = s;
+                    while k3 > 0 && bytes[k3 - 1].is_ascii_whitespace() {
+                        k3 -= 1;
+                    }
+                    if k3 > 0 && bytes[k3 - 1] == b'.' {
+                        j = k3 - 1;
+                        continue;
+                    }
+                    return None;
+                }
+                if close == b']' {
+                    // Indexing: keep walking toward the indexed receiver.
+                    j = m;
+                    continue;
+                }
+                return None;
+            }
+            c if is_ident(c) => {
+                let end = k;
+                let mut s = k;
+                while s > 0 && is_ident(bytes[s - 1]) {
+                    s -= 1;
+                }
+                let name = &code[s..end];
+                let mut k3 = s;
+                while k3 > 0 && bytes[k3 - 1].is_ascii_whitespace() {
+                    k3 -= 1;
+                }
+                if k3 > 0 && bytes[k3 - 1] == b'.' {
+                    // Field access: `self.field` roots at the field; deeper
+                    // chains (`a.b.c`) are unnamed.
+                    let mut k4 = k3 - 1;
+                    while k4 > 0 && bytes[k4 - 1].is_ascii_whitespace() {
+                        k4 -= 1;
+                    }
+                    let e2 = k4;
+                    let mut s2 = k4;
+                    while s2 > 0 && is_ident(bytes[s2 - 1]) {
+                        s2 -= 1;
+                    }
+                    if &code[s2..e2] == "self" {
+                        let mut k5 = s2;
+                        while k5 > 0 && bytes[k5 - 1].is_ascii_whitespace() {
+                            k5 -= 1;
+                        }
+                        if k5 == 0 || bytes[k5 - 1] != b'.' {
+                            return Some(name.to_string());
+                        }
+                    }
+                    return None;
+                }
+                return Some(name.to_string());
+            }
+            _ => return None,
+        }
+    }
+}
+
+/// Does any binding of `name` in this file look hash-backed? Matches
+/// `name: …HashMap…` / `name = …HashSet…` within the same statement.
+fn hash_associated(code: &str, name: &str) -> bool {
+    for at in find_token(code, name) {
+        let rest = code[at + name.len()..].trim_start();
+        let after = match rest.as_bytes().first() {
+            Some(b':') if rest.as_bytes().get(1) != Some(&b':') => &rest[1..],
+            Some(b'=') if rest.as_bytes().get(1) != Some(&b'=') => &rest[1..],
+            _ => continue,
+        };
+        let window = after.as_bytes();
+        let window = &window[..window.len().min(64)];
+        let window = window.split(|&b| b == b';').next().unwrap_or(window);
+        if contains_bytes(window, b"HashMap") || contains_bytes(window, b"HashSet") {
+            return true;
+        }
+    }
+    false
+}
+
+fn contains_bytes(haystack: &[u8], needle: &[u8]) -> bool {
+    haystack.windows(needle.len()).any(|w| w == needle)
+}
+
+/// Does the (masked) argument text reference any identifier? Numeric
+/// literals — including hex, underscores, and type suffixes like `42u64`
+/// — do not count.
+fn contains_identifier(arg: &str) -> bool {
+    let bytes = arg.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b.is_ascii_digit() {
+            i += 1;
+            while i < bytes.len() && is_ident(bytes[i]) {
+                i += 1;
+            }
+        } else if b == b'_' || b.is_ascii_alphabetic() {
+            return true;
+        } else {
+            i += 1;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::{mask, mask_cfg_test, LineIndex};
+    use super::*;
+
+    fn lint_src(rel: &str, src: &str) -> Vec<Diagnostic> {
+        let masked = mask(src);
+        let (code, _) = mask_cfg_test(&masked.code);
+        run_rules(rel, &code, &LineIndex::new(src))
+    }
+
+    #[test]
+    fn hashmap_flagged_only_in_digest_scope() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let hits = lint_src("rust/src/gpusim/x.rs", src);
+        assert_eq!(hits.len(), 3);
+        assert!(hits.iter().all(|d| d.rule == "no-unordered-iteration"));
+        assert_eq!(hits[0].line, 1);
+        assert!(lint_src("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_and_masking() {
+        let src = "let t = std::time::Instant::now();\n// Instant::now in a comment\nlet s = \"SystemTime\";\n";
+        let hits = lint_src("rust/src/util/x.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "no-wall-clock");
+        assert_eq!(hits[0].line, 1);
+    }
+
+    #[test]
+    fn poisonable_unwrap_but_not_recovery_pattern() {
+        let src = "let a = m.lock().unwrap();\nlet b = m.lock().expect(\"poisoned\");\nlet c = m.lock().unwrap_or_else(|e| e.into_inner());\nlet d = m\n    .lock()\n    .unwrap();\n";
+        let hits = lint_src("rust/src/util/x.rs", src);
+        assert_eq!(hits.len(), 3);
+        assert!(hits.iter().all(|d| d.rule == "no-poisonable-unwrap"));
+        assert_eq!(hits[0].line, 1);
+        assert_eq!(hits[1].line, 2);
+        assert_eq!(hits[2].line, 6);
+    }
+
+    #[test]
+    fn float_sum_over_hash_backed_source() {
+        let src = "let m: HashMap<u32, f64> = source();\nlet t = m.values().sum::<f64>();\nlet v: Vec<f64> = rows();\nlet u = v.iter().sum::<f64>();\n";
+        let hits = lint_src("rust/src/util/x.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "no-float-order-hazard");
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn float_sum_roots_through_self_fields_and_filters() {
+        let src = "let total = self\n    .weights\n    .iter()\n    .map(|r| r.rate)\n    .sum::<f64>();\nweights = HashMap::new();\n";
+        let hits = lint_src("rust/src/util/x.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 5);
+    }
+
+    #[test]
+    fn ambient_entropy_tokens_and_literal_seeds() {
+        let src = "let h = RandomState::new();\nlet r = Rng::new(0x9E37_79B9);\nlet ok = Rng::new(seed ^ 7);\nlet ok2 = Rng::new(42u64.wrapping_add(seed));\n";
+        let hits = lint_src("rust/src/util/x.rs", src);
+        assert_eq!(hits.len(), 2);
+        assert!(hits.iter().all(|d| d.rule == "no-ambient-entropy"));
+        assert_eq!(hits[0].line, 1);
+        assert_eq!(hits[1].line, 2);
+    }
+
+    #[test]
+    fn rng_module_itself_is_exempt() {
+        let src = "impl Rng { fn reseed() { let s = DefaultHasher::new(); } }\n";
+        assert!(lint_src("rust/src/util/rng.rs", src).is_empty());
+        assert_eq!(lint_src("rust/src/util/other.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_bodies_are_exempt() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let m = std::collections::HashMap::<u8, u8>::new(); m.lock().unwrap(); }\n}\n";
+        assert!(lint_src("rust/src/gpusim/x.rs", src).is_empty());
+    }
+}

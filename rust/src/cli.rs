@@ -11,12 +11,14 @@
 //!                        [--dump DIR] [--fail-fast] [--journal FILE [--resume]]
 //!                        [--watchdog-secs N] [--inject-panic SUBSTR]
 //!                        [--inject-error SUBSTR]
+//! consumerbench lint [--root DIR] [--list-rules]
 //! consumerbench apps
 //! consumerbench help
 //! ```
 
 use anyhow::{bail, Context, Result};
 
+use crate::analysis;
 use crate::apps::{Application, Chatbot, DeepResearch, ImageGen, LiveCaptions};
 use crate::coordinator::config::InjectFailure;
 use crate::coordinator::{generate, to_csv, to_json_summary, BenchConfig, Dag, ScenarioRunner};
@@ -41,6 +43,7 @@ USAGE:
                            [--dump DIR] [--fail-fast] [--journal FILE [--resume]]
                            [--watchdog-secs N] [--inject-panic SUBSTR]
                            [--inject-error SUBSTR]
+    consumerbench lint [--root DIR] [--list-rules]
     consumerbench apps
     consumerbench help
 
@@ -52,6 +55,11 @@ COMMANDS:
                chaos fault class, plus generated workflow DAG shapes with
                end-to-end latency and critical-path attribution), emitting
                an aggregate JSON report
+    lint       Statically analyze the crate's own sources for determinism
+               and panic-safety hazards (hash-ordered iteration, wall
+               clocks, poisonable lock unwraps, float-order hazards,
+               ambient entropy, drifting pinned literals); exits nonzero
+               on any diagnostic
     apps       List the built-in applications (paper Table 1)
 
 OPTIONS (run):
@@ -105,6 +113,11 @@ OPTIONS (scenario):
                       whose name contains SUBSTR
     --inject-error SUBSTR  Testing hook: fail at run start in scenarios
                       whose name contains SUBSTR
+
+OPTIONS (lint):
+    --root DIR        Repository root to lint (default: the nearest ancestor
+                      of the current directory containing rust/src)
+    --list-rules      Print the rule table and exit
 ";
 
 /// Entry point used by `main.rs`.
@@ -137,6 +150,10 @@ pub fn run_cli(args: &[String], out: &mut impl std::io::Write) -> Result<()> {
         "scenario" => {
             let opts = parse_scenario_opts(&args[1..])?;
             cmd_scenario(&opts, out)
+        }
+        "lint" => {
+            let opts = parse_lint_opts(&args[1..])?;
+            cmd_lint(&opts, out)
         }
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
@@ -191,6 +208,8 @@ struct ScenarioOpts {
     jobs: Option<usize>,
     /// Substring filter over scenario names (for iterating on a slice of
     /// the 68/276-scenario matrix).
+    // detlint: pin(default-matrix-count: 68)
+    // detlint: pin(full-matrix-count: 276)
     filter: Option<String>,
     /// Kernel-backend filter (`--backend KEY`); composes with `--filter`.
     backend: Option<KernelBackend>,
@@ -535,6 +554,69 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
     Ok(())
 }
 
+#[derive(Debug, Default)]
+struct LintOpts {
+    /// Repository root; `None` = walk up from the current directory.
+    root: Option<String>,
+    list_rules: bool,
+}
+
+fn parse_lint_opts(args: &[String]) -> Result<LintOpts> {
+    let mut opts = LintOpts::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                opts.root = Some(args.get(i + 1).context("--root requires a value")?.clone());
+                i += 2;
+            }
+            "--list-rules" => {
+                opts.list_rules = true;
+                i += 1;
+            }
+            other => bail!("unknown option `{other}`"),
+        }
+    }
+    Ok(opts)
+}
+
+fn cmd_lint(opts: &LintOpts, out: &mut impl std::io::Write) -> Result<()> {
+    if opts.list_rules {
+        for (rule, what) in analysis::RULES {
+            writeln!(out, "{rule:<24} {what}")?;
+        }
+        return Ok(());
+    }
+    let root = match &opts.root {
+        Some(dir) => {
+            let p = std::path::PathBuf::from(dir);
+            if !p.join("rust").join("src").is_dir() {
+                bail!("--root {dir}: no rust/src directory underneath");
+            }
+            p
+        }
+        None => analysis::find_root(&std::env::current_dir().context("lint: no cwd")?)?,
+    };
+    let report = analysis::run_lint(&root)?;
+    for d in &report.diagnostics {
+        writeln!(out, "{}", d.render())?;
+    }
+    if report.is_clean() {
+        writeln!(
+            out,
+            "lint clean: {} files scanned, {} justified suppression(s)",
+            report.files_scanned, report.suppressions_honored
+        )?;
+        Ok(())
+    } else {
+        bail!(
+            "lint: {} diagnostic(s) across {} scanned files",
+            report.diagnostics.len(),
+            report.files_scanned
+        );
+    }
+}
+
 fn cmd_apps(out: &mut impl std::io::Write) -> Result<()> {
     writeln!(
         out,
@@ -877,6 +959,33 @@ mod tests {
         // The chaos slice lands with its column and summary section.
         assert!(json.contains("\"chaos\": \"server_crash\""));
         assert!(json.contains("\"chaos\": ["));
+    }
+
+    #[test]
+    fn lint_list_rules_prints_registry() {
+        let (r, out) = run(&["lint", "--list-rules"]);
+        assert!(r.is_ok(), "{out}");
+        for rule in [
+            "no-unordered-iteration",
+            "no-wall-clock",
+            "no-poisonable-unwrap",
+            "no-float-order-hazard",
+            "no-ambient-entropy",
+            "pin-drift",
+            "bad-suppression",
+        ] {
+            assert!(out.contains(rule), "missing {rule} in:\n{out}");
+        }
+    }
+
+    #[test]
+    fn lint_bad_options_rejected() {
+        let (r, _) = run(&["lint", "--frob"]);
+        assert!(r.is_err());
+        let (r, _) = run(&["lint", "--root"]);
+        assert!(r.is_err(), "--root without a value must be rejected");
+        let (r, _) = run(&["lint", "--root", "/nonexistent/definitely-not-a-repo"]);
+        assert!(r.is_err(), "--root must point at a repository root");
     }
 
     #[test]

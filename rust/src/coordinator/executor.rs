@@ -10,7 +10,7 @@
 //! the PJRT runtime (numerics validation; virtual time stays authoritative
 //! for all reported latencies).
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{Context, Result};
 
@@ -88,8 +88,10 @@ struct NodeRuntime {
 struct ServerRuntime {
     name: String,
     server: InferenceServer,
-    /// server request id → (node, request idx).
-    routing: HashMap<u64, (NodeId, usize)>,
+    /// server request id → (node, request idx). Ordered map: request
+    /// ids are handed out sequentially and any iteration over in-flight
+    /// requests must be digest-stable.
+    routing: BTreeMap<u64, (NodeId, usize)>,
     next_req_id: u64,
 }
 
@@ -399,7 +401,7 @@ pub struct ScenarioRunner {
     servers: Vec<ServerRuntime>,
     controller: Option<ControllerRuntime>,
     chaos: Option<ChaosRuntime>,
-    job_map: HashMap<JobId, (NodeId, JobKind)>,
+    job_map: BTreeMap<JobId, (NodeId, JobKind)>,
     completed: BTreeSet<NodeId>,
     runtime: Option<Runtime>,
     pjrt_calls: usize,
@@ -466,7 +468,7 @@ impl ScenarioRunner {
             servers.push(ServerRuntime {
                 name: def.name.clone(),
                 server: InferenceServer::new(scfg, client),
-                routing: HashMap::new(),
+                routing: BTreeMap::new(),
                 next_req_id: 0,
             });
         }
@@ -580,7 +582,7 @@ impl ScenarioRunner {
             servers,
             controller,
             chaos,
-            job_map: HashMap::new(),
+            job_map: BTreeMap::new(),
             completed: BTreeSet::new(),
             runtime,
             pjrt_calls: 0,
@@ -597,6 +599,9 @@ impl ScenarioRunner {
     /// loop iterations — defense-in-depth, not a precise limit).
     pub fn with_watchdog(mut self, timeout: std::time::Duration) -> Self {
         self.deadline = Some((
+            // detlint: allow(no-wall-clock) -- the watchdog is the documented
+            // wall-clock boundary: host time arms a defense-in-depth timeout
+            // whose outcomes are never journaled or digested (see `deadline`).
             std::time::Instant::now() + timeout,
             timeout.as_secs().max(1),
         ));
@@ -638,6 +643,9 @@ impl ScenarioRunner {
         while self.completed.len() < self.dag.len() {
             iterations += 1;
             if let Some((deadline, limit_secs)) = self.deadline {
+                // detlint: allow(no-wall-clock) -- watchdog boundary: the
+                // strided deadline probe reads host time only to abort a
+                // runaway attempt; timeout rows never reach a digest.
                 if iterations % WATCHDOG_STRIDE == 0 && std::time::Instant::now() >= deadline {
                     return Err(anyhow::Error::new(WallClockTimeout { limit_secs }));
                 }

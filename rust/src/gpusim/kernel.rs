@@ -48,7 +48,10 @@ impl Tag {
         use std::sync::{Mutex, OnceLock};
         static POOL: OnceLock<Mutex<BTreeSet<&'static str>>> = OnceLock::new();
         let pool = POOL.get_or_init(|| Mutex::new(BTreeSet::new()));
-        let mut pool = pool.lock().expect("tag pool poisoned");
+        // A panicking holder can only have left the set missing its
+        // newest entry; the pool is insert-only, so recovering the guard
+        // is always safe (at worst the tag is re-leaked once).
+        let mut pool = pool.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(&hit) = pool.get(s) {
             return Tag(hit);
         }

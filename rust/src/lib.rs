@@ -17,6 +17,7 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+pub mod analysis;
 pub mod apps;
 pub mod cli;
 pub mod datasets;

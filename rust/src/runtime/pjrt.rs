@@ -11,7 +11,7 @@
 //! Python never runs on the request path: once `artifacts/` exists, the
 //! binary is self-contained.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -29,7 +29,7 @@ pub struct LoadedModel {
 pub struct Runtime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
-    models: HashMap<String, LoadedModel>,
+    models: BTreeMap<String, LoadedModel>,
     dir: PathBuf,
 }
 
@@ -42,7 +42,7 @@ impl Runtime {
             .with_context(|| format!("reading {}", manifest_path.display()))?;
         let manifest = Manifest::parse(&text)?;
         let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
-        let mut models = HashMap::new();
+        let mut models = BTreeMap::new();
         for spec in manifest.artifacts {
             let hlo_path = dir.join(&spec.file);
             let proto = xla::HloModuleProto::from_text_file(
@@ -67,9 +67,8 @@ impl Runtime {
     }
 
     pub fn model_names(&self) -> Vec<&str> {
-        let mut names: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
-        names.sort_unstable();
-        names
+        // BTreeMap keys iterate sorted, so the listing is already stable.
+        self.models.keys().map(|s| s.as_str()).collect()
     }
 
     pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {

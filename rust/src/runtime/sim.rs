@@ -12,7 +12,7 @@
 //! way — the PJRT path only validates numerics, so simulation results are
 //! identical across the two builds.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -22,7 +22,7 @@ use crate::util::Rng;
 
 /// Manifest-backed runtime without compiled executables.
 pub struct Runtime {
-    specs: HashMap<String, ArtifactSpec>,
+    specs: BTreeMap<String, ArtifactSpec>,
     dir: PathBuf,
 }
 
@@ -34,7 +34,7 @@ impl Runtime {
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
         let manifest = Manifest::parse(&text)?;
-        let mut specs = HashMap::new();
+        let mut specs = BTreeMap::new();
         for spec in manifest.artifacts {
             specs.insert(spec.name.clone(), spec);
         }
@@ -51,9 +51,8 @@ impl Runtime {
     }
 
     pub fn model_names(&self) -> Vec<&str> {
-        let mut names: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
-        names.sort_unstable();
-        names
+        // BTreeMap keys iterate sorted, so the listing is already stable.
+        self.specs.keys().map(|s| s.as_str()).collect()
     }
 
     pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {

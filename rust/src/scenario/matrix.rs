@@ -433,6 +433,7 @@ impl MatrixAxes {
     /// policy, every Table 1 application, open-loop heavy traffic, the
     /// serving ablation, the end-to-end workflow comparison, the §6
     /// tuned-vs-generic kernel ablation, and fault injection.
+    // detlint: pin(default-matrix-count: 68)
     pub fn default_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             mixes: vec![
@@ -466,6 +467,7 @@ impl MatrixAxes {
     /// (3 backends × 2 mixes × 4 strategies × 2 testbeds = 48), and runs
     /// the chaos slice on both testbeds (5 kinds × 2 testbeds ×
     /// {static, adaptive} = 20) — 276 scenarios.
+    // detlint: pin(full-matrix-count: 276)
     pub fn full_matrix(seed: u64) -> MatrixAxes {
         MatrixAxes {
             testbeds: vec![TestbedKind::IntelServer, TestbedKind::MacbookM1Pro],

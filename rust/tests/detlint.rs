@@ -1,0 +1,219 @@
+//! Integration tests for the detlint static-analysis pass.
+//!
+//! Each fixture under `tests/lint_fixtures/` is a miniature repository
+//! (its own `rust/src` tree), so path-scoped rules see realistic relative
+//! paths. The meta-test at the bottom runs the lint over this repository
+//! itself — the tree must ship clean, with every suppression justified.
+
+use std::path::{Path, PathBuf};
+
+use consumerbench::analysis::{run_lint, LintReport};
+use consumerbench::cli::run_cli;
+
+fn fixture_root(case: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("lint_fixtures")
+        .join(case)
+}
+
+fn lint_fixture(case: &str) -> LintReport {
+    run_lint(&fixture_root(case)).expect("fixture lint run")
+}
+
+fn rule_lines(report: &LintReport) -> Vec<(&str, usize)> {
+    report
+        .diagnostics
+        .iter()
+        .map(|d| (d.rule, d.line))
+        .collect()
+}
+
+#[test]
+fn unordered_iteration_fires_in_digest_scope() {
+    let report = lint_fixture("unordered");
+    assert_eq!(
+        rule_lines(&report),
+        vec![
+            ("no-unordered-iteration", 3),
+            ("no-unordered-iteration", 5),
+            ("no-unordered-iteration", 6),
+        ],
+        "{report:?}"
+    );
+    assert!(report.diagnostics[0].file.ends_with("rust/src/gpusim/bad.rs"));
+}
+
+#[test]
+fn wall_clock_fires_everywhere() {
+    let report = lint_fixture("wall_clock");
+    assert_eq!(
+        rule_lines(&report),
+        vec![
+            ("no-wall-clock", 4),
+            ("no-wall-clock", 7),
+            ("no-wall-clock", 8),
+        ],
+        "{report:?}"
+    );
+}
+
+#[test]
+fn poisonable_unwrap_fires_but_recovery_pattern_is_exempt() {
+    let report = lint_fixture("poisonable");
+    assert_eq!(
+        rule_lines(&report),
+        vec![("no-poisonable-unwrap", 6), ("no-poisonable-unwrap", 11)],
+        "{report:?}"
+    );
+}
+
+#[test]
+fn float_order_fires_on_hash_backed_sum_only() {
+    let report = lint_fixture("float_order");
+    assert_eq!(
+        rule_lines(&report),
+        vec![("no-float-order-hazard", 7)],
+        "the Vec-rooted sum on line 11 must not fire: {report:?}"
+    );
+}
+
+#[test]
+fn ambient_entropy_fires_on_tokens_and_literal_seeds() {
+    let report = lint_fixture("entropy");
+    assert_eq!(
+        rule_lines(&report),
+        vec![("no-ambient-entropy", 7), ("no-ambient-entropy", 17)],
+        "the seed-derived stream on line 12 must not fire: {report:?}"
+    );
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let report = lint_fixture("clean");
+    assert!(report.is_clean(), "{report:?}");
+    assert_eq!(report.suppressions_honored, 0);
+}
+
+#[test]
+fn justified_suppression_is_honored() {
+    let report = lint_fixture("suppressed");
+    assert!(report.is_clean(), "{report:?}");
+    assert_eq!(report.suppressions_honored, 1);
+}
+
+#[test]
+fn bare_suppression_is_rejected_and_violation_survives() {
+    let report = lint_fixture("unjustified");
+    assert_eq!(
+        rule_lines(&report),
+        vec![("bad-suppression", 4), ("no-wall-clock", 5)],
+        "{report:?}"
+    );
+    assert_eq!(report.suppressions_honored, 0);
+}
+
+#[test]
+fn drifted_pins_flag_both_sites() {
+    let report = lint_fixture("pin_drift");
+    assert_eq!(
+        rule_lines(&report),
+        vec![("pin-drift", 3), ("pin-drift", 3)],
+        "{report:?}"
+    );
+    let files: Vec<&str> = report.diagnostics.iter().map(|d| d.file.as_str()).collect();
+    assert!(files[0].ends_with("a.rs") && files[1].ends_with("b.rs"), "{files:?}");
+}
+
+#[test]
+fn unanchored_pin_is_flagged_boundary_aware() {
+    // The file contains `120`, which must not anchor a pin of `12`.
+    let report = lint_fixture("pin_anchor");
+    assert_eq!(rule_lines(&report), vec![("pin-drift", 4)], "{report:?}");
+    assert!(report.diagnostics[0].message.contains("unanchored"));
+}
+
+#[test]
+fn schema_marker_drift_flags_both_sites() {
+    let report = lint_fixture("marker_drift");
+    assert_eq!(
+        rule_lines(&report),
+        vec![("pin-drift", 4), ("pin-drift", 4)],
+        "{report:?}"
+    );
+    assert!(report.diagnostics[0]
+        .message
+        .contains("consumerbench_scenario_matrix"));
+}
+
+#[test]
+fn bench_key_drift_flags_missing_and_stale_entries() {
+    let report = lint_fixture("bench_keys");
+    assert_eq!(report.diagnostics.len(), 2, "{report:?}");
+    assert!(report
+        .diagnostics
+        .iter()
+        .any(|d| d.file.ends_with("BENCH.json") && d.message.contains("gamma_rate")));
+    assert!(report
+        .diagnostics
+        .iter()
+        .any(|d| d.file.ends_with("microbench.rs") && d.message.contains("beta_rate")));
+}
+
+#[test]
+fn cli_lint_exits_nonzero_on_a_violation_fixture() {
+    let root = fixture_root("wall_clock");
+    let args: Vec<String> = vec![
+        "lint".to_string(),
+        "--root".to_string(),
+        root.to_string_lossy().into_owned(),
+    ];
+    let mut out = Vec::new();
+    let r = run_cli(&args, &mut out);
+    let text = String::from_utf8(out).unwrap();
+    assert!(r.is_err(), "{text}");
+    assert!(text.contains("no-wall-clock"), "{text}");
+}
+
+#[test]
+fn the_repository_itself_lints_clean() {
+    // The acceptance criterion: `consumerbench lint` exits 0 on this tree,
+    // and every suppression carries a justification (an unjustified one
+    // would surface as a bad-suppression diagnostic and fail this test).
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf();
+    let report = run_lint(&root).expect("lint over the real tree");
+    let rendered: Vec<String> = report.diagnostics.iter().map(|d| d.render()).collect();
+    assert!(
+        report.is_clean(),
+        "the repository must ship lint-clean:\n{}",
+        rendered.join("\n")
+    );
+    assert!(
+        report.files_scanned >= 40,
+        "walker saw only {} files",
+        report.files_scanned
+    );
+    // The two watchdog sites in coordinator/executor.rs are the documented
+    // wall-clock boundary; their justified allows are the only expected
+    // suppressions today. More may appear, but never silently many.
+    assert!(
+        (1..=8).contains(&report.suppressions_honored),
+        "unexpected suppression count {}",
+        report.suppressions_honored
+    );
+
+    // And the CLI wrapper agrees, printing the clean summary.
+    let args: Vec<String> = vec![
+        "lint".to_string(),
+        "--root".to_string(),
+        root.to_string_lossy().into_owned(),
+    ];
+    let mut out = Vec::new();
+    let r = run_cli(&args, &mut out);
+    let text = String::from_utf8(out).unwrap();
+    assert!(r.is_ok(), "{text}");
+    assert!(text.contains("lint clean"), "{text}");
+}

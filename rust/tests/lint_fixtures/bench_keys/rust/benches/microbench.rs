@@ -1,0 +1,10 @@
+//! Fixture: bench entries drifted from the committed BENCH.json.
+
+struct Entry {
+    name: &'static str,
+}
+
+const ENTRIES: &[Entry] = &[
+    Entry { name: "alpha_rate" },
+    Entry { name: "beta_rate" },
+];

@@ -1,0 +1,1 @@
+//! Fixture filler: keeps the bench_keys fixture a complete mini-repo.

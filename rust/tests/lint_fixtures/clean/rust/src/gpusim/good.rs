@@ -1,0 +1,32 @@
+//! Fixture: a digest-scope module with no hazards. Banned names appear
+//! only in prose (HashMap, Instant::now, SystemTime, thread_rng), string
+//! literals, and `#[cfg(test)]` code — none of which may fire.
+
+use std::collections::BTreeMap;
+
+pub fn table() -> BTreeMap<&'static str, u64> {
+    let mut m = BTreeMap::new();
+    m.insert("HashMap", 1);
+    m.insert(r#"Instant::now "quoted""#, 2);
+    m
+}
+
+pub fn lifetime_soup<'a>(x: &'a str) -> (&'a str, char, u8) {
+    (x, '\'', b'"')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn tests_may_use_banned_constructs() {
+        let t = std::time::Instant::now();
+        let mut h = HashMap::new();
+        h.insert(1u8, t);
+        let m = std::sync::Mutex::new(0u8);
+        let _ = m.lock().unwrap();
+        assert_eq!(table().len(), 2);
+    }
+}

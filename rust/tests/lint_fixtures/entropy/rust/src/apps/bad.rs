@@ -1,0 +1,19 @@
+//! Fixture: ambient entropy and literal-seeded streams; a stream derived
+//! from a caller-supplied seed is fine.
+
+use crate::util::Rng;
+
+pub fn bad_seed() -> u64 {
+    let mut rng = Rng::new(0xDEAD_BEEF);
+    rng.next_u64()
+}
+
+pub fn good_seed(seed: u64) -> u64 {
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    rng.next_u64()
+}
+
+pub fn hasher_state() {
+    let state = RandomState::new();
+    let _ = state;
+}

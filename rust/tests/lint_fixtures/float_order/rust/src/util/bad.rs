@@ -1,0 +1,12 @@
+//! Fixture: float reduction over a hash-iterated source; a Vec-rooted
+//! reduction of the same shape is fine.
+
+use std::collections::HashMap;
+
+pub fn skewed(weights: HashMap<u32, f64>) -> f64 {
+    weights.values().sum::<f64>()
+}
+
+pub fn stable(rows: Vec<f64>) -> f64 {
+    rows.iter().sum::<f64>()
+}

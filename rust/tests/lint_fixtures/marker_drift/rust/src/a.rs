@@ -1,0 +1,5 @@
+//! Fixture: a report schema marker emitted with one version …
+
+pub fn emit(out: &mut String) {
+    out.push_str("  \"consumerbench_scenario_matrix\": 2,\n");
+}

@@ -1,0 +1,5 @@
+//! Fixture: … and asserted with another.
+
+pub fn check(json: &str) -> bool {
+    json.contains("\"consumerbench_scenario_matrix\": 3")
+}

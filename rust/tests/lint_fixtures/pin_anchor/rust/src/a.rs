@@ -1,0 +1,5 @@
+//! Fixture: the pinned literal is gone from the file (the `120` below
+//! must not anchor the pin — anchoring is identifier-boundary-aware).
+
+// detlint: pin(demo-count: 12)
+pub const DEMO_COUNT: usize = 120;

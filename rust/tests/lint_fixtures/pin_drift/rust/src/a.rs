@@ -1,0 +1,4 @@
+//! Fixture: one side of a drifted pin.
+
+// detlint: pin(demo-count: 7)
+pub const DEMO_COUNT: usize = 7;

@@ -1,0 +1,6 @@
+//! Fixture: the other side of the drifted pin.
+
+// detlint: pin(demo-count: 9)
+pub fn check(n: usize) {
+    assert_eq!(n, 9);
+}

@@ -1,0 +1,16 @@
+//! Fixture: poisonable lock unwraps; the recovery pattern is exempt.
+
+use std::sync::Mutex;
+
+pub fn drain(m: &Mutex<Vec<u64>>) -> usize {
+    let held = m.lock().unwrap();
+    held.len()
+}
+
+pub fn peek(m: &Mutex<Vec<u64>>) -> usize {
+    m.lock().expect("poisoned").len()
+}
+
+pub fn recovering(m: &Mutex<Vec<u64>>) -> usize {
+    m.lock().unwrap_or_else(|e| e.into_inner()).len()
+}

@@ -1,0 +1,8 @@
+//! Fixture: a bare allow is itself a diagnostic AND the violation fires.
+
+pub fn stamp() -> u64 {
+    // detlint: allow(no-wall-clock)
+    let t = std::time::Instant::now();
+    let _ = t;
+    0
+}

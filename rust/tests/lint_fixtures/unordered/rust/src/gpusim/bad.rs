@@ -1,0 +1,7 @@
+//! Fixture: std hash collections in a digest-affecting module.
+
+use std::collections::HashMap;
+
+pub fn routing() -> HashMap<u64, usize> {
+    HashMap::new()
+}

@@ -1,0 +1,9 @@
+//! Fixture: host-clock reads outside the watchdog boundary.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

@@ -133,6 +133,7 @@ fn cli_full_sweep_byte_identical_across_jobs() {
         "full-sweep JSON must be byte-identical for --jobs 1 and --jobs 4"
     );
     let text = String::from_utf8(reports[0].clone()).unwrap();
+    // detlint: pin(full-matrix-count: 276)
     assert!(
         text.contains("\"num_scenarios\": 276"),
         "full sweep is 168 flat + 40 workflow + 48 backend-ablation + 20 chaos scenarios"
