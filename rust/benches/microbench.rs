@@ -18,7 +18,11 @@
 //!   reconfiguration churn (slot/batch resizes every 32 iterations);
 //! * **kernel-trace-gen** — per-backend kernel-trace generation throughput
 //!   (llama decode + prefill, SD denoise step, whisper token) — the
-//!   per-request synthesis path every scenario pays, per kernel backend.
+//!   per-request synthesis path every scenario pays, per kernel backend;
+//! * **fleet-aggregation** — device-record folds per second into a fleet
+//!   aggregate (histograms + moments + tier table + outlier selection: the
+//!   per-device cost of the bounded-memory fleet sweep) and fixed-bin
+//!   histogram merges per second (the per-shard cost of the final fold).
 //!
 //! Usage (a `harness = false` bench target):
 //!
@@ -41,9 +45,12 @@ use consumerbench::gpusim::engine::{
 };
 use consumerbench::gpusim::policy::Policy;
 use consumerbench::gpusim::profiles::Testbed;
-use consumerbench::scenario::{run_matrix_jobs, MatrixAxes};
+use consumerbench::scenario::{
+    run_matrix_jobs, DeviceClass, DeviceRecord, FleetAggregate, MatrixAxes, ScenarioStatus,
+};
 use consumerbench::server::{InferenceServer, ServerConfig, ServerRequest, ServerTuning};
 use consumerbench::util::json::{json_num, json_str};
+use consumerbench::util::stats::FixedHistogram;
 
 #[path = "common.rs"]
 mod common;
@@ -182,6 +189,57 @@ fn server_batches_per_sec(adaptive: bool, n_requests: usize) -> f64 {
     iters as f64 / t0.elapsed().as_secs_f64().max(1e-9)
 }
 
+/// Device-record folds per second into one fleet aggregate: fixed-bin
+/// histogram folds + streaming moment pushes + tier-table upsert + bounded
+/// worst-k outlier selection — the entire per-device cost of the
+/// bounded-memory fleet sweep (everything except running the scenario).
+fn fleet_agg_folds_per_sec(records: usize) -> f64 {
+    let classes = [DeviceClass::Edge, DeviceClass::Laptop, DeviceClass::Desktop];
+    let vram = [4u64, 16, 24];
+    let recs: Vec<DeviceRecord> = (0..records.max(1))
+        .map(|i| DeviceRecord {
+            device: i,
+            class: classes[i % 3],
+            vram_gb: vram[i % 3],
+            status: ScenarioStatus::Ok,
+            error: None,
+            retried: false,
+            attainment: Some((i % 100) as f64 / 100.0),
+            makespan: 1.0 + (i % 7) as f64,
+            e2e_latency: 0.9 + (i % 7) as f64,
+            trace_digest: i as u64,
+            trace_rows: 128,
+            latencies: vec![0.05 + (i % 50) as f64 * 0.01; 8],
+        })
+        .collect();
+    let mut agg = FleetAggregate::new(8, 128);
+    let t0 = Instant::now();
+    for rec in &recs {
+        agg.fold(std::hint::black_box(rec), None);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(agg.device_count(), records.max(1), "bench must fold all records");
+    std::hint::black_box(agg.cells());
+    records.max(1) as f64 / dt.max(1e-9)
+}
+
+/// Fixed-bin histogram merges per second (the fleet latency layout:
+/// log-scale 1e-4..1e4 s, 96 bins) — the per-shard cost of the final fold.
+fn histogram_merges_per_sec(reps: usize) -> f64 {
+    let mut base = FixedHistogram::log_scale(1e-4, 1e4, 96);
+    let mut other = FixedHistogram::log_scale(1e-4, 1e4, 96);
+    for i in 0..4096 {
+        other.fold(1e-3 * (1.0 + (i % 977) as f64));
+    }
+    let t0 = Instant::now();
+    for _ in 0..reps.max(1) {
+        base.merge(std::hint::black_box(&other));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(base.count());
+    reps.max(1) as f64 / dt.max(1e-9)
+}
+
 /// Scenario-matrix sweep wall-clock at a given worker count.
 fn sweep_wall_clock(axes: &MatrixAxes, jobs: usize) -> f64 {
     let t0 = Instant::now();
@@ -256,6 +314,9 @@ fn main() {
     let gen_tuned = kernel_trace_gens_per_sec(KernelBackend::TunedNative, gen_reps);
     let gen_generic = kernel_trace_gens_per_sec(KernelBackend::GenericTorch, gen_reps);
     let gen_fused = kernel_trace_gens_per_sec(KernelBackend::FusedCustom, gen_reps);
+    let (fold_records, merge_reps) = if fast { (2_000, 10_000) } else { (20_000, 100_000) };
+    let fleet_fold = fleet_agg_folds_per_sec(fold_records);
+    let hist_merge = histogram_merges_per_sec(merge_reps);
 
     // detlint: pin(default-matrix-count: 68)
     let mut axes = MatrixAxes::default_matrix(42);
@@ -331,6 +392,16 @@ fn main() {
             name: "kernel_trace_gen_fused_custom",
             value: gen_fused,
             unit: "traces/s",
+        },
+        Entry {
+            name: "fleet_agg_fold_per_sec",
+            value: fleet_fold,
+            unit: "records/s",
+        },
+        Entry {
+            name: "histogram_merge_per_sec",
+            value: hist_merge,
+            unit: "merges/s",
         },
         Entry {
             name: "sweep_wall_clock_jobs1",

@@ -30,6 +30,7 @@ const MARKERS: &[&str] = &[
     "consumerbench_run",
     "consumerbench_scenario_matrix",
     "consumerbench_bench",
+    "consumerbench_fleet",
 ];
 
 /// How far past a marker occurrence the version integer may sit

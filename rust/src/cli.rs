@@ -11,6 +11,10 @@
 //!                        [--dump DIR] [--fail-fast] [--journal FILE [--resume]]
 //!                        [--watchdog-secs N] [--inject-panic SUBSTR]
 //!                        [--inject-error SUBSTR]
+//! consumerbench fleet [--devices N] [--seed N] [--population FILE] [--mix KEY]
+//!                     [--strategy KEY] [--shard-size N] [--outliers K]
+//!                     [--trace-window N] [--jobs N] [--out FILE]
+//!                     [--journal FILE [--resume]] [--watchdog-secs N] [--list]
 //! consumerbench lint [--root DIR] [--list-rules]
 //! consumerbench apps
 //! consumerbench help
@@ -27,8 +31,10 @@ use crate::gpusim::chaos::ChaosKind;
 use crate::gpusim::queue::QueueBackend;
 use crate::gpusim::trace::{TraceMode, DEFAULT_STREAM_WINDOW};
 use crate::runtime::Runtime;
+use crate::coordinator::Strategy;
 use crate::scenario::{
-    backend_key, chaos_key, run_specs_supervised, MatrixAxes, ScenarioSpec, SweepOptions,
+    backend_key, chaos_key, class_key, run_fleet, run_specs_supervised, AppMix, FleetOptions,
+    FleetSpec, MatrixAxes, PopulationSpec, ScenarioSpec, SweepOptions,
 };
 
 const USAGE: &str = "\
@@ -43,6 +49,10 @@ USAGE:
                            [--dump DIR] [--fail-fast] [--journal FILE [--resume]]
                            [--watchdog-secs N] [--inject-panic SUBSTR]
                            [--inject-error SUBSTR]
+    consumerbench fleet [--devices N] [--seed N] [--population FILE] [--mix KEY]
+                        [--strategy KEY] [--shard-size N] [--outliers K]
+                        [--trace-window N] [--jobs N] [--out FILE]
+                        [--journal FILE [--resume]] [--watchdog-secs N] [--list]
     consumerbench lint [--root DIR] [--list-rules]
     consumerbench apps
     consumerbench help
@@ -55,6 +65,11 @@ COMMANDS:
                chaos fault class, plus generated workflow DAG shapes with
                end-to-end latency and critical-path attribution), emitting
                an aggregate JSON report
+    fleet      Sample a seeded synthetic device population (edge / laptop /
+               desktop tiers) and sweep a scenario slice across it with
+               bounded-memory streaming aggregation, emitting the
+               population report (fleet-wide latency/attainment
+               percentiles, per-tier breakdowns, worst-k outliers)
     lint       Statically analyze the crate's own sources for determinism
                and panic-safety hazards (hash-ordered iteration, wall
                clocks, poisonable lock unwraps, float-order hazards,
@@ -114,6 +129,38 @@ OPTIONS (scenario):
     --inject-error SUBSTR  Testing hook: fail at run start in scenarios
                       whose name contains SUBSTR
 
+OPTIONS (fleet):
+    --devices N       Population size (default: 200); overrides the file's
+                      `count` when --population is also given
+    --seed N          Population seed (default: 42); overrides the file's
+                      `seed` when both are given
+    --population FILE Load the population from a YAML spec (see README
+                      \"Fleet sweeps\" for the schema) instead of the
+                      default class weights
+    --mix KEY         Application mix every device runs (chat |
+                      chat_imagegen | captions_imagegen | full_stack;
+                      default chat)
+    --strategy KEY    Resource-sharing strategy (greedy | partition |
+                      fair_share | slo_aware; default greedy)
+    --shard-size N    Devices per aggregation shard (default 50). Changes
+                      worker granularity and the float merge grouping, not
+                      which devices run
+    --outliers K      Worst-k attainment rows retained with their streaming
+                      trace tails (default 8)
+    --trace-window N  Streaming trace window per device (default 128)
+    --jobs N          Worker threads (default: available parallelism); the
+                      JSON report is byte-identical for any N
+    --out FILE        Write the population report JSON to FILE
+    --journal FILE    Append every terminal device record to FILE as a JSONL
+                      checkpoint keyed by (device index, population seed,
+                      fleet spec digest)
+    --resume          Prefill completed devices from --journal and execute
+                      only the rest; the report is byte-identical to an
+                      uninterrupted run
+    --watchdog-secs N Wall-clock watchdog per device attempt (timeout
+                      records are host-dependent and never journaled)
+    --list            Print the sampled device table without running anything
+
 OPTIONS (lint):
     --root DIR        Repository root to lint (default: the nearest ancestor
                       of the current directory containing rust/src)
@@ -150,6 +197,10 @@ pub fn run_cli(args: &[String], out: &mut impl std::io::Write) -> Result<()> {
         "scenario" => {
             let opts = parse_scenario_opts(&args[1..])?;
             cmd_scenario(&opts, out)
+        }
+        "fleet" => {
+            let opts = parse_fleet_opts(&args[1..])?;
+            cmd_fleet(&opts, out)
         }
         "lint" => {
             let opts = parse_lint_opts(&args[1..])?;
@@ -551,6 +602,254 @@ fn cmd_scenario(opts: &ScenarioOpts, out: &mut impl std::io::Write) -> Result<()
             report.scenarios.len()
         );
     }
+    Ok(())
+}
+
+#[derive(Debug, Default)]
+struct FleetCliOpts {
+    /// Population size (`--devices`); `None` = file's `count` or 200.
+    devices: Option<usize>,
+    /// Population seed (`--seed`); `None` = file's `seed` or 42.
+    seed: Option<u64>,
+    /// Population YAML spec path (`--population`).
+    population: Option<String>,
+    /// Application-mix key (`--mix`).
+    mix: Option<String>,
+    /// Strategy key (`--strategy`).
+    strategy: Option<Strategy>,
+    shard_size: Option<usize>,
+    outlier_k: Option<usize>,
+    trace_window: Option<usize>,
+    /// Worker threads; `None` = available parallelism.
+    jobs: Option<usize>,
+    out: Option<String>,
+    journal: Option<String>,
+    resume: bool,
+    watchdog_secs: Option<u64>,
+    list: bool,
+}
+
+fn parse_fleet_opts(args: &[String]) -> Result<FleetCliOpts> {
+    let mut opts = FleetCliOpts::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--devices" => {
+                opts.devices = Some(
+                    args.get(i + 1)
+                        .context("--devices requires a value")?
+                        .parse()
+                        .context("--devices must be an integer")?,
+                );
+                i += 2;
+            }
+            "--seed" => {
+                opts.seed = Some(
+                    args.get(i + 1)
+                        .context("--seed requires a value")?
+                        .parse()
+                        .context("--seed must be an integer")?,
+                );
+                i += 2;
+            }
+            "--population" => {
+                opts.population = Some(
+                    args.get(i + 1)
+                        .context("--population requires a value")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--mix" => {
+                opts.mix = Some(args.get(i + 1).context("--mix requires a value")?.clone());
+                i += 2;
+            }
+            "--strategy" => {
+                let key = args.get(i + 1).context("--strategy requires a value")?;
+                opts.strategy = Some(Strategy::parse(key).with_context(|| {
+                    format!(
+                        "--strategy: unknown strategy `{key}` (greedy | partition | \
+                         fair_share | slo_aware)"
+                    )
+                })?);
+                i += 2;
+            }
+            "--shard-size" => {
+                let n: usize = args
+                    .get(i + 1)
+                    .context("--shard-size requires a value")?
+                    .parse()
+                    .context("--shard-size must be an integer")?;
+                if n == 0 {
+                    bail!("--shard-size must be at least 1");
+                }
+                opts.shard_size = Some(n);
+                i += 2;
+            }
+            "--outliers" => {
+                opts.outlier_k = Some(
+                    args.get(i + 1)
+                        .context("--outliers requires a value")?
+                        .parse()
+                        .context("--outliers must be an integer")?,
+                );
+                i += 2;
+            }
+            "--trace-window" => {
+                let n: usize = args
+                    .get(i + 1)
+                    .context("--trace-window requires a value")?
+                    .parse()
+                    .context("--trace-window must be an integer")?;
+                if n == 0 {
+                    bail!("--trace-window must be at least 1");
+                }
+                opts.trace_window = Some(n);
+                i += 2;
+            }
+            "--jobs" => {
+                opts.jobs = Some(
+                    args.get(i + 1)
+                        .context("--jobs requires a value")?
+                        .parse()
+                        .context("--jobs must be an integer")?,
+                );
+                i += 2;
+            }
+            "--out" => {
+                opts.out = Some(args.get(i + 1).context("--out requires a value")?.clone());
+                i += 2;
+            }
+            "--journal" => {
+                opts.journal = Some(
+                    args.get(i + 1)
+                        .context("--journal requires a value")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--resume" => {
+                opts.resume = true;
+                i += 1;
+            }
+            "--watchdog-secs" => {
+                opts.watchdog_secs = Some(
+                    args.get(i + 1)
+                        .context("--watchdog-secs requires a value")?
+                        .parse()
+                        .context("--watchdog-secs must be an integer")?,
+                );
+                i += 2;
+            }
+            "--list" => {
+                opts.list = true;
+                i += 1;
+            }
+            other => bail!("unknown option `{other}`"),
+        }
+    }
+    if opts.resume && opts.journal.is_none() {
+        bail!("--resume requires --journal");
+    }
+    Ok(opts)
+}
+
+/// Resolve a `--mix` key to its generator (the matrix's curated mixes).
+fn mix_for_key(key: &str) -> Result<AppMix> {
+    Ok(match key {
+        "chat" => AppMix::chat(),
+        "chat_imagegen" => AppMix::chat_imagegen(),
+        "captions_imagegen" => AppMix::captions_imagegen(),
+        "full_stack" => AppMix::full_stack(),
+        other => bail!(
+            "--mix: unknown mix `{other}` (chat | chat_imagegen | \
+             captions_imagegen | full_stack)"
+        ),
+    })
+}
+
+fn cmd_fleet(opts: &FleetCliOpts, out: &mut impl std::io::Write) -> Result<()> {
+    let mut population = match &opts.population {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            PopulationSpec::parse_yaml(&text).with_context(|| format!("parsing {path}"))?
+        }
+        None => PopulationSpec::default_population(opts.devices.unwrap_or(200), 42),
+    };
+    // Explicit flags override the file (or the defaults).
+    if let Some(n) = opts.devices {
+        population.count = n;
+    }
+    if let Some(s) = opts.seed {
+        population.seed = s;
+    }
+    if population.count == 0 {
+        bail!("--devices must be at least 1");
+    }
+    let mut spec = FleetSpec::new(population);
+    if let Some(key) = &opts.mix {
+        spec.mix = mix_for_key(key)?;
+    }
+    if let Some(strategy) = opts.strategy {
+        spec.strategy = strategy;
+    }
+    if let Some(n) = opts.shard_size {
+        spec.shard_size = n;
+    }
+    if let Some(k) = opts.outlier_k {
+        spec.outlier_k = k;
+    }
+    if let Some(w) = opts.trace_window {
+        spec.trace_window = w;
+    }
+    if opts.list {
+        for i in 0..spec.population.count {
+            let dev = spec.population.device(i);
+            writeln!(
+                out,
+                "device-{i:05}  {:7} {:>3} GB  ({}, {} SMs, {:.0} GB/s)",
+                class_key(dev.class),
+                dev.vram_gb,
+                dev.testbed.gpu.name,
+                dev.testbed.gpu.num_sms,
+                dev.testbed.gpu.mem_bw / 1e9,
+            )?;
+        }
+        writeln!(out, "{} devices ({} shards)", spec.population.count, spec.shards())?;
+        return Ok(());
+    }
+    let jobs = opts.jobs.unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    });
+    writeln!(
+        out,
+        "sweeping {} devices in {} shards (seed {}, jobs {}) …",
+        spec.population.count,
+        spec.shards(),
+        spec.population.seed,
+        jobs
+    )?;
+    let fleet_opts = FleetOptions {
+        jobs,
+        watchdog: opts.watchdog_secs.map(std::time::Duration::from_secs),
+        journal: opts.journal.as_ref().map(std::path::PathBuf::from),
+        resume: opts.resume,
+    };
+    let report = run_fleet(&spec, &fleet_opts)?;
+    write!(out, "{}", report.summary_table())?;
+    let json = report.to_json();
+    match &opts.out {
+        Some(path) => {
+            std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
+            writeln!(out, "wrote population report to {path}")?;
+        }
+        None => write!(out, "{json}")?,
+    }
+    // Device failures are population phenomena recorded in the report
+    // (`devices.failed` etc.), not sweep errors — unlike `scenario`, the
+    // fleet command exits zero as long as the sweep infrastructure held.
     Ok(())
 }
 
@@ -1116,5 +1415,82 @@ mod tests {
         ]);
         assert!(r.is_err(), "fail-fast must abort with an error");
         assert!(!json_path.exists(), "fail-fast must not write a report");
+    }
+
+    #[test]
+    fn fleet_list_prints_device_table() {
+        let (r, out) = run(&["fleet", "--list", "--devices", "12", "--seed", "7"]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("device-00000"), "{out}");
+        assert!(out.contains("device-00011"), "{out}");
+        assert!(out.contains("12 devices"), "{out}");
+        // Same seed, same table.
+        let (_, again) = run(&["fleet", "--list", "--devices", "12", "--seed", "7"]);
+        assert_eq!(out, again);
+        // Different seed, different table.
+        let (_, other) = run(&["fleet", "--list", "--devices", "12", "--seed", "8"]);
+        assert_ne!(out, other);
+    }
+
+    #[test]
+    fn fleet_bad_options_rejected() {
+        assert!(run(&["fleet", "--mix", "quantum"]).0.is_err());
+        assert!(run(&["fleet", "--strategy", "psychic"]).0.is_err());
+        assert!(run(&["fleet", "--shard-size", "0"]).0.is_err());
+        assert!(run(&["fleet", "--trace-window", "0"]).0.is_err());
+        assert!(run(&["fleet", "--devices", "0"]).0.is_err());
+        assert!(run(&["fleet", "--resume"]).0.is_err());
+        assert!(run(&["fleet", "--wat"]).0.is_err());
+    }
+
+    #[test]
+    fn fleet_runs_small_population_to_json() {
+        let dir = std::env::temp_dir().join("cb_fleet_cli");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json_path = dir.join("fleet.json");
+        let (r, out) = run(&[
+            "fleet",
+            "--devices",
+            "6",
+            "--seed",
+            "11",
+            "--shard-size",
+            "3",
+            "--jobs",
+            "2",
+            "--out",
+            json_path.to_str().unwrap(),
+        ]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("sweeping 6 devices in 2 shards"), "{out}");
+        assert!(out.contains("status: ok"), "{out}");
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        assert!(json.starts_with("{\n  \"consumerbench_fleet\": 1,"), "{json}");
+        assert!(json.contains("\"devices\": {\"total\": 6"), "{json}");
+        assert!(json.contains("\"aggregation\": {"), "{json}");
+    }
+
+    #[test]
+    fn fleet_population_file_round_trips() {
+        let dir = std::env::temp_dir().join("cb_fleet_popfile");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pop_path = dir.join("pop.yaml");
+        std::fs::write(
+            &pop_path,
+            "population:\n  name: offices\n  count: 5\n  seed: 3\n  classes:\n    laptop: 1.0\n",
+        )
+        .unwrap();
+        let (r, out) = run(&[
+            "fleet",
+            "--list",
+            "--population",
+            pop_path.to_str().unwrap(),
+        ]);
+        assert!(r.is_ok(), "{out}");
+        assert!(out.contains("5 devices"), "{out}");
+        // An all-laptop population lists only laptops.
+        assert!(out.contains("laptop"), "{out}");
+        assert!(!out.contains("desktop"), "{out}");
+        assert!(!out.contains("edge"), "{out}");
     }
 }

@@ -426,6 +426,26 @@ impl ScenarioRunner {
             TestbedKind::IntelServer => Testbed::intel_server(),
             TestbedKind::MacbookM1Pro => Testbed::macbook_m1_pro(),
         };
+        Self::with_testbed(cfg, testbed, runtime)
+    }
+
+    /// Build a runner on an explicit [`Testbed`] instead of the config's
+    /// named `testbed:` kind. This is the fleet subsystem's injection seam:
+    /// population-sampled devices are synthesized `Testbed`s, not members of
+    /// [`TestbedKind`], so every device-dependent decision below (engine
+    /// construction, Apple-tuned app variants, partition sizing) keys off
+    /// the profile itself — `unified_memory`, `num_sms` — never off
+    /// `cfg.testbed`.
+    pub fn with_testbed(
+        cfg: &BenchConfig,
+        testbed: Testbed,
+        runtime: Option<Runtime>,
+    ) -> Result<ScenarioRunner> {
+        // Unified-memory devices get the Apple-tuned application variants
+        // (the profile property is what those configs are tuned *for*); for
+        // the two named testbeds this is exactly the old
+        // `cfg.testbed == MacbookM1Pro` behaviour.
+        let unified = testbed.gpu.unified_memory;
         // Pre-size the engine for this config's expected load: roughly one
         // burst of pending events per request plus workflow bookkeeping.
         // Purely a capacity hint — behaviour is identical at any value.
@@ -497,7 +517,7 @@ impl ScenarioRunner {
                     Box::new(DeepResearch::new(seed, task.num_requests).with_backend(task.backend))
                 }
                 AppType::ImageGen => {
-                    let app = if cfg.testbed == TestbedKind::MacbookM1Pro {
+                    let app = if unified {
                         ImageGen::apple_config(seed, task.num_requests)
                     } else {
                         ImageGen::new(seed, task.num_requests)
@@ -505,7 +525,7 @@ impl ScenarioRunner {
                     Box::new(app.with_backend(task.backend))
                 }
                 AppType::LiveCaptions => {
-                    let app = if cfg.testbed == TestbedKind::MacbookM1Pro {
+                    let app = if unified {
                         LiveCaptions::apple_config(seed, task.num_requests)
                     } else {
                         LiveCaptions::new(seed, task.num_requests)
@@ -1336,10 +1356,10 @@ fn build_policy(
             }
         }
         Strategy::Partition => {
-            let total = match cfg.testbed {
-                TestbedKind::IntelServer => Testbed::intel_server().gpu.num_sms,
-                TestbedKind::MacbookM1Pro => Testbed::macbook_m1_pro().gpu.num_sms,
-            };
+            // The engine owns the actual device (possibly a synthesized
+            // fleet testbed), so partition capacity comes from there — not
+            // from re-deriving a named profile out of `cfg.testbed`.
+            let total = engine.testbed().gpu.num_sms;
             // GPU-placed clients participate in the partition.
             let mut gpu_clients = Vec::new();
             for (i, node) in nodes.iter().enumerate() {
@@ -1384,12 +1404,29 @@ pub fn run_config_text_watchdog(
     artifacts_dir: Option<&str>,
     watchdog: Option<std::time::Duration>,
 ) -> Result<ScenarioResult> {
+    run_config_text_on(text, artifacts_dir, watchdog, None)
+}
+
+/// [`run_config_text_watchdog`] with an optional explicit [`Testbed`]
+/// override. The fleet runner uses this to execute a scenario slice on a
+/// population-sampled synthesized device; `None` resolves the config's
+/// named `testbed:` kind as always (the YAML key is then inert apart from
+/// parsing).
+pub fn run_config_text_on(
+    text: &str,
+    artifacts_dir: Option<&str>,
+    watchdog: Option<std::time::Duration>,
+    testbed: Option<Testbed>,
+) -> Result<ScenarioResult> {
     let cfg = BenchConfig::parse(text)?;
     let runtime = match artifacts_dir {
         Some(d) if Runtime::available(d) => Some(Runtime::load_dir(d)?),
         _ => None,
     };
-    let mut runner = ScenarioRunner::new(&cfg, runtime)?;
+    let mut runner = match testbed {
+        Some(tb) => ScenarioRunner::with_testbed(&cfg, tb, runtime)?,
+        None => ScenarioRunner::new(&cfg, runtime)?,
+    };
     if let Some(limit) = watchdog {
         runner = runner.with_watchdog(limit);
     }

@@ -17,8 +17,8 @@ pub use config::{AppType, ArrivalSpec, BenchConfig, InjectFailure, Strategy, Tes
 pub use controller::{Controller, ControllerAction, ControllerConfig, Observation, ServerView};
 pub use dag::Dag;
 pub use executor::{
-    run_config_text, run_config_text_watchdog, NodeResult, ScenarioResult, ScenarioRunner,
-    StageStat, WallClockTimeout, WorkflowMetrics, DEFAULT_EVENT_BUDGET,
+    run_config_text, run_config_text_on, run_config_text_watchdog, NodeResult, ScenarioResult,
+    ScenarioRunner, StageStat, WallClockTimeout, WorkflowMetrics, DEFAULT_EVENT_BUDGET,
     DEFAULT_VIRTUAL_TIME_BUDGET,
 };
 pub use report::{generate, to_csv, to_json_summary, BenchmarkReport};

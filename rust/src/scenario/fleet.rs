@@ -1,0 +1,1279 @@
+//! Fleet-scale device-population sweeps with bounded-memory aggregation.
+//!
+//! The matrix ([`crate::scenario::runner`]) sweeps two hand-picked testbeds;
+//! the fleet runner sweeps a *population* of synthesized devices (see
+//! [`crate::scenario::population`]) and answers population-level questions:
+//! what are the fleet-wide p50/p99 request latencies, how is SLO attainment
+//! distributed across device tiers, which concrete devices are the worst
+//! outliers?
+//!
+//! # Memory model
+//!
+//! At fleet scale the matrix approach — materialize every outcome with its
+//! full trace, then summarize — cannot hold. Instead the population is cut
+//! into fixed-size shards; each device's scenario runs under
+//! [`TraceMode::Streaming`] and its metrics are folded into the owning
+//! shard's [`FleetAggregate`] (fixed-bin histograms + streaming moments)
+//! *immediately*, after which the result is dropped. Full (windowed) traces
+//! are retained only for the worst-`k`-attainment outlier candidates per
+//! shard. Peak resident aggregation state is therefore
+//! `O(shards × (bins + outlier_k × trace_window))` — independent of the
+//! device count — and the report carries its own capacity accounting
+//! (`aggregation.resident_cells` / `aggregation.bound_cells`) so a test can
+//! pin the bound at a 2,000-device population.
+//!
+//! # Determinism
+//!
+//! Shard partitioning is a pure function of `(count, shard_size)` and every
+//! per-shard aggregate folds its devices in index order, so the merged
+//! report is **byte-identical for `--jobs 1` and `--jobs N`** — workers race
+//! only for whole shards, never for fold order. Histogram merges are exact
+//! (`u64` bin counts); moment merges are floating-point, which is why the
+//! final merge always runs in canonical shard order on one thread.
+//!
+//! With `--journal`, every terminal device record is checkpointed as JSONL
+//! keyed by `(device index, population seed, fleet spec digest)` using the
+//! same shortest-roundtrip float encoders as the report; `--resume` replays
+//! the journal and re-executes only missing devices, re-folding the
+//! journaled records bit-exactly — a killed 2,000-device sweep resumes to a
+//! byte-identical report. Wall-clock `timeout` records are host-dependent
+//! and never journaled, mirroring the matrix supervision contract.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::apps::Slo;
+use crate::coordinator::{run_config_text_on, ScenarioResult, Strategy, TestbedKind, WallClockTimeout};
+use crate::gpusim::engine::{BudgetExhausted, Fnv1a};
+use crate::gpusim::trace::{Trace, TraceMode};
+use crate::scenario::matrix::{
+    strategy_key, AppMix, ArrivalKind, ScenarioSpec, ServerMode, WorkflowShape,
+};
+use crate::scenario::population::{class_key, DeviceClass, PopulationSpec};
+use crate::scenario::runner::{Journal, ScenarioStatus};
+use crate::util::json::{json_num, json_opt_num, json_str, parse as json_parse, JsonValue};
+use crate::util::stats::{FixedHistogram, Moments};
+
+/// Devices per shard (one aggregate per shard).
+pub const DEFAULT_SHARD_SIZE: usize = 50;
+/// Worst-k outlier rows retained per shard (and in the final report).
+pub const DEFAULT_OUTLIER_K: usize = 8;
+/// Per-device streaming trace window (rows). Deliberately smaller than the
+/// engine default: fleets trade per-device forensics for breadth.
+pub const DEFAULT_FLEET_TRACE_WINDOW: usize = 128;
+
+/// Request-latency histogram: log-scale 0.1 ms .. 10 000 s, 12 bins per
+/// decade. Relative quantile error ≤ `(hi/lo)^(1/(2·bins)) − 1` ≈ 10.1 %.
+const LATENCY_HIST_LO: f64 = 1e-4;
+const LATENCY_HIST_HI: f64 = 1e4;
+const LATENCY_HIST_BINS: usize = 96;
+/// Attainment histogram: linear on `[0, 1]`, absolute error ≤ 0.005.
+const ATTAIN_HIST_BINS: usize = 100;
+
+/// Fixed per-outlier-row scalar cells (index, class, vram, status, error
+/// slot, attainment, makespan, digest) used by the capacity accounting.
+const OUTLIER_ROW_CELLS: usize = 8;
+/// Upper bound on distinct `(class, vram_gb)` tiers a population can
+/// produce (3 edge + 3 laptop + 4 desktop VRAM tiers).
+const MAX_TIERS: usize = 10;
+
+fn latency_hist() -> FixedHistogram {
+    FixedHistogram::log_scale(LATENCY_HIST_LO, LATENCY_HIST_HI, LATENCY_HIST_BINS)
+}
+
+fn attain_hist() -> FixedHistogram {
+    FixedHistogram::linear(0.0, 1.0, ATTAIN_HIST_BINS)
+}
+
+// ---------------------------------------------------------------------------
+// Spec + options
+// ---------------------------------------------------------------------------
+
+/// A fleet sweep: a device population plus the scenario slice every device
+/// runs and the aggregation knobs.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub population: PopulationSpec,
+    /// Application mix every device runs (flat workflow, closed arrivals).
+    pub mix: AppMix,
+    pub strategy: Strategy,
+    /// Devices per shard; the unit of work-stealing and of aggregation.
+    pub shard_size: usize,
+    /// Worst-k attainment rows retained (with their streaming trace tails).
+    pub outlier_k: usize,
+    /// Streaming trace window per device scenario.
+    pub trace_window: usize,
+}
+
+impl FleetSpec {
+    /// Default slice for a population: the chatbot mix under the greedy
+    /// strategy — the paper's baseline single-app regime, cheap enough to
+    /// run thousands of times.
+    pub fn new(population: PopulationSpec) -> FleetSpec {
+        FleetSpec {
+            population,
+            mix: AppMix::chat(),
+            strategy: Strategy::Greedy,
+            shard_size: DEFAULT_SHARD_SIZE,
+            outlier_k: DEFAULT_OUTLIER_K,
+            trace_window: DEFAULT_FLEET_TRACE_WINDOW,
+        }
+    }
+
+    /// Number of shards the population cuts into.
+    pub fn shards(&self) -> usize {
+        let size = self.shard_size.max(1);
+        self.population.count.div_ceil(size).max(1)
+    }
+
+    /// Device index range `[lo, hi)` of one shard.
+    pub fn shard_range(&self, shard: usize) -> (usize, usize) {
+        let size = self.shard_size.max(1);
+        let lo = shard * size;
+        (lo.min(self.population.count), ((shard + 1) * size).min(self.population.count))
+    }
+
+    /// The scenario one device runs. The `testbed:` key in the rendered
+    /// YAML is an inert placeholder — execution injects the synthesized
+    /// [`crate::gpusim::Testbed`] via [`run_config_text_on`]. The scenario
+    /// seed is decorrelated from the sampler stream for the same device so
+    /// hardware draws and workload draws never alias.
+    pub fn device_scenario(&self, index: usize) -> ScenarioSpec {
+        let seed = (self.population.seed
+            ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .rotate_left(17);
+        ScenarioSpec {
+            name: format!("device-{index:05}"),
+            mix: self.mix.clone(),
+            workflow: WorkflowShape::Flat,
+            strategy: self.strategy,
+            testbed: TestbedKind::IntelServer,
+            arrival: ArrivalKind::Closed,
+            server_mode: ServerMode::Static,
+            backend: crate::gpusim::backend::KernelBackend::TunedNative,
+            backend_ablation: false,
+            chaos: None,
+            budget_events: None,
+            inject_failure: None,
+            event_queue: None,
+            trace_mode: Some(TraceMode::Streaming {
+                window: self.trace_window.max(1),
+            }),
+            seed,
+        }
+    }
+
+    /// FNV-1a digest of the canonical population YAML plus the device-0
+    /// scenario template — the journal key that makes stale checkpoint
+    /// entries (same device index, different population or slice)
+    /// detectable. Aggregation-only knobs (`shard_size`, `outlier_k`) do
+    /// not affect execution and are deliberately excluded, so a journal
+    /// survives re-sharding.
+    pub fn digest_hex(&self) -> String {
+        let mut h = Fnv1a::new();
+        h.update(self.population.to_yaml().as_bytes());
+        h.update(self.device_scenario(0).to_yaml().as_bytes());
+        format!("{:016x}", h.finish())
+    }
+}
+
+/// Execution knobs for one fleet sweep.
+#[derive(Debug, Clone, Default)]
+pub struct FleetOptions {
+    /// Worker threads (clamped to `1..=shards`); `0` behaves like `1`.
+    pub jobs: usize,
+    /// Wall-clock watchdog per device attempt. Defense-in-depth only —
+    /// `timeout` records are host-dependent and never journaled.
+    pub watchdog: Option<Duration>,
+    /// Append-only JSONL checkpoint of terminal device records.
+    pub journal: Option<PathBuf>,
+    /// Prefill completed devices from the journal before executing the rest.
+    pub resume: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Per-device record
+// ---------------------------------------------------------------------------
+
+/// The folded-and-journaled residue of one device's scenario run —
+/// everything the aggregates and the outlier table need, *without* the
+/// trace or the full `ScenarioResult`.
+#[derive(Debug, Clone)]
+pub struct DeviceRecord {
+    pub device: usize,
+    pub class: DeviceClass,
+    pub vram_gb: u64,
+    pub status: ScenarioStatus,
+    pub error: Option<String>,
+    pub retried: bool,
+    /// Min SLO attainment across SLO-bearing apps (failed app → 0.0; a mix
+    /// with no SLO apps is vacuously 1.0). `None` for non-`ok` records.
+    pub attainment: Option<f64>,
+    pub makespan: f64,
+    pub e2e_latency: f64,
+    /// Digest of the *complete* trace (streaming mode included).
+    pub trace_digest: u64,
+    /// Rows in the retained streaming tail window.
+    pub trace_rows: usize,
+    /// Per-request latencies (finite only), in completion order. Small —
+    /// the closed-loop mixes issue a handful of requests per device — and
+    /// journaled bit-exactly so a resumed sweep re-folds identically.
+    pub latencies: Vec<f64>,
+}
+
+fn record_from(
+    spec: &FleetSpec,
+    index: usize,
+    status: ScenarioStatus,
+    error: Option<String>,
+) -> DeviceRecord {
+    let dev = spec.population.device(index);
+    DeviceRecord {
+        device: index,
+        class: dev.class,
+        vram_gb: dev.vram_gb,
+        status,
+        error,
+        retried: false,
+        attainment: None,
+        makespan: 0.0,
+        e2e_latency: 0.0,
+        trace_digest: 0,
+        trace_rows: 0,
+        latencies: Vec::new(),
+    }
+}
+
+/// Fold one `ScenarioResult` into a terminal `ok` record (plus the trace
+/// tail, which the caller may retain for outlier forensics).
+fn record_ok(spec: &FleetSpec, index: usize, result: ScenarioResult) -> (DeviceRecord, Trace) {
+    let mut rec = record_from(spec, index, ScenarioStatus::Ok, None);
+    // Same fairness convention as the matrix runner: a failed app counts as
+    // zero attainment; an SLO-free mix is vacuously met.
+    let attainments: Vec<f64> = result
+        .nodes
+        .iter()
+        .filter(|n| !matches!(n.slo, Slo::None))
+        .filter_map(|n| {
+            if n.failed.is_some() {
+                Some(0.0)
+            } else {
+                n.attainment()
+            }
+        })
+        .collect();
+    rec.attainment = Some(if attainments.is_empty() {
+        // No SLO-bearing apps at all: vacuously met.
+        1.0
+    } else {
+        attainments.iter().copied().fold(f64::INFINITY, f64::min)
+    });
+    rec.makespan = result.makespan;
+    rec.e2e_latency = result.workflow.e2e_latency;
+    rec.trace_digest = result.trace_digest;
+    rec.trace_rows = result.trace.len();
+    rec.latencies = result
+        .nodes
+        .iter()
+        .flat_map(|n| n.metrics.iter().map(|m| m.latency))
+        .filter(|l| l.is_finite())
+        .collect();
+    (rec, result.trace)
+}
+
+/// One attempt of one device: panic isolation + typed-error classification,
+/// mirroring the matrix runner's `attempt_one`. Never unwinds.
+fn attempt_device(
+    spec: &FleetSpec,
+    index: usize,
+    watchdog: Option<Duration>,
+) -> (DeviceRecord, Option<Trace>) {
+    let scenario = spec.device_scenario(index);
+    let yaml = scenario.to_yaml();
+    let testbed = spec.population.device(index).testbed;
+    match catch_unwind(AssertUnwindSafe(|| {
+        run_config_text_on(&yaml, None, watchdog, Some(testbed))
+    })) {
+        Ok(Ok(result)) => {
+            let (rec, trace) = record_ok(spec, index, result);
+            (rec, Some(trace))
+        }
+        Ok(Err(err)) => {
+            let status = if err.downcast_ref::<BudgetExhausted>().is_some() {
+                ScenarioStatus::BudgetExhausted
+            } else if err.downcast_ref::<WallClockTimeout>().is_some() {
+                ScenarioStatus::Timeout
+            } else {
+                ScenarioStatus::Failed
+            };
+            (record_from(spec, index, status, Some(format!("{err:#}"))), None)
+        }
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic with non-string payload".to_string());
+            (record_from(spec, index, ScenarioStatus::Panicked, Some(msg)), None)
+        }
+    }
+}
+
+/// Supervised device run: attempt, then retry failures exactly once with
+/// the identical seed (budget exhaustion is deterministic and not retried).
+fn supervise_device(
+    spec: &FleetSpec,
+    index: usize,
+    watchdog: Option<Duration>,
+) -> (DeviceRecord, Option<Trace>) {
+    let first = attempt_device(spec, index, watchdog);
+    match first.0.status {
+        ScenarioStatus::Failed | ScenarioStatus::Panicked | ScenarioStatus::Timeout => {
+            let (mut rec, trace) = attempt_device(spec, index, watchdog);
+            rec.retried = true;
+            (rec, trace)
+        }
+        _ => first,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mergeable aggregate
+// ---------------------------------------------------------------------------
+
+/// One `(class, vram_gb)` tier's sub-aggregate.
+#[derive(Debug, Clone)]
+pub struct TierAgg {
+    pub class: DeviceClass,
+    pub vram_gb: u64,
+    pub devices: usize,
+    pub ok: usize,
+    pub attain: Moments,
+    pub latency_hist: FixedHistogram,
+}
+
+/// One retained outlier row: the journaled scalar fields plus (in memory
+/// only) the streaming trace tail for forensics. The trace never feeds the
+/// report JSON — resumed devices have no trace, and the report must be
+/// byte-identical either way.
+#[derive(Debug, Clone)]
+pub struct OutlierRow {
+    pub device: usize,
+    pub class: DeviceClass,
+    pub vram_gb: u64,
+    pub status: ScenarioStatus,
+    pub error: Option<String>,
+    pub attainment: Option<f64>,
+    pub makespan: f64,
+    pub trace_digest: u64,
+    pub trace_rows: usize,
+    pub trace: Option<Trace>,
+}
+
+/// Worst-first outlier rank: non-`ok` devices sort before any attainment.
+fn outlier_rank(status: ScenarioStatus, attainment: Option<f64>) -> f64 {
+    if status.is_ok() {
+        attainment.unwrap_or(0.0)
+    } else {
+        -1.0
+    }
+}
+
+/// The bounded-memory fold target for one shard (and, after merging, for
+/// the whole fleet): status counts, latency/attainment/makespan sketches,
+/// per-tier sub-aggregates, and the worst-k outlier rows. Merge is
+/// order-independent for every exact field; the float moment merges are
+/// sequenced canonically by the runner.
+#[derive(Debug, Clone)]
+pub struct FleetAggregate {
+    devices: usize,
+    /// Counts in status taxonomy order: ok, failed, panicked,
+    /// budget_exhausted, timeout, skipped.
+    status: [usize; 6],
+    retried: usize,
+    latency_hist: FixedHistogram,
+    latency_moments: Moments,
+    attain_hist: FixedHistogram,
+    attain_moments: Moments,
+    makespan_moments: Moments,
+    e2e_moments: Moments,
+    tiers: Vec<TierAgg>,
+    outlier_k: usize,
+    trace_window: usize,
+    outliers: Vec<OutlierRow>,
+}
+
+fn status_slot(status: ScenarioStatus) -> usize {
+    match status {
+        ScenarioStatus::Ok => 0,
+        ScenarioStatus::Failed => 1,
+        ScenarioStatus::Panicked => 2,
+        ScenarioStatus::BudgetExhausted => 3,
+        ScenarioStatus::Timeout => 4,
+        ScenarioStatus::Skipped => 5,
+    }
+}
+
+impl FleetAggregate {
+    pub fn new(outlier_k: usize, trace_window: usize) -> FleetAggregate {
+        FleetAggregate {
+            devices: 0,
+            status: [0; 6],
+            retried: 0,
+            latency_hist: latency_hist(),
+            latency_moments: Moments::new(),
+            attain_hist: attain_hist(),
+            attain_moments: Moments::new(),
+            makespan_moments: Moments::new(),
+            e2e_moments: Moments::new(),
+            tiers: Vec::new(),
+            outlier_k,
+            trace_window: trace_window.max(1),
+            outliers: Vec::new(),
+        }
+    }
+
+    fn tier_mut(&mut self, class: DeviceClass, vram_gb: u64) -> &mut TierAgg {
+        let key = |t: &TierAgg| (t.class as usize, t.vram_gb);
+        let probe = (class as usize, vram_gb);
+        let at = self.tiers.partition_point(|t| key(t) < probe);
+        if self.tiers.get(at).map(key) != Some(probe) {
+            self.tiers.insert(
+                at,
+                TierAgg {
+                    class,
+                    vram_gb,
+                    devices: 0,
+                    ok: 0,
+                    attain: Moments::new(),
+                    latency_hist: latency_hist(),
+                },
+            );
+        }
+        &mut self.tiers[at]
+    }
+
+    /// Fold one terminal device record (and optionally its trace tail, for
+    /// outlier retention). The record can be dropped afterwards.
+    pub fn fold(&mut self, rec: &DeviceRecord, trace: Option<Trace>) {
+        self.devices += 1;
+        self.status[status_slot(rec.status)] += 1;
+        if rec.retried {
+            self.retried += 1;
+        }
+        {
+            let tier = self.tier_mut(rec.class, rec.vram_gb);
+            tier.devices += 1;
+            if rec.status.is_ok() {
+                tier.ok += 1;
+                for &l in &rec.latencies {
+                    tier.latency_hist.fold(l);
+                }
+                if let Some(a) = rec.attainment {
+                    tier.attain.push(a);
+                }
+            }
+        }
+        if rec.status.is_ok() {
+            for &l in &rec.latencies {
+                self.latency_hist.fold(l);
+                self.latency_moments.push(l);
+            }
+            if let Some(a) = rec.attainment {
+                self.attain_hist.fold(a);
+                self.attain_moments.push(a);
+            }
+            self.makespan_moments.push(rec.makespan);
+            self.e2e_moments.push(rec.e2e_latency);
+        }
+        self.push_outlier(OutlierRow {
+            device: rec.device,
+            class: rec.class,
+            vram_gb: rec.vram_gb,
+            status: rec.status,
+            error: rec.error.clone(),
+            attainment: rec.attainment,
+            makespan: rec.makespan,
+            trace_digest: rec.trace_digest,
+            trace_rows: rec.trace_rows,
+            trace,
+        });
+    }
+
+    /// Insert a candidate into the worst-first bounded outlier list; an
+    /// evicted row's retained trace is freed immediately.
+    fn push_outlier(&mut self, row: OutlierRow) {
+        if self.outlier_k == 0 {
+            return;
+        }
+        let key = |r: &OutlierRow| (outlier_rank(r.status, r.attainment), r.device);
+        let probe = key(&row);
+        let at = self.outliers.partition_point(|r| {
+            let k = key(r);
+            k.0.total_cmp(&probe.0).then(k.1.cmp(&probe.1)).is_lt()
+        });
+        if at >= self.outlier_k {
+            return;
+        }
+        self.outliers.insert(at, row);
+        self.outliers.truncate(self.outlier_k);
+    }
+
+    /// Merge another shard's aggregate in. Exact fields (histograms, status
+    /// counts, outlier selection) are order-independent; moment merges are
+    /// floating-point, so the runner always merges in canonical shard order.
+    pub fn merge(&mut self, other: FleetAggregate) {
+        self.devices += other.devices;
+        for (slot, v) in self.status.iter_mut().zip(other.status) {
+            *slot += v;
+        }
+        self.retried += other.retried;
+        self.latency_hist.merge(&other.latency_hist);
+        self.latency_moments.merge(&other.latency_moments);
+        self.attain_hist.merge(&other.attain_hist);
+        self.attain_moments.merge(&other.attain_moments);
+        self.makespan_moments.merge(&other.makespan_moments);
+        self.e2e_moments.merge(&other.e2e_moments);
+        for t in other.tiers {
+            let tier = self.tier_mut(t.class, t.vram_gb);
+            tier.devices += t.devices;
+            tier.ok += t.ok;
+            tier.attain.merge(&t.attain);
+            tier.latency_hist.merge(&t.latency_hist);
+        }
+        for row in other.outliers {
+            self.push_outlier(row);
+        }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices
+    }
+
+    pub fn status_count(&self, status: ScenarioStatus) -> usize {
+        self.status[status_slot(status)]
+    }
+
+    pub fn latency_count(&self) -> u64 {
+        self.latency_hist.count()
+    }
+
+    pub fn latency_quantile(&self, q: f64) -> Option<f64> {
+        self.latency_hist.quantile(q)
+    }
+
+    pub fn attainment_quantile(&self, q: f64) -> Option<f64> {
+        self.attain_hist.quantile(q)
+    }
+
+    pub fn outliers(&self) -> &[OutlierRow] {
+        &self.outliers
+    }
+
+    pub fn tiers(&self) -> &[TierAgg] {
+        &self.tiers
+    }
+
+    /// Capacity-based resident-cell accounting. Outlier slots are charged
+    /// their *capacity* (`OUTLIER_ROW_CELLS + trace_window`) rather than
+    /// actual retention so the number is identical whether a row's trace
+    /// came from a live run (retained) or a journal resume (absent) — the
+    /// report stays byte-identical across both paths, and the figure is an
+    /// honest upper bound either way.
+    pub fn cells(&self) -> usize {
+        let tier_cells: usize = self
+            .tiers
+            .iter()
+            .map(|t| t.latency_hist.cells() + t.attain.cells() + 2)
+            .sum();
+        self.latency_hist.cells()
+            + self.attain_hist.cells()
+            + self.latency_moments.cells()
+            + self.attain_moments.cells()
+            + self.makespan_moments.cells()
+            + self.e2e_moments.cells()
+            + self.status.len()
+            + tier_cells
+            + self.outliers.len() * (OUTLIER_ROW_CELLS + self.trace_window)
+    }
+
+    /// Analytic per-shard capacity bound: what one shard's aggregate can
+    /// grow to regardless of how many devices fold into it.
+    pub fn shard_bound_cells(outlier_k: usize, trace_window: usize) -> usize {
+        let tier_cells =
+            MAX_TIERS * (latency_hist().cells() + Moments::new().cells() + 2);
+        latency_hist().cells()
+            + attain_hist().cells()
+            + 4 * Moments::new().cells()
+            + 6
+            + tier_cells
+            + outlier_k * (OUTLIER_ROW_CELLS + trace_window.max(1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// The population report: the merged aggregate plus provenance and the
+/// memory accounting. `to_json` renders the `consumerbench_fleet: 1`
+/// schema deterministically.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub spec_digest: String,
+    pub population: PopulationSpec,
+    pub mix: String,
+    pub strategy: String,
+    pub shard_size: usize,
+    pub shards: usize,
+    pub outlier_k: usize,
+    pub trace_window: usize,
+    pub agg: FleetAggregate,
+    /// Σ over shard aggregates of [`FleetAggregate::cells`] at their peak
+    /// (just before the canonical merge) — jobs- and resume-invariant.
+    pub resident_cells: usize,
+    /// `shards ×` [`FleetAggregate::shard_bound_cells`] — independent of
+    /// the device count by construction.
+    pub bound_cells: usize,
+}
+
+fn moments_json(m: &Moments, suffix: &str) -> String {
+    let opt = |v: f64| json_opt_num(if m.count() == 0 { None } else { Some(v) });
+    format!(
+        "\"mean{suffix}\": {}, \"std{suffix}\": {}, \"min{suffix}\": {}, \"max{suffix}\": {}",
+        opt(m.mean()),
+        opt(m.std()),
+        opt(m.min()),
+        opt(m.max())
+    )
+}
+
+impl FleetReport {
+    /// Deterministic JSON rendering — byte-identical across `--jobs`
+    /// values, repeats, and kill/resume for the same spec.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n  \"consumerbench_fleet\": 1,\n");
+        out.push_str(&format!("  \"spec_digest\": {},\n", json_str(&self.spec_digest)));
+        out.push_str(&format!(
+            "  \"population\": {{\"name\": {}, \"count\": {}, \"seed\": {}, \"weights\": {{\"edge\": {}, \"laptop\": {}, \"desktop\": {}}}}},\n",
+            json_str(&self.population.name),
+            self.population.count,
+            self.population.seed,
+            json_num(self.population.weights[0]),
+            json_num(self.population.weights[1]),
+            json_num(self.population.weights[2]),
+        ));
+        out.push_str(&format!(
+            "  \"slice\": {{\"mix\": {}, \"strategy\": {}, \"shard_size\": {}, \"shards\": {}, \"outlier_k\": {}, \"trace_window\": {}}},\n",
+            json_str(&self.mix),
+            json_str(&self.strategy),
+            self.shard_size,
+            self.shards,
+            self.outlier_k,
+            self.trace_window,
+        ));
+        let a = &self.agg;
+        out.push_str(&format!(
+            "  \"devices\": {{\"total\": {}, \"ok\": {}, \"failed\": {}, \"panicked\": {}, \"budget_exhausted\": {}, \"timeout\": {}, \"skipped\": {}, \"retried\": {}}},\n",
+            a.devices,
+            a.status[0],
+            a.status[1],
+            a.status[2],
+            a.status[3],
+            a.status[4],
+            a.status[5],
+            a.retried,
+        ));
+        out.push_str(&format!(
+            "  \"latency\": {{\"requests\": {}, {}, \"p50_s\": {}, \"p90_s\": {}, \"p99_s\": {}, \"rel_error_bound\": {}}},\n",
+            a.latency_hist.count(),
+            moments_json(&a.latency_moments, "_s"),
+            json_opt_num(a.latency_hist.quantile(0.50)),
+            json_opt_num(a.latency_hist.quantile(0.90)),
+            json_opt_num(a.latency_hist.quantile(0.99)),
+            json_num(a.latency_hist.error_bound()),
+        ));
+        out.push_str(&format!(
+            "  \"attainment\": {{\"devices\": {}, {}, \"p10\": {}, \"p50\": {}, \"p90\": {}, \"abs_error_bound\": {}}},\n",
+            a.attain_moments.count(),
+            moments_json(&a.attain_moments, ""),
+            json_opt_num(a.attain_hist.quantile(0.10)),
+            json_opt_num(a.attain_hist.quantile(0.50)),
+            json_opt_num(a.attain_hist.quantile(0.90)),
+            json_num(a.attain_hist.error_bound()),
+        ));
+        out.push_str(&format!(
+            "  \"makespan\": {{{}}},\n  \"e2e_latency\": {{{}}},\n",
+            moments_json(&a.makespan_moments, "_s"),
+            moments_json(&a.e2e_moments, "_s"),
+        ));
+        out.push_str("  \"tiers\": [\n");
+        for (i, t) in a.tiers.iter().enumerate() {
+            let mean_attain = json_opt_num(if t.attain.count() == 0 {
+                None
+            } else {
+                Some(t.attain.mean())
+            });
+            out.push_str(&format!(
+                "    {{\"class\": {}, \"vram_gb\": {}, \"devices\": {}, \"ok\": {}, \"mean_attainment\": {}, \"p50_latency_s\": {}, \"p99_latency_s\": {}}}{}\n",
+                json_str(class_key(t.class)),
+                t.vram_gb,
+                t.devices,
+                t.ok,
+                mean_attain,
+                json_opt_num(t.latency_hist.quantile(0.50)),
+                json_opt_num(t.latency_hist.quantile(0.99)),
+                if i + 1 < a.tiers.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n  \"outliers\": [\n");
+        for (i, r) in a.outliers.iter().enumerate() {
+            let error = match &r.error {
+                Some(e) => json_str(e),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "    {{\"device\": {}, \"class\": {}, \"vram_gb\": {}, \"status\": {}, \"error\": {}, \"attainment\": {}, \"makespan_s\": {}, \"trace_digest\": \"{:016x}\", \"trace_rows\": {}}}{}\n",
+                r.device,
+                json_str(class_key(r.class)),
+                r.vram_gb,
+                json_str(r.status.key()),
+                error,
+                json_opt_num(r.attainment),
+                json_num(r.makespan),
+                r.trace_digest,
+                r.trace_rows,
+                if i + 1 < a.outliers.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str(&format!(
+            "  \"aggregation\": {{\"resident_cells\": {}, \"bound_cells\": {}, \"shards\": {}}}\n",
+            self.resident_cells, self.bound_cells, self.shards,
+        ));
+        out.push_str("}\n");
+        out
+    }
+
+    /// Human-oriented terminal summary.
+    pub fn summary_table(&self) -> String {
+        let a = &self.agg;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fleet `{}`: {} devices, {} shards × {} (seed {}, mix {}, strategy {})\n",
+            self.population.name,
+            a.devices,
+            self.shards,
+            self.shard_size,
+            self.population.seed,
+            self.mix,
+            self.strategy,
+        ));
+        out.push_str(&format!(
+            "status: ok {} | failed {} | panicked {} | budget {} | timeout {} | retried {}\n",
+            a.status[0], a.status[1], a.status[2], a.status[3], a.status[4], a.retried,
+        ));
+        let q = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.3}"),
+            None => "n/a".to_string(),
+        };
+        out.push_str(&format!(
+            "latency: n={} p50 {}s p90 {}s p99 {}s (±{:.1}% bin error)\n",
+            a.latency_hist.count(),
+            q(a.latency_hist.quantile(0.50)),
+            q(a.latency_hist.quantile(0.90)),
+            q(a.latency_hist.quantile(0.99)),
+            a.latency_hist.error_bound() * 100.0,
+        ));
+        out.push_str(&format!(
+            "attainment: p10 {} p50 {} p90 {} mean {}\n",
+            q(a.attain_hist.quantile(0.10)),
+            q(a.attain_hist.quantile(0.50)),
+            q(a.attain_hist.quantile(0.90)),
+            q(if a.attain_moments.count() == 0 {
+                None
+            } else {
+                Some(a.attain_moments.mean())
+            }),
+        ));
+        for t in &a.tiers {
+            out.push_str(&format!(
+                "  tier {:7} {:>3} GB: {:>4} devices ({} ok), attainment {}, p99 latency {}s\n",
+                class_key(t.class),
+                t.vram_gb,
+                t.devices,
+                t.ok,
+                q(if t.attain.count() == 0 {
+                    None
+                } else {
+                    Some(t.attain.mean())
+                }),
+                q(t.latency_hist.quantile(0.99)),
+            ));
+        }
+        for r in &a.outliers {
+            out.push_str(&format!(
+                "  outlier device-{:05} {:7} {:>3} GB: {} attainment {}{}\n",
+                r.device,
+                class_key(r.class),
+                r.vram_gb,
+                r.status.key(),
+                q(r.attainment),
+                match &r.error {
+                    Some(e) => format!(" ({e})"),
+                    None => String::new(),
+                },
+            ));
+        }
+        out.push_str(&format!(
+            "aggregation: {} resident cells (bound {})\n",
+            self.resident_cells, self.bound_cells,
+        ));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Journal
+// ---------------------------------------------------------------------------
+
+/// One fleet journal line (with trailing newline). Same encoders as the
+/// report, so a journal round-trip reproduces every float bit-exactly.
+fn device_line(seed: u64, spec_digest: &str, rec: &DeviceRecord) -> String {
+    let mut out = String::with_capacity(256);
+    out.push_str("{\"v\": 1, \"fleet\": 1");
+    out.push_str(&format!(", \"device\": {}", rec.device));
+    out.push_str(&format!(", \"seed\": {seed}"));
+    out.push_str(&format!(", \"spec_digest\": {}", json_str(spec_digest)));
+    out.push_str(&format!(", \"status\": {}", json_str(rec.status.key())));
+    match &rec.error {
+        Some(e) => out.push_str(&format!(", \"error\": {}", json_str(e))),
+        None => out.push_str(", \"error\": null"),
+    }
+    out.push_str(&format!(", \"retried\": {}", rec.retried));
+    if rec.status.is_ok() {
+        out.push_str(", \"record\": {");
+        out.push_str(&format!("\"attainment\": {}", json_opt_num(rec.attainment)));
+        out.push_str(&format!(", \"makespan_s\": {}", json_num(rec.makespan)));
+        out.push_str(&format!(", \"e2e_latency_s\": {}", json_num(rec.e2e_latency)));
+        out.push_str(&format!(", \"trace_digest\": \"{:016x}\"", rec.trace_digest));
+        out.push_str(&format!(", \"trace_rows\": {}", rec.trace_rows));
+        out.push_str(", \"latencies_s\": [");
+        for (j, l) in rec.latencies.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&json_num(*l));
+        }
+        out.push_str("]}");
+    } else {
+        out.push_str(", \"record\": null");
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// `Num` → the number; `null` → a non-finite stand-in (see the matrix
+/// journal's identical convention).
+fn jnum(v: &JsonValue) -> Option<f64> {
+    match v {
+        JsonValue::Num(n) => Some(*n),
+        JsonValue::Null => Some(f64::INFINITY),
+        _ => None,
+    }
+}
+
+/// Reconstruct a device record from one validated journal entry; `None` on
+/// any shape mismatch (the caller then just re-executes the device).
+/// Class/VRAM are re-derived from the population — the spec digest already
+/// guarantees the journal and the population agree.
+fn record_from_journal(
+    spec: &FleetSpec,
+    index: usize,
+    status: ScenarioStatus,
+    v: &JsonValue,
+) -> Option<DeviceRecord> {
+    let mut rec = record_from(spec, index, status, None);
+    rec.error = match v.get("error")? {
+        JsonValue::Null => None,
+        e => Some(e.as_str()?.to_string()),
+    };
+    rec.retried = v.get("retried")?.as_bool()?;
+    if !status.is_ok() {
+        return Some(rec);
+    }
+    let row = v.get("record")?;
+    rec.attainment = match row.get("attainment")? {
+        JsonValue::Num(n) => Some(*n),
+        JsonValue::Null => None,
+        _ => return None,
+    };
+    rec.makespan = jnum(row.get("makespan_s")?)?;
+    rec.e2e_latency = jnum(row.get("e2e_latency_s")?)?;
+    rec.trace_digest = u64::from_str_radix(row.get("trace_digest")?.as_str()?, 16).ok()?;
+    rec.trace_rows = usize::try_from(row.get("trace_rows")?.as_u64()?).ok()?;
+    let lats = match row.get("latencies_s")? {
+        JsonValue::Arr(items) => items,
+        _ => return None,
+    };
+    rec.latencies = Vec::with_capacity(lats.len());
+    for l in lats {
+        match l {
+            JsonValue::Num(n) => rec.latencies.push(*n),
+            _ => return None,
+        }
+    }
+    Some(rec)
+}
+
+/// Replay a fleet journal into per-device slots. Same tolerance contract
+/// as the matrix journal: unparseable lines and stale entries are skipped,
+/// the last valid entry per device wins, `timeout`/`skipped` never resume.
+fn load_fleet_journal(
+    path: &Path,
+    spec: &FleetSpec,
+    spec_digest: &str,
+) -> Result<Vec<Option<DeviceRecord>>> {
+    let mut slots: Vec<Option<DeviceRecord>> = vec![None; spec.population.count];
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(slots),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading journal `{}`", path.display()))
+        }
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = json_parse(line) else {
+            continue;
+        };
+        if v.get("v").and_then(JsonValue::as_u64) != Some(1) {
+            continue;
+        }
+        if v.get("fleet").and_then(JsonValue::as_u64) != Some(1) {
+            continue;
+        }
+        if v.get("seed").and_then(JsonValue::as_u64) != Some(spec.population.seed) {
+            continue;
+        }
+        if v.get("spec_digest").and_then(JsonValue::as_str) != Some(spec_digest) {
+            continue;
+        }
+        let Some(index) = v
+            .get("device")
+            .and_then(JsonValue::as_u64)
+            .and_then(|d| usize::try_from(d).ok())
+        else {
+            continue;
+        };
+        if index >= slots.len() {
+            continue;
+        }
+        let Some(status) = v
+            .get("status")
+            .and_then(JsonValue::as_str)
+            .and_then(ScenarioStatus::from_key)
+        else {
+            continue;
+        };
+        if matches!(status, ScenarioStatus::Timeout | ScenarioStatus::Skipped) {
+            continue;
+        }
+        if let Some(rec) = record_from_journal(spec, index, status, &v) {
+            slots[index] = Some(rec);
+        }
+    }
+    Ok(slots)
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+/// Run a fleet sweep: shard the population, execute each shard's devices in
+/// index order on a work-stealing pool (stealing whole shards), fold every
+/// device into its shard's [`FleetAggregate`] as it completes, then merge
+/// the shard aggregates in canonical order. `Err` is reserved for
+/// infrastructure problems (an unreadable or unwritable journal) — device
+/// failures are aggregate rows, not errors.
+pub fn run_fleet(spec: &FleetSpec, opts: &FleetOptions) -> Result<FleetReport> {
+    let shards = spec.shards();
+    let jobs = opts.jobs.clamp(1, shards);
+    let spec_digest = spec.digest_hex();
+    let prefilled: Vec<Option<DeviceRecord>> = if opts.resume {
+        let path = opts
+            .journal
+            .as_ref()
+            .context("resume requires a journal path")?;
+        load_fleet_journal(path, spec, &spec_digest)?
+    } else {
+        vec![None; spec.population.count]
+    };
+    let journal = match &opts.journal {
+        Some(path) => Some(Journal::open(path, opts.resume)?),
+        None => None,
+    };
+    // Work-stealing over shard indices: a worker claims a whole shard and
+    // folds its devices in index order, so per-shard aggregates (float
+    // moment state included) are scheduling-independent.
+    let cursor = AtomicUsize::new(0);
+    let finished: Mutex<Vec<(usize, FleetAggregate)>> = Mutex::new(Vec::with_capacity(shards));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let s = cursor.fetch_add(1, Ordering::Relaxed);
+                    if s >= shards {
+                        break;
+                    }
+                    let (lo, hi) = spec.shard_range(s);
+                    let mut agg = FleetAggregate::new(spec.outlier_k, spec.trace_window);
+                    for i in lo..hi {
+                        if let Some(rec) = &prefilled[i] {
+                            // Resumed from the journal: fold the bit-exact
+                            // record; no trace to retain, nothing to
+                            // re-journal.
+                            agg.fold(rec, None);
+                            continue;
+                        }
+                        let (rec, trace) = supervise_device(spec, i, opts.watchdog);
+                        if let Some(journal) = &journal {
+                            // Timeouts are wall-clock artifacts: never
+                            // checkpointed, so they always re-execute.
+                            if rec.status != ScenarioStatus::Timeout {
+                                journal.append_line(&device_line(
+                                    spec.population.seed,
+                                    &spec_digest,
+                                    &rec,
+                                ));
+                            }
+                        }
+                        agg.fold(&rec, trace);
+                        // `rec` (and, unless retained as an outlier, the
+                        // trace) drops here — nothing per-device survives
+                        // the fold.
+                    }
+                    local.push((s, agg));
+                }
+                finished
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .extend(local);
+            });
+        }
+    });
+    if let Some(journal) = &journal {
+        if let Some(err) = journal.take_error() {
+            anyhow::bail!("writing journal: {err}");
+        }
+    }
+    let mut shard_aggs = finished.into_inner().unwrap_or_else(|e| e.into_inner());
+    shard_aggs.sort_by_key(|(s, _)| *s);
+    // Peak resident aggregation state: every shard aggregate alive at once,
+    // just before the merge. Jobs- and resume-invariant by construction.
+    let resident_cells: usize = shard_aggs.iter().map(|(_, a)| a.cells()).sum();
+    let mut merged = FleetAggregate::new(spec.outlier_k, spec.trace_window);
+    for (_, agg) in shard_aggs {
+        merged.merge(agg);
+    }
+    Ok(FleetReport {
+        spec_digest,
+        population: spec.population.clone(),
+        mix: spec.mix.name.to_string(),
+        strategy: strategy_key(spec.strategy).to_string(),
+        shard_size: spec.shard_size.max(1),
+        shards,
+        outlier_k: spec.outlier_k,
+        trace_window: spec.trace_window.max(1),
+        agg: merged,
+        resident_cells,
+        bound_cells: shards * FleetAggregate::shard_bound_cells(spec.outlier_k, spec.trace_window),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::population::DEVICE_CLASSES;
+
+    fn tiny_spec(count: usize) -> FleetSpec {
+        let mut spec = FleetSpec::new(PopulationSpec::default_population(count, 7));
+        spec.shard_size = 4;
+        spec.outlier_k = 3;
+        spec
+    }
+
+    #[test]
+    fn shard_partitioning_covers_population_exactly_once() {
+        let spec = tiny_spec(10);
+        assert_eq!(spec.shards(), 3);
+        let mut seen = Vec::new();
+        for s in 0..spec.shards() {
+            let (lo, hi) = spec.shard_range(s);
+            seen.extend(lo..hi);
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn digest_tracks_population_and_slice_but_not_sharding() {
+        let spec = tiny_spec(10);
+        let base = spec.digest_hex();
+        let mut resharded = spec.clone();
+        resharded.shard_size = 2;
+        resharded.outlier_k = 1;
+        assert_eq!(base, resharded.digest_hex());
+        let mut reseeded = spec.clone();
+        reseeded.population.seed = 8;
+        assert_ne!(base, reseeded.digest_hex());
+        let mut restrategied = spec.clone();
+        restrategied.strategy = Strategy::FairShare;
+        assert_ne!(base, restrategied.digest_hex());
+    }
+
+    #[test]
+    fn outlier_list_is_bounded_and_worst_first() {
+        let spec = tiny_spec(10);
+        let mut agg = FleetAggregate::new(3, 8);
+        for i in 0..10 {
+            let mut rec = record_from(&spec, i, ScenarioStatus::Ok, None);
+            rec.attainment = Some(i as f64 / 10.0);
+            agg.fold(&rec, None);
+        }
+        let ranks: Vec<usize> = agg.outliers().iter().map(|r| r.device).collect();
+        assert_eq!(ranks, vec![0, 1, 2]);
+        // A non-ok record outranks (sorts before) every ok attainment.
+        let rec = record_from(&spec, 9, ScenarioStatus::Panicked, Some("boom".into()));
+        agg.fold(&rec, None);
+        assert_eq!(agg.outliers()[0].device, 9);
+        assert_eq!(agg.outliers().len(), 3);
+    }
+
+    #[test]
+    fn aggregate_merge_matches_single_fold() {
+        let spec = tiny_spec(12);
+        let mut recs = Vec::new();
+        for i in 0..12 {
+            let mut rec = record_from(&spec, i, ScenarioStatus::Ok, None);
+            rec.attainment = Some((i % 5) as f64 / 4.0);
+            rec.makespan = 1.0 + i as f64;
+            rec.latencies = vec![0.01 * (i + 1) as f64, 0.2];
+            recs.push(rec);
+        }
+        let mut whole = FleetAggregate::new(4, 8);
+        for r in &recs {
+            whole.fold(r, None);
+        }
+        let mut left = FleetAggregate::new(4, 8);
+        let mut right = FleetAggregate::new(4, 8);
+        for r in &recs[..6] {
+            left.fold(r, None);
+        }
+        for r in &recs[6..] {
+            right.fold(r, None);
+        }
+        left.merge(right);
+        assert_eq!(whole.device_count(), left.device_count());
+        assert_eq!(whole.latency_count(), left.latency_count());
+        assert_eq!(whole.latency_quantile(0.5), left.latency_quantile(0.5));
+        assert_eq!(whole.latency_quantile(0.99), left.latency_quantile(0.99));
+        assert_eq!(whole.attainment_quantile(0.5), left.attainment_quantile(0.5));
+        assert_eq!(
+            whole.outliers().iter().map(|r| r.device).collect::<Vec<_>>(),
+            left.outliers().iter().map(|r| r.device).collect::<Vec<_>>(),
+        );
+        assert_eq!(whole.tiers().len(), left.tiers().len());
+    }
+
+    #[test]
+    fn cells_accounting_is_capacity_based_and_bounded() {
+        let spec = tiny_spec(40);
+        let bound = FleetAggregate::shard_bound_cells(spec.outlier_k, spec.trace_window);
+        let mut agg = FleetAggregate::new(spec.outlier_k, spec.trace_window);
+        for i in 0..40 {
+            let mut rec = record_from(&spec, i, ScenarioStatus::Ok, None);
+            rec.attainment = Some(0.5);
+            rec.latencies = vec![0.1; 4];
+            agg.fold(&rec, None);
+        }
+        assert!(agg.cells() <= bound, "{} > {}", agg.cells(), bound);
+        // The bound is a pure function of the knobs — no device-count term.
+        assert_eq!(
+            bound,
+            FleetAggregate::shard_bound_cells(spec.outlier_k, spec.trace_window)
+        );
+    }
+
+    #[test]
+    fn device_line_roundtrips_bit_exactly() {
+        let spec = tiny_spec(10);
+        let mut rec = record_from(&spec, 3, ScenarioStatus::Ok, None);
+        rec.attainment = Some(0.875);
+        rec.makespan = 12.125;
+        rec.e2e_latency = 11.0625;
+        rec.trace_digest = 0xdead_beef_0123_4567;
+        rec.trace_rows = 96;
+        rec.latencies = vec![0.1, 0.30000000000000004, 2.5];
+        let line = device_line(spec.population.seed, "cafebabe", &rec);
+        let v = json_parse(line.trim()).expect("journal line parses");
+        let status = ScenarioStatus::from_key(v.get("status").unwrap().as_str().unwrap()).unwrap();
+        let back = record_from_journal(&spec, 3, status, &v).expect("roundtrip");
+        assert_eq!(back.latencies, rec.latencies);
+        assert_eq!(back.makespan.to_bits(), rec.makespan.to_bits());
+        assert_eq!(back.trace_digest, rec.trace_digest);
+        assert_eq!(back.attainment, rec.attainment);
+        // Re-rendering the reconstructed record reproduces the line.
+        assert_eq!(device_line(spec.population.seed, "cafebabe", &back), line);
+    }
+
+    #[test]
+    fn failed_device_line_roundtrips() {
+        let spec = tiny_spec(10);
+        let mut rec = record_from(
+            &spec,
+            7,
+            ScenarioStatus::Failed,
+            Some("setup OOM: 9 GB model into 4 GB VRAM".to_string()),
+        );
+        rec.retried = true;
+        let line = device_line(spec.population.seed, "cafebabe", &rec);
+        let v = json_parse(line.trim()).expect("line parses");
+        let status = ScenarioStatus::from_key(v.get("status").unwrap().as_str().unwrap()).unwrap();
+        let back = record_from_journal(&spec, 7, status, &v).expect("roundtrip");
+        assert_eq!(back.status, ScenarioStatus::Failed);
+        assert!(back.retried);
+        assert_eq!(back.error.as_deref(), Some("setup OOM: 9 GB model into 4 GB VRAM"));
+        assert_eq!(device_line(spec.population.seed, "cafebabe", &back), line);
+    }
+
+    #[test]
+    fn tier_table_stays_sorted_and_bounded() {
+        let spec = FleetSpec::new(PopulationSpec::default_population(300, 11));
+        let mut agg = FleetAggregate::new(2, 8);
+        for i in 0..300 {
+            let mut rec = record_from(&spec, i, ScenarioStatus::Ok, None);
+            rec.attainment = Some(0.9);
+            agg.fold(&rec, None);
+        }
+        let keys: Vec<(usize, u64)> = agg
+            .tiers()
+            .iter()
+            .map(|t| (t.class as usize, t.vram_gb))
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        assert!(keys.len() <= MAX_TIERS, "{} tiers", keys.len());
+        assert!(DEVICE_CLASSES.len() <= keys.len());
+    }
+}

@@ -36,9 +36,22 @@
 //! the byte-identity contract (`tests/sweep_resilience.rs`).
 //!
 //! Exposed on the command line as `consumerbench scenario`.
+//!
+//! Beyond the two hand-picked testbeds, [`population`] samples synthetic
+//! device populations (edge / laptop / desktop tiers) and [`fleet`] sweeps
+//! them at scale with bounded-memory streaming aggregation — exposed as
+//! `consumerbench fleet`.
 
+pub mod fleet;
 pub mod matrix;
+pub mod population;
 pub mod runner;
+
+pub use fleet::{
+    run_fleet, DeviceRecord, FleetAggregate, FleetOptions, FleetReport, FleetSpec, OutlierRow,
+    TierAgg, DEFAULT_FLEET_TRACE_WINDOW, DEFAULT_OUTLIER_K, DEFAULT_SHARD_SIZE,
+};
+pub use population::{class_key, DeviceClass, DeviceSpec, PopulationSpec, DEVICE_CLASSES};
 
 pub use matrix::{
     backend_key, chaos_key, server_mode_key, strategy_key, testbed_key, workflow_key, AppMix,

@@ -1,0 +1,423 @@
+//! Seeded device-population sampling for fleet-scale sweeps.
+//!
+//! The paper evaluates two hand-picked testbeds; the ROADMAP's north star
+//! ("millions of users") needs a *population* axis. This module synthesizes
+//! end-user devices — edge boxes, laptops, desktops — as full
+//! [`Testbed`]s: VRAM tier, SM count, memory bandwidth, thermal envelope,
+//! and unified-vs-discrete memory architecture are all sampled from
+//! class-conditional ranges via the crate's xorshift64* [`Rng`].
+//!
+//! Determinism contract: `population.device(i)` is a pure function of
+//! `(population seed, i)` — each device forks its own RNG stream from the
+//! population seed mixed with its index, and every profile field draws in a
+//! fixed documented order. Sampling device 1 500 never requires sampling
+//! devices 0..1 499, which is what lets fleet shards run devices in any
+//! worker interleaving (and lets `--resume` skip devices entirely) while
+//! remaining byte-identical.
+//!
+//! Sampled values are quantized to whole units (GB, GB/s, W, GFLOP/s per
+//! SM) so the synthesized profiles read like spec sheets rather than float
+//! noise, and so the population YAML echo in reports stays short.
+
+use anyhow::{bail, Context, Result};
+
+use crate::gpusim::profiles::{CpuProfile, GpuProfile, Testbed};
+use crate::util::rng::Rng;
+use crate::util::yaml;
+
+/// Device class axis — the coarse market segment a sampled device belongs
+/// to. Classes condition every other sampled dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DeviceClass {
+    /// Fanless unified-memory edge hardware (SBCs, thin tablets).
+    Edge,
+    /// Unified-memory laptops (Apple-Silicon-like SoCs).
+    Laptop,
+    /// Discrete-GPU desktops and small workstations.
+    Desktop,
+}
+
+/// All classes in canonical (report) order.
+pub const DEVICE_CLASSES: [DeviceClass; 3] =
+    [DeviceClass::Edge, DeviceClass::Laptop, DeviceClass::Desktop];
+
+/// Stable report/journal key for a class.
+pub fn class_key(class: DeviceClass) -> &'static str {
+    match class {
+        DeviceClass::Edge => "edge",
+        DeviceClass::Laptop => "laptop",
+        DeviceClass::Desktop => "desktop",
+    }
+}
+
+/// VRAM tiers per class, in GB. Unified-memory classes share this capacity
+/// between CPU and GPU (it doubles as the DRAM size); desktops carry it as
+/// dedicated VRAM next to separately-sampled DRAM.
+fn vram_tiers(class: DeviceClass) -> &'static [u64] {
+    match class {
+        DeviceClass::Edge => &[4, 6, 8],
+        DeviceClass::Laptop => &[8, 16, 32],
+        DeviceClass::Desktop => &[8, 12, 16, 24],
+    }
+}
+
+/// A parsed (or programmatically built) population specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PopulationSpec {
+    pub name: String,
+    /// Number of devices in the population.
+    pub count: usize,
+    /// Population seed — with `count` and the weights, the complete
+    /// description of every synthesized device.
+    pub seed: u64,
+    /// Class-mix weights in [`DEVICE_CLASSES`] order (edge, laptop,
+    /// desktop). Must be non-negative with a positive sum.
+    pub weights: [f64; 3],
+}
+
+/// One sampled device: its class, headline VRAM tier, and the fully
+/// synthesized testbed the scenario slice runs on.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub index: usize,
+    pub class: DeviceClass,
+    pub vram_gb: u64,
+    pub testbed: Testbed,
+}
+
+impl PopulationSpec {
+    /// The default population: a quarter edge, the plurality laptops, the
+    /// rest desktops — a consumer-device mix, not a server rack.
+    pub fn default_population(count: usize, seed: u64) -> PopulationSpec {
+        PopulationSpec {
+            name: "default".to_string(),
+            count,
+            seed,
+            weights: [0.25, 0.45, 0.30],
+        }
+    }
+
+    /// Parse the population YAML schema (see README "Fleet sweeps"):
+    ///
+    /// ```yaml
+    /// population:
+    ///   name: pilot        # optional, default "default"
+    ///   count: 200
+    ///   seed: 7            # optional, default 42
+    ///   classes:           # optional, default 0.25/0.45/0.30
+    ///     edge: 0.25
+    ///     laptop: 0.45
+    ///     desktop: 0.30
+    /// ```
+    pub fn parse_yaml(text: &str) -> Result<PopulationSpec> {
+        let doc = yaml::parse(text).map_err(|e| {
+            anyhow::anyhow!("population YAML, line {}: {}", e.line, e.msg)
+        })?;
+        let pop = doc
+            .get("population")
+            .context("population YAML: missing top-level `population:` map")?;
+        let mut spec = PopulationSpec::default_population(0, 42);
+        if let Some(name) = pop.get("name").and_then(yaml::Value::as_str) {
+            spec.name = name.to_string();
+        }
+        spec.count = pop
+            .get("count")
+            .and_then(yaml::Value::as_i64)
+            .context("population YAML: `count:` must be a positive integer")?
+            as usize;
+        if spec.count == 0 {
+            bail!("population YAML: `count:` must be at least 1");
+        }
+        if let Some(seed) = pop.get("seed").and_then(yaml::Value::as_i64) {
+            spec.seed = seed as u64;
+        }
+        if let Some(classes) = pop.get("classes") {
+            let map = classes
+                .as_map()
+                .context("population YAML: `classes:` must be a map")?;
+            let mut weights = [0.0f64; 3];
+            for (key, value) in map {
+                let slot = DEVICE_CLASSES
+                    .iter()
+                    .position(|&c| class_key(c) == key)
+                    .with_context(|| {
+                        format!("population YAML: unknown class `{key}` (edge|laptop|desktop)")
+                    })?;
+                weights[slot] = value
+                    .as_f64()
+                    .with_context(|| format!("population YAML: class `{key}` weight"))?;
+            }
+            if weights.iter().any(|&w| w < 0.0 || !w.is_finite())
+                || weights.iter().sum::<f64>() <= 0.0
+            {
+                bail!("population YAML: class weights must be non-negative with a positive sum");
+            }
+            spec.weights = weights;
+        }
+        Ok(spec)
+    }
+
+    /// Canonical YAML rendering — the population half of the fleet spec
+    /// digest, so any change to the population invalidates journal entries.
+    pub fn to_yaml(&self) -> String {
+        format!(
+            "population:\n  name: {}\n  count: {}\n  seed: {}\n  classes:\n    edge: {}\n    laptop: {}\n    desktop: {}\n",
+            self.name, self.count, self.seed, self.weights[0], self.weights[1], self.weights[2]
+        )
+    }
+
+    /// Synthesize device `index`. Pure in `(self.seed, index)`; see the
+    /// module docs for the determinism contract.
+    pub fn device(&self, index: usize) -> DeviceSpec {
+        let mix = self.seed ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(mix);
+        // Draw order is part of the format: class, VRAM tier, SM count,
+        // bandwidth, thermal envelope, per-SM throughput, CPU dimensions.
+        let class = DEVICE_CLASSES[rng.weighted_index(&self.weights)];
+        let vram_gb = *rng.choice(vram_tiers(class));
+        let (gpu, cpu) = match class {
+            DeviceClass::Edge => synth_unified(
+                &mut rng,
+                vram_gb,
+                UnifiedRanges {
+                    gpu_names: ("EdgeGPU", "EdgeCPU"),
+                    sms: (4, 10),
+                    bw_gbs: (34, 120),
+                    max_power_w: (6, 15),
+                    gflops_per_sm: (120, 220),
+                    cores: (4, 8),
+                    cpu_gflops: (100, 300),
+                },
+            ),
+            DeviceClass::Laptop => synth_unified(
+                &mut rng,
+                vram_gb,
+                UnifiedRanges {
+                    gpu_names: ("LaptopGPU", "LaptopCPU"),
+                    sms: (8, 24),
+                    bw_gbs: (100, 400),
+                    max_power_w: (20, 60),
+                    gflops_per_sm: (200, 330),
+                    cores: (6, 12),
+                    cpu_gflops: (300, 900),
+                },
+            ),
+            DeviceClass::Desktop => synth_desktop(&mut rng, vram_gb),
+        };
+        DeviceSpec {
+            index,
+            class,
+            vram_gb,
+            testbed: Testbed { gpu, cpu },
+        }
+    }
+}
+
+/// Class-conditional sampling ranges for unified-memory devices. All
+/// ranges are inclusive and quantized to whole units.
+struct UnifiedRanges {
+    gpu_names: (&'static str, &'static str),
+    sms: (u64, u64),
+    bw_gbs: (u64, u64),
+    max_power_w: (u64, u64),
+    gflops_per_sm: (u64, u64),
+    cores: (u64, u64),
+    cpu_gflops: (u64, u64),
+}
+
+/// Architectural constants shared by every synthesized GPU — the same
+/// per-SM envelope the calibrated profiles use; only the sampled
+/// dimensions vary across the population.
+fn base_gpu(name: &'static str, num_sms: usize, unified: bool) -> GpuProfile {
+    GpuProfile {
+        name,
+        num_sms,
+        max_threads_per_sm: 1024,
+        max_warps_per_sm: 32,
+        warp_size: 32,
+        regs_per_sm: 65_536,
+        smem_per_sm: 65_536,
+        max_blocks_per_sm: 16,
+        vram_bytes: 0,
+        mem_bw: 0.0,
+        peak_flops: 0.0,
+        launch_overhead: if unified { 8e-6 } else { 5e-6 },
+        idle_power: 0.0,
+        max_power: 0.0,
+        occ_saturation: 0.40,
+        unified_memory: unified,
+    }
+}
+
+/// Sample a unified-memory SoC (edge / laptop): GPU and CPU share the
+/// memory pool and bandwidth budget, like the M1 Pro profile.
+fn synth_unified(rng: &mut Rng, vram_gb: u64, r: UnifiedRanges) -> (GpuProfile, CpuProfile) {
+    // `range_u64` is exclusive at the top; the class tables read as
+    // inclusive spec-sheet ranges, hence the `+ 1`s.
+    let sms = rng.range_u64(r.sms.0, r.sms.1 + 1) as usize;
+    let bw_gbs = rng.range_u64(r.bw_gbs.0, r.bw_gbs.1 + 1);
+    let max_power = rng.range_u64(r.max_power_w.0, r.max_power_w.1 + 1) as f64;
+    let gflops_per_sm = rng.range_u64(r.gflops_per_sm.0, r.gflops_per_sm.1 + 1);
+    let cores = rng.range_u64(r.cores.0, r.cores.1 + 1) as usize;
+    let cpu_gflops = rng.range_u64(r.cpu_gflops.0, r.cpu_gflops.1 + 1);
+    let mut gpu = base_gpu(r.gpu_names.0, sms, true);
+    gpu.vram_bytes = vram_gb * (1 << 30);
+    gpu.mem_bw = bw_gbs as f64 * 1e9;
+    gpu.peak_flops = sms as f64 * gflops_per_sm as f64 * 1e9;
+    gpu.max_power = max_power;
+    // Thermal envelope: unified SoCs idle near nothing (≈8% of TDP, ≥1 W).
+    gpu.idle_power = (max_power * 0.08).max(1.0).round();
+    let cpu = CpuProfile {
+        name: r.gpu_names.1,
+        num_cores: cores,
+        peak_flops: cpu_gflops as f64 * 1e9,
+        // The CPU cluster reaches roughly half the fabric bandwidth (the
+        // calibrated M1 Pro profile's ratio).
+        mem_bw: bw_gbs as f64 * 0.5e9,
+        dram_bytes: vram_gb * (1 << 30),
+        idle_power: 1.0,
+        max_power,
+        dispatch_overhead: 2e-6,
+    };
+    (gpu, cpu)
+}
+
+/// Sample a discrete-GPU desktop: dedicated VRAM, separately sampled DRAM,
+/// server-class thermal envelope.
+fn synth_desktop(rng: &mut Rng, vram_gb: u64) -> (GpuProfile, CpuProfile) {
+    let sms = rng.range_u64(24, 85) as usize;
+    let bw_gbs = rng.range_u64(256, 1009);
+    let max_power = rng.range_u64(120, 451) as f64;
+    let gflops_per_sm = rng.range_u64(180, 331);
+    let cores = rng.range_u64(8, 33) as usize;
+    let cpu_gflops = rng.range_u64(400, 1601);
+    let dram_gb = *rng.choice(&[16u64, 32, 64]);
+    let cpu_bw_gbs = rng.range_u64(40, 121);
+    let mut gpu = base_gpu("DesktopGPU", sms, false);
+    gpu.vram_bytes = vram_gb * (1 << 30);
+    gpu.mem_bw = bw_gbs as f64 * 1e9;
+    gpu.peak_flops = sms as f64 * gflops_per_sm as f64 * 1e9;
+    gpu.max_power = max_power;
+    // Discrete boards idle around a fifth of TDP (RTX 6000: 55 / 260 W).
+    gpu.idle_power = (max_power * 0.2).round();
+    let cpu = CpuProfile {
+        name: "DesktopCPU",
+        num_cores: cores,
+        peak_flops: cpu_gflops as f64 * 1e9,
+        mem_bw: cpu_bw_gbs as f64 * 1e9,
+        dram_bytes: dram_gb * (1 << 30),
+        idle_power: 15.0,
+        max_power: 125.0,
+        dispatch_overhead: 2e-6,
+    };
+    (gpu, cpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_is_pure_in_seed_and_index() {
+        let pop = PopulationSpec::default_population(100, 7);
+        let a = pop.device(42);
+        let b = pop.device(42);
+        assert_eq!(a.class, b.class);
+        assert_eq!(a.vram_gb, b.vram_gb);
+        assert_eq!(a.testbed.gpu, b.testbed.gpu);
+        assert_eq!(a.testbed.cpu, b.testbed.cpu);
+        // Random access must not depend on sampling earlier devices.
+        let fresh = PopulationSpec::default_population(100, 7);
+        for i in (0..100).rev() {
+            let x = fresh.device(i);
+            let y = pop.device(i);
+            assert_eq!(x.testbed.gpu, y.testbed.gpu, "device {i}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ_and_classes_all_appear() {
+        let a = PopulationSpec::default_population(200, 1);
+        let b = PopulationSpec::default_population(200, 2);
+        assert!(
+            (0..200).any(|i| a.device(i).testbed.gpu != b.device(i).testbed.gpu),
+            "seed must matter"
+        );
+        for class in DEVICE_CLASSES {
+            assert!(
+                (0..200).any(|i| a.device(i).class == class),
+                "class {} never sampled",
+                class_key(class)
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_profiles_respect_class_envelopes() {
+        let pop = PopulationSpec::default_population(300, 9);
+        for i in 0..300 {
+            let d = pop.device(i);
+            let g = &d.testbed.gpu;
+            let c = &d.testbed.cpu;
+            assert!(vram_tiers(d.class).contains(&d.vram_gb), "device {i}");
+            assert_eq!(g.vram_bytes, d.vram_gb * (1 << 30), "device {i}");
+            assert!(g.idle_power < g.max_power, "device {i}");
+            assert!(g.peak_flops > 0.0 && g.mem_bw > 0.0, "device {i}");
+            match d.class {
+                DeviceClass::Edge => {
+                    assert!(g.unified_memory && g.num_sms <= 10 && g.max_power <= 15.0);
+                    assert_eq!(g.vram_bytes, c.dram_bytes);
+                }
+                DeviceClass::Laptop => {
+                    assert!(g.unified_memory && (8..=24).contains(&g.num_sms));
+                    assert_eq!(g.vram_bytes, c.dram_bytes);
+                }
+                DeviceClass::Desktop => {
+                    assert!(!g.unified_memory && g.num_sms >= 24 && g.max_power >= 120.0);
+                    assert!(c.dram_bytes >= 16 * (1 << 30));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn yaml_roundtrip_and_validation() {
+        let text = "\
+population:
+  name: pilot
+  count: 50
+  seed: 9
+  classes:
+    edge: 0.5
+    laptop: 0.25
+    desktop: 0.25
+";
+        let spec = PopulationSpec::parse_yaml(text).unwrap();
+        assert_eq!(spec.name, "pilot");
+        assert_eq!(spec.count, 50);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.weights, [0.5, 0.25, 0.25]);
+        let again = PopulationSpec::parse_yaml(&spec.to_yaml()).unwrap();
+        assert_eq!(again, spec);
+
+        assert!(PopulationSpec::parse_yaml("population:\n  count: 0\n").is_err());
+        assert!(PopulationSpec::parse_yaml("count: 5\n").is_err());
+        assert!(PopulationSpec::parse_yaml(
+            "population:\n  count: 5\n  classes:\n    warp_drive: 1\n"
+        )
+        .is_err());
+        assert!(PopulationSpec::parse_yaml(
+            "population:\n  count: 5\n  classes:\n    edge: 0\n    laptop: 0\n    desktop: 0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn defaults_fill_optional_fields() {
+        let spec = PopulationSpec::parse_yaml("population:\n  count: 12\n").unwrap();
+        assert_eq!(spec.name, "default");
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.weights, [0.25, 0.45, 0.30]);
+        assert_eq!(spec.count, 12);
+    }
+}

@@ -519,14 +519,16 @@ fn outcome_from(spec: &ScenarioSpec, result: &ScenarioResult) -> ScenarioOutcome
 
 /// Append-only JSONL checkpoint shared by the worker pool. Write errors are
 /// recorded (first one wins) instead of panicking inside a worker; the
-/// supervisor surfaces them after the scope joins.
-struct Journal {
+/// supervisor surfaces them after the scope joins. Also reused by the fleet
+/// runner ([`crate::scenario::fleet`]), which journals device records with
+/// the same open/repair/append semantics.
+pub(crate) struct Journal {
     file: Mutex<std::fs::File>,
     error: Mutex<Option<String>>,
 }
 
 impl Journal {
-    fn open(path: &Path, resume: bool) -> Result<Journal> {
+    pub(crate) fn open(path: &Path, resume: bool) -> Result<Journal> {
         use std::io::{Read, Seek, SeekFrom, Write};
         let mut options = std::fs::OpenOptions::new();
         if resume {
@@ -563,7 +565,7 @@ impl Journal {
         })
     }
 
-    fn append_line(&self, line: &str) {
+    pub(crate) fn append_line(&self, line: &str) {
         use std::io::Write as _;
         let mut file = self.file.lock().unwrap_or_else(|e| e.into_inner());
         let result = file.write_all(line.as_bytes()).and_then(|()| file.flush());
@@ -575,7 +577,7 @@ impl Journal {
         }
     }
 
-    fn take_error(&self) -> Option<String> {
+    pub(crate) fn take_error(&self) -> Option<String> {
         self.error.lock().unwrap_or_else(|e| e.into_inner()).take()
     }
 }

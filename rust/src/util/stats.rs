@@ -3,6 +3,13 @@
 //! The report generator summarizes per-request latencies, SLO attainment, and
 //! sampled system counters; everything here is allocation-light and exact
 //! (percentiles by sorting, not sketches — request counts are small).
+//!
+//! The fleet subsystem is the exception: a device-population sweep cannot
+//! retain every sample, so it folds metrics into *mergeable* fixed-bin
+//! sketches — [`FixedHistogram`] (exact `u64` bin counts, so merging is
+//! associative, commutative, and shard-partition-invariant) and [`Moments`]
+//! (Welford/Chan streaming mean/variance, merged in canonical shard order
+//! so report bytes stay identical at any `--jobs`).
 
 /// Summary statistics over a set of samples.
 #[derive(Debug, Clone, PartialEq)]
@@ -19,13 +26,17 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary. Returns `None` for an empty slice.
+    /// Compute a summary. Returns `None` for an empty slice — and for a
+    /// slice containing any NaN: a NaN sample means an upstream metric is
+    /// broken, and the old `partial_cmp(..).expect("NaN in samples")` turned
+    /// that into a panic deep inside report generation. Rejecting the whole
+    /// set keeps the report pipeline alive and renders the field as `n/a`.
     pub fn of(samples: &[f64]) -> Option<Summary> {
-        if samples.is_empty() {
+        if samples.is_empty() || samples.iter().any(|x| x.is_nan()) {
             return None;
         }
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        sorted.sort_by(f64::total_cmp);
         let count = sorted.len();
         let mean = sorted.iter().sum::<f64>() / count as f64;
         let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / count as f64;
@@ -57,11 +68,16 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
-/// Percentile of unsorted data (sorts a copy).
-pub fn percentile(samples: &[f64], p: f64) -> f64 {
+/// Percentile of unsorted data (sorts a copy). `None` for an empty slice or
+/// one containing NaN — the same rejection contract as [`Summary::of`], and
+/// for the same reason: this used to panic via `partial_cmp(..).expect(..)`.
+pub fn percentile(samples: &[f64], p: f64) -> Option<f64> {
+    if samples.is_empty() || samples.iter().any(|x| x.is_nan()) {
+        return None;
+    }
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
-    percentile_sorted(&sorted, p)
+    sorted.sort_by(f64::total_cmp);
+    Some(percentile_sorted(&sorted, p))
 }
 
 /// Fraction of samples that are <= the threshold. Used for SLO attainment:
@@ -149,6 +165,264 @@ impl Welford {
     }
 }
 
+/// Mergeable fixed-bin histogram over `[lo, hi)` with either log-scale or
+/// linear bin edges, plus explicit underflow/overflow bins. The bin layout
+/// is fixed at construction, and counts are exact `u64`s, so
+/// [`FixedHistogram::merge`] is plain integer addition: **associative,
+/// commutative, and shard-partition-invariant** — folding a population
+/// through any sharding yields bit-identical counts, which is what lets the
+/// fleet runner promise byte-identical reports at any `--jobs`.
+///
+/// Quantiles use the nearest-rank convention (the `k`-th smallest sample
+/// with `k = round(q·(n−1))`) and answer with the bin's representative
+/// value: the geometric midpoint for log bins, the arithmetic midpoint for
+/// linear bins. The error versus the exact nearest-rank sample is therefore
+/// at most half a bin: relative error `≤ (hi/lo)^(1/(2·bins)) − 1` for log
+/// scale, absolute error `≤ (hi − lo)/(2·bins)` for linear. Samples landing
+/// in the underflow/overflow bins answer exactly `lo`/`hi`.
+///
+/// NaN samples count into the underflow bin (the `!(x >= lo)` branch) so a
+/// broken metric can never panic the fold path; the fleet runner filters
+/// them out before folding anyway.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FixedHistogram {
+    log: bool,
+    lo: f64,
+    hi: f64,
+    /// ln(lo) (log scale) or lo (linear) — the fold transform's offset.
+    t_lo: f64,
+    /// bins / (t(hi) − t(lo)) — the fold transform's scale.
+    t_scale: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl FixedHistogram {
+    /// Log-scale layout: `bins` geometric bins spanning `[lo, hi)`, `lo > 0`.
+    pub fn log_scale(lo: f64, hi: f64, bins: usize) -> FixedHistogram {
+        assert!(lo > 0.0 && hi > lo && bins > 0, "bad log layout");
+        FixedHistogram {
+            log: true,
+            lo,
+            hi,
+            t_lo: lo.ln(),
+            t_scale: bins as f64 / (hi.ln() - lo.ln()),
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    /// Linear layout: `bins` equal-width bins spanning `[lo, hi)`.
+    pub fn linear(lo: f64, hi: f64, bins: usize) -> FixedHistogram {
+        assert!(hi > lo && bins > 0, "bad linear layout");
+        FixedHistogram {
+            log: false,
+            lo,
+            hi,
+            t_lo: lo,
+            t_scale: bins as f64 / (hi - lo),
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    /// Half-bin quantile error bound of this layout (relative for log
+    /// scale, absolute for linear) — the documented accuracy contract.
+    pub fn error_bound(&self) -> f64 {
+        let bins = self.counts.len() as f64;
+        if self.log {
+            (self.hi / self.lo).powf(1.0 / (2.0 * bins)) - 1.0
+        } else {
+            (self.hi - self.lo) / (2.0 * bins)
+        }
+    }
+
+    /// Fold one sample. Total work is one transform + one increment.
+    pub fn fold(&mut self, x: f64) {
+        if !(x >= self.lo) {
+            // Below range — and NaN, which fails every comparison.
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let t = if self.log { x.ln() } else { x };
+            let idx = ((t - self.t_lo) * self.t_scale) as usize;
+            // Float rounding at the top edge can land one past the end.
+            let idx = idx.min(self.counts.len() - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    /// Merge another histogram of the identical layout into this one.
+    /// Exact integer addition — see the type docs for why this makes shard
+    /// folds order-independent.
+    pub fn merge(&mut self, other: &FixedHistogram) {
+        assert!(
+            self.log == other.log
+                && self.lo == other.lo
+                && self.hi == other.hi
+                && self.counts.len() == other.counts.len(),
+            "merging histograms with different layouts"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+    }
+
+    /// Total folded samples (underflow and overflow included).
+    pub fn count(&self) -> u64 {
+        self.underflow + self.overflow + self.counts.iter().sum::<u64>()
+    }
+
+    /// Nearest-rank quantile, `q` in `[0, 1]`. `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let k = ((q.clamp(0.0, 1.0) * (n - 1) as f64).round() as u64).min(n - 1);
+        if k < self.underflow {
+            return Some(self.lo);
+        }
+        let mut seen = self.underflow;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if k < seen {
+                return Some(self.representative(i));
+            }
+        }
+        Some(self.hi)
+    }
+
+    /// The representative (midpoint) value of interior bin `i`.
+    fn representative(&self, i: usize) -> f64 {
+        let frac = (i as f64 + 0.5) / self.t_scale;
+        if self.log {
+            (self.t_lo + frac).exp()
+        } else {
+            self.t_lo + frac
+        }
+    }
+
+    /// Resident aggregation cells of this sketch (interior bins plus the
+    /// two boundary bins) — the unit the fleet memory-bound accounting and
+    /// its pinned test are expressed in.
+    pub fn cells(&self) -> usize {
+        self.counts.len() + 2
+    }
+}
+
+/// Mergeable streaming moments: count, mean, M2 (for variance), min, max.
+/// [`Moments::push`] is Welford's update; [`Moments::merge`] is Chan's
+/// parallel combination. Counts and extrema merge exactly; mean/M2 are
+/// floating point, so merging is associative only up to rounding — callers
+/// that need byte-identical output (the fleet runner) must merge in a
+/// canonical order, which is independent of `--jobs` by construction there.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Moments {
+    fn default() -> Self {
+        Moments::new()
+    }
+}
+
+impl Moments {
+    pub fn new() -> Moments {
+        Moments {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Chan's parallel merge. Empty operands are identity elements, so a
+    /// fold over empty shards is a no-op.
+    pub fn merge(&mut self, other: &Moments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Resident aggregation cells (one per scalar field).
+    pub fn cells(&self) -> usize {
+        5
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,5 +491,192 @@ mod tests {
         assert_eq!(w.mean(), 0.0);
         assert_eq!(w.std(), 0.0);
         assert_eq!(w.count(), 0);
+    }
+
+    #[test]
+    fn summary_of_nan_is_none_not_panic() {
+        // Regression: `Summary::of` used to panic via
+        // `partial_cmp(..).expect("NaN in samples")` deep inside report
+        // generation. A NaN sample now rejects the whole set.
+        assert!(Summary::of(&[1.0, f64::NAN, 3.0]).is_none());
+        assert!(Summary::of(&[f64::NAN]).is_none());
+        // Infinities are orderable and stay summarizable.
+        let s = Summary::of(&[1.0, f64::INFINITY]).unwrap();
+        assert_eq!(s.max, f64::INFINITY);
+    }
+
+    #[test]
+    fn percentile_nan_is_none_not_panic() {
+        assert!(percentile(&[2.0, f64::NAN], 50.0).is_none());
+        assert!(percentile(&[], 50.0).is_none());
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), Some(2.0));
+    }
+
+    /// Deterministic pseudo-samples without pulling in util::rng (cross-mod
+    /// dev-dependency keeps this file self-contained): xorshift64*.
+    fn samples(seed: u64, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                let u = (s.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f64
+                    / (1u64 << 53) as f64;
+                // Log-uniform spread across the range.
+                lo * (hi / lo).powf(u)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_commutative() {
+        let xs = samples(7, 600, 1e-3, 1e2);
+        let mk = |slice: &[f64]| {
+            let mut h = FixedHistogram::log_scale(1e-2, 1e1, 24);
+            for &x in slice {
+                h.fold(x);
+            }
+            h
+        };
+        let (a, b, c) = (mk(&xs[..200]), mk(&xs[200..350]), mk(&xs[350..]));
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+        // a ⊕ b == b ⊕ a
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab_c.count(), 600);
+    }
+
+    #[test]
+    fn histogram_merge_is_shard_count_invariant() {
+        let xs = samples(11, 500, 1e-4, 1e3);
+        let whole = {
+            let mut h = FixedHistogram::log_scale(1e-3, 1e2, 60);
+            for &x in &xs {
+                h.fold(x);
+            }
+            h
+        };
+        for shard in [1usize, 7, 50, 499] {
+            let mut merged = FixedHistogram::log_scale(1e-3, 1e2, 60);
+            for chunk in xs.chunks(shard) {
+                let mut h = FixedHistogram::log_scale(1e-3, 1e2, 60);
+                for &x in chunk {
+                    h.fold(x);
+                }
+                merged.merge(&h);
+            }
+            assert_eq!(merged, whole, "shard size {shard}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantile_within_documented_error_bound() {
+        let xs = samples(13, 400, 2e-3, 5e1);
+        let mut h = FixedHistogram::log_scale(1e-4, 1e3, 96);
+        for &x in &xs {
+            h.fold(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        let bound = h.error_bound();
+        assert!((bound - 0.087).abs() < 0.01, "bound {bound}");
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let est = h.quantile(q).unwrap();
+            let k = ((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+            let exact = sorted[k];
+            assert!(
+                (est - exact).abs() / exact <= bound,
+                "q={q}: est {est} vs exact {exact}, bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_boundary_bins_and_nan() {
+        let mut h = FixedHistogram::log_scale(1.0, 100.0, 10);
+        h.fold(0.5); // underflow
+        h.fold(f64::NAN); // underflow, never a panic
+        h.fold(150.0); // overflow
+        h.fold(1.0); // first interior bin (lo is inclusive)
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.quantile(0.0), Some(1.0)); // underflow answers lo
+        assert_eq!(h.quantile(1.0), Some(100.0)); // overflow answers hi
+        assert_eq!(h.cells(), 12);
+    }
+
+    #[test]
+    fn linear_histogram_covers_attainment_range() {
+        let mut h = FixedHistogram::linear(0.0, 1.0, 100);
+        for i in 0..=100 {
+            h.fold(i as f64 / 100.0);
+        }
+        // 1.0 lands in the overflow bin and answers exactly 1.0.
+        assert_eq!(h.quantile(1.0), Some(1.0));
+        assert_eq!(h.count(), 101);
+        assert!((h.error_bound() - 0.005).abs() < 1e-12);
+        let p50 = h.quantile(0.5).unwrap();
+        assert!((p50 - 0.5).abs() <= h.error_bound() + 1e-12, "p50 {p50}");
+    }
+
+    #[test]
+    fn moments_merge_matches_sequential_fold() {
+        let xs = samples(17, 300, 1e-2, 1e2);
+        let mut whole = Moments::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        for shard in [1usize, 9, 64] {
+            let mut merged = Moments::new();
+            for chunk in xs.chunks(shard) {
+                let mut m = Moments::new();
+                for &x in chunk {
+                    m.push(x);
+                }
+                merged.merge(&m);
+            }
+            assert_eq!(merged.count(), whole.count());
+            assert_eq!(merged.min(), whole.min());
+            assert_eq!(merged.max(), whole.max());
+            assert!((merged.mean() - whole.mean()).abs() / whole.mean() < 1e-12);
+            assert!((merged.std() - whole.std()).abs() / whole.std() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn moments_merge_commutes_and_empty_is_identity() {
+        let xs = samples(19, 100, 0.1, 10.0);
+        let mut a = Moments::new();
+        let mut b = Moments::new();
+        for &x in &xs[..40] {
+            a.push(x);
+        }
+        for &x in &xs[40..] {
+            b.push(x);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.count(), ba.count());
+        assert!((ab.mean() - ba.mean()).abs() < 1e-12);
+        assert!((ab.std() - ba.std()).abs() < 1e-12);
+        let mut with_empty = a.clone();
+        with_empty.merge(&Moments::new());
+        assert_eq!(with_empty, a);
+        let mut from_empty = Moments::new();
+        from_empty.merge(&a);
+        assert_eq!(from_empty, a);
     }
 }

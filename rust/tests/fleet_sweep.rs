@@ -1,0 +1,509 @@
+//! Fleet-sweep integration tests: the ISSUE-10 acceptance criteria.
+//!
+//! * the population report is **byte-identical** across `--jobs 1` vs
+//!   `--jobs N` and across straight-through vs killed-and-resumed runs;
+//! * peak resident aggregation state is bounded by
+//!   `shards × (bins + outlier_k × trace_window)` — pinned at a
+//!   2,000-device population;
+//! * fleet p50/p99 agree with exact sorted percentiles within the
+//!   documented histogram error bound;
+//! * histogram/moment merges are associative, commutative, and
+//!   shard-count-invariant (property tests over the in-repo kit).
+
+use std::path::PathBuf;
+
+use consumerbench::coordinator::config::AppType;
+use consumerbench::coordinator::Strategy;
+use consumerbench::gpusim::kernel::Device;
+use consumerbench::prop_assert;
+use consumerbench::scenario::{
+    run_fleet, AppMix, FleetAggregate, FleetOptions, FleetSpec, MixEntry, PopulationSpec,
+};
+use consumerbench::util::json::{parse as json_parse, JsonValue};
+use consumerbench::util::proptest::{check, Gen};
+use consumerbench::util::stats::{FixedHistogram, Moments};
+
+/// The cheapest mix the matrix vocabulary can express: one LiveCaptions
+/// client serving a single request. Population-scale tests use it so the
+/// 2,000-device sweep stays a smoke test, not a soak test.
+fn captions_solo() -> AppMix {
+    AppMix {
+        name: "captions-solo",
+        entries: vec![MixEntry {
+            app: AppType::LiveCaptions,
+            num_requests: 1,
+            device: Device::Gpu,
+        }],
+    }
+}
+
+fn cheap_spec(count: usize, seed: u64, shard_size: usize) -> FleetSpec {
+    let mut spec = FleetSpec::new(PopulationSpec::default_population(count, seed));
+    spec.mix = captions_solo();
+    spec.shard_size = shard_size;
+    spec.trace_window = 64;
+    spec
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cb_fleet_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn jobs_opts(jobs: usize) -> FleetOptions {
+    FleetOptions {
+        jobs,
+        ..FleetOptions::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte-identity across --jobs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_report_byte_identical_across_jobs() {
+    let spec = cheap_spec(30, 42, 5);
+    let base = run_fleet(&spec, &jobs_opts(1)).unwrap().to_json();
+    for jobs in [2, 4, 7] {
+        let json = run_fleet(&spec, &jobs_opts(jobs)).unwrap().to_json();
+        assert_eq!(base, json, "report drifted at jobs={jobs}");
+    }
+    // And across repeats at the same jobs count.
+    let again = run_fleet(&spec, &jobs_opts(4)).unwrap().to_json();
+    assert_eq!(base, again);
+}
+
+#[test]
+fn fleet_report_carries_schema_and_population() {
+    let spec = cheap_spec(12, 9, 4);
+    let report = run_fleet(&spec, &jobs_opts(2)).unwrap();
+    let json = report.to_json();
+    assert!(json.starts_with("{\n  \"consumerbench_fleet\": 1,"), "{json}");
+    let v = json_parse(&json).expect("report JSON parses");
+    assert_eq!(
+        v.get("devices").and_then(|d| d.get("total")).and_then(JsonValue::as_u64),
+        Some(12)
+    );
+    assert_eq!(
+        v.get("population").and_then(|p| p.get("seed")).and_then(JsonValue::as_u64),
+        Some(9)
+    );
+    // Every sampled device landed in some tier row.
+    let tiers = match v.get("tiers") {
+        Some(JsonValue::Arr(rows)) => rows,
+        other => panic!("tiers: {other:?}"),
+    };
+    let tier_devices: u64 = tiers
+        .iter()
+        .map(|t| t.get("devices").and_then(JsonValue::as_u64).unwrap())
+        .sum();
+    assert_eq!(tier_devices, 12);
+}
+
+// ---------------------------------------------------------------------------
+// Kill / resume
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_report_byte_identical_after_kill_and_resume() {
+    let dir = tmp_dir("kill_resume");
+    let spec = cheap_spec(18, 7, 4);
+
+    // Straight-through run with a journal.
+    let straight_journal = dir.join("straight.jsonl");
+    let straight = run_fleet(
+        &spec,
+        &FleetOptions {
+            jobs: 3,
+            journal: Some(straight_journal.clone()),
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap()
+    .to_json();
+
+    // Simulate a kill: keep a prefix of the journal and corrupt the tail
+    // the way a mid-write kill would (a partial final line, no newline).
+    let text = std::fs::read_to_string(&straight_journal).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 18, "every device journaled once");
+    let killed_journal = dir.join("killed.jsonl");
+    let mut partial = lines[..7].join("\n");
+    partial.push('\n');
+    partial.push_str(&lines[7][..lines[7].len() / 2]);
+    std::fs::write(&killed_journal, &partial).unwrap();
+
+    // Resume from the partial journal at a different jobs count.
+    let resumed = run_fleet(
+        &spec,
+        &FleetOptions {
+            jobs: 2,
+            journal: Some(killed_journal.clone()),
+            resume: true,
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap()
+    .to_json();
+    assert_eq!(straight, resumed, "kill/resume must be byte-identical");
+
+    // The repaired journal now covers every device; a second resume
+    // re-executes nothing and leaves the journal untouched.
+    let after_resume = std::fs::read_to_string(&killed_journal).unwrap();
+    let full = run_fleet(
+        &spec,
+        &FleetOptions {
+            jobs: 1,
+            journal: Some(killed_journal.clone()),
+            resume: true,
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap()
+    .to_json();
+    assert_eq!(straight, full);
+    assert_eq!(after_resume, std::fs::read_to_string(&killed_journal).unwrap());
+}
+
+#[test]
+fn fleet_journal_with_stale_digest_is_ignored() {
+    let dir = tmp_dir("stale_digest");
+    let journal = dir.join("journal.jsonl");
+    let spec = cheap_spec(8, 3, 4);
+    run_fleet(
+        &spec,
+        &FleetOptions {
+            jobs: 2,
+            journal: Some(journal.clone()),
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap();
+    // A different population seed changes the spec digest: the journal is
+    // stale, every device re-executes, and the result matches a fresh run.
+    let mut reseeded = cheap_spec(8, 4, 4);
+    reseeded.trace_window = spec.trace_window;
+    let fresh = run_fleet(&reseeded, &jobs_opts(2)).unwrap().to_json();
+    let resumed = run_fleet(
+        &reseeded,
+        &FleetOptions {
+            jobs: 2,
+            journal: Some(journal),
+            resume: true,
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap()
+    .to_json();
+    assert_eq!(fresh, resumed);
+}
+
+// ---------------------------------------------------------------------------
+// Memory bound, pinned at a 2,000-device population
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_memory_bound_pinned_at_2000_devices() {
+    let spec = cheap_spec(2000, 7, 50);
+    assert_eq!(spec.shards(), 40);
+    let jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let report = run_fleet(&spec, &jobs_opts(jobs)).unwrap();
+    assert_eq!(report.agg.device_count(), 2000);
+
+    // Peak resident aggregation state is bounded by the analytic
+    // shards × (bins + outlier_k × trace_window) capacity — which has no
+    // device-count term at all.
+    let per_shard = FleetAggregate::shard_bound_cells(spec.outlier_k, spec.trace_window);
+    assert_eq!(report.bound_cells, 40 * per_shard);
+    assert!(
+        report.resident_cells <= report.bound_cells,
+        "resident {} > bound {}",
+        report.resident_cells,
+        report.bound_cells
+    );
+    // Pin the order of magnitude so the accounting itself cannot silently
+    // inflate: 40 shards of (2 × ~100-bin histograms + 4 moment blocks +
+    // ≤10 tiers + 8 outlier slots × 64-row windows) stays well under 100k
+    // cells — nothing like the ~2000-device × O(trace) footprint the
+    // materialize-everything approach would need.
+    assert!(
+        report.bound_cells < 100_000,
+        "bound grew to {}",
+        report.bound_cells
+    );
+    // The outlier table is the only place traces survive, and it is
+    // bounded by k.
+    assert!(report.agg.outliers().len() <= spec.outlier_k);
+}
+
+#[test]
+fn fleet_resident_cells_do_not_scale_with_devices_per_shard() {
+    // Same shard count, 8× the devices: the aggregation state may differ
+    // only through tier-table occupancy, never through per-device growth.
+    let small = run_fleet(&cheap_spec(40, 5, 10), &jobs_opts(2)).unwrap();
+    let large = run_fleet(&cheap_spec(320, 5, 80), &jobs_opts(2)).unwrap();
+    assert_eq!(small.shards, large.shards);
+    let bound = large.bound_cells;
+    assert!(small.resident_cells <= bound && large.resident_cells <= bound);
+    // 8× devices must not even double the resident state (tier rows are
+    // the only admissible growth).
+    assert!(
+        large.resident_cells < small.resident_cells * 2,
+        "resident state scaled with devices: {} vs {}",
+        large.resident_cells,
+        small.resident_cells
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Quantile accuracy vs exact sorted percentiles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_quantiles_match_exact_sorted_percentiles_within_bound() {
+    let dir = tmp_dir("quantiles");
+    let journal = dir.join("journal.jsonl");
+    // The chat mix gives a real latency spread (server batching, queueing).
+    let mut spec = FleetSpec::new(PopulationSpec::default_population(36, 13));
+    spec.shard_size = 6;
+    let report = run_fleet(
+        &spec,
+        &FleetOptions {
+            jobs: 3,
+            journal: Some(journal.clone()),
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap();
+
+    // Ground truth: every per-request latency, straight from the journal
+    // the sweep itself wrote (ok rows only — exactly what was folded).
+    let mut exact: Vec<f64> = Vec::new();
+    for line in std::fs::read_to_string(&journal).unwrap().lines() {
+        let v = json_parse(line).unwrap();
+        if v.get("status").and_then(JsonValue::as_str) != Some("ok") {
+            continue;
+        }
+        if let Some(JsonValue::Arr(lats)) = v.get("record").and_then(|r| r.get("latencies_s")) {
+            exact.extend(lats.iter().map(|l| l.as_f64().unwrap()));
+        }
+    }
+    assert!(!exact.is_empty(), "no ok devices in the quantile fixture");
+    assert_eq!(exact.len() as u64, report.agg.latency_count());
+    exact.sort_by(f64::total_cmp);
+
+    // The histogram's documented contract is nearest-rank within half a
+    // (geometric) bin: compare against the same nearest-rank convention.
+    let rel_bound = FixedHistogram::log_scale(1e-4, 1e4, 96).error_bound();
+    for q in [0.50, 0.90, 0.99] {
+        let k = ((q * (exact.len() - 1) as f64).round() as usize).min(exact.len() - 1);
+        let truth = exact[k];
+        let approx = report.agg.latency_quantile(q).unwrap();
+        assert!(
+            (approx - truth).abs() <= truth * rel_bound + 1e-12,
+            "q={q}: hist {approx} vs exact {truth} (rel bound {rel_bound})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard-size invariance of the exact aggregate fields
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_shard_size_changes_grouping_not_exact_results() {
+    let a = run_fleet(&cheap_spec(20, 11, 4), &jobs_opts(2)).unwrap();
+    let b = run_fleet(&cheap_spec(20, 11, 7), &jobs_opts(3)).unwrap();
+    // Histograms and counts merge exactly (u64 bins): any partition of the
+    // same devices folds to the same totals.
+    assert_eq!(a.agg.device_count(), b.agg.device_count());
+    assert_eq!(a.agg.latency_count(), b.agg.latency_count());
+    for q in [0.1, 0.5, 0.9, 0.99] {
+        assert_eq!(a.agg.latency_quantile(q), b.agg.latency_quantile(q));
+        assert_eq!(a.agg.attainment_quantile(q), b.agg.attainment_quantile(q));
+    }
+    assert_eq!(
+        a.agg.outliers().iter().map(|r| r.device).collect::<Vec<_>>(),
+        b.agg.outliers().iter().map(|r| r.device).collect::<Vec<_>>(),
+    );
+}
+
+#[test]
+fn fleet_strategy_changes_the_digest_and_the_slice() {
+    let mut a = cheap_spec(6, 2, 3);
+    a.strategy = Strategy::Greedy;
+    let mut b = cheap_spec(6, 2, 3);
+    b.strategy = Strategy::SloAware;
+    assert_ne!(a.digest_hex(), b.digest_hex());
+    // Both still run end to end.
+    let ra = run_fleet(&a, &jobs_opts(2)).unwrap();
+    let rb = run_fleet(&b, &jobs_opts(2)).unwrap();
+    assert_eq!(ra.agg.device_count(), 6);
+    assert_eq!(rb.agg.device_count(), 6);
+}
+
+// ---------------------------------------------------------------------------
+// Mergeability property tests (util::proptest)
+// ---------------------------------------------------------------------------
+
+fn random_layout(g: &mut Gen) -> FixedHistogram {
+    if g.u64(0, 2) == 0 {
+        FixedHistogram::linear(0.0, g.f64(0.5, 100.0), g.usize(4, 64))
+    } else {
+        let lo = g.f64(1e-5, 1e-2);
+        FixedHistogram::log_scale(lo, lo * g.f64(10.0, 1e6), g.usize(4, 128))
+    }
+}
+
+#[test]
+fn prop_histogram_merge_associative_commutative_partition_invariant() {
+    check("hist_merge", 0xF1EE7, 200, |g| {
+        let layout = random_layout(g);
+        let samples = g.vec(120, |g| g.f64(-1.0, 150.0));
+
+        // Whole fold.
+        let mut whole = layout.clone();
+        for &x in &samples {
+            whole.fold(x);
+        }
+
+        // Random partition into three shards, merged in two different
+        // association orders and one reversed (commuted) order.
+        let cut1 = g.usize(0, samples.len() + 1);
+        let cut2 = g.usize(cut1, samples.len() + 1);
+        let mut parts: Vec<FixedHistogram> = Vec::new();
+        for chunk in [&samples[..cut1], &samples[cut1..cut2], &samples[cut2..]] {
+            let mut h = layout.clone();
+            for &x in chunk {
+                h.fold(x);
+            }
+            parts.push(h);
+        }
+        // (a ⊕ b) ⊕ c
+        let mut left = parts[0].clone();
+        left.merge(&parts[1]);
+        left.merge(&parts[2]);
+        // a ⊕ (b ⊕ c)
+        let mut right_tail = parts[1].clone();
+        right_tail.merge(&parts[2]);
+        let mut right = parts[0].clone();
+        right.merge(&right_tail);
+        // c ⊕ b ⊕ a
+        let mut rev = parts[2].clone();
+        rev.merge(&parts[1]);
+        rev.merge(&parts[0]);
+
+        prop_assert!(left == whole, "left-assoc != whole fold");
+        prop_assert!(right == whole, "right-assoc != whole fold");
+        prop_assert!(rev == whole, "commuted merge != whole fold");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_merge_is_shard_count_invariant() {
+    check("hist_shards", 0x5AADD, 100, |g| {
+        let layout = random_layout(g);
+        let samples = g.vec(200, |g| g.f64(0.0, 120.0));
+        let mut whole = layout.clone();
+        for &x in &samples {
+            whole.fold(x);
+        }
+        for shards in [1usize, 2, 3, 7, 16] {
+            let size = samples.len().div_ceil(shards).max(1);
+            let mut merged = layout.clone();
+            for chunk in samples.chunks(size) {
+                let mut h = layout.clone();
+                for &x in chunk {
+                    h.fold(x);
+                }
+                merged.merge(&h);
+            }
+            prop_assert!(merged == whole, "drift at {shards} shards");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantile_within_documented_error_bound() {
+    check("hist_quantile", 0xB0BB1E5, 150, |g| {
+        // Samples strictly inside the layout range so the bin bound (not
+        // the boundary clamp) is what is being tested.
+        let linear = g.u64(0, 2) == 0;
+        let (layout, lo, hi) = if linear {
+            let hi = g.f64(1.0, 50.0);
+            (FixedHistogram::linear(0.0, hi, g.usize(32, 256)), 0.0, hi)
+        } else {
+            (FixedHistogram::log_scale(1e-4, 1e4, g.usize(48, 192)), 1e-4, 1e4)
+        };
+        let samples = {
+            let mut v = g.vec(150, |g| g.f64(lo + (hi - lo) * 1e-9, hi * 0.999));
+            if v.is_empty() {
+                v.push((lo + hi) / 2.0);
+            }
+            v
+        };
+        let mut h = layout.clone();
+        for &x in &samples {
+            h.fold(x);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        let q = g.f64(0.0, 1.0);
+        let k = ((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+        let truth = sorted[k];
+        let approx = h.quantile(q).unwrap();
+        let tolerance = if linear {
+            h.error_bound() + 1e-12
+        } else {
+            truth * h.error_bound() + 1e-12
+        };
+        prop_assert!(
+            (approx - truth).abs() <= tolerance,
+            "q={q}: {approx} vs {truth} (tol {tolerance})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_moments_merge_matches_sequential_fold() {
+    check("moments_merge", 0xCAFE5, 200, |g| {
+        let samples = g.vec(100, |g| g.f64(-50.0, 50.0));
+        let mut whole = Moments::new();
+        for &x in &samples {
+            whole.push(x);
+        }
+        let cut = g.usize(0, samples.len() + 1);
+        let (mut a, mut b) = (Moments::new(), Moments::new());
+        for &x in &samples[..cut] {
+            a.push(x);
+        }
+        for &x in &samples[cut..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        prop_assert!(a.count() == whole.count(), "count drift");
+        if whole.count() > 0 {
+            prop_assert!(a.min() == whole.min() && a.max() == whole.max(), "extrema drift");
+            let scale = whole.mean().abs().max(1.0);
+            prop_assert!(
+                (a.mean() - whole.mean()).abs() <= 1e-9 * scale,
+                "mean drift: {} vs {}",
+                a.mean(),
+                whole.mean()
+            );
+            prop_assert!(
+                (a.variance() - whole.variance()).abs() <= 1e-6 * whole.variance().max(1.0),
+                "variance drift: {} vs {}",
+                a.variance(),
+                whole.variance()
+            );
+        }
+        Ok(())
+    });
+}
